@@ -1,0 +1,85 @@
+//! End-to-end system driver: trains a pipeline-parallel transformer LM
+//! for a few hundred optimizer steps through the full three-layer stack
+//! (rust coordinator -> PJRT-compiled JAX stages -> Pallas compression
+//! kernels on every link), logging the loss curve, throughput, and
+//! communication accounting. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Scale note (DESIGN.md §4): the reference scenario is a ~100M-param
+//! GPT; this testbed is a single CPU core, so the default preset is the
+//! ~0.8M-param staged `lm128`. The same driver runs the larger AOT
+//! presets (`python -m compile.aot --models e2e-medium|gpt100m`) on real
+//! hardware, unchanged: the coordinator is size-agnostic.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- [steps] [model] [mode]
+//! # e.g.  cargo run --release --example e2e_train -- 300 lm128 ef21+topk:10
+//! ```
+
+use anyhow::Result;
+use mpcomp::compression::Spec;
+use mpcomp::config::TrainConfig;
+use mpcomp::coordinator::Trainer;
+use mpcomp::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = args.get(2).cloned().unwrap_or_else(|| "lm128".to_string());
+    let mode = args.get(3).cloned().unwrap_or_else(|| "topk:10:shared".to_string());
+
+    let mut cfg = TrainConfig::defaults(&model);
+    cfg.spec = Spec::parse(&mode)?;
+    cfg.batch_size = 8;
+    // size the corpus so one epoch = `steps_per_epoch` optimizer steps
+    let steps_per_epoch = 25usize;
+    cfg.train_size = steps_per_epoch * cfg.batch_size;
+    cfg.test_size = 40;
+    cfg.epochs = steps.div_ceil(steps_per_epoch);
+    cfg.lr0 = 1e-3;
+    cfg.cosine_tmax = 1_000_000;
+    cfg.eval_every = 1;
+
+    let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
+    let spec = rt.manifest().model(&model)?;
+    let params = spec.total_params();
+    let seq = spec.meta_usize("seq").unwrap_or(64);
+    println!(
+        "e2e: model={model} ({params} params, mp_degree={}), {} steps, compression '{}'",
+        spec.mp_degree,
+        cfg.epochs * steps_per_epoch,
+        cfg.spec.label()
+    );
+
+    let results_dir = cfg.results_dir.clone();
+    let tokens_per_step = (cfg.batch_size * seq) as f64;
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let m = trainer.run()?;
+
+    println!("\nstep   train_loss   eval_loss(on)   ppl");
+    for p in &m.points {
+        println!(
+            "{:>5}  {:>10.4}  {:>13.4}  {:>6.1}",
+            p.step,
+            p.train_loss,
+            p.eval_on,
+            p.eval_on.exp()
+        );
+    }
+    let total_steps = m.points.last().map(|p| p.step).unwrap_or(0);
+    println!("\n-- e2e summary --");
+    println!("steps:            {total_steps}");
+    println!("throughput:       {:.1} tokens/s ({:.2} s/step)",
+        tokens_per_step * total_steps as f64 / m.wall_time_s,
+        m.wall_time_s / total_steps.max(1) as f64);
+    println!("wire sent:        {:.1} MB ({:.1}x compression)",
+        m.wire_bytes as f64 / 1e6,
+        m.wire_raw_bytes as f64 / m.wire_bytes.max(1) as f64);
+    println!("sim wire time:    {:.1} s (100 Mbit/s + 10 ms model); uncompressed would be {:.1} s",
+        m.wire_sim_time_s,
+        m.wire_sim_time_s * m.wire_raw_bytes as f64 / m.wire_bytes.max(1) as f64);
+    println!("wall time:        {:.1} s", m.wall_time_s);
+
+    m.write_csv(&results_dir, "e2e")?;
+    println!("loss curve CSV -> {results_dir}/");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: train the staged CNN for two epochs with Top10%
+//! compression on every pipeline link, then evaluate with and without
+//! compression at inference — the paper's core experiment in miniature.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use mpcomp::config::TrainConfig;
+use mpcomp::coordinator::Trainer;
+use mpcomp::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::from_dir("artifacts")?;
+
+    let mut cfg = TrainConfig::defaults("cnn16");
+    cfg.set("compression", "topk:10")?;
+    cfg.set("epochs", "2")?;
+    cfg.set("train_size", "600")?;
+    cfg.set("test_size", "200")?;
+    println!("model: {} | compression: {}", cfg.model, cfg.spec.label());
+
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let metrics = trainer.run()?;
+
+    println!("\nepoch  train_loss  acc(comp on)  acc(comp off)");
+    for p in &metrics.points {
+        println!(
+            "{:>5}  {:>10.4}  {:>12.1}%  {:>13.1}%",
+            p.epoch,
+            p.train_loss,
+            100.0 * p.eval_on,
+            100.0 * p.eval_off
+        );
+    }
+    println!(
+        "\nwire: {:.1} MB sent ({}x compression), simulated wire time {:.1}s",
+        metrics.wire_bytes as f64 / 1e6,
+        (metrics.wire_raw_bytes as f64 / metrics.wire_bytes.max(1) as f64).round(),
+        metrics.wire_sim_time_s
+    );
+    println!("wall time: {:.1}s", metrics.wall_time_s);
+    Ok(())
+}

@@ -1,0 +1,230 @@
+"""AOT driver: lower every L2/L1 graph to HLO text + write the manifest.
+
+Run once at build time (`make artifacts`); the rust binary is then
+self-contained. Interchange format is HLO *text* — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized HloModuleProto (64-bit
+instruction ids), while the text parser reassigns ids cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts per model (see DESIGN.md §6):
+    {model}_s{i}_fwd.hlo.txt   (params..., x) -> (y,)
+    {model}_s{i}_bwd.hlo.txt   (params..., x, g_y) -> (g_params...[, g_x])
+    {model}_s{i}_sgd.hlo.txt   (p..., m..., g..., lr) -> (p'..., m'...)
+    {model}_s{i}_adamw.hlo.txt (p..., m..., v..., g..., lr, step) -> (...)
+    {model}_loss.hlo.txt       (logits, labels) -> (loss, g_logits)
+    {model}_init.bin           concatenated raw f32 LE parameter data
+Shared compression executables per padded link size N (N % 1024 == 0):
+    comp_{kernel}_{N}.hlo.txt  (see kernels/compress.py)
+Plus manifest.json tying everything together for the rust loader.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models cnn16,lm128]
+       [--preset e2e-small|e2e-medium|gpt100m]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import compress
+from .models import cnn, transformer, optim
+
+BLOCK = compress.BLOCK
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    # keep_unused=True: purely-additive params (biases) are dead code in
+    # VJP graphs; without this jax drops them from the HLO signature and
+    # the rust caller's positional argument list would desynchronize.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def padded(n):
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+def _write(out_dir, name, text):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def lower_stage(model, i, out_dir, report):
+    """Lower fwd / bwd / sgd / adamw for stage i of a StagedModel."""
+    st = model.stages[i]
+    n = len(st.params)
+    pspecs = [f32(p.shape) for p in st.params]
+    in_spec = (model.input_spec if i == 0
+               else f32(model.link_shapes()[i - 1]))
+
+    def fwd(*args):
+        return (st.fwd(list(args[:n]), args[n]),)
+
+    out_shape = jax.eval_shape(lambda *a: fwd(*a)[0], *pspecs, in_spec)
+    gy_spec = f32(out_shape.shape)
+
+    def bwd(*args):
+        params, x, gy = list(args[:n]), args[n], args[n + 1]
+        _, vjp = jax.vjp(lambda p, v: st.fwd(p, v), params, x)
+        gp, gx = vjp(gy)
+        if i == 0:
+            return tuple(gp)          # input is data/tokens: no g_x
+        return tuple(gp) + (gx,)
+
+    files = {
+        "fwd": _write(out_dir, f"{model.name}_s{i}_fwd.hlo.txt",
+                      lower(fwd, *pspecs, in_spec)),
+        "bwd": _write(out_dir, f"{model.name}_s{i}_bwd.hlo.txt",
+                      lower(bwd, *pspecs, in_spec, gy_spec)),
+        "sgd": _write(out_dir, f"{model.name}_s{i}_sgd.hlo.txt",
+                      lower(optim.make_sgd(n), *(pspecs * 3), scalar())),
+        "adamw": _write(out_dir, f"{model.name}_s{i}_adamw.hlo.txt",
+                        lower(optim.make_adamw(n), *(pspecs * 4),
+                              scalar(), scalar())),
+    }
+    report(f"  stage {i}: {n} params, out {list(out_shape.shape)}")
+    return files, out_shape.shape
+
+
+def lower_model(model, out_dir, report):
+    report(f"model {model.name} ({model.task})")
+    stages_json = []
+    link_sizes = []
+    prev_out = None
+    for i, st in enumerate(model.stages):
+        files, out_shape = lower_stage(model, i, out_dir, report)
+        if i < len(model.stages) - 1:
+            link_sizes.append(int(np.prod(out_shape)))
+        stages_json.append({
+            "name": st.name,
+            "files": files,
+            "params": [{"name": p.name, "shape": p.shape} for p in st.params],
+            "out_shape": list(out_shape),
+        })
+        prev_out = out_shape
+
+    logits_spec = f32(prev_out)
+
+    def loss(logits, labels):
+        return model.loss_fn(logits, labels)
+
+    loss_file = _write(out_dir, f"{model.name}_loss.hlo.txt",
+                       lower(loss, logits_spec, model.label_spec))
+
+    init_file = f"{model.name}_init.bin"
+    with open(os.path.join(out_dir, init_file), "wb") as f:
+        for st in model.stages:
+            for p in st.params:
+                f.write(np.ascontiguousarray(p.value, np.float32).tobytes())
+
+    return {
+        "task": model.task,
+        "mp_degree": len(model.stages),
+        "input": {"shape": list(model.input_spec.shape),
+                  "dtype": str(model.input_spec.dtype)},
+        "label": {"shape": list(model.label_spec.shape),
+                  "dtype": str(model.label_spec.dtype)},
+        "meta": model.meta,
+        "stages": stages_json,
+        "loss": loss_file,
+        "init": init_file,
+        "links": link_sizes,
+    }
+
+
+def lower_compression(sizes, out_dir, report):
+    """Lower the pallas compression kernels for every padded link size."""
+    comp_json = {}
+    for n in sorted(set(padded(s) for s in sizes)):
+        v = f32((n,))
+        s = scalar()
+        entry = {
+            "quant": _write(out_dir, f"comp_quant_{n}.hlo.txt",
+                            lower(lambda x, lv: (compress.quantize(x, lv),), v, s)),
+            "topk": _write(out_dir, f"comp_topk_{n}.hlo.txt",
+                           lower(compress.threshold_mask, v, s)),
+            "mask": _write(out_dir, f"comp_mask_{n}.hlo.txt",
+                           lower(lambda g, m: (compress.mask_apply(g, m),), v, v)),
+            "delta_topk": _write(out_dir, f"comp_delta_topk_{n}.hlo.txt",
+                                 lower(compress.delta_topk, v, v, s)),
+            "ef_combine": _write(out_dir, f"comp_ef_combine_{n}.hlo.txt",
+                                 lower(compress.ef_combine, v, v, s)),
+        }
+        comp_json[str(n)] = entry
+        report(f"  compression kernels for N={n}")
+    return comp_json
+
+
+PRESETS = {
+    # name -> (builder, kwargs). e2e presets for examples/e2e_train.rs;
+    # gpt100m targets real hardware (documented in DESIGN.md §4).
+    "e2e-small": (transformer.build,
+                  dict(name="e2e_small", microbatch=4, seq=64, d_model=128,
+                       n_heads=4, n_blocks=4, vocab=256, seed=7)),
+    "e2e-medium": (transformer.build,
+                   dict(name="e2e_medium", microbatch=2, seq=128, d_model=256,
+                        n_heads=8, n_blocks=4, vocab=512, seed=7)),
+    "gpt100m": (transformer.build,
+                dict(name="gpt100m", microbatch=1, seq=256, d_model=768,
+                     n_heads=12, n_blocks=12, vocab=32768, seed=7)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="cnn16,lm128",
+                    help="comma list: cnn16, lm128, or preset names")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    report = (lambda *a: None) if args.quiet else (lambda *a: print(*a, file=sys.stderr))
+
+    manifest = {"block": BLOCK, "models": {}, "compression": {}}
+    all_link_sizes = []
+    for name in args.models.split(","):
+        name = name.strip()
+        if name == "cnn16":
+            model = cnn.build()
+        elif name == "lm128":
+            model = transformer.build()
+        elif name in PRESETS:
+            builder, kw = PRESETS[name]
+            model = builder(**kw)
+        else:
+            raise SystemExit(f"unknown model/preset: {name}")
+        mj = lower_model(model, args.out_dir, report)
+        manifest["models"][model.name] = mj
+        all_link_sizes += mj["links"]
+
+    manifest["compression"] = lower_compression(all_link_sizes, args.out_dir, report)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    report(f"manifest written to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

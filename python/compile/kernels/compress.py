@@ -1,0 +1,210 @@
+"""L1 Pallas kernels for the compression hot-spot.
+
+These kernels implement the elementwise half of every compression operator
+in the paper: uniform min-max quantization, threshold sparsification
+(TopK), sparsity-mask reuse, and the fused error-feedback combine steps
+(classic EF and EF21/AQ-SGD delta compression).
+
+Division of labour (see DESIGN.md §2): reductions (min/max) and order
+statistics (the k-th largest |x| that turns a K% budget into a threshold)
+are computed outside the kernel — min/max in the surrounding L2 jax
+function, the threshold host-side in the rust coordinator, where the wire
+encoding happens anyway. What remains is a perfectly tileable elementwise
+map, which is what Pallas is for.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): every kernel operates on a
+flat f32 vector blocked into (BLOCK,) tiles — BLOCK=1024 = 8 sublanes x
+128 lanes, one VREG-aligned VMEM tile. Scalars (lo/hi/levels/thresh)
+travel as (1,1)-shaped operands mapped to the same block for every grid
+step (on real TPU they would live in SMEM via PrefetchScalarGridSpec; the
+structure is identical). The kernels are VPU-bound (no MXU): the §Perf
+roofline analysis therefore targets HBM bandwidth, with VMEM footprint
+= (#operands + #outputs) * BLOCK * 4 bytes per grid step.
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+any backend (including the rust-side CPU client) runs. Correctness is
+anchored by python/tests/ against kernels/ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VREG-aligned tile: 8 sublanes x 128 lanes of f32.
+BLOCK = 1024
+
+
+def _grid(n):
+    assert n % BLOCK == 0, f"padded size {n} not a multiple of {BLOCK}"
+    return n // BLOCK
+
+
+def _vec_spec():
+    """BlockSpec for a flat vector blocked into (BLOCK,) tiles."""
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def _scalar_spec():
+    """BlockSpec for a (1,) scalar operand replicated to every grid step."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+# ---------------------------------------------------------------------------
+# uniform min-max quantization
+# ---------------------------------------------------------------------------
+
+def _quantize_kernel(x_ref, lo_ref, hi_ref, levels_ref, o_ref):
+    """o = dequantize(quantize(x)) for uniform `levels`-level min-max
+    quantization. `levels` arrives as f32 (= 2**bits) so bit-width is a
+    *runtime* input — one compiled executable serves every bit-width."""
+    x = x_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    levels = levels_ref[0]
+    rng = hi - lo
+    safe = jnp.where(rng > 0.0, rng, 1.0)
+    steps = jnp.maximum(levels - 1.0, 1.0)
+    unit = (x - lo) / safe
+    q = jnp.round(unit * steps) / steps
+    o_ref[...] = jnp.where(rng > 0.0, lo + q * rng, x)
+
+
+def quantize(x, levels):
+    """L2 entry point: global min/max (XLA reduction) + Pallas elementwise
+    quantize. `x` is a flat f32[N] with N % BLOCK == 0."""
+    x = jnp.asarray(x, jnp.float32)
+    (n,) = x.shape
+    lo = jnp.min(x).reshape((1,))
+    hi = jnp.max(x).reshape((1,))
+    lv = jnp.asarray(levels, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(_grid(n),),
+        in_specs=[_vec_spec(), _scalar_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=_vec_spec(),
+        interpret=True,
+    )(x, lo, hi, lv)
+
+
+# ---------------------------------------------------------------------------
+# threshold sparsification (TopK given a host-computed threshold)
+# ---------------------------------------------------------------------------
+
+def _threshold_mask_kernel(x_ref, thresh_ref, o_ref, m_ref):
+    x = x_ref[...]
+    t = thresh_ref[0]
+    mask = (jnp.abs(x) >= t).astype(jnp.float32)
+    o_ref[...] = x * mask
+    m_ref[...] = mask
+
+
+def threshold_mask(x, thresh):
+    """TopK-by-threshold. Returns (x_hat, mask); mask is reused by the
+    shared-index gradient compression mode (paper Table 5)."""
+    x = jnp.asarray(x, jnp.float32)
+    (n,) = x.shape
+    t = jnp.asarray(thresh, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _threshold_mask_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        grid=(_grid(n),),
+        in_specs=[_vec_spec(), _scalar_spec()],
+        out_specs=(_vec_spec(), _vec_spec()),
+        interpret=True,
+    )(x, t)
+
+
+def _mask_apply_kernel(g_ref, m_ref, o_ref):
+    o_ref[...] = g_ref[...] * m_ref[...]
+
+
+def mask_apply(g, mask):
+    """Apply a previously computed {0,1} mask (shared-index mode)."""
+    g = jnp.asarray(g, jnp.float32)
+    (n,) = g.shape
+    return pl.pallas_call(
+        _mask_apply_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(_grid(n),),
+        in_specs=[_vec_spec(), _vec_spec()],
+        out_specs=_vec_spec(),
+        interpret=True,
+    )(g, jnp.asarray(mask, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# fused error-feedback steps
+# ---------------------------------------------------------------------------
+
+def _delta_topk_kernel(x_ref, g_ref, thresh_ref, xhat_ref):
+    """EF21/AQ-SGD fused step: xhat = g + TopK_thresh(x - g)."""
+    x = x_ref[...]
+    g = g_ref[...]
+    t = thresh_ref[0]
+    delta = x - g
+    c = delta * (jnp.abs(delta) >= t).astype(jnp.float32)
+    xhat_ref[...] = g + c
+
+
+def delta_topk(x, g_buf, thresh):
+    """Fused EF21/AQ-SGD delta compression. Returns (x_hat, g_new); EF21's
+    buffer update rule makes them equal, but both are returned so the
+    artifact interface matches the unfused path (receiver value, sender
+    state)."""
+    x = jnp.asarray(x, jnp.float32)
+    (n,) = x.shape
+    t = jnp.asarray(thresh, jnp.float32).reshape((1,))
+    xhat = pl.pallas_call(
+        _delta_topk_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(_grid(n),),
+        in_specs=[_vec_spec(), _vec_spec(), _scalar_spec()],
+        out_specs=_vec_spec(),
+        interpret=True,
+    )(x, jnp.asarray(g_buf, jnp.float32), t)
+    return xhat, xhat
+
+
+def _ef_combine_kernel(x_ref, e_ref, thresh_ref, c_ref, enew_ref):
+    """Classic EF fused step: c = TopK_thresh(x + e); e_new = (x + e) - c."""
+    s = x_ref[...] + e_ref[...]
+    t = thresh_ref[0]
+    c = s * (jnp.abs(s) >= t).astype(jnp.float32)
+    c_ref[...] = c
+    enew_ref[...] = s - c
+
+
+def ef_combine(x, e_buf, thresh):
+    """Fused classic-EF step (Seide et al.). Returns (c, e_new)."""
+    x = jnp.asarray(x, jnp.float32)
+    (n,) = x.shape
+    t = jnp.asarray(thresh, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _ef_combine_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        grid=(_grid(n),),
+        in_specs=[_vec_spec(), _vec_spec(), _scalar_spec()],
+        out_specs=(_vec_spec(), _vec_spec()),
+        interpret=True,
+    )(x, jnp.asarray(e_buf, jnp.float32), t)
+
+
+# Registry used by aot.py to enumerate the per-link-size compression
+# executables: name -> (fn, n_vector_operands, n_scalar_operands).
+KERNELS = {
+    "quant": (quantize, 1, 1),
+    "topk": (threshold_mask, 1, 1),
+    "mask": (mask_apply, 2, 0),
+    "delta_topk": (delta_topk, 2, 1),
+    "ef_combine": (ef_combine, 2, 1),
+}

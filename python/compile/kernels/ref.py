@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracle for the compression kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (python/tests/) asserts the
+Pallas outputs match these to float tolerance; the rust side additionally
+cross-checks its native implementations against the HLO artifacts built
+from the Pallas kernels, so this file anchors the whole correctness chain:
+
+    ref.py (jnp)  ==  kernels/*.py (pallas, interpret)  ==  rust native impl
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, levels):
+    """Uniform min-max quantization with `levels` quantization levels.
+
+    Maps x to [0, 1] by min-max scaling, rounds to `levels - 1` uniform
+    buckets, and maps back to the original scale (the paper's k-bit
+    scheme: levels = 2**bits). Degenerate case: constant input maps to
+    itself (range 0).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    rng = hi - lo
+    # Avoid 0/0 for constant tensors; the result is `lo` either way.
+    safe = jnp.where(rng > 0.0, rng, 1.0)
+    unit = (x - lo) / safe
+    q = jnp.round(unit * (levels - 1.0)) / jnp.maximum(levels - 1.0, 1.0)
+    out = lo + q * rng
+    return jnp.where(rng > 0.0, out, x)
+
+
+def threshold_mask_ref(x, thresh):
+    """TopK-by-threshold: keep entries with |x| >= thresh, zero the rest.
+
+    The coordinator computes `thresh` as the k-th largest |x| host-side,
+    so this is exactly the TopK operator of the paper (modulo ties: every
+    element tied with the k-th largest is kept; the wire codec resolves
+    ties deterministically when counting bytes).
+
+    Returns (x_hat, mask) with mask in {0.0, 1.0}.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    mask = (jnp.abs(x) >= thresh).astype(jnp.float32)
+    return x * mask, mask
+
+
+def mask_apply_ref(g, mask):
+    """Reuse a previously computed sparsity mask (paper's shared-index
+    mode for gradient compression in the GPT-2 experiments)."""
+    return jnp.asarray(g, jnp.float32) * jnp.asarray(mask, jnp.float32)
+
+
+def delta_topk_ref(x, g_buf, thresh):
+    """Fused EF21/AQ-SGD step: compress the *change* of activations.
+
+    c      = TopK_thresh(x - g_buf)
+    x_hat  = g_buf + c          (value reconstructed by the receiver)
+    g_new  = x_hat              (sender buffer update, EF21 rule)
+
+    Returns (x_hat, g_new) — identical tensors, returned twice to mirror
+    the unfused path's interface (receiver value, sender state).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    g_buf = jnp.asarray(g_buf, jnp.float32)
+    delta = x - g_buf
+    c = delta * (jnp.abs(delta) >= thresh).astype(jnp.float32)
+    x_hat = g_buf + c
+    return x_hat, x_hat
+
+
+def ef_combine_ref(x, e_buf, thresh):
+    """Fused classic-EF step (Seide et al.):
+
+    s      = x + e_buf
+    c      = TopK_thresh(s)
+    e_new  = s - c
+
+    Returns (c, e_new). `thresh` is the k-th largest |s| (host-computed).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    e_buf = jnp.asarray(e_buf, jnp.float32)
+    s = x + e_buf
+    c = s * (jnp.abs(s) >= thresh).astype(jnp.float32)
+    return c, s - c

@@ -1,0 +1,113 @@
+"""Staged ResNet-style CNN classifier (the paper's ResNet18/CIFAR-10
+proxy, see DESIGN.md §4 substitutions).
+
+Pipeline partitioning mirrors the paper's setup: model-parallel degree 4
+with 3 compressed links. Stage map (default width C=16, 16x16x3 input):
+
+    stage0: conv3x3(3->C)   + GN + relu                  -> (B,16,16,C)
+    stage1: ResBlock(C->C,  stride 1)                    -> (B,16,16,C)
+    stage2: ResBlock(C->2C, stride 2, 1x1-conv skip)     -> (B, 8, 8,2C)
+    stage3: ResBlock(2C->2C, stride 1) + GAP + dense(10) -> (B,10)
+
+GroupNorm replaces BatchNorm (stateless; see common.py). The recipe
+(SGD momentum 0.9, weight decay 5e-4, cosine LR from 0.01) matches the
+paper's kuangliu/pytorch-cifar configuration and lives in the rust
+config layer; this module only defines the compute graphs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (Param, Stage, StagedModel, conv2d, group_norm, he_init,
+                     glorot_init, zeros, ones)
+from . import losses
+
+
+def _stem(rng, cin, cout):
+    params = [
+        Param("stem/conv_w", he_init(rng, (3, 3, cin, cout), 9 * cin)),
+        Param("stem/gn_scale", ones((cout,))),
+        Param("stem/gn_bias", zeros((cout,))),
+    ]
+
+    def fwd(p, x):
+        w, gs, gb = p
+        return jax.nn.relu(group_norm(conv2d(x, w), gs, gb))
+
+    return params, fwd
+
+
+def _resblock(rng, prefix, cin, cout, stride):
+    params = [
+        Param(f"{prefix}/conv1_w", he_init(rng, (3, 3, cin, cout), 9 * cin)),
+        Param(f"{prefix}/gn1_scale", ones((cout,))),
+        Param(f"{prefix}/gn1_bias", zeros((cout,))),
+        Param(f"{prefix}/conv2_w", he_init(rng, (3, 3, cout, cout), 9 * cout)),
+        Param(f"{prefix}/gn2_scale", ones((cout,))),
+        Param(f"{prefix}/gn2_bias", zeros((cout,))),
+    ]
+    has_proj = stride != 1 or cin != cout
+    if has_proj:
+        params += [
+            Param(f"{prefix}/proj_w", he_init(rng, (1, 1, cin, cout), cin)),
+            Param(f"{prefix}/gnp_scale", ones((cout,))),
+            Param(f"{prefix}/gnp_bias", zeros((cout,))),
+        ]
+
+    def fwd(p, x):
+        w1, s1, b1, w2, s2, b2 = p[:6]
+        h = jax.nn.relu(group_norm(conv2d(x, w1, stride), s1, b1))
+        h = group_norm(conv2d(h, w2), s2, b2)
+        if has_proj:
+            wp, sp, bp = p[6:9]
+            skip = group_norm(conv2d(x, wp, stride), sp, bp)
+        else:
+            skip = x
+        return jax.nn.relu(h + skip)
+
+    return params, fwd
+
+
+def _head_block(rng, cin, cout, num_classes):
+    blk_params, blk_fwd = _resblock(rng, "head/block", cin, cout, 1)
+    params = blk_params + [
+        Param("head/fc_w", glorot_init(rng, (cout, num_classes), cout, num_classes)),
+        Param("head/fc_b", zeros((num_classes,))),
+    ]
+
+    def fwd(p, x):
+        h = blk_fwd(p[:-2], x)
+        h = h.mean(axis=(1, 2))  # global average pool
+        return h @ p[-2] + p[-1]
+
+    return params, fwd
+
+
+def build(name="cnn16", microbatch=25, image=16, width=16, num_classes=10,
+          seed=0):
+    """Build the 4-stage CNN classifier."""
+    rng = np.random.RandomState(seed)
+    c = width
+
+    s0p, s0f = _stem(rng, 3, c)
+    s1p, s1f = _resblock(rng, "block1", c, c, 1)
+    s2p, s2f = _resblock(rng, "block2", c, 2 * c, 2)
+    s3p, s3f = _head_block(rng, 2 * c, 2 * c, num_classes)
+
+    stages = [
+        Stage("s0", s0p, s0f),
+        Stage("s1", s1p, s1f),
+        Stage("s2", s2p, s2f),
+        Stage("s3", s3p, s3f),
+    ]
+    return StagedModel(
+        name=name,
+        task="classification",
+        stages=stages,
+        input_spec=jax.ShapeDtypeStruct((microbatch, image, image, 3), jnp.float32),
+        label_spec=jax.ShapeDtypeStruct((microbatch,), jnp.int32),
+        loss_fn=losses.softmax_xent,
+        meta={"num_classes": num_classes, "image": image, "width": width,
+              "microbatch": microbatch},
+    )

@@ -1,0 +1,121 @@
+"""Shared helpers for the staged L2 models.
+
+A *model* here is a list of pipeline stages. Each stage is a pure
+function `fwd(params, x) -> y` over a flat, ordered list of named f32
+parameter arrays. aot.py lowers, per stage:
+
+    fwd : (p_0..p_k, x)        -> (y,)
+    bwd : (p_0..p_k, x, g_y)   -> (g_p0..g_pk[, g_x])   # VJP; recomputes fwd
+    upd : optimizer update graphs (see optim.py)
+
+The first stage's bwd omits g_x (the input is data / integer tokens).
+Parameter initialization happens here (He/Glorot, fixed seed) and is
+exported to `artifacts/{model}_init.bin` for the rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Param:
+    """A named parameter with its initializer output."""
+
+    def __init__(self, name, value):
+        self.name = name
+        self.value = value
+
+    @property
+    def shape(self):
+        return list(self.value.shape)
+
+
+class Stage:
+    """One pipeline stage: named params + a pure forward function."""
+
+    def __init__(self, name, params, fwd):
+        self.name = name
+        self.params = params  # list[Param], fixed order
+        self.fwd = fwd        # fwd(list_of_arrays, x) -> y
+
+    def param_values(self):
+        return [p.value for p in self.params]
+
+    def num_params(self):
+        return sum(int(np.prod(p.shape)) for p in self.params)
+
+
+class StagedModel:
+    """A pipeline-partitioned model plus its task metadata."""
+
+    def __init__(self, name, task, stages, input_spec, label_spec,
+                 loss_fn, meta=None):
+        self.name = name
+        self.task = task              # "classification" | "lm"
+        self.stages = stages          # list[Stage]
+        self.input_spec = input_spec  # jax.ShapeDtypeStruct
+        self.label_spec = label_spec  # jax.ShapeDtypeStruct
+        self.loss_fn = loss_fn        # (logits, labels) -> (loss, g_logits)
+        self.meta = meta or {}
+
+    def forward_all(self, x):
+        """Unsplit reference forward (used by tests only)."""
+        for st in self.stages:
+            x = st.fwd(st.param_values(), x)
+        return x
+
+    def link_shapes(self):
+        """Activation shapes communicated between consecutive stages."""
+        shapes = []
+        x = jax.ShapeDtypeStruct(self.input_spec.shape, self.input_spec.dtype)
+        for st in self.stages[:-1]:
+            x = jax.eval_shape(lambda p, v: st.fwd(p, v),
+                               [jax.ShapeDtypeStruct(q.shape, jnp.float32)
+                                for q in st.params], x)
+            shapes.append(list(x.shape))
+        return shapes
+
+
+def he_init(rng, shape, fan_in):
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def glorot_init(rng, shape, fan_in, fan_out):
+    lim = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-lim, lim, shape).astype(np.float32)
+
+
+def zeros(shape):
+    return np.zeros(shape, np.float32)
+
+
+def ones(shape):
+    return np.ones(shape, np.float32)
+
+
+def group_norm(x, scale, bias, groups=4, eps=1e-5):
+    """Stateless GroupNorm over the channel axis (NHWC). Replaces the
+    reference recipe's BatchNorm: identical normalization role without
+    running statistics, which keeps every stage graph a pure function
+    (no mutable state to thread through the AOT artifacts)."""
+    n, h, w, c = x.shape
+    g = groups
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xg - mean) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    x = xg.reshape(n, h, w, c)
+    return x * scale + bias
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def conv2d(x, w, stride=1):
+    """NHWC x HWIO -> NHWC, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,41 @@
+"""Loss graphs lowered as standalone artifacts.
+
+Each loss is `(logits, labels) -> (loss, g_logits)`, computed in one
+graph so the rust coordinator gets the scalar loss and the gradient it
+feeds into the last stage's bwd with a single executable call.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy for classification.
+
+    logits: f32[B, C]; labels: s32[B]. Returns (loss, g_logits).
+    """
+    def loss_of(lg):
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+        return jnp.mean(nll)
+
+    loss, g = jax.value_and_grad(loss_of)(logits)
+    return loss, g
+
+
+def lm_xent(logits, labels):
+    """Mean token-level cross-entropy for language modelling.
+
+    logits: f32[B, T, V]; labels: s32[B, T] (already shifted by the data
+    pipeline; positions with label < 0 are masked out). Returns
+    (loss, g_logits).
+    """
+    def loss_of(lg):
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    loss, g = jax.value_and_grad(loss_of)(logits)
+    return loss, g

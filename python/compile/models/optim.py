@@ -1,0 +1,74 @@
+"""Optimizer update graphs, lowered one per stage.
+
+Two optimizers, matching the paper's two recipes:
+
+  * SGD + momentum 0.9 + weight decay 5e-4 (kuangliu/pytorch-cifar recipe
+    used for the ResNet18/CIFAR-10 experiments). PyTorch semantics:
+        g' = g + wd * p ;  m' = mu * m + g' ;  p' = p - lr * m'
+  * AdamW (HuggingFace run_clm defaults used for the GPT-2 fine-tuning):
+        m' = b1 m + (1-b1) g ;  v' = b2 v + (1-b2) g^2
+        p' = p - lr * ( m'/(1-b1^t) / (sqrt(v'/(1-b2^t)) + eps) + wd * p )
+
+Signatures (all leading operands are per-stage flattened param lists):
+
+  sgd   : (p..., m..., g..., lr)        -> (p'..., m'...)
+  adamw : (p..., m..., v..., g..., lr, step) -> (p'..., m'..., v'...)
+
+lr and step are runtime f32 scalars so one executable serves the whole
+schedule (cosine annealing is computed by the rust coordinator).
+"""
+
+import jax.numpy as jnp
+
+SGD_MOMENTUM = 0.9
+SGD_WEIGHT_DECAY = 5e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+ADAM_WEIGHT_DECAY = 0.01
+
+
+def make_sgd(n):
+    """Update graph over n parameter tensors."""
+
+    def upd(*args):
+        params = args[:n]
+        moms = args[n:2 * n]
+        grads = args[2 * n:3 * n]
+        lr = args[3 * n]
+        new_p, new_m = [], []
+        for p, m, g in zip(params, moms, grads):
+            g = g + SGD_WEIGHT_DECAY * p
+            m = SGD_MOMENTUM * m + g
+            new_p.append(p - lr * m)
+            new_m.append(m)
+        return tuple(new_p + new_m)
+
+    return upd
+
+
+def make_adamw(n):
+    """AdamW update graph over n parameter tensors."""
+
+    def upd(*args):
+        params = args[:n]
+        ms = args[n:2 * n]
+        vs = args[2 * n:3 * n]
+        grads = args[3 * n:4 * n]
+        lr = args[4 * n]
+        step = args[4 * n + 1]
+        bc1 = 1.0 - ADAM_B1 ** step
+        bc2 = 1.0 - ADAM_B2 ** step
+        new_p, new_m, new_v = [], [], []
+        for p, m, v, g in zip(params, ms, vs, grads):
+            m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+            v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            new_p.append(p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+                                   + ADAM_WEIGHT_DECAY * p))
+            new_m.append(m)
+            new_v.append(v)
+        return tuple(new_p + new_m + new_v)
+
+    return upd

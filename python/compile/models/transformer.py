@@ -1,0 +1,116 @@
+"""Staged GPT-style decoder LM (the paper's GPT-2-small/Wikitext proxy,
+see DESIGN.md §4 substitutions).
+
+Pipeline partitioning, model-parallel degree 4 with 3 compressed links
+(default: d_model 128, 4 heads, 4 blocks, vocab 128, seq 64):
+
+    stage0: token embed + learned pos embed + block0   -> (B,T,D)
+    stage1: block1                                     -> (B,T,D)
+    stage2: block2                                     -> (B,T,D)
+    stage3: block3 + final LN + unembed                -> (B,T,V)
+
+Pre-LN residual blocks with causal self-attention. The paper fine-tunes
+a *pretrained* GPT-2; the rust harness mirrors that by pretraining this
+model uncompressed on the synthetic corpus (checkpointed) before the
+compressed fine-tuning runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Param, Stage, StagedModel, glorot_init, layer_norm, zeros, ones
+from . import losses
+
+
+def _block_params(rng, prefix, d, mlp_mult=4):
+    h = d * mlp_mult
+    return [
+        Param(f"{prefix}/ln1_scale", ones((d,))),
+        Param(f"{prefix}/ln1_bias", zeros((d,))),
+        Param(f"{prefix}/wq", glorot_init(rng, (d, d), d, d)),
+        Param(f"{prefix}/wk", glorot_init(rng, (d, d), d, d)),
+        Param(f"{prefix}/wv", glorot_init(rng, (d, d), d, d)),
+        Param(f"{prefix}/wo", glorot_init(rng, (d, d), d, d)),
+        Param(f"{prefix}/ln2_scale", ones((d,))),
+        Param(f"{prefix}/ln2_bias", zeros((d,))),
+        Param(f"{prefix}/mlp_w1", glorot_init(rng, (d, h), d, h)),
+        Param(f"{prefix}/mlp_b1", zeros((h,))),
+        Param(f"{prefix}/mlp_w2", glorot_init(rng, (h, d), h, d)),
+        Param(f"{prefix}/mlp_b2", zeros((d,))),
+    ]
+
+
+def _block_fwd(p, x, n_heads):
+    (ln1s, ln1b, wq, wk, wv, wo, ln2s, ln2b, w1, b1, w2, b2) = p
+    b, t, d = x.shape
+    hd = d // n_heads
+
+    h = layer_norm(x, ln1s, ln1b)
+    q = (h @ wq).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ wk).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ wv).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    att = jnp.where(causal[None, None] > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + o @ wo
+
+    h = layer_norm(x, ln2s, ln2b)
+    h = jax.nn.gelu(h @ w1 + b1)
+    return x + h @ w2 + b2
+
+
+def build(name="lm128", microbatch=2, seq=64, d_model=128, n_heads=4,
+          n_blocks=4, vocab=128, seed=1):
+    """Build the staged decoder LM. n_blocks must equal the number of
+    pipeline stages (degree 4 -> 4 blocks, one per stage)."""
+    rng = np.random.RandomState(seed)
+    d = d_model
+
+    # stage 0: embeddings + block 0
+    s0p = [
+        Param("embed/tok", (rng.standard_normal((vocab, d)) * 0.02).astype(np.float32)),
+        Param("embed/pos", (rng.standard_normal((seq, d)) * 0.02).astype(np.float32)),
+    ] + _block_params(rng, "block0", d)
+
+    def s0f(p, tokens):
+        tok, pos = p[0], p[1]
+        x = tok[tokens] + pos[None, :, :]
+        return _block_fwd(p[2:], x, n_heads)
+
+    stages = [Stage("s0", s0p, s0f)]
+
+    # middle stages: one block each
+    for i in range(1, n_blocks - 1):
+        bp = _block_params(rng, f"block{i}", d)
+        stages.append(Stage(
+            f"s{i}", bp,
+            (lambda nh: lambda p, x: _block_fwd(p, x, nh))(n_heads)))
+
+    # last stage: final block + LN + unembed
+    s3p = _block_params(rng, f"block{n_blocks-1}", d) + [
+        Param("head/ln_scale", ones((d,))),
+        Param("head/ln_bias", zeros((d,))),
+        Param("head/unembed", glorot_init(rng, (d, vocab), d, vocab)),
+    ]
+
+    def s3f(p, x):
+        h = _block_fwd(p[:12], x, n_heads)
+        h = layer_norm(h, p[12], p[13])
+        return h @ p[14]
+
+    stages.append(Stage(f"s{n_blocks-1}", s3p, s3f))
+
+    return StagedModel(
+        name=name,
+        task="lm",
+        stages=stages,
+        input_spec=jax.ShapeDtypeStruct((microbatch, seq), jnp.int32),
+        label_spec=jax.ShapeDtypeStruct((microbatch, seq), jnp.int32),
+        loss_fn=losses.lm_xent,
+        meta={"vocab": vocab, "seq": seq, "d_model": d_model,
+              "n_heads": n_heads, "n_blocks": n_blocks,
+              "microbatch": microbatch},
+    )

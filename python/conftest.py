@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make `compile.*` importable when pytest runs from the repo root
+sys.path.insert(0, os.path.dirname(__file__))

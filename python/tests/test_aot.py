@@ -1,0 +1,86 @@
+"""AOT artifact integrity: the manifest and HLO texts the rust side will
+load must exist, parse, and carry consistent shapes."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_has_default_models(manifest):
+    assert "cnn16" in manifest["models"]
+    assert "lm128" in manifest["models"]
+    assert manifest["block"] == 1024
+
+
+def test_every_referenced_file_exists(manifest):
+    for m in manifest["models"].values():
+        for st in m["stages"]:
+            for f in st["files"].values():
+                assert os.path.exists(os.path.join(ART, f)), f
+        assert os.path.exists(os.path.join(ART, m["loss"]))
+        assert os.path.exists(os.path.join(ART, m["init"]))
+    for entry in manifest["compression"].values():
+        for f in entry.values():
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+def test_hlo_text_parses_superficially(manifest):
+    """Every artifact is HLO text (not proto): starts with HloModule."""
+    m = manifest["models"]["cnn16"]
+    for st in m["stages"]:
+        with open(os.path.join(ART, st["files"]["fwd"])) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), head
+
+
+def test_init_bin_size_matches_param_shapes(manifest):
+    for m in manifest["models"].values():
+        n_f32 = sum(int(np.prod(p["shape"]))
+                    for st in m["stages"] for p in st["params"])
+        size = os.path.getsize(os.path.join(ART, m["init"]))
+        assert size == 4 * n_f32
+
+
+def test_links_match_stage_out_shapes(manifest):
+    for m in manifest["models"].values():
+        outs = [int(np.prod(st["out_shape"])) for st in m["stages"][:-1]]
+        assert m["links"] == outs
+
+
+def test_compression_covers_all_padded_link_sizes(manifest):
+    block = manifest["block"]
+    for m in manifest["models"].values():
+        for n in m["links"]:
+            padded = (n + block - 1) // block * block
+            assert str(padded) in manifest["compression"]
+            entry = manifest["compression"][str(padded)]
+            assert set(entry) == {"quant", "topk", "mask", "delta_topk",
+                                  "ef_combine"}
+
+
+def test_mp_degree_matches_paper_protocol(manifest):
+    """Paper: model-parallel degree 4, 3 compression points."""
+    for m in manifest["models"].values():
+        assert m["mp_degree"] == 4
+        assert len(m["links"]) == 3
+
+
+def test_init_values_finite(manifest):
+    m = manifest["models"]["cnn16"]
+    data = np.fromfile(os.path.join(ART, m["init"]), dtype="<f4")
+    assert np.all(np.isfinite(data))
+    assert np.abs(data).max() < 10.0

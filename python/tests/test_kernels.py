@@ -1,0 +1,213 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes and value distributions; this is the core
+correctness signal for the compression hot-spot (DESIGN.md §7).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compress, ref
+
+BLOCK = compress.BLOCK
+
+
+def rand_vec(seed, n, scale=1.0, offset=0.0):
+    r = np.random.RandomState(seed)
+    return (r.standard_normal(n) * scale + offset).astype(np.float32)
+
+
+def kth_threshold(x, frac):
+    """k-th largest |x| for a K-fraction budget, like the rust side."""
+    k = max(1, int(round(len(x) * frac)))
+    return float(np.partition(np.abs(x), -k)[-k])
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       blocks=st.integers(1, 4),
+       bits=st.sampled_from([2, 4, 6, 8]),
+       scale=st.floats(1e-3, 1e3),
+       offset=st.floats(-100.0, 100.0))
+def test_quantize_matches_ref(seed, blocks, bits, scale, offset):
+    x = rand_vec(seed, BLOCK * blocks, scale, offset)
+    levels = float(2 ** bits)
+    got = np.asarray(compress.quantize(x, levels))
+    want = np.asarray(ref.quantize_ref(x, levels))
+    # XLA may fuse (x-lo)/rng*steps differently (FMA), so values exactly
+    # at a rounding boundary can land in the adjacent bucket. Allow a
+    # rare (<1%) one-bucket disagreement; everything else must match.
+    bucket = (x.max() - x.min()) / (levels - 1.0)
+    diff = np.abs(got - want)
+    tol = 1e-5 * max(1.0, np.abs(x).max())
+    boundary = diff > tol
+    assert diff.max() <= bucket + tol, f"more than one bucket off: {diff.max()} vs {bucket}"
+    assert boundary.mean() < 0.01, f"{boundary.mean():.2%} boundary disagreements"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]))
+def test_quantize_error_bound(seed, bits):
+    """Uniform quantization error is bounded by half a bucket width."""
+    x = rand_vec(seed, BLOCK)
+    levels = 2 ** bits
+    got = np.asarray(compress.quantize(x, float(levels)))
+    bucket = (x.max() - x.min()) / (levels - 1)
+    assert np.abs(got - x).max() <= bucket / 2 + 1e-5
+
+
+def test_quantize_constant_input_is_identity():
+    x = np.full(BLOCK, 3.25, np.float32)
+    got = np.asarray(compress.quantize(x, 4.0))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_quantize_levels_is_runtime_scalar():
+    """One executable serves every bit-width: same input, different levels."""
+    x = rand_vec(0, BLOCK)
+    out2 = np.asarray(compress.quantize(x, 4.0))
+    out8 = np.asarray(compress.quantize(x, 256.0))
+    assert np.abs(out8 - x).max() < np.abs(out2 - x).max()
+
+
+def test_quantize_idempotent():
+    x = rand_vec(1, BLOCK)
+    once = np.asarray(compress.quantize(x, 16.0))
+    twice = np.asarray(compress.quantize(once, 16.0))
+    np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+def test_quantize_preserves_extremes():
+    x = rand_vec(2, BLOCK)
+    got = np.asarray(compress.quantize(x, 4.0))
+    assert got.min() == pytest.approx(x.min(), abs=1e-6)
+    assert got.max() == pytest.approx(x.max(), abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# threshold sparsification (TopK)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       blocks=st.integers(1, 4),
+       frac=st.sampled_from([0.5, 0.3, 0.2, 0.1, 0.05, 0.02]))
+def test_threshold_mask_matches_ref(seed, blocks, frac):
+    x = rand_vec(seed, BLOCK * blocks)
+    t = kth_threshold(x, frac)
+    got_x, got_m = compress.threshold_mask(x, t)
+    want_x, want_m = ref.threshold_mask_ref(x, t)
+    np.testing.assert_array_equal(np.asarray(got_x), np.asarray(want_x))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.5, 0.1, 0.02]))
+def test_threshold_mask_keeps_k_largest(seed, frac):
+    """With continuous random data (no ties w.p. 1) exactly k survive,
+    and they are the k largest by magnitude."""
+    x = rand_vec(seed, BLOCK * 2)
+    k = max(1, int(round(len(x) * frac)))
+    t = kth_threshold(x, frac)
+    xh, m = compress.threshold_mask(x, t)
+    xh, m = np.asarray(xh), np.asarray(m)
+    assert int(m.sum()) == k
+    kept = np.abs(x[m > 0])
+    dropped = np.abs(x[m == 0])
+    assert kept.min() >= dropped.max()
+
+
+def test_threshold_mask_zero_threshold_keeps_all():
+    x = rand_vec(3, BLOCK)
+    x[x == 0] = 1.0
+    xh, m = compress.threshold_mask(x, 0.0)
+    np.testing.assert_array_equal(np.asarray(xh), x)
+    assert np.asarray(m).sum() == len(x)
+
+
+def test_mask_apply_matches_ref():
+    g = rand_vec(4, BLOCK)
+    m = (rand_vec(5, BLOCK) > 0).astype(np.float32)
+    got = np.asarray(compress.mask_apply(g, m))
+    want = np.asarray(ref.mask_apply_ref(g, m))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mask_apply_shared_index_semantics():
+    """Shared-index mode (Table 5): gradient keeps exactly the positions
+    the activation mask kept."""
+    x = rand_vec(6, BLOCK)
+    g = rand_vec(7, BLOCK)
+    t = kth_threshold(x, 0.1)
+    _, m = compress.threshold_mask(x, t)
+    gh = np.asarray(compress.mask_apply(g, m))
+    m = np.asarray(m)
+    np.testing.assert_array_equal(gh[m == 0], 0.0)
+    np.testing.assert_array_equal(gh[m > 0], g[m > 0])
+
+
+# ---------------------------------------------------------------------------
+# fused error-feedback steps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.5, 0.3, 0.1]),
+       buf_scale=st.floats(0.0, 2.0))
+def test_delta_topk_matches_ref(seed, frac, buf_scale):
+    x = rand_vec(seed, BLOCK)
+    g = rand_vec(seed + 1, BLOCK, scale=buf_scale)
+    t = kth_threshold(x - g, frac)
+    got_xh, got_gn = compress.delta_topk(x, g, t)
+    want_xh, want_gn = ref.delta_topk_ref(x, g, t)
+    np.testing.assert_allclose(np.asarray(got_xh), np.asarray(want_xh), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_gn), np.asarray(want_gn), atol=1e-6)
+
+
+def test_delta_topk_zero_buffer_reduces_to_topk():
+    """EF21 with a zero buffer is plain TopK — the warm-start identity
+    the coordinator relies on when compression switches on mid-run."""
+    x = rand_vec(8, BLOCK)
+    t = kth_threshold(x, 0.1)
+    xh, _ = compress.delta_topk(x, np.zeros_like(x), t)
+    want, _ = compress.threshold_mask(x, t)
+    np.testing.assert_array_equal(np.asarray(xh), np.asarray(want))
+
+
+def test_delta_topk_converged_buffer_is_exact():
+    """Once the buffer equals the activations the message is zero and
+    reconstruction is exact (EF21's fixed point)."""
+    x = rand_vec(9, BLOCK)
+    xh, gn = compress.delta_topk(x, x, 1e-9)
+    np.testing.assert_allclose(np.asarray(xh), x, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), frac=st.sampled_from([0.5, 0.1]))
+def test_ef_combine_matches_ref(seed, frac):
+    x = rand_vec(seed, BLOCK)
+    e = rand_vec(seed + 2, BLOCK, scale=0.5)
+    t = kth_threshold(x + e, frac)
+    got_c, got_e = compress.ef_combine(x, e, t)
+    want_c, want_e = ref.ef_combine_ref(x, e, t)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(want_e), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ef_conservation(seed):
+    """EF invariant: x + e_in == c + e_new exactly (no information lost,
+    only delayed)."""
+    x = rand_vec(seed, BLOCK)
+    e = rand_vec(seed + 3, BLOCK)
+    t = kth_threshold(x + e, 0.1)
+    c, e_new = compress.ef_combine(x, e, t)
+    np.testing.assert_allclose(np.asarray(c) + np.asarray(e_new), x + e,
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,85 @@
+//! Compression-operator benchmarks: native rust path vs the Pallas/HLO
+//! kernel path, per link size — the numbers behind §Perf's L1/L3
+//! analysis. Run with `cargo bench --bench compression`.
+
+use mpcomp::compression::ops;
+use mpcomp::runtime::{lit_scalar, lit_vec, Runtime};
+use mpcomp::util::bench::{bench, black_box, header};
+use mpcomp::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+fn main() {
+    header();
+    // the LM link and the CNN's largest link
+    for &n in &[16_384usize, 102_400] {
+        let x = randvec(n, 1);
+        let buf = randvec(n, 2);
+
+        bench(&format!("native/quantize_4bit/{n}"), || {
+            black_box(ops::quantize(black_box(&x), 4));
+        })
+        .report_throughput(n as f64, "elem");
+
+        bench(&format!("native/threshold_select/{n}"), || {
+            black_box(ops::threshold_for_frac(black_box(&x), 0.1));
+        })
+        .report_throughput(n as f64, "elem");
+
+        bench(&format!("native/topk_10pct/{n}"), || {
+            black_box(ops::topk(black_box(&x), 0.1));
+        })
+        .report_throughput(n as f64, "elem");
+
+        bench(&format!("native/ef21_step/{n}"), || {
+            black_box(ops::ef21_step(black_box(&x), black_box(&buf), 0.1));
+        })
+        .report_throughput(n as f64, "elem");
+
+        bench(&format!("native/ef_combine/{n}"), || {
+            black_box(ops::ef_combine(black_box(&x), black_box(&buf), 0.1));
+        })
+        .report_throughput(n as f64, "elem");
+    }
+
+    // kernel path (PJRT executables), if artifacts are built
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let rt = Runtime::from_dir(dir).unwrap();
+        for &n in &[16_384usize, 102_400] {
+            let files = rt.manifest().compression_for(n).unwrap().clone();
+            let x = randvec(n, 1);
+            let buf = randvec(n, 2);
+            let t = ops::threshold_for_frac(&x, 0.1);
+            // warm the executable cache before timing
+            rt.call(&files.quant, &[lit_vec(&x), lit_scalar(16.0)]).unwrap();
+            rt.call(&files.topk, &[lit_vec(&x), lit_scalar(t)]).unwrap();
+            rt.call(&files.delta_topk, &[lit_vec(&x), lit_vec(&buf), lit_scalar(t)]).unwrap();
+
+            bench(&format!("kernel/quantize_4bit/{n}"), || {
+                black_box(rt.call(&files.quant, &[lit_vec(&x), lit_scalar(16.0)]).unwrap());
+            })
+            .report_throughput(n as f64, "elem");
+
+            bench(&format!("kernel/topk_thresh/{n}"), || {
+                black_box(rt.call(&files.topk, &[lit_vec(&x), lit_scalar(t)]).unwrap());
+            })
+            .report_throughput(n as f64, "elem");
+
+            bench(&format!("kernel/delta_topk/{n}"), || {
+                black_box(
+                    rt.call(&files.delta_topk, &[lit_vec(&x), lit_vec(&buf), lit_scalar(t)])
+                        .unwrap(),
+                );
+            })
+            .report_throughput(n as f64, "elem");
+        }
+    } else {
+        println!("(artifacts not built; kernel-path benches skipped)");
+    }
+}

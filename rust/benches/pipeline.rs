@@ -1,0 +1,52 @@
+//! Pipeline-schedule benchmarks: schedule generation cost, and the
+//! simulated multi-worker makespan / memory comparison between GPipe and
+//! 1F1B under different wire costs (the coordinator ablation in
+//! DESIGN.md §5). Run with `cargo bench --bench pipeline`.
+
+use mpcomp::coordinator::pipeline::{gpipe, makespan, one_f_one_b, peak_in_flight, validate};
+use mpcomp::util::bench::{bench, black_box, header};
+
+fn main() {
+    header();
+    for &(s, m) in &[(4usize, 4usize), (4, 16), (8, 32)] {
+        bench(&format!("gen/gpipe/{s}x{m}"), || {
+            black_box(gpipe(black_box(s), black_box(m)));
+        })
+        .report();
+        bench(&format!("gen/1f1b/{s}x{m}"), || {
+            black_box(one_f_one_b(black_box(s), black_box(m)));
+        })
+        .report();
+        let ops = gpipe(s, m);
+        bench(&format!("validate/{s}x{m}"), || {
+            black_box(validate(black_box(&ops), s, m).unwrap());
+        })
+        .report();
+    }
+
+    // schedule quality table: bubble + memory, with/without wire cost
+    println!("\nschedule quality (op_time = 1.0):");
+    println!(
+        "{:>8} {:>6} {:>10} {:>14} {:>14} {:>12} {:>12}",
+        "stages", "mb", "schedule", "makespan w=0", "makespan w=.5", "peak stash", "bubble %"
+    );
+    for &(s, m) in &[(4usize, 4usize), (4, 8), (4, 16), (8, 16)] {
+        for (name, ops) in [("gpipe", gpipe(s, m)), ("1f1b", one_f_one_b(s, m))] {
+            let ms0 = makespan(&ops, s, m, 1.0, 0.0);
+            let ms5 = makespan(&ops, s, m, 1.0, 0.5);
+            let ideal = 2.0 * m as f64; // per-stage serial work
+            println!(
+                "{:>8} {:>6} {:>10} {:>14.1} {:>14.1} {:>12} {:>11.1}%",
+                s,
+                m,
+                name,
+                ms0,
+                ms5,
+                peak_in_flight(&ops, s),
+                100.0 * (ms0 - ideal) / ms0
+            );
+        }
+    }
+    println!("(same makespan — execution order differs only in memory profile;\n\
+              1f1b bounds peak stashed activations by the stage depth)");
+}

@@ -1,0 +1,70 @@
+//! Wire-codec benchmarks + the sparse-encoding crossover table (the
+//! "indices increase communication cost" remark of paper §4.1, made
+//! quantitative). Run with `cargo bench --bench wire`.
+
+use mpcomp::compression::{ops, wire};
+use mpcomp::util::bench::{bench, black_box, header};
+use mpcomp::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+fn main() {
+    header();
+    let n = 102_400;
+    let x = randvec(n, 1);
+
+    for bits in [2u8, 4, 8] {
+        bench(&format!("encode_quant_{bits}bit/{n}"), || {
+            black_box(wire::encode_quant(black_box(&x), bits));
+        })
+        .report_throughput(n as f64, "elem");
+        let enc = wire::encode_quant(&x, bits);
+        bench(&format!("decode_quant_{bits}bit/{n}"), || {
+            black_box(wire::decode(black_box(&enc)).unwrap());
+        })
+        .report_throughput(n as f64, "elem");
+    }
+
+    for frac in [0.5f32, 0.1, 0.02] {
+        let (dense, _) = ops::topk(&x, frac);
+        let k = ops::budget(n, frac);
+        bench(&format!("encode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
+            black_box(wire::encode_sparse(black_box(&dense), k));
+        })
+        .report_throughput(n as f64, "elem");
+        let enc = wire::encode_sparse(&dense, k);
+        bench(&format!("decode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
+            black_box(wire::decode(black_box(&enc)).unwrap());
+        })
+        .report_throughput(n as f64, "elem");
+    }
+
+    bench(&format!("encode_raw/{n}"), || {
+        black_box(wire::encode_raw(black_box(&x)));
+    })
+    .report_throughput(n as f64, "elem");
+
+    // crossover table: index-list vs bitmap encoding size by density
+    println!("\nsparse encoding size by density (n = {n}):");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>8}", "K%", "index list", "bitmap", "chosen", "vs raw");
+    for pct in [50.0f32, 30.0, 20.0, 12.5, 10.0, 5.0, 2.0, 1.0] {
+        let k = ops::budget(n, pct / 100.0);
+        let index_list = 5 + 4 + 8 * k;
+        let bitmap = 5 + 4 + n.div_ceil(8) + 4 * k;
+        let chosen = wire::sparse_wire_bytes(n, k);
+        println!(
+            "{:>7}% {:>11}B {:>11}B {:>11}B {:>7.1}x",
+            pct,
+            index_list,
+            bitmap,
+            chosen,
+            wire::raw_wire_bytes(n) as f64 / chosen as f64
+        );
+    }
+    println!("(crossover at K = n/32 = 3.125%: below it the index list wins)");
+}

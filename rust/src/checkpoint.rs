@@ -1,0 +1,148 @@
+//! Binary checkpoints for staged model parameters (+ optimizer state).
+//!
+//! The paper's warm-start protocol ("use uncompressed baseline weights
+//! after N epochs") needs exact weight snapshots; format is a simple
+//! self-describing binary: magic, version, stage/tensor counts, shapes,
+//! then raw f32 LE data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"MPCOMP01";
+
+/// Parameters (or any per-stage tensor lists) for all stages.
+pub type StageTensors = Vec<Vec<Tensor>>;
+
+pub fn save(path: impl AsRef<Path>, stages: &StageTensors) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(stages.len() as u32).to_le_bytes())?;
+    for stage in stages {
+        f.write_all(&(stage.len() as u32).to_le_bytes())?;
+        for t in stage {
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<StageTensors> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{:?}: not an mpcomp checkpoint", path.as_ref());
+    }
+    let n_stages = read_u32(&mut f)? as usize;
+    if n_stages > 1024 {
+        bail!("implausible stage count {n_stages}");
+    }
+    let mut stages = Vec::with_capacity(n_stages);
+    for _ in 0..n_stages {
+        let n_tensors = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let rank = read_u32(&mut f)? as usize;
+            if rank > 16 {
+                bail!("implausible rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0u8; 4 * n];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push(Tensor::new(shape, data)?);
+        }
+        stages.push(tensors);
+    }
+    Ok(stages)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mpcomp_ckpt_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let stages: StageTensors = vec![
+            vec![
+                Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap(),
+                Tensor::scalar(7.5),
+            ],
+            vec![Tensor::new(vec![4], vec![-1.0, 0.0, 1.0, f32::MIN_POSITIVE]).unwrap()],
+        ];
+        let path = tmpfile("roundtrip");
+        save(&path, &stages).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, stages);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOTMAGIC____").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let stages: StageTensors = vec![vec![Tensor::zeros(vec![100])]];
+        let path = tmpfile("trunc");
+        save(&path, &stages).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_stages_ok() {
+        let path = tmpfile("empty");
+        save(&path, &vec![]).unwrap();
+        assert_eq!(load(&path).unwrap(), StageTensors::new());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny CLI argument parser — substrate for the offline environment
+//! (clap is unavailable; DESIGN.md §3). Flags are `--name value` or
+//! `--name` (boolean); positionals are collected in order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse, given the set of flags that take a value (all others are
+    /// boolean switches).
+    pub fn parse(argv: &[String], value_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --name=value form
+                if let Some((n, v)) = name.split_once('=') {
+                    args.flags.entry(n.to_string()).or_default().push(v.to_string());
+                    continue;
+                }
+                if value_flags.contains(&name) {
+                    let Some(v) = it.next() else {
+                        bail!("flag --{name} wants a value");
+                    };
+                    args.flags.entry(name.to_string()).or_default().push(v.clone());
+                } else {
+                    args.flags.entry(name.to_string()).or_default().push(String::new());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse()?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let a = Args::parse(&argv("exp table1 --full --seeds 3"), &["seeds"]).unwrap();
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert!(a.has("full"));
+        assert_eq!(a.usize("seeds").unwrap(), Some(3));
+        assert!(!a.has("curves"));
+    }
+
+    #[test]
+    fn eq_form_and_repeats() {
+        let a = Args::parse(&argv("train --set a=1 --set b=2"), &["set"]).unwrap();
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("x --seeds"), &["seeds"]).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Compression operators, error-feedback state machines, and wire codecs
+//! — the paper's contribution, as a first-class runtime feature.
+//!
+//! Two interchangeable implementations of the numeric operators exist:
+//!
+//! * **native** ([`ops`]): pure-rust, used for wire encoding, tests, and
+//!   the `CompressImpl::Native` path;
+//! * **kernel**: the L1 Pallas kernels lowered into `artifacts/comp_*`
+//!   executables, invoked through [`crate::runtime`] (default path).
+//!
+//! Integration tests assert both produce identical bytes. The mode
+//! grammar ([`spec`]) maps the paper's experiment labels (`fw4-bw8`,
+//! `Top10%`, `EF21 + Top 5%`, `AQ-SGD + Top 30%`) onto configurations.
+
+pub mod ops;
+pub mod spec;
+pub mod wire;
+
+pub use spec::{Feedback, Method, Spec};

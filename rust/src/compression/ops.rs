@@ -1,0 +1,327 @@
+//! Native (pure-rust) compression operators.
+//!
+//! Numerically identical to the L1 Pallas kernels (see
+//! `python/compile/kernels/compress.py` — integration tests cross-check
+//! against the HLO artifacts). The coordinator uses these for threshold
+//! selection and for the `CompressImpl::Native` path; the wire codecs
+//! ([`super::wire`]) build directly on the quantization code here.
+
+/// k-th largest |x| for a K-fraction budget: the threshold that turns a
+/// `TopK` percentage into the mask the Pallas kernel applies.
+///
+/// Ties: the kernel keeps every element with |x| >= threshold, so ties
+/// at the threshold may keep slightly more than k (measure-zero for
+/// continuous data; the wire codec trims to exactly k deterministically).
+pub fn threshold_for_frac(data: &[f32], frac: f32) -> f32 {
+    let k = budget(data.len(), frac);
+    kth_largest_abs(data, k)
+}
+
+/// The K-budget in element count: max(1, round(n * frac)).
+pub fn budget(n: usize, frac: f32) -> usize {
+    ((n as f64 * frac as f64).round() as usize).clamp(1, n)
+}
+
+/// k-th largest absolute value via O(n) selection.
+pub fn kth_largest_abs(data: &[f32], k: usize) -> f32 {
+    debug_assert!(k >= 1 && k <= data.len());
+    let mut abs: Vec<f32> = data.iter().map(|x| x.abs()).collect();
+    let idx = abs.len() - k;
+    let (_, v, _) = abs.select_nth_unstable_by(idx, |a, b| {
+        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    *v
+}
+
+/// Keep entries with |x| >= thresh; returns (x_hat, mask).
+pub fn apply_threshold(data: &[f32], thresh: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut xh = Vec::with_capacity(data.len());
+    let mut mask = Vec::with_capacity(data.len());
+    for &x in data {
+        let keep = x.abs() >= thresh;
+        mask.push(if keep { 1.0 } else { 0.0 });
+        xh.push(if keep { x } else { 0.0 });
+    }
+    (xh, mask)
+}
+
+/// Plain TopK at fraction `frac`: returns (x_hat, mask).
+pub fn topk(data: &[f32], frac: f32) -> (Vec<f32>, Vec<f32>) {
+    apply_threshold(data, threshold_for_frac(data, frac))
+}
+
+/// Mask reuse (shared-index gradient compression, paper Table 5).
+pub fn mask_apply(data: &[f32], mask: &[f32]) -> Vec<f32> {
+    data.iter().zip(mask).map(|(&x, &m)| x * m).collect()
+}
+
+/// Uniform min-max quantization code path, split so the wire codec can
+/// reuse the integer codes. Returns (lo, hi, codes); `levels = 2^bits`.
+pub fn quantize_codes(data: &[f32], bits: u8) -> (f32, f32, Vec<u32>) {
+    let levels = (1u32 << bits) as f32;
+    let steps = (levels - 1.0).max(1.0);
+    let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+    for &x in data {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if data.is_empty() {
+        return (0.0, 0.0, Vec::new());
+    }
+    let rng = hi - lo;
+    let safe = if rng > 0.0 { rng } else { 1.0 };
+    let codes = data
+        .iter()
+        .map(|&x| (((x - lo) / safe) * steps).round() as u32)
+        .collect();
+    (lo, hi, codes)
+}
+
+/// Dequantize integer codes back to f32.
+pub fn dequantize_codes(lo: f32, hi: f32, bits: u8, codes: &[u32]) -> Vec<f32> {
+    let levels = (1u32 << bits) as f32;
+    let steps = (levels - 1.0).max(1.0);
+    let rng = hi - lo;
+    codes.iter().map(|&c| lo + (c as f32 / steps) * rng).collect()
+}
+
+/// Quantize-dequantize roundtrip, numerically identical to the Pallas
+/// `quantize` kernel (constant input maps to itself).
+pub fn quantize(data: &[f32], bits: u8) -> Vec<f32> {
+    let (lo, hi, codes) = quantize_codes(data, bits);
+    if hi - lo > 0.0 {
+        dequantize_codes(lo, hi, bits, &codes)
+    } else {
+        data.to_vec()
+    }
+}
+
+/// Classic EF combine: c = TopK(x + e), e_new = (x + e) - c.
+pub fn ef_combine(x: &[f32], e: &[f32], frac: f32) -> (Vec<f32>, Vec<f32>) {
+    let s: Vec<f32> = x.iter().zip(e).map(|(&a, &b)| a + b).collect();
+    let t = threshold_for_frac(&s, frac);
+    let (c, _) = apply_threshold(&s, t);
+    let e_new = s.iter().zip(&c).map(|(&a, &b)| a - b).collect();
+    (c, e_new)
+}
+
+/// EF-mixed (paper §2.4): budget K/2 on the largest |x| and K/2 on the
+/// largest |e|; message = masked(x) + masked(e); e_new = (x + e) - msg.
+pub fn ef_mixed(x: &[f32], e: &[f32], frac: f32) -> (Vec<f32>, Vec<f32>) {
+    let half = frac / 2.0;
+    let tx = threshold_for_frac(x, half);
+    let te = threshold_for_frac(e, half);
+    let mut msg = Vec::with_capacity(x.len());
+    for (&a, &b) in x.iter().zip(e) {
+        let xa = if a.abs() >= tx { a } else { 0.0 };
+        let eb = if b.abs() >= te { b } else { 0.0 };
+        msg.push(xa + eb);
+    }
+    let e_new = x
+        .iter()
+        .zip(e)
+        .zip(&msg)
+        .map(|((&a, &b), &m)| a + b - m)
+        .collect();
+    (msg, e_new)
+}
+
+/// EF21 / AQ-SGD delta step: c = TopK(x - g); x_hat = g + c = new g.
+/// Returns (x_hat, nonzero_message_budget_k) — the k is what goes on the
+/// wire (values + indices of c), needed for byte accounting.
+pub fn ef21_step(x: &[f32], g: &[f32], frac: f32) -> (Vec<f32>, usize) {
+    let delta: Vec<f32> = x.iter().zip(g).map(|(&a, &b)| a - b).collect();
+    let t = threshold_for_frac(&delta, frac);
+    let mut xhat = Vec::with_capacity(x.len());
+    let mut k = 0usize;
+    for (&d, &gv) in delta.iter().zip(g) {
+        if d.abs() >= t {
+            xhat.push(gv + d);
+            k += 1;
+        } else {
+            xhat.push(gv);
+        }
+    }
+    (xhat, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn randvec(g: &mut crate::util::prop::Gen) -> Vec<f32> {
+        g.vec_normal(8, 4096)
+    }
+
+    #[test]
+    fn threshold_selects_kth() {
+        let data = vec![5.0, -3.0, 1.0, -8.0, 2.0];
+        assert_eq!(kth_largest_abs(&data, 1), 8.0);
+        assert_eq!(kth_largest_abs(&data, 2), 5.0);
+        assert_eq!(kth_largest_abs(&data, 5), 1.0);
+    }
+
+    #[test]
+    fn budget_rounds_like_paper() {
+        assert_eq!(budget(100, 0.10), 10);
+        assert_eq!(budget(100, 0.02), 2);
+        assert_eq!(budget(5, 0.10), 1); // never zero
+        assert_eq!(budget(10, 1.0), 10);
+    }
+
+    #[test]
+    fn prop_topk_keeps_k_largest() {
+        run_prop("topk keeps k largest", 40, |g| {
+            let data = randvec(g);
+            let frac = *g.choose(&[0.5, 0.3, 0.2, 0.1, 0.05, 0.02]);
+            let k = budget(data.len(), frac);
+            let (xh, mask) = topk(&data, frac);
+            let kept = mask.iter().filter(|&&m| m > 0.0).count();
+            if kept != k {
+                // ties can keep more, but are measure-zero for normals
+                return Err(format!("kept {kept} want {k}"));
+            }
+            let min_kept = xh
+                .iter()
+                .filter(|x| **x != 0.0)
+                .map(|x| x.abs())
+                .fold(f32::MAX, f32::min);
+            let max_dropped = data
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            if min_kept < max_dropped {
+                return Err(format!("kept {min_kept} < dropped {max_dropped}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantize_error_bound() {
+        run_prop("quantize error bound", 40, |g| {
+            let data = randvec(g);
+            let bits = *g.choose(&[2u8, 4, 6, 8]);
+            let q = quantize(&data, bits);
+            let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+            for &x in &data {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            let bucket = (hi - lo) / (((1u32 << bits) - 1) as f32);
+            for (a, b) in data.iter().zip(&q) {
+                if (a - b).abs() > bucket / 2.0 + 1e-5 {
+                    return Err(format!("err {} > half bucket {}", (a - b).abs(), bucket / 2.0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_constant_is_identity() {
+        let data = vec![2.5; 64];
+        assert_eq!(quantize(&data, 2), data);
+    }
+
+    #[test]
+    fn quantize_codes_fit_in_bits() {
+        run_prop("codes fit in bits", 30, |g| {
+            let data = randvec(g);
+            let bits = *g.choose(&[2u8, 4, 6, 8]);
+            let (_, _, codes) = quantize_codes(&data, bits);
+            let max = (1u32 << bits) - 1;
+            if codes.iter().any(|&c| c > max) {
+                return Err("code overflow".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ef_conservation() {
+        // x + e == c + e_new exactly: compression delays, never destroys.
+        run_prop("ef conservation", 40, |g| {
+            let x = randvec(g);
+            let mut e = vec![0.0; x.len()];
+            g.rng.fill_normal(&mut e, 0.0, 0.5);
+            let (c, e_new) = ef_combine(&x, &e, 0.1);
+            for i in 0..x.len() {
+                let want = x[i] + e[i];
+                let got = c[i] + e_new[i];
+                if (want - got).abs() > 1e-5 {
+                    return Err(format!("i={i}: {want} vs {got}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ef_mixed_conservation_and_budget() {
+        run_prop("efmixed conservation", 40, |g| {
+            let x = randvec(g);
+            let mut e = vec![0.0; x.len()];
+            g.rng.fill_normal(&mut e, 0.0, 0.5);
+            let frac = 0.2;
+            let (msg, e_new) = ef_mixed(&x, &e, frac);
+            for i in 0..x.len() {
+                if (x[i] + e[i] - (msg[i] + e_new[i])).abs() > 1e-5 {
+                    return Err("not conservative".into());
+                }
+            }
+            // message support is at most the K budget (the two halves can
+            // overlap, making it smaller)
+            let nz = msg.iter().filter(|&&m| m != 0.0).count();
+            let kmax = budget(x.len(), frac) + 1;
+            if nz > kmax {
+                return Err(format!("support {nz} > budget {kmax}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ef21_buffer_tracks_reconstruction() {
+        // after a step the new buffer IS the receiver's reconstruction,
+        // and repeated steps with constant x converge to x.
+        run_prop("ef21 convergence", 30, |g| {
+            let x = randvec(g);
+            let mut buf = vec![0.0; x.len()];
+            for _ in 0..60 {
+                let (xhat, _) = ef21_step(&x, &buf, 0.1);
+                buf = xhat;
+            }
+            let err: f32 = x
+                .iter()
+                .zip(&buf)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            if err > 1e-4 {
+                return Err(format!("did not converge, err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ef21_zero_buffer_is_plain_topk() {
+        let x = vec![3.0, -1.0, 0.5, -4.0, 0.1, 2.0, -0.2, 0.05];
+        let zero = vec![0.0; x.len()];
+        let (xhat, k) = ef21_step(&x, &zero, 0.25);
+        let (want, _) = topk(&x, 0.25);
+        assert_eq!(xhat, want);
+        assert_eq!(k, 2);
+    }
+
+    #[test]
+    fn mask_apply_matches_shared_index_semantics() {
+        let x = vec![5.0, 0.1, -3.0, 0.2];
+        let g = vec![1.0, 2.0, 3.0, 4.0];
+        let (_, m) = topk(&x, 0.5);
+        assert_eq!(mask_apply(&g, &m), vec![1.0, 0.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Compression-mode grammar.
+//!
+//! The paper labels experiments `fw[A]-bw[B]` (quantization bits),
+//! `Top K%` (sparsification), `EF/EFmixed/EF21 + TopK`, and
+//! `AQ-SGD + TopK`. The config/CLI layer uses the same vocabulary:
+//!
+//! ```text
+//! none
+//! quant:fw4-bw8              A-bit activations, B-bit gradients
+//! topk:10                    Top10% on activations AND gradients (independent)
+//! topk:10:shared             gradient compression reuses activation indices
+//! ef+topk:10                 classic error feedback (global buffer)
+//! efmixed+topk:10            EF-mixed (half budget on input, half on buffer)
+//! ef21+topk:5                EF21 (compress deltas, global buffer)
+//! aqsgd+topk:30              AQ-SGD (per-sample activation buffers)
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Error-feedback technique wrapped around TopK compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Feedback {
+    /// Plain compression, no feedback.
+    None,
+    /// Seide et al.: send C(x + e), carry e forward (global buffer).
+    Ef,
+    /// Paper's EF-mixed: half the K budget on the input, half on the
+    /// accumulated error buffer.
+    EfMixed,
+    /// Richtárik et al. EF21: send C(x - g), g ← g + C(x - g).
+    Ef21,
+    /// Wang et al. AQ-SGD: EF21-style delta compression with a buffer
+    /// *per training sample*, applied to activations only.
+    AqSgd,
+}
+
+/// A fully-specified compression method for one model's links.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Baseline: activations and gradients at full precision.
+    None,
+    /// Uniform min-max quantization, independently parameterized for the
+    /// forward (activations) and backward (gradients) directions.
+    Quant { fw_bits: u8, bw_bits: u8 },
+    /// TopK sparsification at fraction `frac` (e.g. 0.10 for Top10%).
+    TopK {
+        frac: f32,
+        /// Table 5's index-reuse mode: gradients are masked with the
+        /// indices selected for the corresponding activations instead of
+        /// their own top-k. Default (independent) is `false`.
+        shared_idx: bool,
+        /// Error feedback wrapped around the activation/gradient
+        /// compression (AQ-SGD: activations only, per the paper).
+        feedback: Feedback,
+    },
+}
+
+/// Method plus run-protocol knobs that the paper attaches to mode labels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Spec {
+    pub method: Method,
+    /// "warmup N": train uncompressed for N epochs (from the baseline
+    /// checkpoint in the paper's protocol) before enabling compression.
+    pub warmup_epochs: usize,
+}
+
+impl Spec {
+    pub fn none() -> Spec {
+        Spec { method: Method::None, warmup_epochs: 0 }
+    }
+
+    /// Parse the mode grammar, e.g. `ef21+topk:10+warmup20`.
+    pub fn parse(s: &str) -> Result<Spec> {
+        let mut warmup = 0usize;
+        let mut parts: Vec<&str> = s.split('+').map(str::trim).collect();
+        parts.retain(|p| {
+            if let Some(w) = p.strip_prefix("warmup") {
+                if let Ok(n) = w.parse::<usize>() {
+                    warmup = n;
+                    return false;
+                }
+            }
+            true
+        });
+
+        let method = match parts.as_slice() {
+            ["none"] | [""] => Method::None,
+            [one] => parse_base(one)?,
+            [fb, base] => {
+                let feedback = match *fb {
+                    "ef" => Feedback::Ef,
+                    "efmixed" => Feedback::EfMixed,
+                    "ef21" => Feedback::Ef21,
+                    "aqsgd" => Feedback::AqSgd,
+                    _ => bail!("unknown feedback '{fb}' in '{s}'"),
+                };
+                match parse_base(base)? {
+                    Method::TopK { frac, shared_idx, .. } => {
+                        Method::TopK { frac, shared_idx, feedback }
+                    }
+                    _ => bail!("feedback requires a topk base in '{s}'"),
+                }
+            }
+            _ => bail!("cannot parse compression spec '{s}'"),
+        };
+        Ok(Spec { method, warmup_epochs: warmup })
+    }
+
+    /// The paper-style display label, e.g. "fw4-bw8", "Top 10%",
+    /// "EF21 + Top 5%".
+    pub fn label(&self) -> String {
+        let base = match self.method {
+            Method::None => "no compression".to_string(),
+            Method::Quant { fw_bits, bw_bits } => format!("fw{fw_bits}-bw{bw_bits}"),
+            Method::TopK { frac, shared_idx, feedback } => {
+                let pct = (frac * 100.0).round() as u32;
+                let fb = match feedback {
+                    Feedback::None => "",
+                    Feedback::Ef => "EF + ",
+                    Feedback::EfMixed => "EFmixed + ",
+                    Feedback::Ef21 => "EF21 + ",
+                    Feedback::AqSgd => "AQ-SGD + ",
+                };
+                let sep = if shared_idx { " (shared idx)" } else { "" };
+                format!("{fb}Top {pct}%{sep}")
+            }
+        };
+        if self.warmup_epochs > 0 {
+            format!("{base}, warmup {}", self.warmup_epochs)
+        } else {
+            base
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.method == Method::None
+    }
+}
+
+fn parse_base(s: &str) -> Result<Method> {
+    if s == "none" {
+        return Ok(Method::None);
+    }
+    if let Some(rest) = s.strip_prefix("quant:") {
+        // fwA-bwB
+        let (fw, bw) = rest
+            .split_once('-')
+            .ok_or_else(|| anyhow::anyhow!("quant wants fwA-bwB, got '{rest}'"))?;
+        let fw_bits: u8 = fw.strip_prefix("fw").unwrap_or(fw).parse()?;
+        let bw_bits: u8 = bw.strip_prefix("bw").unwrap_or(bw).parse()?;
+        if !(1..=16).contains(&fw_bits) || !(1..=16).contains(&bw_bits) {
+            bail!("quant bits out of range in '{s}'");
+        }
+        return Ok(Method::Quant { fw_bits, bw_bits });
+    }
+    if let Some(rest) = s.strip_prefix("topk:") {
+        let mut it = rest.split(':');
+        let pct: f32 = it.next().unwrap().parse()?;
+        let shared_idx = match it.next() {
+            None | Some("separate") => false,
+            Some("shared") => true,
+            Some(x) => bail!("unknown topk index mode '{x}'"),
+        };
+        if !(0.0..=100.0).contains(&pct) || pct == 0.0 {
+            bail!("topk percent out of range in '{s}'");
+        }
+        return Ok(Method::TopK { frac: pct / 100.0, shared_idx, feedback: Feedback::None });
+    }
+    bail!("cannot parse compression method '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_none() {
+        assert_eq!(Spec::parse("none").unwrap(), Spec::none());
+    }
+
+    #[test]
+    fn parses_quant() {
+        let s = Spec::parse("quant:fw4-bw8").unwrap();
+        assert_eq!(s.method, Method::Quant { fw_bits: 4, bw_bits: 8 });
+        assert_eq!(s.label(), "fw4-bw8");
+    }
+
+    #[test]
+    fn parses_topk_variants() {
+        let s = Spec::parse("topk:10").unwrap();
+        assert_eq!(
+            s.method,
+            Method::TopK { frac: 0.1, shared_idx: false, feedback: Feedback::None }
+        );
+        let s = Spec::parse("topk:10:shared").unwrap();
+        assert!(matches!(s.method, Method::TopK { shared_idx: true, .. }));
+        assert_eq!(s.label(), "Top 10% (shared idx)");
+    }
+
+    #[test]
+    fn parses_feedback_and_warmup() {
+        let s = Spec::parse("ef21+topk:5").unwrap();
+        assert!(matches!(
+            s.method,
+            Method::TopK { feedback: Feedback::Ef21, .. }
+        ));
+        let s = Spec::parse("ef+topk:10+warmup20").unwrap();
+        assert_eq!(s.warmup_epochs, 20);
+        assert_eq!(s.label(), "EF + Top 10%, warmup 20");
+        let s = Spec::parse("aqsgd+topk:30+warmup10").unwrap();
+        assert!(matches!(s.method, Method::TopK { feedback: Feedback::AqSgd, .. }));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Spec::parse("quant:4").is_err());
+        assert!(Spec::parse("topk:0").is_err());
+        assert!(Spec::parse("topk:101").is_err());
+        assert!(Spec::parse("ef+quant:fw4-bw4").is_err());
+        assert!(Spec::parse("bogus").is_err());
+        assert!(Spec::parse("zz+topk:10").is_err());
+    }
+
+    #[test]
+    fn paper_mode_table_roundtrip() {
+        // every mode string used by the experiment harness parses
+        for m in [
+            "none",
+            "quant:fw4-bw8", "quant:fw4-bw6", "quant:fw4-bw4", "quant:fw4-bw2",
+            "quant:fw2-bw8", "quant:fw2-bw6", "quant:fw2-bw4",
+            "topk:50", "topk:30", "topk:20", "topk:10", "topk:5", "topk:2",
+            "ef+topk:10+warmup20", "efmixed+topk:10+warmup20",
+            "ef21+topk:5", "ef21+topk:10", "ef21+topk:10+warmup20",
+            "aqsgd+topk:50+warmup10", "aqsgd+topk:30+warmup10",
+            "aqsgd+topk:20+warmup10", "aqsgd+topk:10+warmup10",
+            "topk:50:shared", "topk:10:separate",
+        ] {
+            Spec::parse(m).unwrap_or_else(|e| panic!("{m}: {e}"));
+        }
+    }
+}

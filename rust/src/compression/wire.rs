@@ -1,0 +1,372 @@
+//! Wire codecs: the actual bytes a real deployment would put on the
+//! network, used by the netsim for exact communication accounting and
+//! benchmarked in `rust/benches/wire.rs`.
+//!
+//! Formats (all little-endian, 9-byte common header):
+//!
+//! ```text
+//! [tag u8][n u32][payload u32]  then per-format body
+//! tag 0 RAW     body: n * f32
+//! tag 1 QUANT   body: bits u8, lo f32, hi f32, ceil(n*bits/8) packed codes
+//! tag 2 SPARSE  body: k u32, k * (idx u32, val f32)       -- index list
+//! tag 3 BITMAP  body: k u32, ceil(n/8) bitmap, k * f32    -- dense mask
+//! ```
+//!
+//! `encode_sparse` picks SPARSE vs BITMAP, whichever is smaller — the
+//! crossover sits at density n/k = 64/(32+ceil(32·n/k... in practice
+//! ≈ 1/9 ≈ 11%: at Top10% and below the index list wins, above it the
+//! bitmap wins. `rust/benches/wire.rs` measures the crossover empirically
+//! (an ablation the paper's §4.1 "indices increase communication cost"
+//! remark motivates).
+
+use anyhow::{bail, Result};
+
+use super::ops;
+
+const TAG_RAW: u8 = 0;
+const TAG_QUANT: u8 = 1;
+const TAG_SPARSE: u8 = 2;
+const TAG_BITMAP: u8 = 3;
+
+fn header(tag: u8, n: usize, out: &mut Vec<u8>) {
+    out.push(tag);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
+fn read_u32(b: &[u8], at: usize) -> Result<u32> {
+    if at + 4 > b.len() {
+        bail!("wire: truncated u32 at {at}");
+    }
+    Ok(u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]]))
+}
+
+fn read_f32(b: &[u8], at: usize) -> Result<f32> {
+    Ok(f32::from_bits(read_u32(b, at)?))
+}
+
+// ---------------------------------------------------------------------------
+// raw
+// ---------------------------------------------------------------------------
+
+pub fn encode_raw(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + 4 * data.len());
+    header(TAG_RAW, data.len(), &mut out);
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// quantized
+// ---------------------------------------------------------------------------
+
+/// Encode with `bits`-bit uniform min-max quantization. The decoded
+/// values equal `ops::quantize(data, bits)` exactly (and therefore the
+/// Pallas kernel's output).
+pub fn encode_quant(data: &[f32], bits: u8) -> Vec<u8> {
+    assert!(bits >= 1 && bits <= 16);
+    let (lo, hi, codes) = ops::quantize_codes(data, bits);
+    let mut out = Vec::with_capacity(14 + (data.len() * bits as usize).div_ceil(8));
+    header(TAG_QUANT, data.len(), &mut out);
+    out.push(bits);
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&hi.to_le_bytes());
+    // bit-pack the codes LSB-first
+    let mut acc: u64 = 0;
+    let mut nbits = 0u32;
+    for &c in &codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits as u32;
+        while nbits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// sparse (TopK)
+// ---------------------------------------------------------------------------
+
+/// Encode a sparse tensor given its dense zero-filled form, keeping at
+/// most `k_budget` nonzeros (ties beyond the budget are dropped in index
+/// order, making the encoding deterministic). Picks the smaller of the
+/// index-list and bitmap representations.
+pub fn encode_sparse(dense: &[f32], k_budget: usize) -> Vec<u8> {
+    let mut idx: Vec<u32> = Vec::new();
+    for (i, &x) in dense.iter().enumerate() {
+        if x != 0.0 {
+            idx.push(i as u32);
+            if idx.len() == k_budget {
+                break;
+            }
+        }
+    }
+    let k = idx.len();
+    let sparse_bytes = 8 * k;
+    let bitmap_bytes = dense.len().div_ceil(8) + 4 * k;
+    let mut out = Vec::with_capacity(10 + sparse_bytes.min(bitmap_bytes));
+    if sparse_bytes <= bitmap_bytes {
+        header(TAG_SPARSE, dense.len(), &mut out);
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        for &i in &idx {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&dense[i as usize].to_le_bytes());
+        }
+    } else {
+        header(TAG_BITMAP, dense.len(), &mut out);
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        let mut bitmap = vec![0u8; dense.len().div_ceil(8)];
+        for &i in &idx {
+            bitmap[(i / 8) as usize] |= 1 << (i % 8);
+        }
+        out.extend_from_slice(&bitmap);
+        for &i in &idx {
+            out.extend_from_slice(&dense[i as usize].to_le_bytes());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// Decode any wire message back to its dense f32 form.
+pub fn decode(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.is_empty() {
+        bail!("wire: empty message");
+    }
+    let tag = bytes[0];
+    let n = read_u32(bytes, 1)? as usize;
+    let mut at = 5usize;
+    match tag {
+        TAG_RAW => {
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(read_f32(bytes, at)?);
+                at += 4;
+            }
+            Ok(out)
+        }
+        TAG_QUANT => {
+            if at >= bytes.len() {
+                bail!("wire: truncated quant header");
+            }
+            let bits = bytes[at];
+            at += 1;
+            let lo = read_f32(bytes, at)?;
+            at += 4;
+            let hi = read_f32(bytes, at)?;
+            at += 4;
+            let mut codes = Vec::with_capacity(n);
+            let mut acc: u64 = 0;
+            let mut nbits = 0u32;
+            let mask = (1u64 << bits) - 1;
+            for _ in 0..n {
+                while nbits < bits as u32 {
+                    if at >= bytes.len() {
+                        bail!("wire: truncated quant payload");
+                    }
+                    acc |= (bytes[at] as u64) << nbits;
+                    at += 1;
+                    nbits += 8;
+                }
+                codes.push((acc & mask) as u32);
+                acc >>= bits;
+                nbits -= bits as u32;
+            }
+            if hi - lo > 0.0 {
+                Ok(ops::dequantize_codes(lo, hi, bits, &codes))
+            } else {
+                Ok(vec![lo; n])
+            }
+        }
+        TAG_SPARSE => {
+            let k = read_u32(bytes, at)? as usize;
+            at += 4;
+            let mut out = vec![0.0f32; n];
+            for _ in 0..k {
+                let i = read_u32(bytes, at)? as usize;
+                at += 4;
+                let v = read_f32(bytes, at)?;
+                at += 4;
+                if i >= n {
+                    bail!("wire: sparse index {i} out of range {n}");
+                }
+                out[i] = v;
+            }
+            Ok(out)
+        }
+        TAG_BITMAP => {
+            let k = read_u32(bytes, at)? as usize;
+            at += 4;
+            let bm_len = n.div_ceil(8);
+            if at + bm_len > bytes.len() {
+                bail!("wire: truncated bitmap");
+            }
+            let bitmap = &bytes[at..at + bm_len];
+            at += bm_len;
+            let mut out = vec![0.0f32; n];
+            let mut seen = 0usize;
+            for i in 0..n {
+                if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                    out[i] = read_f32(bytes, at)?;
+                    at += 4;
+                    seen += 1;
+                }
+            }
+            if seen != k {
+                bail!("wire: bitmap popcount {seen} != k {k}");
+            }
+            Ok(out)
+        }
+        t => bail!("wire: unknown tag {t}"),
+    }
+}
+
+/// Bytes a message *would* take, without materializing it (fast path for
+/// the netsim accounting).
+pub fn quant_wire_bytes(n: usize, bits: u8) -> usize {
+    5 + 9 + (n * bits as usize).div_ceil(8)
+}
+
+pub fn sparse_wire_bytes(n: usize, k: usize) -> usize {
+    let sparse = 8 * k;
+    let bitmap = n.div_ceil(8) + 4 * k;
+    5 + 4 + sparse.min(bitmap)
+}
+
+pub fn raw_wire_bytes(n: usize) -> usize {
+    5 + 4 * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn raw_roundtrip() {
+        let data = vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(decode(&encode_raw(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn prop_quant_roundtrip_matches_native_quantizer() {
+        run_prop("quant wire == ops::quantize", 40, |g| {
+            let data = g.vec_normal(4, 5000);
+            let bits = *g.choose(&[2u8, 4, 6, 8]);
+            let decoded = decode(&encode_quant(&data, bits)).map_err(|e| e.to_string())?;
+            let want = ops::quantize(&data, bits);
+            for (a, b) in decoded.iter().zip(&want) {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_constant_tensor() {
+        let data = vec![7.0; 100];
+        let decoded = decode(&encode_quant(&data, 4)).unwrap();
+        assert_eq!(decoded, data);
+    }
+
+    #[test]
+    fn quant_bytes_formula_exact() {
+        for bits in [2u8, 4, 6, 8] {
+            for n in [1usize, 7, 100, 1024, 12345] {
+                let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+                assert_eq!(
+                    encode_quant(&data, bits).len(),
+                    quant_wire_bytes(n, bits),
+                    "n={n} bits={bits}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sparse_roundtrip() {
+        run_prop("sparse roundtrip", 40, |g| {
+            let data = g.vec_normal(8, 5000);
+            let frac = *g.choose(&[0.5, 0.1, 0.02]);
+            let (dense, _) = ops::topk(&data, frac);
+            let k = ops::budget(data.len(), frac);
+            let decoded = decode(&encode_sparse(&dense, k)).map_err(|e| e.to_string())?;
+            // budget-trimming may zero a few tied entries; everything
+            // decoded must match, and support must be <= k
+            let nz = decoded.iter().filter(|&&x| x != 0.0).count();
+            if nz > k {
+                return Err(format!("support {nz} > {k}"));
+            }
+            for (i, (&a, &b)) in dense.iter().zip(&decoded).enumerate() {
+                if b != 0.0 && a != b {
+                    return Err(format!("i={i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_picks_smaller_encoding() {
+        let n = 10_000;
+        // dense-ish: 50% nonzero -> bitmap wins
+        let mut dense = vec![0.0f32; n];
+        for i in 0..n / 2 {
+            dense[i * 2] = 1.0;
+        }
+        let b = encode_sparse(&dense, n / 2);
+        assert_eq!(b[0], TAG_BITMAP);
+        assert_eq!(b.len(), sparse_wire_bytes(n, n / 2));
+        // very sparse: 1% nonzero -> index list wins
+        let mut dense = vec![0.0f32; n];
+        for i in 0..n / 100 {
+            dense[i * 97] = 1.0;
+        }
+        let b = encode_sparse(&dense, n / 100);
+        assert_eq!(b[0], TAG_SPARSE);
+        assert_eq!(b.len(), sparse_wire_bytes(n, n / 100));
+    }
+
+    #[test]
+    fn crossover_near_one_ninth_density() {
+        // index list: 8k bytes; bitmap: n/8 + 4k bytes -> equal at k = n/32
+        let n = 3200usize;
+        assert!(sparse_wire_bytes(n, n / 32) == 5 + 4 + 8 * (n / 32));
+        assert!(sparse_wire_bytes(n, n / 16) < 5 + 4 + 8 * (n / 16)); // bitmap smaller
+    }
+
+    #[test]
+    fn decode_rejects_corrupt() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[9, 0, 0, 0, 0]).is_err()); // unknown tag
+        let mut ok = encode_quant(&[1.0, 2.0, 3.0], 4);
+        ok.truncate(ok.len() - 1);
+        assert!(decode(&ok).is_err());
+        // sparse with out-of-range index
+        let mut bad = encode_sparse(&[1.0, 0.0], 1);
+        let at = bad.len() - 8;
+        bad[at..at + 4].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn compression_ratios_match_paper_motivation() {
+        // Top10% should cut bytes ~5x vs raw (8 bytes/kept vs 4 bytes/elem);
+        // 4-bit quant ~8x.
+        let n = 100_000;
+        assert!(raw_wire_bytes(n) as f64 / sparse_wire_bytes(n, n / 10) as f64 > 4.5);
+        assert!(raw_wire_bytes(n) as f64 / quant_wire_bytes(n, 4) as f64 > 7.5);
+    }
+}

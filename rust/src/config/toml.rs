@@ -1,0 +1,259 @@
+//! Minimal TOML-subset parser — substrate for the offline environment
+//! (the `toml` crate is unavailable; DESIGN.md §3).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / bool / flat array values, `#` comments, blank lines. This is
+//! exactly the subset the experiment configs use.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str_array(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| Ok(x.as_str()?.to_string())).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live in the
+/// "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got '{line}'", lineno + 1);
+            };
+            let v = parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {s}");
+        };
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array {s}");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(Value::Array(
+            items.iter().map(|i| parse_value(i.trim())).collect::<Result<_>>()?,
+        ));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    // split on commas not inside strings (nested arrays unsupported)
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = Doc::parse(
+            r#"
+            # experiment config
+            name = "table2"     # inline comment
+            [train]
+            epochs = 12
+            lr = 0.01
+            shuffle = true
+            modes = ["none", "topk:50", "topk:10"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "table2");
+        assert_eq!(doc.usize_or("train", "epochs", 0).unwrap(), 12);
+        assert_eq!(doc.f64_or("train", "lr", 0.0).unwrap(), 0.01);
+        assert!(doc.bool_or("train", "shuffle", false).unwrap());
+        assert_eq!(
+            doc.get("train", "modes").unwrap().as_str_array().unwrap(),
+            vec!["none", "topk:50", "topk:10"]
+        );
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let doc = Doc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.usize_or("a", "y", 7).unwrap(), 7);
+        assert_eq!(doc.str_or("b", "z", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("i = 3\nf = 3.5\nn = -2\n").unwrap();
+        assert_eq!(doc.get("", "i").unwrap(), &Value::Int(3));
+        assert_eq!(doc.get("", "f").unwrap(), &Value::Float(3.5));
+        assert_eq!(doc.get("", "n").unwrap(), &Value::Int(-2));
+        assert!(doc.get("", "n").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unterminated\n").is_err());
+        assert!(Doc::parse("novalue\n").is_err());
+        assert!(Doc::parse("k = \n").is_err());
+        assert!(Doc::parse("k = \"open\n").is_err());
+        assert!(Doc::parse("k = [1, 2\n").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Error-feedback state machines owned by the coordinator, one per link
+//! per direction (paper §2.4-§2.5).
+//!
+//! * **EF** (Seide et al.): global buffer `e`; send `C(x+e)`, carry the
+//!   residual. "Global" = one buffer per compression operator, shared
+//!   across batches (the paper's global-batch-buffer design).
+//! * **EF-mixed** (paper's variant): half the K budget on the input,
+//!   half on the buffer.
+//! * **EF21** (Richtárik et al.): buffer `g` tracks the receiver's view;
+//!   send `C(x-g)`, `g += C(x-g)`.
+//! * **AQ-SGD** (Wang et al.): EF21-style delta compression with one
+//!   buffer **per training sample** (here: per microbatch id — the
+//!   paper's per-batch buffer), activations only. The first time a
+//!   sample is seen its activations go uncompressed (buffer bootstrap),
+//!   as in the original AQ-SGD design.
+
+use std::collections::HashMap;
+
+use crate::compression::Feedback;
+use crate::tensor::Tensor;
+
+/// Feedback state for one (link, direction).
+#[derive(Debug, Default)]
+pub struct FeedbackState {
+    /// Global buffer (EF / EF-mixed residual, or EF21 receiver view).
+    global: Option<Tensor>,
+    /// AQ-SGD per-sample buffers, keyed by microbatch id.
+    per_sample: HashMap<u64, Tensor>,
+}
+
+impl FeedbackState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Global buffer, zero-initialized on first use.
+    pub fn global_mut(&mut self, n: usize) -> &mut Tensor {
+        self.global.get_or_insert_with(|| Tensor::zeros(vec![n]))
+    }
+
+    pub fn set_global(&mut self, t: Tensor) {
+        self.global = Some(t);
+    }
+
+    /// AQ-SGD buffer for a sample key, or None if this sample has not
+    /// been seen (bootstrap: caller sends uncompressed and stores).
+    pub fn sample(&self, key: u64) -> Option<&Tensor> {
+        self.per_sample.get(&key)
+    }
+
+    pub fn set_sample(&mut self, key: u64, t: Tensor) {
+        self.per_sample.insert(key, t);
+    }
+
+    /// Bytes held by this state (the AQ-SGD memory-footprint metric the
+    /// paper's future-work section worries about).
+    pub fn memory_bytes(&self) -> usize {
+        let g = self.global.as_ref().map(|t| 4 * t.len()).unwrap_or(0);
+        let p: usize = self.per_sample.values().map(|t| 4 * t.len()).sum();
+        g + p
+    }
+
+    pub fn reset(&mut self) {
+        self.global = None;
+        self.per_sample.clear();
+    }
+}
+
+/// Does this feedback mode apply to the given direction? (AQ-SGD is
+/// activations-only per the paper; everything else is symmetric.)
+pub fn applies_to_bwd(fb: Feedback) -> bool {
+    !matches!(fb, Feedback::AqSgd | Feedback::None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_zero_init() {
+        let mut s = FeedbackState::new();
+        assert_eq!(s.global_mut(4).data(), &[0.0; 4]);
+        s.global_mut(4).data_mut()[0] = 1.0;
+        assert_eq!(s.global_mut(4).data()[0], 1.0); // persists
+    }
+
+    #[test]
+    fn per_sample_bootstrap_protocol() {
+        let mut s = FeedbackState::new();
+        assert!(s.sample(7).is_none());
+        s.set_sample(7, Tensor::from_vec(vec![1.0, 2.0]));
+        assert_eq!(s.sample(7).unwrap().data(), &[1.0, 2.0]);
+        assert!(s.sample(8).is_none());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut s = FeedbackState::new();
+        assert_eq!(s.memory_bytes(), 0);
+        s.global_mut(10);
+        s.set_sample(0, Tensor::zeros(vec![100]));
+        s.set_sample(1, Tensor::zeros(vec![100]));
+        assert_eq!(s.memory_bytes(), 4 * (10 + 200));
+        s.reset();
+        assert_eq!(s.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn aqsgd_is_fwd_only() {
+        assert!(!applies_to_bwd(Feedback::AqSgd));
+        assert!(!applies_to_bwd(Feedback::None));
+        assert!(applies_to_bwd(Feedback::Ef));
+        assert!(applies_to_bwd(Feedback::EfMixed));
+        assert!(applies_to_bwd(Feedback::Ef21));
+    }
+}

@@ -1,0 +1,327 @@
+//! Compressed inter-stage links: where the paper's contribution lives.
+//!
+//! A link sits between pipeline stages i and i+1. During training it
+//! compresses activations on the forward pass and gradients on the
+//! backward pass, maintains the error-feedback state, stores activation
+//! sparsity masks for the shared-index mode, and accounts every message
+//! with the wire codecs + netsim.
+//!
+//! Two execution paths produce bit-identical results (asserted by
+//! integration tests): `CompressImpl::Kernel` runs the L1 Pallas
+//! kernels through PJRT; `CompressImpl::Native` runs `compression::ops`.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::compression::{ops, wire, Feedback, Method, Spec};
+use crate::config::CompressImpl;
+use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
+use crate::netsim::{Dir, NetSim};
+use crate::runtime::{artifacts::CompressionFiles, lit_scalar, lit_vec, Runtime};
+use crate::tensor::Tensor;
+
+pub struct CompressedLink {
+    pub index: usize,
+    /// Unpadded element count of tensors crossing this link.
+    pub n: usize,
+    /// Padded size for the kernel executables.
+    pub padded: usize,
+    files: CompressionFiles,
+    pub fwd_state: FeedbackState,
+    pub bwd_state: FeedbackState,
+    /// Activation masks per in-flight microbatch (shared-index mode).
+    masks: HashMap<u64, Vec<f32>>,
+}
+
+impl CompressedLink {
+    pub fn new(index: usize, n: usize, padded: usize, files: CompressionFiles) -> Self {
+        CompressedLink {
+            index,
+            n,
+            padded,
+            files,
+            fwd_state: FeedbackState::new(),
+            bwd_state: FeedbackState::new(),
+            masks: HashMap::new(),
+        }
+    }
+
+    /// Compress activations (forward direction) for microbatch `mb_key`.
+    /// `train=false` applies the plain operator without touching any
+    /// feedback state (inference-with-compression evals).
+    pub fn forward(
+        &mut self,
+        rt: &Runtime,
+        spec: &Spec,
+        imp: CompressImpl,
+        t: &Tensor,
+        mb_key: u64,
+        train: bool,
+        net: &mut NetSim,
+    ) -> Result<Tensor> {
+        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Fwd, net)
+    }
+
+    /// Compress gradients (backward direction).
+    pub fn backward(
+        &mut self,
+        rt: &Runtime,
+        spec: &Spec,
+        imp: CompressImpl,
+        t: &Tensor,
+        mb_key: u64,
+        train: bool,
+        net: &mut NetSim,
+    ) -> Result<Tensor> {
+        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Bwd, net)
+    }
+
+    fn transfer(
+        &mut self,
+        rt: &Runtime,
+        spec: &Spec,
+        imp: CompressImpl,
+        t: &Tensor,
+        mb_key: u64,
+        train: bool,
+        dir: Dir,
+        net: &mut NetSim,
+    ) -> Result<Tensor> {
+        debug_assert_eq!(t.len(), self.n, "link {} tensor size", self.index);
+        let raw = wire::raw_wire_bytes(self.n);
+        match spec.method {
+            Method::None => {
+                net.transfer(self.index, dir, raw, raw);
+                Ok(t.clone())
+            }
+            Method::Quant { fw_bits, bw_bits } => {
+                let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
+                let out = self.quantize(rt, imp, t, bits)?;
+                net.transfer(self.index, dir, wire::quant_wire_bytes(self.n, bits), raw);
+                Ok(out)
+            }
+            Method::TopK { frac, shared_idx, feedback } => {
+                let fb = if train { feedback } else { Feedback::None };
+                let fb = if dir == Dir::Bwd && !applies_to_bwd(fb) { Feedback::None } else { fb };
+                // shared-index mode: the gradient reuses the activation
+                // mask captured on this microbatch's forward pass
+                if dir == Dir::Bwd && shared_idx && train {
+                    let mask = self
+                        .masks
+                        .remove(&mb_key)
+                        .with_context(|| format!("link {}: no stored mask for mb {mb_key}", self.index))?;
+                    let out = self.apply_mask(rt, imp, t, &mask)?;
+                    let k = out.count_nonzero();
+                    net.transfer(self.index, dir, wire::sparse_wire_bytes(self.n, k), raw);
+                    return Ok(out);
+                }
+                let (out, k_on_wire) = match fb {
+                    Feedback::None => {
+                        let thresh = ops::threshold_for_frac(t.data(), frac);
+                        let (xhat, mask) = self.topk(rt, imp, t, thresh)?;
+                        if dir == Dir::Fwd && shared_idx && train {
+                            self.masks.insert(mb_key, mask);
+                        }
+                        let k = xhat.count_nonzero();
+                        (xhat, k)
+                    }
+                    Feedback::Ef => self.ef_step(rt, imp, t, frac, dir)?,
+                    Feedback::EfMixed => self.efmixed_step(t, frac, dir)?,
+                    Feedback::Ef21 => self.ef21_step(rt, imp, t, frac, dir, None)?,
+                    Feedback::AqSgd => {
+                        debug_assert_eq!(dir, Dir::Fwd);
+                        match self.fwd_state.sample(mb_key).cloned() {
+                            None => {
+                                // bootstrap: first visit sends uncompressed
+                                self.fwd_state.set_sample(mb_key, t.clone());
+                                net.transfer(self.index, dir, raw, raw);
+                                return Ok(t.clone());
+                            }
+                            Some(buf) => {
+                                self.ef21_step(rt, imp, t, frac, dir, Some((mb_key, buf)))?
+                            }
+                        }
+                    }
+                };
+                net.transfer(self.index, dir, wire::sparse_wire_bytes(self.n, k_on_wire), raw);
+                Ok(out)
+            }
+        }
+    }
+
+    // ---- operator backends --------------------------------------------------
+
+    fn quantize(&self, rt: &Runtime, imp: CompressImpl, t: &Tensor, bits: u8) -> Result<Tensor> {
+        match imp {
+            CompressImpl::Native => {
+                Tensor::new(t.shape().to_vec(), ops::quantize(t.data(), bits))
+            }
+            CompressImpl::Kernel => {
+                let padded = t.padded_flat(self.padded_block());
+                let levels = (1u32 << bits) as f32;
+                let out = rt.call(&self.files.quant, &[lit_vec(&padded), lit_scalar(levels)])?;
+                Tensor::from_padded(t.shape(), &out[0].to_vec::<f32>()?)
+            }
+        }
+    }
+
+    fn topk(
+        &self,
+        rt: &Runtime,
+        imp: CompressImpl,
+        t: &Tensor,
+        thresh: f32,
+    ) -> Result<(Tensor, Vec<f32>)> {
+        match imp {
+            CompressImpl::Native => {
+                let (xh, mask) = ops::apply_threshold(t.data(), thresh);
+                Ok((Tensor::new(t.shape().to_vec(), xh)?, mask))
+            }
+            CompressImpl::Kernel => {
+                let padded = t.padded_flat(self.padded_block());
+                let out = rt.call(&self.files.topk, &[lit_vec(&padded), lit_scalar(thresh)])?;
+                let xh = Tensor::from_padded(t.shape(), &out[0].to_vec::<f32>()?)?;
+                let mut mask = out[1].to_vec::<f32>()?;
+                mask.truncate(self.n);
+                Ok((xh, mask))
+            }
+        }
+    }
+
+    fn apply_mask(
+        &self,
+        rt: &Runtime,
+        imp: CompressImpl,
+        t: &Tensor,
+        mask: &[f32],
+    ) -> Result<Tensor> {
+        match imp {
+            CompressImpl::Native => {
+                Tensor::new(t.shape().to_vec(), ops::mask_apply(t.data(), mask))
+            }
+            CompressImpl::Kernel => {
+                let padded = t.padded_flat(self.padded_block());
+                // pad the mask with zeros (padding lanes must stay dropped)
+                let mut m = mask.to_vec();
+                m.resize(self.padded, 0.0);
+                let out = rt.call(&self.files.mask, &[lit_vec(&padded), lit_vec(&m)])?;
+                Tensor::from_padded(t.shape(), &out[0].to_vec::<f32>()?)
+            }
+        }
+    }
+
+    /// Classic EF: c = C(x + e), e' = x + e - c.
+    fn ef_step(
+        &mut self,
+        rt: &Runtime,
+        imp: CompressImpl,
+        t: &Tensor,
+        frac: f32,
+        dir: Dir,
+    ) -> Result<(Tensor, usize)> {
+        let state = self.state_mut(dir);
+        let buf = state.global_mut(t.len()).clone();
+        // threshold over s = x + e (host: the selection is the
+        // coordinator's job in both paths; see DESIGN.md §2)
+        let s: Vec<f32> = t.data().iter().zip(buf.data()).map(|(a, b)| a + b).collect();
+        let thresh = ops::threshold_for_frac(&s, frac);
+        let (c, e_new) = match imp {
+            CompressImpl::Native => {
+                let (c, e) = ops::ef_combine(t.data(), buf.data(), frac);
+                (c, e)
+            }
+            CompressImpl::Kernel => {
+                let xp = t.padded_flat(self.padded_block());
+                let mut ep = buf.data().to_vec();
+                // pad the buffer with zeros: padding lanes of x replicate
+                // the last element and must not leak into the state
+                ep.resize(self.padded, 0.0);
+                let out =
+                    rt.call(&self.files.ef_combine, &[lit_vec(&xp), lit_vec(&ep), lit_scalar(thresh)])?;
+                let mut c = out[0].to_vec::<f32>()?;
+                let mut e = out[1].to_vec::<f32>()?;
+                c.truncate(self.n);
+                e.truncate(self.n);
+                (c, e)
+            }
+        };
+        let k = c.iter().filter(|&&v| v != 0.0).count();
+        self.state_mut(dir).set_global(Tensor::new(vec![t.len()], e_new)?);
+        Ok((Tensor::new(t.shape().to_vec(), c)?, k))
+    }
+
+    /// EF-mixed: K/2 budget on x, K/2 on the buffer (native-only math,
+    /// composed from two mask kernels in the kernel path).
+    fn efmixed_step(&mut self, t: &Tensor, frac: f32, dir: Dir) -> Result<(Tensor, usize)> {
+        let state = self.state_mut(dir);
+        let buf = state.global_mut(t.len()).clone();
+        let (msg, e_new) = ops::ef_mixed(t.data(), buf.data(), frac);
+        let k = msg.iter().filter(|&&v| v != 0.0).count();
+        self.state_mut(dir).set_global(Tensor::new(vec![t.len()], e_new)?);
+        Ok((Tensor::new(t.shape().to_vec(), msg)?, k))
+    }
+
+    /// EF21 (global buffer) or AQ-SGD (per-sample buffer) delta step.
+    fn ef21_step(
+        &mut self,
+        rt: &Runtime,
+        imp: CompressImpl,
+        t: &Tensor,
+        frac: f32,
+        dir: Dir,
+        sample: Option<(u64, Tensor)>,
+    ) -> Result<(Tensor, usize)> {
+        let buf = match &sample {
+            Some((_, b)) => b.clone(),
+            None => self.state_mut(dir).global_mut(t.len()).clone(),
+        };
+        let delta: Vec<f32> = t.data().iter().zip(buf.data()).map(|(a, b)| a - b).collect();
+        let thresh = ops::threshold_for_frac(&delta, frac);
+        let k = delta.iter().filter(|d| d.abs() >= thresh).count();
+        let xhat = match imp {
+            CompressImpl::Native => {
+                let (xh, _) = ops::ef21_step(t.data(), buf.data(), frac);
+                Tensor::new(t.shape().to_vec(), xh)?
+            }
+            CompressImpl::Kernel => {
+                let xp = t.padded_flat(self.padded_block());
+                let mut gp = buf.data().to_vec();
+                let fill = buf.data().last().copied().unwrap_or(0.0);
+                gp.resize(self.padded, fill);
+                let out =
+                    rt.call(&self.files.delta_topk, &[lit_vec(&xp), lit_vec(&gp), lit_scalar(thresh)])?;
+                Tensor::from_padded(t.shape(), &out[0].to_vec::<f32>()?)?
+            }
+        };
+        let flat = Tensor::new(vec![t.len()], xhat.data().to_vec())?;
+        match sample {
+            Some((key, _)) => self.fwd_state.set_sample(key, flat),
+            None => self.state_mut(dir).set_global(flat),
+        }
+        Ok((xhat, k))
+    }
+
+    fn state_mut(&mut self, dir: Dir) -> &mut FeedbackState {
+        match dir {
+            Dir::Fwd => &mut self.fwd_state,
+            Dir::Bwd => &mut self.bwd_state,
+        }
+    }
+
+    fn padded_block(&self) -> usize {
+        self.padded
+    }
+
+    /// Reset all feedback state + masks (between runs).
+    pub fn reset(&mut self) {
+        self.fwd_state.reset();
+        self.bwd_state.reset();
+        self.masks.clear();
+    }
+
+    /// Total feedback memory (paper's AQ-SGD footprint concern).
+    pub fn feedback_memory_bytes(&self) -> usize {
+        self.fwd_state.memory_bytes() + self.bwd_state.memory_bytes()
+    }
+}

@@ -1,0 +1,22 @@
+//! The pipeline-parallel training coordinator (L3).
+//!
+//! * [`pipeline`] — microbatch schedules (GPipe, 1F1B) + validation
+//! * [`stage`] — per-stage executor (fwd/bwd/update over AOT artifacts)
+//! * [`link`] — compressed inter-stage links (the paper's contribution)
+//! * [`feedback`] — EF / EF-mixed / EF21 / AQ-SGD buffer state
+//! * [`trainer`] — the end-to-end training loop + dual evaluation
+//!
+//! Execution is deterministic and single-threaded: the xla wrappers are
+//! not `Send`, the testbed has one core, and the schedule's observable
+//! effects (dependency order, feedback-buffer update order, simulated
+//! multi-worker makespan) are all preserved by ordered execution.
+
+pub mod feedback;
+pub mod link;
+pub mod pipeline;
+pub mod stage;
+pub mod trainer;
+
+pub use link::CompressedLink;
+pub use stage::{StageInput, StageRunner};
+pub use trainer::Trainer;

@@ -1,0 +1,276 @@
+//! Microbatch pipeline schedules (GPipe and 1F1B) and their validation.
+//!
+//! The coordinator executes these deterministically on one thread — the
+//! xla wrappers are not `Send`, and the testbed has one core, so the
+//! schedule's role here is (a) correctness of the dependency order,
+//! (b) the *simulated* multi-worker makespan (peak in-flight activations
+//! and bubble fraction differ between schedules — the ablation bench),
+//! and (c) the order feedback buffers observe microbatches in, which is
+//! semantically visible (EF buffers are updated per message).
+
+use anyhow::{bail, Result};
+
+/// One schedule step. `mb` is the microbatch index within the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Fwd { stage: usize, mb: usize },
+    Bwd { stage: usize, mb: usize },
+}
+
+/// GPipe: all forwards (wavefront order), then all backwards.
+pub fn gpipe(n_stages: usize, n_mb: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(2 * n_stages * n_mb);
+    // forward wavefront: step t runs Fwd(stage s, mb t-s)
+    for t in 0..(n_mb + n_stages - 1) {
+        for s in 0..n_stages {
+            if let Some(mb) = t.checked_sub(s) {
+                if mb < n_mb {
+                    ops.push(Op::Fwd { stage: s, mb });
+                }
+            }
+        }
+    }
+    // backward wavefront, stages in reverse
+    for t in 0..(n_mb + n_stages - 1) {
+        for s in (0..n_stages).rev() {
+            let depth = n_stages - 1 - s;
+            if let Some(mb) = t.checked_sub(depth) {
+                if mb < n_mb {
+                    ops.push(Op::Bwd { stage: s, mb });
+                }
+            }
+        }
+    }
+    ops
+}
+
+/// 1F1B (PipeDream-flush): after warm-up, each stage alternates one
+/// forward with one backward, bounding in-flight activations by the
+/// stage depth instead of the microbatch count.
+pub fn one_f_one_b(n_stages: usize, n_mb: usize) -> Vec<Op> {
+    // Emit per-stage op streams, then merge respecting dependencies via
+    // simulation. Per-stage stream: stage s warms up with
+    // min(n_stages - s, n_mb) forwards, then alternates 1B1F, then
+    // drains backwards.
+    let mut ops = Vec::with_capacity(2 * n_stages * n_mb);
+    let mut fwd_done = vec![0usize; n_stages]; // next mb to forward
+    let mut bwd_done = vec![0usize; n_stages]; // next mb to backward
+    // Ready predicates: Fwd(s, m) needs Fwd(s-1, m) done; Bwd(s, m)
+    // needs Fwd(s, m) and Bwd(s+1, m) done.
+    let warmup: Vec<usize> = (0..n_stages).map(|s| (n_stages - s).min(n_mb)).collect();
+    let total = 2 * n_stages * n_mb;
+    while ops.len() < total {
+        let mut progressed = false;
+        for s in 0..n_stages {
+            // choose next op for this stage under 1F1B policy
+            let want_fwd = fwd_done[s] < n_mb
+                && (fwd_done[s] < warmup[s] || fwd_done[s] - bwd_done[s] < warmup[s]);
+            let can_fwd = fwd_done[s] < n_mb
+                && (s == 0 || fwd_done[s] < fwd_done[s - 1]);
+            let can_bwd = bwd_done[s] < fwd_done[s]
+                && (s == n_stages - 1 || bwd_done[s] < bwd_done[s + 1]);
+            if can_bwd && (!want_fwd || !can_fwd) {
+                ops.push(Op::Bwd { stage: s, mb: bwd_done[s] });
+                bwd_done[s] += 1;
+                progressed = true;
+            } else if can_fwd {
+                ops.push(Op::Fwd { stage: s, mb: fwd_done[s] });
+                fwd_done[s] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            // fall back: drain any remaining backwards
+            let mut any = false;
+            for s in (0..n_stages).rev() {
+                if bwd_done[s] < fwd_done[s]
+                    && (s == n_stages - 1 || bwd_done[s] < bwd_done[s + 1])
+                {
+                    ops.push(Op::Bwd { stage: s, mb: bwd_done[s] });
+                    bwd_done[s] += 1;
+                    any = true;
+                }
+            }
+            assert!(any, "1f1b schedule deadlocked");
+        }
+    }
+    ops
+}
+
+/// Validate dependency order and completeness of a schedule.
+pub fn validate(ops: &[Op], n_stages: usize, n_mb: usize) -> Result<()> {
+    let mut fwd = vec![vec![false; n_mb]; n_stages];
+    let mut bwd = vec![vec![false; n_mb]; n_stages];
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Fwd { stage, mb } => {
+                if stage >= n_stages || mb >= n_mb {
+                    bail!("op {i}: out of range {op:?}");
+                }
+                if fwd[stage][mb] {
+                    bail!("op {i}: duplicate {op:?}");
+                }
+                if stage > 0 && !fwd[stage - 1][mb] {
+                    bail!("op {i}: {op:?} before upstream fwd");
+                }
+                fwd[stage][mb] = true;
+            }
+            Op::Bwd { stage, mb } => {
+                if stage >= n_stages || mb >= n_mb {
+                    bail!("op {i}: out of range {op:?}");
+                }
+                if bwd[stage][mb] {
+                    bail!("op {i}: duplicate {op:?}");
+                }
+                if !fwd[stage][mb] {
+                    bail!("op {i}: {op:?} before its fwd");
+                }
+                if stage + 1 < n_stages && !bwd[stage + 1][mb] {
+                    bail!("op {i}: {op:?} before downstream bwd");
+                }
+                bwd[stage][mb] = true;
+            }
+        }
+    }
+    for s in 0..n_stages {
+        for m in 0..n_mb {
+            if !fwd[s][m] || !bwd[s][m] {
+                bail!("incomplete schedule: stage {s} mb {m}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Peak number of stashed activations any stage holds (memory metric —
+/// the axis on which 1F1B beats GPipe).
+pub fn peak_in_flight(ops: &[Op], n_stages: usize) -> usize {
+    let mut in_flight = vec![0isize; n_stages];
+    let mut peak = 0isize;
+    for op in ops {
+        match *op {
+            Op::Fwd { stage, .. } => {
+                in_flight[stage] += 1;
+                peak = peak.max(in_flight[stage]);
+            }
+            Op::Bwd { stage, .. } => in_flight[stage] -= 1,
+        }
+    }
+    peak as usize
+}
+
+/// Simulated multi-worker makespan of a schedule, assuming every op
+/// costs `op_time` and each inter-stage message costs `wire_time`
+/// (bubble analysis for the schedule ablation bench).
+pub fn makespan(ops: &[Op], n_stages: usize, n_mb: usize, op_time: f64, wire_time: f64) -> f64 {
+    // event-driven: per-stage clock + per-(stage,mb) data-ready times
+    let mut stage_clock = vec![0.0f64; n_stages];
+    let mut fwd_out = vec![vec![0.0f64; n_mb]; n_stages];
+    let mut bwd_out = vec![vec![0.0f64; n_mb]; n_stages];
+    for op in ops {
+        match *op {
+            Op::Fwd { stage, mb } => {
+                let ready = if stage == 0 { 0.0 } else { fwd_out[stage - 1][mb] + wire_time };
+                let start = stage_clock[stage].max(ready);
+                let end = start + op_time;
+                stage_clock[stage] = end;
+                fwd_out[stage][mb] = end;
+            }
+            Op::Bwd { stage, mb } => {
+                let ready = if stage + 1 == n_stages {
+                    fwd_out[stage][mb]
+                } else {
+                    bwd_out[stage + 1][mb] + wire_time
+                };
+                let start = stage_clock[stage].max(ready);
+                let end = start + op_time;
+                stage_clock[stage] = end;
+                bwd_out[stage][mb] = end;
+            }
+        }
+    }
+    stage_clock.iter().cloned().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn gpipe_valid_for_typical_sizes() {
+        for (s, m) in [(4, 4), (4, 1), (1, 4), (2, 8), (8, 2)] {
+            let ops = gpipe(s, m);
+            assert_eq!(ops.len(), 2 * s * m);
+            validate(&ops, s, m).unwrap();
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_valid_for_typical_sizes() {
+        for (s, m) in [(4, 4), (4, 1), (1, 4), (2, 8), (8, 2), (4, 16)] {
+            let ops = one_f_one_b(s, m);
+            assert_eq!(ops.len(), 2 * s * m, "s={s} m={m}");
+            validate(&ops, s, m).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_schedules_valid_random_sizes() {
+        run_prop("schedule validity", 30, |g| {
+            let s = g.usize(1, 8);
+            let m = g.usize(1, 12);
+            validate(&gpipe(s, m), s, m).map_err(|e| e.to_string())?;
+            validate(&one_f_one_b(s, m), s, m).map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_in_flight_memory() {
+        // GPipe stashes all M microbatches; 1F1B caps at the stage depth
+        let (s, m) = (4, 16);
+        let g = peak_in_flight(&gpipe(s, m), s);
+        let o = peak_in_flight(&one_f_one_b(s, m), s);
+        assert_eq!(g, m);
+        assert!(o <= s + 1, "1f1b peak {o}");
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        // bwd before fwd
+        assert!(validate(&[Op::Bwd { stage: 0, mb: 0 }], 1, 1).is_err());
+        // skipping upstream stage
+        assert!(validate(&[Op::Fwd { stage: 1, mb: 0 }], 2, 1).is_err());
+        // incomplete
+        assert!(validate(&[Op::Fwd { stage: 0, mb: 0 }], 1, 1).is_err());
+        // duplicate
+        assert!(validate(
+            &[Op::Fwd { stage: 0, mb: 0 }, Op::Fwd { stage: 0, mb: 0 }],
+            1,
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn makespan_shows_pipeline_bubble() {
+        // 1 stage: no bubble; serial time = 2*M ops
+        let m1 = makespan(&gpipe(1, 8), 1, 8, 1.0, 0.0);
+        assert!((m1 - 16.0).abs() < 1e-9);
+        // 4 stages, 1 microbatch: fully serial = 8 ops
+        let m2 = makespan(&gpipe(4, 1), 4, 1, 1.0, 0.0);
+        assert!((m2 - 8.0).abs() < 1e-9);
+        // 4 stages, many microbatches: approaches 2*M + 2*(S-1) bubble
+        let m3 = makespan(&gpipe(4, 16), 4, 16, 1.0, 0.0);
+        assert!(m3 < 2.0 * 16.0 + 2.0 * 16.0, "pipelining must overlap: {m3}");
+        assert!(m3 >= 2.0 * 16.0, "cannot beat per-stage serial work: {m3}");
+    }
+
+    #[test]
+    fn wire_time_increases_makespan() {
+        let a = makespan(&gpipe(4, 8), 4, 8, 1.0, 0.0);
+        let b = makespan(&gpipe(4, 8), 4, 8, 1.0, 0.5);
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,225 @@
+//! Stage runner: owns one pipeline stage's parameters, optimizer state,
+//! in-flight microbatch stash, and gradient accumulator, and drives the
+//! stage's AOT executables (fwd / bwd / update).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Optimizer;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, tensor_from, Runtime, StageSpec};
+use crate::tensor::Tensor;
+
+/// Input to a stage: stage 0 takes data (images or tokens); later stages
+/// take f32 activations.
+#[derive(Clone, Debug)]
+pub enum StageInput {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl StageInput {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            StageInput::F32(t) => lit_f32(t),
+            StageInput::I32 { shape, data } => lit_i32(shape, data),
+        }
+    }
+}
+
+pub struct StageRunner {
+    pub spec: StageSpec,
+    pub index: usize,
+    pub is_first: bool,
+    /// Shape of this stage's input activation (empty for stage 0, whose
+    /// input is data). Set at construction from the previous stage's
+    /// out_shape; used to reshape the bwd input-gradient output.
+    in_shape: Vec<usize>,
+    params: Vec<Tensor>,
+    optimizer: Optimizer,
+    /// SGD: momentum; AdamW: m then v.
+    opt_state: Vec<Vec<Tensor>>,
+    adam_step: f32,
+    grad_accum: Vec<Tensor>,
+    accum_count: usize,
+    /// Stashed inputs for in-flight microbatches (consumed by bwd).
+    stash: HashMap<u64, StageInput>,
+}
+
+impl StageRunner {
+    pub fn new(
+        index: usize,
+        spec: StageSpec,
+        in_shape: Vec<usize>,
+        params: Vec<Tensor>,
+        optimizer: Optimizer,
+    ) -> Result<Self> {
+        if params.len() != spec.params.len() {
+            bail!("stage {index}: {} param tensors, spec wants {}", params.len(), spec.params.len());
+        }
+        let zeros: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(p.shape().to_vec())).collect();
+        let opt_state = match optimizer {
+            Optimizer::Sgd => vec![zeros.clone()],
+            Optimizer::AdamW => vec![zeros.clone(), zeros.clone()],
+        };
+        let grad_accum = zeros;
+        Ok(StageRunner {
+            index,
+            is_first: index == 0,
+            in_shape,
+            spec,
+            params,
+            optimizer,
+            opt_state,
+            adam_step: 0.0,
+            grad_accum,
+            accum_count: 0,
+            stash: HashMap::new(),
+        })
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!("stage {}: param count mismatch", self.index);
+        }
+        for (new, old) in params.iter().zip(&self.params) {
+            if new.shape() != old.shape() {
+                bail!("stage {}: param shape mismatch {:?} vs {:?}", self.index, new.shape(), old.shape());
+            }
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Reset optimizer state + accumulators (e.g. after loading a
+    /// checkpoint for a fresh fine-tuning run).
+    pub fn reset_opt(&mut self) {
+        for state in &mut self.opt_state {
+            for t in state.iter_mut() {
+                *t = Tensor::zeros(t.shape().to_vec());
+            }
+        }
+        self.adam_step = 0.0;
+        for g in &mut self.grad_accum {
+            *g = Tensor::zeros(g.shape().to_vec());
+        }
+        self.accum_count = 0;
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params.iter().map(lit_f32).collect()
+    }
+
+    /// Forward one microbatch; stashes the input for the backward pass
+    /// when `for_training` (evals skip the stash).
+    pub fn forward(
+        &mut self,
+        rt: &Runtime,
+        mb: u64,
+        input: StageInput,
+        for_training: bool,
+    ) -> Result<Tensor> {
+        let mut args = self.param_literals()?;
+        args.push(input.to_literal()?);
+        let out = rt.call(&self.spec.fwd, &args)?;
+        let y = tensor_from(&out[0], &self.spec.out_shape)?;
+        if for_training {
+            self.stash.insert(mb, input);
+        }
+        Ok(y)
+    }
+
+    /// Backward one microbatch: consumes the stashed input, accumulates
+    /// parameter gradients, returns the input gradient (None for the
+    /// first stage, whose input is data).
+    pub fn backward(&mut self, rt: &Runtime, mb: u64, g_out: &Tensor) -> Result<Option<Tensor>> {
+        let input = self
+            .stash
+            .remove(&mb)
+            .with_context(|| format!("stage {}: no stashed input for mb {mb}", self.index))?;
+        let mut args = self.param_literals()?;
+        args.push(input.to_literal()?);
+        args.push(lit_f32(g_out)?);
+        let out = rt.call(&self.spec.bwd, &args)?;
+        let np = self.params.len();
+        let want = if self.is_first { np } else { np + 1 };
+        if out.len() != want {
+            bail!("stage {}: bwd returned {} outputs, want {want}", self.index, out.len());
+        }
+        for (i, acc) in self.grad_accum.iter_mut().enumerate() {
+            let g = tensor_from(&out[i], self.params[i].shape())?;
+            acc.add_assign(&g)?;
+        }
+        self.accum_count += 1;
+        if self.is_first {
+            Ok(None)
+        } else {
+            Ok(Some(tensor_from(&out[np], &self.in_shape)?))
+        }
+    }
+
+    /// Number of microbatches accumulated since the last update.
+    pub fn pending_microbatches(&self) -> usize {
+        self.accum_count
+    }
+
+    /// Apply the optimizer update with mean-of-microbatch gradients.
+    pub fn update(&mut self, rt: &Runtime, lr: f32) -> Result<()> {
+        if self.accum_count == 0 {
+            bail!("stage {}: update with no accumulated gradients", self.index);
+        }
+        let scale = 1.0 / self.accum_count as f32;
+        let grads: Vec<Tensor> = self.grad_accum.iter().map(|g| g.scale(scale)).collect();
+
+        let mut args = self.param_literals()?;
+        match self.optimizer {
+            Optimizer::Sgd => {
+                for m in &self.opt_state[0] {
+                    args.push(lit_f32(m)?);
+                }
+                for g in &grads {
+                    args.push(lit_f32(g)?);
+                }
+                args.push(lit_scalar(lr));
+                let out = rt.call(&self.spec.sgd, &args)?;
+                let np = self.params.len();
+                for i in 0..np {
+                    self.params[i] = tensor_from(&out[i], self.params[i].shape())?;
+                    self.opt_state[0][i] = tensor_from(&out[np + i], self.params[i].shape())?;
+                }
+            }
+            Optimizer::AdamW => {
+                self.adam_step += 1.0;
+                for m in &self.opt_state[0] {
+                    args.push(lit_f32(m)?);
+                }
+                for v in &self.opt_state[1] {
+                    args.push(lit_f32(v)?);
+                }
+                for g in &grads {
+                    args.push(lit_f32(g)?);
+                }
+                args.push(lit_scalar(lr));
+                args.push(lit_scalar(self.adam_step));
+                let out = rt.call(&self.spec.adamw, &args)?;
+                let np = self.params.len();
+                for i in 0..np {
+                    self.params[i] = tensor_from(&out[i], self.params[i].shape())?;
+                    self.opt_state[0][i] = tensor_from(&out[np + i], self.params[i].shape())?;
+                    self.opt_state[1][i] = tensor_from(&out[2 * np + i], self.params[i].shape())?;
+                }
+            }
+        }
+        for g in &mut self.grad_accum {
+            *g = Tensor::zeros(g.shape().to_vec());
+        }
+        self.accum_count = 0;
+        self.stash.clear();
+        Ok(())
+    }
+}

@@ -1,0 +1,434 @@
+//! The training coordinator: drives the full model-parallel training
+//! loop — schedule execution, compressed links, loss, optimizer updates,
+//! warm-start protocol, and the paper's dual (with/without compression)
+//! evaluation.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint;
+use crate::config::{Schedule, TrainConfig};
+use crate::coordinator::link::CompressedLink;
+use crate::coordinator::pipeline::{self, Op};
+use crate::coordinator::stage::{StageInput, StageRunner};
+use crate::data::{ImageDataset, TextDataset};
+use crate::metrics::{CurvePoint, RunMetrics};
+use crate::netsim::{NetSim, WireModel};
+use crate::runtime::{lit_f32, lit_i32, scalar_from, tensor_from, Runtime};
+use crate::tensor::Tensor;
+
+/// Task-specific data + label plumbing.
+enum TaskData {
+    Images { train: ImageDataset, test: ImageDataset },
+    Text { corpus: TextDataset, train_seqs: usize, test_seqs: usize },
+}
+
+pub struct Trainer {
+    pub rt: Runtime,
+    pub cfg: TrainConfig,
+    stages: Vec<StageRunner>,
+    links: Vec<CompressedLink>,
+    pub net: NetSim,
+    data: TaskData,
+    microbatch: usize,
+    n_microbatches: usize,
+    loss_file: String,
+    label_shape: Vec<usize>,
+    model_name: String,
+    steps_done: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let model = rt.manifest().model(&cfg.model)?.clone();
+        let microbatch = model.microbatch();
+        if cfg.batch_size % microbatch != 0 {
+            bail!(
+                "batch_size {} not a multiple of the model's microbatch {microbatch}",
+                cfg.batch_size
+            );
+        }
+        let n_microbatches = cfg.batch_size / microbatch;
+
+        // stage runners with initial parameters (AOT init or checkpoint)
+        let init = match &cfg.init_checkpoint {
+            Some(path) => checkpoint::load(path)
+                .with_context(|| format!("loading init checkpoint {path}"))?,
+            None => rt.manifest().load_init(&model)?,
+        };
+        if init.len() != model.stages.len() {
+            bail!("checkpoint has {} stages, model wants {}", init.len(), model.stages.len());
+        }
+        let mut stages = Vec::new();
+        for (i, (spec, params)) in model.stages.iter().zip(init).enumerate() {
+            let in_shape =
+                if i == 0 { Vec::new() } else { model.stages[i - 1].out_shape.clone() };
+            stages.push(StageRunner::new(i, spec.clone(), in_shape, params, cfg.optimizer)?);
+        }
+
+        // compressed links
+        let mut links = Vec::new();
+        for (i, &n) in model.links.iter().enumerate() {
+            let files = rt.manifest().compression_for(n)?.clone();
+            links.push(CompressedLink::new(i, n, rt.manifest().padded(n), files));
+        }
+        let net = NetSim::new(links.len(), WireModel::default());
+
+        // datasets
+        let data = match model.task.as_str() {
+            "classification" => {
+                let size = model.meta_usize("image")?;
+                let classes = model.meta_usize("num_classes")?;
+                // class prototypes are task-level (shared by train/test
+                // and across seeds); only sampling varies with the seed
+                TaskData::Images {
+                    train: ImageDataset::generate(
+                        cfg.train_size, size, classes, cfg.noise, 42, cfg.seed * 1000 + 1,
+                    ),
+                    test: ImageDataset::generate(
+                        cfg.test_size, size, classes, cfg.noise, 42, cfg.seed * 1000 + 2,
+                    ),
+                }
+            }
+            "lm" => {
+                let seq = model.meta_usize("seq")?;
+                let vocab = model.meta_usize("vocab")?;
+                let total = cfg.train_size + cfg.test_size;
+                TaskData::Text {
+                    // chain structure is task-level (42); corpus sampling
+                    // is too, so that fine-tuning runs resuming from a
+                    // pretrained checkpoint see the same language
+                    corpus: TextDataset::generate(total * seq + 1, vocab, seq, 42, 43),
+                    train_seqs: cfg.train_size,
+                    test_seqs: cfg.test_size,
+                }
+            }
+            t => bail!("unknown task '{t}'"),
+        };
+
+        Ok(Trainer {
+            rt,
+            stages,
+            links,
+            net,
+            data,
+            microbatch,
+            n_microbatches,
+            loss_file: model.loss.clone(),
+            label_shape: model.label.shape.clone(),
+            model_name: model.name.clone(),
+            cfg,
+            steps_done: 0,
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn stage_params(&self) -> Vec<Vec<Tensor>> {
+        self.stages.iter().map(|s| s.params().to_vec()).collect()
+    }
+
+    pub fn set_stage_params(&mut self, params: Vec<Vec<Tensor>>) -> Result<()> {
+        for (s, p) in self.stages.iter_mut().zip(params) {
+            s.set_params(p)?;
+            s.reset_opt();
+        }
+        Ok(())
+    }
+
+    /// Feedback-state memory across all links (AQ-SGD footprint metric).
+    pub fn feedback_memory_bytes(&self) -> usize {
+        self.links.iter().map(|l| l.feedback_memory_bytes()).sum()
+    }
+
+    fn schedule(&self) -> Vec<Op> {
+        match self.cfg.schedule {
+            Schedule::GPipe => pipeline::gpipe(self.stages.len(), self.n_microbatches),
+            Schedule::OneFOneB => pipeline::one_f_one_b(self.stages.len(), self.n_microbatches),
+        }
+    }
+
+    /// Is compression active at this epoch? (warm-start protocol: the
+    /// paper resumes from uncompressed baseline weights after N epochs;
+    /// with identical seeds, training uncompressed until epoch N is
+    /// bit-identical to that.)
+    fn compression_active(&self, epoch: usize) -> bool {
+        !self.cfg.spec.is_none() && epoch >= self.cfg.spec.warmup_epochs
+    }
+
+    /// Train for `cfg.epochs`; returns the run metrics.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let metric = match self.data {
+            TaskData::Images { .. } => "accuracy",
+            TaskData::Text { .. } => "loss",
+        };
+        let mut m = RunMetrics::new(&self.cfg.spec.label(), self.cfg.seed, metric);
+        let t0 = Instant::now();
+        for epoch in 0..self.cfg.epochs {
+            let train_loss = self.train_epoch(epoch)?;
+            if let Some(se) = self.cfg.snapshot_epoch {
+                if epoch + 1 == se {
+                    if let Some(path) = &self.cfg.save_checkpoint {
+                        checkpoint::save(path, &self.stage_params())?;
+                    }
+                }
+            }
+            if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
+                let compressed_eval = !self.cfg.spec.is_none();
+                let eval_on = if compressed_eval { self.evaluate(true)? } else { f64::NAN };
+                let eval_off = self.evaluate(false)?;
+                let eval_on = if eval_on.is_nan() { eval_off } else { eval_on };
+                m.points.push(CurvePoint {
+                    epoch,
+                    step: self.steps_done,
+                    train_loss,
+                    eval_on,
+                    eval_off,
+                });
+            }
+        }
+        if self.cfg.snapshot_epoch.is_none() {
+            if let Some(path) = &self.cfg.save_checkpoint {
+                checkpoint::save(path, &self.stage_params())?;
+            }
+        }
+        m.wall_time_s = t0.elapsed().as_secs_f64();
+        m.wire_bytes = self.net.total_bytes();
+        m.wire_raw_bytes = self.net.total_uncompressed_bytes();
+        m.wire_sim_time_s = self.net.total_sim_time();
+        Ok(m)
+    }
+
+    /// One epoch over the training set; returns mean batch loss.
+    pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
+        let compress = self.compression_active(epoch);
+        let lr = self.cfg.lr_at(epoch) as f32;
+        let n_batches = self.num_train_batches();
+        let mut loss_sum = 0.0f64;
+        for b in 0..n_batches {
+            loss_sum += self.train_batch(epoch, b, compress, lr)?;
+            self.steps_done += 1;
+        }
+        Ok(loss_sum / n_batches.max(1) as f64)
+    }
+
+    fn num_train_batches(&self) -> usize {
+        match &self.data {
+            TaskData::Images { train, .. } => train.n / self.cfg.batch_size,
+            TaskData::Text { train_seqs, .. } => train_seqs / self.cfg.batch_size,
+        }
+    }
+
+    /// Microbatch input + labels for (batch, mb) of the training set.
+    fn train_microbatch(&self, batch: usize, mb: usize) -> (StageInput, Vec<i32>) {
+        let start = batch * self.cfg.batch_size + mb * self.microbatch;
+        self.example_range(start, true)
+    }
+
+    fn example_range(&self, start: usize, _train: bool) -> (StageInput, Vec<i32>) {
+        match &self.data {
+            TaskData::Images { train, .. } => {
+                let (imgs, labels) = train.batch(start, self.microbatch);
+                let t = Tensor::new(
+                    vec![self.microbatch, train.h, train.w, train.c],
+                    imgs.to_vec(),
+                )
+                .expect("image microbatch shape");
+                (StageInput::F32(t), labels.to_vec())
+            }
+            TaskData::Text { corpus, .. } => {
+                let (xs, ys) = corpus.batch(start, self.microbatch);
+                (
+                    StageInput::I32 {
+                        shape: vec![self.microbatch, corpus.seq],
+                        data: xs,
+                    },
+                    ys,
+                )
+            }
+        }
+    }
+
+    fn test_microbatch(&self, start: usize) -> (StageInput, Vec<i32>) {
+        match &self.data {
+            TaskData::Images { test, .. } => {
+                let (imgs, labels) = test.batch(start, self.microbatch);
+                let t = Tensor::new(
+                    vec![self.microbatch, test.h, test.w, test.c],
+                    imgs.to_vec(),
+                )
+                .expect("image microbatch shape");
+                (StageInput::F32(t), labels.to_vec())
+            }
+            TaskData::Text { corpus, train_seqs, .. } => {
+                let (xs, ys) = corpus.batch(train_seqs + start, self.microbatch);
+                (
+                    StageInput::I32 {
+                        shape: vec![self.microbatch, corpus.seq],
+                        data: xs,
+                    },
+                    ys,
+                )
+            }
+        }
+    }
+
+    fn num_test_microbatches(&self) -> usize {
+        match &self.data {
+            TaskData::Images { test, .. } => test.n / self.microbatch,
+            TaskData::Text { test_seqs, .. } => test_seqs / self.microbatch,
+        }
+    }
+
+    /// Loss executable: (logits, labels) -> (loss, g_logits).
+    fn loss_and_grad(&self, logits: &Tensor, labels: &[i32]) -> Result<(f32, Tensor)> {
+        let labels_lit = lit_i32(&self.label_shape, labels)?;
+        let out = self.rt.call(&self.loss_file, &[lit_f32(logits)?, labels_lit])?;
+        let loss = scalar_from(&out[0])?;
+        let g = tensor_from(&out[1], logits.shape())?;
+        Ok((loss, g))
+    }
+
+    /// Execute one optimizer step (one batch through the pipeline).
+    fn train_batch(&mut self, _epoch: usize, batch: usize, compress: bool, lr: f32) -> Result<f64> {
+        let s_count = self.stages.len();
+        let m_count = self.n_microbatches;
+        let ops = self.schedule();
+        // in-flight activations / gradients per (stage, mb)
+        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
+        let mut grads: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
+        let mut labels_by_mb: Vec<Option<Vec<i32>>> = vec![None; m_count];
+        let mut loss_sum = 0.0f64;
+
+        let spec = self.cfg.spec;
+        let imp = self.cfg.compress_impl;
+        let plain = crate::compression::Spec::none();
+        let active = if compress { &spec } else { &plain };
+
+        for op in ops {
+            match op {
+                Op::Fwd { stage, mb } => {
+                    let mb_key = (batch * m_count + mb) as u64;
+                    let input = if stage == 0 {
+                        let (inp, labels) = self.train_microbatch(batch, mb);
+                        labels_by_mb[mb] = Some(labels);
+                        inp
+                    } else {
+                        let prev = acts[stage - 1][mb]
+                            .take()
+                            .with_context(|| format!("missing act s{} mb{mb}", stage - 1))?;
+                        let link = &mut self.links[stage - 1];
+                        let compressed =
+                            link.forward(&self.rt, active, imp, &prev, mb_key, true, &mut self.net)?;
+                        StageInput::F32(compressed)
+                    };
+                    let y = self.stages[stage].forward(&self.rt, mb as u64, input, true)?;
+                    acts[stage][mb] = Some(y);
+                }
+                Op::Bwd { stage, mb } => {
+                    let mb_key = (batch * m_count + mb) as u64;
+                    let g_in = if stage == s_count - 1 {
+                        let logits = acts[stage][mb]
+                            .take()
+                            .with_context(|| format!("missing logits mb{mb}"))?;
+                        let labels = labels_by_mb[mb]
+                            .as_ref()
+                            .with_context(|| format!("missing labels mb{mb}"))?;
+                        let (loss, g) = self.loss_and_grad(&logits, labels)?;
+                        loss_sum += loss as f64;
+                        g
+                    } else {
+                        let g = grads[stage + 1][mb]
+                            .take()
+                            .with_context(|| format!("missing grad s{} mb{mb}", stage + 1))?;
+                        let link = &mut self.links[stage];
+                        link.backward(&self.rt, active, imp, &g, mb_key, true, &mut self.net)?
+                    };
+                    if let Some(gx) = self.stages[stage].backward(&self.rt, mb as u64, &g_in)? {
+                        grads[stage][mb] = Some(gx);
+                    }
+                }
+            }
+        }
+        let lr_eff = lr;
+        for s in &mut self.stages {
+            s.update(&self.rt, lr_eff)?;
+        }
+        Ok(loss_sum / m_count as f64)
+    }
+
+    /// Forward-only pass over one microbatch (eval). `compress` applies
+    /// the *plain* operator on links (no feedback state mutation).
+    fn eval_forward(&mut self, input: StageInput, compress: bool) -> Result<Tensor> {
+        let spec = self.cfg.spec;
+        let imp = self.cfg.compress_impl;
+        let plain = crate::compression::Spec::none();
+        let active = if compress { &spec } else { &plain };
+        let mut x = input;
+        let mut scratch = NetSim::new(self.links.len(), self.net.model);
+        for i in 0..self.stages.len() {
+            let y = self.stages[i].forward(&self.rt, u64::MAX, x, false)?;
+            x = if i < self.links.len() {
+                let c =
+                    self.links[i].forward(&self.rt, active, imp, &y, u64::MAX, false, &mut scratch)?;
+                StageInput::F32(c)
+            } else {
+                StageInput::F32(y)
+            };
+        }
+        match x {
+            StageInput::F32(t) => Ok(t),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Evaluate on the test split. Classification: accuracy in [0,1]
+    /// (higher better). LM: mean token loss (lower better).
+    pub fn evaluate(&mut self, compress: bool) -> Result<f64> {
+        let n_mb = self.num_test_microbatches();
+        match &self.data {
+            TaskData::Images { .. } => {
+                let mut correct = 0usize;
+                let mut total = 0usize;
+                for i in 0..n_mb {
+                    let (input, labels) = self.test_microbatch(i * self.microbatch);
+                    let logits = self.eval_forward(input, compress)?;
+                    let preds = logits.argmax_rows()?;
+                    for (p, &l) in preds.iter().zip(&labels) {
+                        if *p == l as usize {
+                            correct += 1;
+                        }
+                        total += 1;
+                    }
+                }
+                Ok(correct as f64 / total.max(1) as f64)
+            }
+            TaskData::Text { .. } => {
+                let mut loss_sum = 0.0f64;
+                for i in 0..n_mb {
+                    let (input, labels) = self.test_microbatch(i * self.microbatch);
+                    let logits = self.eval_forward(input, compress)?;
+                    let (loss, _) = self.loss_and_grad(&logits, &labels)?;
+                    loss_sum += loss as f64;
+                }
+                Ok(loss_sum / n_mb.max(1) as f64)
+            }
+        }
+    }
+
+    /// Reset link feedback state and wire accounting (between runs that
+    /// reuse the Trainer).
+    pub fn reset_links(&mut self) {
+        for l in &mut self.links {
+            l.reset();
+        }
+        self.net.reset();
+    }
+}

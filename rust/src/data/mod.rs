@@ -1,0 +1,29 @@
+//! Synthetic datasets — stand-ins for CIFAR-10 and Wikitext-2 (neither
+//! is downloadable in this offline image; DESIGN.md §4 documents why the
+//! substitution preserves the paper's findings).
+
+pub mod synth_images;
+pub mod synth_text;
+
+pub use synth_images::ImageDataset;
+pub use synth_text::TextDataset;
+
+/// Deterministic batch index order for an epoch. Data is shuffled once
+/// at dataset construction and then iterated in fixed order so that the
+/// AQ-SGD per-sample buffers (keyed by microbatch index) always see the
+/// same examples — mirroring the paper's per-batch buffer design.
+pub fn batch_starts(n: usize, batch: usize) -> Vec<usize> {
+    (0..n / batch).map(|b| b * batch).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_starts_drop_ragged_tail() {
+        assert_eq!(batch_starts(10, 3), vec![0, 3, 6]);
+        assert_eq!(batch_starts(9, 3), vec![0, 3, 6]);
+        assert_eq!(batch_starts(2, 3), Vec::<usize>::new());
+    }
+}

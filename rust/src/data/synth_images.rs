@@ -1,0 +1,197 @@
+//! Synthetic 10-class image dataset (CIFAR-10 stand-in).
+//!
+//! Each class is a mixture of Gaussian intensity bumps at class-specific
+//! positions with class-specific channel weights; samples add a random
+//! cyclic shift (±2 px) and pixel noise. The task is convolution-
+//! learnable but not trivial: a linear model cannot undo the shifts, and
+//! the noise level keeps single-epoch accuracy well below 100%.
+
+use crate::util::rng::Rng;
+
+/// Dense NHWC image dataset with int labels.
+pub struct ImageDataset {
+    pub images: Vec<f32>, // n * h * w * c, row-major
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub num_classes: usize,
+}
+
+struct Bump {
+    cy: f32,
+    cx: f32,
+    sigma: f32,
+    color: [f32; 3],
+}
+
+impl ImageDataset {
+    /// Generate `n` examples at `size`x`size`x3. `noise` ~0.35 gives a
+    /// task where the reference CNN converges to 85-95% test accuracy.
+    ///
+    /// `proto_seed` defines the class prototypes and must be shared by
+    /// every split of one task (train/test); `sample_seed` varies the
+    /// shifts, noise, and ordering per split.
+    pub fn generate(
+        n: usize,
+        size: usize,
+        num_classes: usize,
+        noise: f32,
+        proto_seed: u64,
+        sample_seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(sample_seed);
+        let mut proto_rng = Rng::new(proto_seed).split(1);
+        // class prototypes: 3 bumps each
+        let protos: Vec<Vec<Bump>> = (0..num_classes)
+            .map(|_| {
+                (0..3)
+                    .map(|_| Bump {
+                        cy: proto_rng.range(2.0, size as f32 - 2.0),
+                        cx: proto_rng.range(2.0, size as f32 - 2.0),
+                        sigma: proto_rng.range(1.2, 2.8),
+                        color: [
+                            proto_rng.range(-1.0, 1.0),
+                            proto_rng.range(-1.0, 1.0),
+                            proto_rng.range(-1.0, 1.0),
+                        ],
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut sample_rng = rng.split(2);
+        let (h, w, c) = (size, size, 3);
+        let mut images = vec![0.0f32; n * h * w * c];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % num_classes; // balanced
+            labels.push(class as i32);
+            let dy = sample_rng.below(5) as i32 - 2;
+            let dx = sample_rng.below(5) as i32 - 2;
+            let img = &mut images[i * h * w * c..(i + 1) * h * w * c];
+            for bump in &protos[class] {
+                let by = bump.cy + dy as f32;
+                let bx = bump.cx + dx as f32;
+                let inv2s2 = 1.0 / (2.0 * bump.sigma * bump.sigma);
+                for y in 0..h {
+                    for x in 0..w {
+                        // cyclic distance (shift wraps)
+                        let ddy = cyc_dist(y as f32, by, h as f32);
+                        let ddx = cyc_dist(x as f32, bx, w as f32);
+                        let g = (-(ddy * ddy + ddx * ddx) * inv2s2).exp();
+                        if g > 1e-4 {
+                            let at = (y * w + x) * c;
+                            for ch in 0..3 {
+                                img[at + ch] += g * bump.color[ch];
+                            }
+                        }
+                    }
+                }
+            }
+            for v in img.iter_mut() {
+                *v += noise * sample_rng.normal();
+            }
+        }
+
+        // shuffle once (deterministic); labels travel with images
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.split(3).shuffle(&mut order);
+        let mut s_images = vec![0.0f32; images.len()];
+        let mut s_labels = vec![0i32; n];
+        let sample_len = h * w * c;
+        for (dst, &src) in order.iter().enumerate() {
+            s_images[dst * sample_len..(dst + 1) * sample_len]
+                .copy_from_slice(&images[src * sample_len..(src + 1) * sample_len]);
+            s_labels[dst] = labels[src];
+        }
+
+        ImageDataset { images: s_images, labels: s_labels, n, h, w, c, num_classes }
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Contiguous batch `[start, start+bs)` as (images, labels).
+    pub fn batch(&self, start: usize, bs: usize) -> (&[f32], &[i32]) {
+        let sl = self.sample_len();
+        (&self.images[start * sl..(start + bs) * sl], &self.labels[start..start + bs])
+    }
+}
+
+fn cyc_dist(a: f32, b: f32, period: f32) -> f32 {
+    let d = (a - b).abs() % period;
+    d.min(period - d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = ImageDataset::generate(100, 8, 10, 0.3, 1, 7);
+        let b = ImageDataset::generate(100, 8, 10, 0.3, 1, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        for cls in 0..10 {
+            assert_eq!(a.labels.iter().filter(|&&l| l == cls).count(), 10);
+        }
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = ImageDataset::generate(20, 8, 10, 0.3, 1, 7);
+        let b = ImageDataset::generate(20, 8, 10, 0.3, 1, 8);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_matching() {
+        // nearest-class-mean in pixel space should beat chance easily
+        // (the CNN must beat this baseline in turn)
+        let train = ImageDataset::generate(400, 8, 10, 0.3, 1, 101);
+        let test = ImageDataset::generate(100, 8, 10, 0.3, 1, 102);
+        let sl = train.sample_len();
+        let mut means = vec![vec![0.0f32; sl]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..train.n {
+            let cls = train.labels[i] as usize;
+            counts[cls] += 1;
+            for (m, v) in means[cls].iter_mut().zip(&train.images[i * sl..(i + 1) * sl]) {
+                *m += v;
+            }
+        }
+        for (m, &cnt) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= cnt as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.n {
+            let img = &test.images[i * sl..(i + 1) * sl];
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    let db: f32 = means[b].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / test.n as f32;
+        assert!(acc > 0.3, "template-matching accuracy only {acc}");
+    }
+
+    #[test]
+    fn batch_slicing() {
+        let d = ImageDataset::generate(10, 4, 10, 0.1, 1, 3);
+        let (imgs, labels) = d.batch(2, 3);
+        assert_eq!(imgs.len(), 3 * 4 * 4 * 3);
+        assert_eq!(labels.len(), 3);
+    }
+}

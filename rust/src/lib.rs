@@ -1,0 +1,31 @@
+//! **mpcomp** — Activations and Gradients Compression for Model-Parallel
+//! Training (Rudakov et al., 2024), reproduced as a three-layer
+//! rust + JAX + Pallas framework.
+//!
+//! * [`runtime`] loads AOT-lowered HLO artifacts (JAX/Pallas at build
+//!   time) and executes them via PJRT — python is never on the run path.
+//! * [`compression`] implements the paper's operators (quantization,
+//!   TopK) and error-feedback state machines (EF, EF-mixed, EF21,
+//!   AQ-SGD), plus the wire codecs that account for real bytes.
+//! * [`coordinator`] is the pipeline-parallel training coordinator:
+//!   stage scheduling (GPipe / 1F1B), compressed links, optimizer
+//!   driving, checkpointing.
+//! * [`experiments`] regenerates every table and figure of the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! reproduction results.
+
+pub mod checkpoint;
+pub mod cli;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod netsim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,178 @@
+//! `mpcomp` CLI — train, evaluate, and regenerate the paper's tables.
+//!
+//! ```text
+//! mpcomp info                              # manifest summary
+//! mpcomp train --model cnn16 --compression topk:10 [--set k=v ...]
+//! mpcomp train --config configs/table2_top10.toml
+//! mpcomp eval --model cnn16 --checkpoint results/x.ckpt [--compression topk:10]
+//! mpcomp exp table1..table5|comm|impl|schedule|aqsgd-mem|all
+//!            [--full] [--seeds N] [--curves] [--impl kernel|native]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use mpcomp::cli::Args;
+use mpcomp::compression::Spec;
+use mpcomp::config::{CompressImpl, TrainConfig};
+use mpcomp::coordinator::Trainer;
+use mpcomp::experiments::{tables, ExpOpts};
+use mpcomp::metrics::append_jsonl;
+use mpcomp::runtime::Runtime;
+
+const VALUE_FLAGS: &[&str] = &[
+    "config", "set", "model", "compression", "checkpoint", "seeds", "impl",
+    "artifacts", "results", "epochs", "save-checkpoint",
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, VALUE_FLAGS)?;
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(&args),
+        Some("train") => train(&args),
+        Some("eval") => eval(&args),
+        Some("exp") => exp(&args),
+        _ => {
+            eprintln!(
+                "usage: mpcomp <info|train|eval|exp> [...]\n\
+                 see README.md for the full command reference"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn info(args: &Args) -> Result<()> {
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let m = rt.manifest();
+    println!("artifacts: {} (block {})", m.dir.display(), m.block);
+    for (name, model) in &m.models {
+        println!(
+            "\nmodel {name}: task={} mp_degree={} microbatch={} params={}",
+            model.task,
+            model.mp_degree,
+            model.microbatch(),
+            model.total_params()
+        );
+        for (i, st) in model.stages.iter().enumerate() {
+            println!(
+                "  stage {i} ({}): {} tensors, {} params, out {:?}",
+                st.name,
+                st.params.len(),
+                st.num_params(),
+                st.out_shape
+            );
+        }
+        println!("  links: {:?} elements", model.links);
+    }
+    println!("\ncompression kernels for padded sizes: {:?}", m.compression.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let overrides: Vec<(String, String)> = args
+        .get_all("set")
+        .iter()
+        .map(|kv| {
+            kv.split_once('=')
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .with_context(|| format!("--set wants key=value, got '{kv}'"))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(path, &overrides)?,
+        None => {
+            let model = args.get("model").unwrap_or("cnn16");
+            let mut cfg = TrainConfig::defaults(model);
+            for (k, v) in &overrides {
+                cfg.set(k, v)?;
+            }
+            cfg
+        }
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(c) = args.get("compression") {
+        cfg.spec = Spec::parse(c)?;
+    }
+    if let Some(e) = args.usize("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(p) = args.get("save-checkpoint") {
+        cfg.save_checkpoint = Some(p.to_string());
+    }
+    cfg.artifacts_dir = artifacts_dir(args);
+    if let Some(r) = args.get("results") {
+        cfg.results_dir = r.to_string();
+    }
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!("training {} with '{}' ({} epochs)", cfg.model, cfg.spec.label(), cfg.epochs);
+    let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
+    let results_dir = cfg.results_dir.clone();
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let m = trainer.run()?;
+    println!("\nepoch  train_loss     eval(on)    eval(off)");
+    for p in &m.points {
+        println!(
+            "{:>5}  {:>10.4}  {:>11.4}  {:>11.4}",
+            p.epoch, p.train_loss, p.eval_on, p.eval_off
+        );
+    }
+    println!(
+        "\nwire: {:.2} MB ({:.1}x compression), sim time {:.1}s | wall {:.1}s",
+        m.wire_bytes as f64 / 1e6,
+        m.wire_raw_bytes as f64 / m.wire_bytes.max(1) as f64,
+        m.wire_sim_time_s,
+        m.wall_time_s
+    );
+    append_jsonl(&results_dir, "train", &m)?;
+    m.write_csv(&results_dir, "train")?;
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    let Some(ckpt) = args.get("checkpoint") else {
+        bail!("eval wants --checkpoint <path>");
+    };
+    cfg.init_checkpoint = Some(ckpt.to_string());
+    cfg.epochs = 0;
+    let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
+    let compressed = !cfg.spec.is_none();
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let off = trainer.evaluate(false)?;
+    println!("eval (compression off): {off:.4}");
+    if compressed {
+        let on = trainer.evaluate(true)?;
+        println!("eval (compression on):  {on:.4}");
+    }
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let Some(name) = args.positional.get(1) else {
+        bail!("exp wants a name: table1..table5, comm, impl, schedule, aqsgd-mem, all");
+    };
+    let opts = ExpOpts {
+        full: args.has("full"),
+        seeds: args.usize("seeds")?,
+        curves: args.has("curves"),
+        artifacts_dir: artifacts_dir(args),
+        results_dir: args.get("results").unwrap_or("results").to_string(),
+        compress_impl: match args.get("impl") {
+            Some(s) => CompressImpl::parse(s)?,
+            None => CompressImpl::Kernel,
+        },
+        epochs: args.usize("epochs")?,
+    };
+    tables::run(name, &opts)
+}

@@ -1,0 +1,221 @@
+//! Run metrics: learning curves + final summaries, emitted as CSV (the
+//! figure series) and JSONL (machine-readable results index).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One evaluation point on a learning curve.
+#[derive(Clone, Debug, Default)]
+pub struct CurvePoint {
+    pub epoch: usize,
+    pub step: usize,
+    pub train_loss: f64,
+    /// Test metric with compression applied at inference.
+    pub eval_on: f64,
+    /// Test metric with compression off at inference.
+    pub eval_off: f64,
+}
+
+/// Metrics for one training run (one compression mode, one seed).
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    /// Mode label, e.g. "fw4-bw8" or "EF21 + Top 10%".
+    pub label: String,
+    pub seed: u64,
+    /// "accuracy" (higher better) or "loss"/"perplexity" (lower better).
+    pub metric_name: String,
+    pub points: Vec<CurvePoint>,
+    /// Wire accounting summary at end of run.
+    pub wire_bytes: u64,
+    pub wire_raw_bytes: u64,
+    pub wire_sim_time_s: f64,
+    pub wall_time_s: f64,
+}
+
+impl RunMetrics {
+    pub fn new(label: &str, seed: u64, metric_name: &str) -> Self {
+        RunMetrics {
+            label: label.to_string(),
+            seed,
+            metric_name: metric_name.to_string(),
+            points: Vec::new(),
+            wire_bytes: 0,
+            wire_raw_bytes: 0,
+            wire_sim_time_s: 0.0,
+            wall_time_s: 0.0,
+        }
+    }
+
+    /// Best (by the metric's direction) eval value across the run —
+    /// the paper reports "best test accuracy over the run".
+    pub fn best_eval_on(&self) -> f64 {
+        self.fold_eval(|p| p.eval_on)
+    }
+
+    pub fn best_eval_off(&self) -> f64 {
+        self.fold_eval(|p| p.eval_off)
+    }
+
+    fn fold_eval(&self, f: impl Fn(&CurvePoint) -> f64) -> f64 {
+        let higher_better = self.metric_name == "accuracy";
+        let init = if higher_better { f64::MIN } else { f64::MAX };
+        let v = self.points.iter().map(f).fold(init, |a, b| {
+            if higher_better {
+                a.max(b)
+            } else {
+                a.min(b)
+            }
+        });
+        if v == f64::MIN || v == f64::MAX {
+            f64::NAN
+        } else {
+            v
+        }
+    }
+
+    pub fn final_eval_on(&self) -> f64 {
+        self.points.last().map(|p| p.eval_on).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_eval_off(&self) -> f64 {
+        self.points.last().map(|p| p.eval_off).unwrap_or(f64::NAN)
+    }
+
+    /// CSV of the learning curve (figure series).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,step,train_loss,eval_on,eval_off\n");
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6},{:.6},{:.6}",
+                p.epoch, p.step, p.train_loss, p.eval_on, p.eval_off
+            );
+        }
+        s
+    }
+
+    /// One-line JSON summary.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("label", Json::Str(self.label.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("metric", Json::Str(self.metric_name.clone()))
+            .set("best_eval_on", Json::Num(self.best_eval_on()))
+            .set("best_eval_off", Json::Num(self.best_eval_off()))
+            .set("final_eval_on", Json::Num(self.final_eval_on()))
+            .set("final_eval_off", Json::Num(self.final_eval_off()))
+            .set("wire_bytes", Json::Num(self.wire_bytes as f64))
+            .set("wire_raw_bytes", Json::Num(self.wire_raw_bytes as f64))
+            .set("wire_sim_time_s", Json::Num(self.wire_sim_time_s))
+            .set("wall_time_s", Json::Num(self.wall_time_s))
+            .set(
+                "train_loss",
+                Json::from_f64s(&self.points.iter().map(|p| p.train_loss).collect::<Vec<_>>()),
+            )
+            .set(
+                "eval_on",
+                Json::from_f64s(&self.points.iter().map(|p| p.eval_on).collect::<Vec<_>>()),
+            )
+            .set(
+                "eval_off",
+                Json::from_f64s(&self.points.iter().map(|p| p.eval_off).collect::<Vec<_>>()),
+            );
+        o
+    }
+
+    /// Write curve CSV into `dir/{prefix}_{sanitized label}_s{seed}.csv`.
+    pub fn write_csv(&self, dir: impl AsRef<Path>, prefix: &str) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!(
+            "{prefix}_{}_s{}.csv",
+            sanitize(&self.label),
+            self.seed
+        ));
+        std::fs::write(&path, self.to_csv()).with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Append one JSONL record per run to `dir/{name}.jsonl`.
+pub fn append_jsonl(dir: impl AsRef<Path>, name: &str, run: &RunMetrics) -> Result<()> {
+    std::fs::create_dir_all(dir.as_ref())?;
+    let path = dir.as_ref().join(format!("{name}.jsonl"));
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    writeln!(f, "{}", run.to_json().to_string())?;
+    Ok(())
+}
+
+pub fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect::<String>()
+        .split('_')
+        .filter(|s| !s.is_empty())
+        .collect::<Vec<_>>()
+        .join("_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> RunMetrics {
+        let mut r = RunMetrics::new("Top 10%", 1, "accuracy");
+        for (i, (on, off)) in [(0.5, 0.4), (0.8, 0.6), (0.7, 0.65)].iter().enumerate() {
+            r.points.push(CurvePoint {
+                epoch: i,
+                step: i * 10,
+                train_loss: 1.0 / (i + 1) as f64,
+                eval_on: *on,
+                eval_off: *off,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn best_respects_metric_direction() {
+        let r = run();
+        assert_eq!(r.best_eval_on(), 0.8);
+        assert_eq!(r.best_eval_off(), 0.65);
+        let mut loss = run();
+        loss.metric_name = "loss".into();
+        assert_eq!(loss.best_eval_on(), 0.5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = run().to_csv();
+        assert!(csv.starts_with("epoch,step,train_loss,eval_on,eval_off\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = run().to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("label").unwrap().str().unwrap(), "Top 10%");
+        assert_eq!(parsed.get("best_eval_on").unwrap().num().unwrap(), 0.8);
+        assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn sanitize_labels() {
+        assert_eq!(sanitize("EF21 + Top 5%"), "ef21_top_5");
+        assert_eq!(sanitize("fw4-bw8"), "fw4_bw8");
+        assert_eq!(sanitize("no compression"), "no_compression");
+    }
+
+    #[test]
+    fn empty_run_yields_nan() {
+        let r = RunMetrics::new("x", 0, "accuracy");
+        assert!(r.best_eval_on().is_nan());
+        assert!(r.final_eval_on().is_nan());
+    }
+}

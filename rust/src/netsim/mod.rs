@@ -1,0 +1,159 @@
+//! Simulated network: exact byte accounting + a bandwidth/latency model
+//! for the inter-stage links.
+//!
+//! The paper motivates compression by communication time on slow,
+//! geo-distributed links (§1). Convergence does not depend on wire
+//! timing (compression is integrated into the model, paper §2.1), so we
+//! run compute locally and *account* for what each transfer would cost
+//! on a modelled wire; `mpcomp exp comm` reports the communication-
+//! reduction table this produces.
+
+/// Wire model. Defaults approximate the paper's motivating scenario:
+/// 100 Mbit/s WAN with 20 ms RTT (10 ms one-way).
+#[derive(Clone, Copy, Debug)]
+pub struct WireModel {
+    pub bandwidth_bytes_per_s: f64,
+    pub latency_s: f64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        WireModel { bandwidth_bytes_per_s: 100e6 / 8.0, latency_s: 0.010 }
+    }
+}
+
+impl WireModel {
+    /// LAN-ish profile (10 Gbit/s, 0.1 ms) for ablations.
+    pub fn datacenter() -> Self {
+        WireModel { bandwidth_bytes_per_s: 10e9 / 8.0, latency_s: 0.0001 }
+    }
+
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// Accumulated statistics for one link direction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DirStats {
+    pub messages: u64,
+    pub payload_bytes: u64,
+    pub uncompressed_bytes: u64,
+    pub sim_time_s: f64,
+}
+
+/// Per-link accounting (one entry per pipeline boundary).
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    pub model: WireModel,
+    pub fwd: Vec<DirStats>,
+    pub bwd: Vec<DirStats>,
+}
+
+impl NetSim {
+    pub fn new(num_links: usize, model: WireModel) -> Self {
+        NetSim {
+            model,
+            fwd: vec![DirStats::default(); num_links],
+            bwd: vec![DirStats::default(); num_links],
+        }
+    }
+
+    /// Record a transfer; returns the simulated wall time of this message.
+    pub fn transfer(&mut self, link: usize, dir: Dir, bytes: usize, raw_bytes: usize) -> f64 {
+        let t = self.model.transfer_time(bytes);
+        let s = match dir {
+            Dir::Fwd => &mut self.fwd[link],
+            Dir::Bwd => &mut self.bwd[link],
+        };
+        s.messages += 1;
+        s.payload_bytes += bytes as u64;
+        s.uncompressed_bytes += raw_bytes as u64;
+        s.sim_time_s += t;
+        t
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.fwd.iter().chain(&self.bwd).map(|s| s.payload_bytes).sum()
+    }
+
+    pub fn total_uncompressed_bytes(&self) -> u64 {
+        self.fwd.iter().chain(&self.bwd).map(|s| s.uncompressed_bytes).sum()
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.fwd.iter().chain(&self.bwd).map(|s| s.sim_time_s).sum()
+    }
+
+    /// Overall compression ratio achieved on the wire.
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.total_uncompressed_bytes();
+        let got = self.total_bytes();
+        if got == 0 {
+            return 1.0;
+        }
+        raw as f64 / got as f64
+    }
+
+    pub fn reset(&mut self) {
+        for s in self.fwd.iter_mut().chain(self.bwd.iter_mut()) {
+            *s = DirStats::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_model() {
+        let m = WireModel { bandwidth_bytes_per_s: 1000.0, latency_s: 0.5 };
+        assert!((m.transfer_time(1000) - 1.5).abs() < 1e-9);
+        assert!((m.transfer_time(0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accounting_accumulates_per_link_and_dir() {
+        let mut n = NetSim::new(3, WireModel { bandwidth_bytes_per_s: 1e6, latency_s: 0.0 });
+        n.transfer(0, Dir::Fwd, 100, 400);
+        n.transfer(0, Dir::Fwd, 100, 400);
+        n.transfer(2, Dir::Bwd, 50, 400);
+        assert_eq!(n.fwd[0].messages, 2);
+        assert_eq!(n.fwd[0].payload_bytes, 200);
+        assert_eq!(n.bwd[2].payload_bytes, 50);
+        assert_eq!(n.fwd[1].messages, 0);
+        assert_eq!(n.total_bytes(), 250);
+        assert_eq!(n.total_uncompressed_bytes(), 1200);
+        assert!((n.compression_ratio() - 4.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_reduces_sim_time_proportionally() {
+        let m = WireModel { bandwidth_bytes_per_s: 1e6, latency_s: 0.0 };
+        let mut raw = NetSim::new(1, m);
+        let mut comp = NetSim::new(1, m);
+        raw.transfer(0, Dir::Fwd, 400_000, 400_000);
+        comp.transfer(0, Dir::Fwd, 50_000, 400_000);
+        assert!((raw.total_sim_time() / comp.total_sim_time() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_bounds_speedup_for_small_messages() {
+        // with high latency, compressing tiny messages barely helps —
+        // the regime where the paper's approach loses its advantage
+        let m = WireModel { bandwidth_bytes_per_s: 1e9, latency_s: 0.1 };
+        let mut raw = NetSim::new(1, m);
+        let mut comp = NetSim::new(1, m);
+        raw.transfer(0, Dir::Fwd, 1000, 1000);
+        comp.transfer(0, Dir::Fwd, 100, 1000);
+        let speedup = raw.total_sim_time() / comp.total_sim_time();
+        assert!(speedup < 1.01);
+    }
+}

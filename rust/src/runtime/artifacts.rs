@@ -1,0 +1,339 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named parameter tensor of a stage.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One pipeline stage: executable names + parameter layout.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub name: String,
+    pub fwd: String,
+    pub bwd: String,
+    pub sgd: String,
+    pub adamw: String,
+    pub params: Vec<ParamSpec>,
+    pub out_shape: Vec<usize>,
+}
+
+impl StageSpec {
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+}
+
+/// Input/label dtype — the only two the models use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// A staged model as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub task: String, // "classification" | "lm"
+    pub mp_degree: usize,
+    pub input: IoSpec,
+    pub label: IoSpec,
+    pub stages: Vec<StageSpec>,
+    pub loss: String,
+    pub init: String,
+    /// Flattened element count of each inter-stage link (unpadded).
+    pub links: Vec<usize>,
+    /// Model-specific metadata (vocab, seq, num_classes, microbatch, ...).
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ModelSpec {
+    pub fn microbatch(&self) -> usize {
+        self.input.shape[0]
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .map(|&v| v as usize)
+            .with_context(|| format!("model {} missing meta '{key}'", self.name))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.stages.iter().map(StageSpec::num_params).sum()
+    }
+}
+
+/// Compression executables for one padded link size.
+#[derive(Clone, Debug)]
+pub struct CompressionFiles {
+    pub quant: String,
+    pub topk: String,
+    pub mask: String,
+    pub delta_topk: String,
+    pub ef_combine: String,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// Padded size -> compression executable set.
+    pub compression: BTreeMap<usize, CompressionFiles>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let block = j.get("block")?.usize()?;
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, mj)?);
+        }
+
+        let mut compression = BTreeMap::new();
+        for (size, cj) in j.get("compression")?.obj()? {
+            let n: usize = size.parse().context("compression size key")?;
+            if n % block != 0 {
+                bail!("compression size {n} not a multiple of block {block}");
+            }
+            compression.insert(
+                n,
+                CompressionFiles {
+                    quant: cj.get("quant")?.str()?.to_string(),
+                    topk: cj.get("topk")?.str()?.to_string(),
+                    mask: cj.get("mask")?.str()?.to_string(),
+                    delta_topk: cj.get("delta_topk")?.str()?.to_string(),
+                    ef_combine: cj.get("ef_combine")?.str()?.to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest { dir, block, models, compression })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest ({:?})", self.models.keys()))
+    }
+
+    /// Padded size for a link of `n` elements.
+    pub fn padded(&self, n: usize) -> usize {
+        n.div_ceil(self.block) * self.block
+    }
+
+    /// Compression executables for a link of `n` (unpadded) elements.
+    pub fn compression_for(&self, n: usize) -> Result<&CompressionFiles> {
+        let p = self.padded(n);
+        self.compression
+            .get(&p)
+            .with_context(|| format!("no compression executables for padded size {p}"))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load the initial parameter tensors for a model (from init.bin).
+    pub fn load_init(&self, model: &ModelSpec) -> Result<Vec<Vec<crate::tensor::Tensor>>> {
+        let path = self.path(&model.init);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let want = 4 * model.total_params();
+        if bytes.len() != want {
+            bail!("{}: {} bytes, manifest wants {}", path.display(), bytes.len(), want);
+        }
+        let mut at = 0usize;
+        let mut stages = Vec::with_capacity(model.stages.len());
+        for st in &model.stages {
+            let mut params = Vec::with_capacity(st.params.len());
+            for p in &st.params {
+                let n = p.numel();
+                let mut data = Vec::with_capacity(n);
+                for i in 0..n {
+                    let o = at + 4 * i;
+                    data.push(f32::from_le_bytes([
+                        bytes[o],
+                        bytes[o + 1],
+                        bytes[o + 2],
+                        bytes[o + 3],
+                    ]));
+                }
+                at += 4 * n;
+                params.push(crate::tensor::Tensor::new(p.shape.clone(), data)?);
+            }
+            stages.push(params);
+        }
+        Ok(stages)
+    }
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let dtype = match j.get("dtype")?.str()? {
+        "float32" => DType::F32,
+        "int32" => DType::I32,
+        d => bail!("unsupported dtype '{d}'"),
+    };
+    Ok(IoSpec { shape: j.get("shape")?.usize_vec()?, dtype })
+}
+
+fn parse_model(name: &str, mj: &Json) -> Result<ModelSpec> {
+    let mut stages = Vec::new();
+    for sj in mj.get("stages")?.arr()? {
+        let files = sj.get("files")?;
+        let mut params = Vec::new();
+        for pj in sj.get("params")?.arr()? {
+            params.push(ParamSpec {
+                name: pj.get("name")?.str()?.to_string(),
+                shape: pj.get("shape")?.usize_vec()?,
+            });
+        }
+        stages.push(StageSpec {
+            name: sj.get("name")?.str()?.to_string(),
+            fwd: files.get("fwd")?.str()?.to_string(),
+            bwd: files.get("bwd")?.str()?.to_string(),
+            sgd: files.get("sgd")?.str()?.to_string(),
+            adamw: files.get("adamw")?.str()?.to_string(),
+            params,
+            out_shape: sj.get("out_shape")?.usize_vec()?,
+        });
+    }
+
+    let mut meta = BTreeMap::new();
+    if let Some(m) = mj.opt("meta") {
+        for (k, v) in m.obj()? {
+            if let Json::Num(n) = v {
+                meta.insert(k.clone(), *n);
+            }
+        }
+    }
+
+    let spec = ModelSpec {
+        name: name.to_string(),
+        task: mj.get("task")?.str()?.to_string(),
+        mp_degree: mj.get("mp_degree")?.usize()?,
+        input: parse_io(mj.get("input")?)?,
+        label: parse_io(mj.get("label")?)?,
+        stages,
+        loss: mj.get("loss")?.str()?.to_string(),
+        init: mj.get("init")?.str()?.to_string(),
+        links: mj.get("links")?.usize_vec()?,
+        meta,
+    };
+    if spec.stages.len() != spec.mp_degree {
+        bail!("model {name}: {} stages but mp_degree {}", spec.stages.len(), spec.mp_degree);
+    }
+    if spec.links.len() + 1 != spec.stages.len() {
+        bail!("model {name}: {} links for {} stages", spec.links.len(), spec.stages.len());
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "block": 4,
+      "models": {
+        "m": {
+          "task": "classification", "mp_degree": 2,
+          "input": {"shape": [2, 3], "dtype": "float32"},
+          "label": {"shape": [2], "dtype": "int32"},
+          "meta": {"num_classes": 10},
+          "stages": [
+            {"name": "s0",
+             "files": {"fwd": "a", "bwd": "b", "sgd": "c", "adamw": "d"},
+             "params": [{"name": "w", "shape": [3, 4]}],
+             "out_shape": [2, 4]},
+            {"name": "s1",
+             "files": {"fwd": "e", "bwd": "f", "sgd": "g", "adamw": "h"},
+             "params": [{"name": "w2", "shape": [4, 10]}, {"name": "b2", "shape": [10]}],
+             "out_shape": [2, 10]}
+          ],
+          "loss": "loss.hlo.txt", "init": "m_init.bin", "links": [8]
+        }
+      },
+      "compression": {
+        "8": {"quant": "q", "topk": "t", "mask": "k", "delta_topk": "dt",
+               "ef_combine": "ef"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.block, 4);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.mp_degree, 2);
+        assert_eq!(model.microbatch(), 2);
+        assert_eq!(model.total_params(), 12 + 40 + 10);
+        assert_eq!(model.meta_usize("num_classes").unwrap(), 10);
+        assert_eq!(model.input.dtype, DType::F32);
+        assert_eq!(model.label.dtype, DType::I32);
+        assert_eq!(m.padded(7), 8);
+        assert_eq!(m.padded(8), 8);
+        assert!(m.compression_for(8).is_ok());
+        assert!(m.compression_for(9).is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_links() {
+        let bad = MINI.replace("\"links\": [8]", "\"links\": [8, 9]");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            let cnn = m.model("cnn16").unwrap();
+            assert_eq!(cnn.mp_degree, 4);
+            assert_eq!(cnn.links.len(), 3);
+            // init.bin parses to the declared shapes
+            let init = m.load_init(cnn).unwrap();
+            assert_eq!(init.len(), 4);
+            for (st, params) in cnn.stages.iter().zip(&init) {
+                for (spec, t) in st.params.iter().zip(params) {
+                    assert_eq!(spec.shape, t.shape());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (pattern from /opt/xla-example/load_hlo).
+//!
+//! The runtime is the only module that touches the `xla` crate. All
+//! executables are compiled once on first use and cached; the hot path
+//! is `Runtime::call` (literals in, literals out — AOT graphs are lowered
+//! with `return_tuple=True`, so every result is a tuple that gets
+//! decomposed here).
+
+pub mod artifacts;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use artifacts::{DType, Manifest, ModelSpec, StageSpec};
+
+use crate::tensor::Tensor;
+
+/// Shared handle to the PJRT client + executable cache.
+///
+/// Not `Send`: the xla wrappers hold raw pointers. The coordinator is a
+/// deterministic single-threaded schedule executor (see
+/// `coordinator::pipeline`), which is also the right shape for the
+/// 1-core testbed, so this is not a limitation in practice.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executable invocation counter (per artifact), for the perf pass.
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the decomposed
+    /// output tuple.
+    ///
+    /// Inputs are staged through rust-owned `PjRtBuffer`s and executed
+    /// with `execute_b`, NOT `PjRtLoadedExecutable::execute`: the xla
+    /// 0.1.6 crate's literal-execute path leaks every input device
+    /// buffer (`BufferFromHostLiteral(..).release()` without a matching
+    /// free in xla_rs.cc `execute`), which OOMs a long training run.
+    /// `execute_b` borrows caller-owned buffers, and `PjRtBuffer`'s Drop
+    /// frees them deterministically.
+    pub fn call(&self, file: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("staging inputs for {file}"))?;
+        self.call_b(file, &buffers)
+    }
+
+    /// Execute with caller-owned device buffers (the hot path: lets the
+    /// coordinator keep stage parameters device-resident across steps).
+    pub fn call_b(&self, file: &str, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        *self.calls.borrow_mut().entry(file.to_string()).or_insert(0) += 1;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {file}"))?[0][0]
+            .to_literal_sync()?;
+        result.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Stage a literal onto the device as a rust-owned buffer.
+    pub fn to_device(&self, l: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_literal(None, l).context("host->device transfer")
+    }
+
+    /// Warm the executable cache for a whole model (so timing excludes
+    /// XLA compilation).
+    pub fn warmup_model(&self, model: &ModelSpec) -> Result<()> {
+        for st in &model.stages {
+            self.executable(&st.fwd)?;
+            self.executable(&st.bwd)?;
+            self.executable(&st.sgd)?;
+            self.executable(&st.adamw)?;
+        }
+        self.executable(&model.loss)?;
+        Ok(())
+    }
+
+    /// Invocation counts per artifact since startup (perf diagnostics).
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<_> = self.calls.borrow().iter().map(|(k, &n)| (k.clone(), n)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor <-> Literal conversion
+// ---------------------------------------------------------------------------
+
+/// Host tensor -> f32 literal with the tensor's shape.
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0 scalar
+        return Ok(xla::Literal::scalar(t.data()[0]));
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Flat f32 slice -> rank-1 literal (compression-kernel operands).
+pub fn lit_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// f32 scalar literal (lr, thresh, levels, step).
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// i32 data with a shape (labels / token inputs).
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Literal -> host tensor (f32), with the given shape.
+pub fn tensor_from(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(shape.to_vec(), data)
+}
+
+/// Literal -> scalar f32 (loss values).
+pub fn scalar_from(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

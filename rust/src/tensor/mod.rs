@@ -1,0 +1,237 @@
+//! Host tensor library: the CPU-side value type flowing through the
+//! pipeline links, error-feedback buffers, and wire codecs.
+//!
+//! Device-side compute is XLA's job (see `runtime`); this type only has
+//! to hold data between executables, support the handful of elementwise
+//! ops the error-feedback state machines need, and convert to/from
+//! `xla::Literal`.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatched", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    // ---- elementwise ops used by feedback state machines -------------------
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        })
+    }
+
+    // ---- reductions / diagnostics ------------------------------------------
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Row-wise argmax for `[batch, classes]` logits (accuracy metric).
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.shape.len() != 2 {
+            bail!("argmax_rows wants rank 2, got {:?}", self.shape);
+        }
+        let (b, c) = (self.shape[0], self.shape[1]);
+        Ok((0..b)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    // ---- padding for the BLOCK-aligned compression executables -------------
+
+    /// Flatten and pad to a multiple of `block` by replicating the last
+    /// element (keeps min/max unchanged for the quantizer; see
+    /// python/compile/kernels/compress.py).
+    pub fn padded_flat(&self, block: usize) -> Vec<f32> {
+        let n = self.data.len();
+        let padded = n.div_ceil(block) * block;
+        let mut out = Vec::with_capacity(padded);
+        out.extend_from_slice(&self.data);
+        let fill = self.data.last().copied().unwrap_or(0.0);
+        out.resize(padded, fill);
+        out
+    }
+
+    /// Rebuild from a padded flat buffer produced by `padded_flat`.
+    pub fn from_padded(shape: &[usize], padded: &[f32]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if padded.len() < n {
+            bail!("padded buffer too small: {} < {}", padded.len(), n);
+        }
+        Tensor::new(shape.to_vec(), padded[..n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked_construction() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(vec![0.5, 0.5, 0.5]);
+        assert_eq!(a.add(&b).unwrap().data(), &[1.5, 2.5, 3.5]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[0.5, 1.5, 2.5]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+        let c = Tensor::from_vec(vec![1.0, 2.0]);
+        assert!(a.add(&c).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn padding_roundtrip_preserves_minmax() {
+        let t = Tensor::new(vec![2, 3], vec![3.0, -1.0, 0.5, 2.0, 2.0, -0.5]).unwrap();
+        let p = t.padded_flat(4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[6..], &[-0.5, -0.5]); // replicated last element
+        let mn = p.iter().cloned().fold(f32::MAX, f32::min);
+        let mx = p.iter().cloned().fold(f32::MIN, f32::max);
+        assert_eq!((mn, mx), (-1.0, 3.0));
+        let back = Tensor::from_padded(&[2, 3], &p).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn padding_exact_multiple_is_identity() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.padded_flat(4), t.data());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(vec![-3.0, 1.0, 2.0]);
+        assert_eq!(t.abs_max(), 3.0);
+        assert_eq!(t.mean(), 0.0);
+        assert!(t.all_finite());
+        assert_eq!(t.count_nonzero(), 3);
+        let bad = Tensor::from_vec(vec![f32::NAN]);
+        assert!(!bad.all_finite());
+    }
+}

@@ -1,0 +1,139 @@
+//! Micro-benchmark harness — substrate for the offline environment
+//! (criterion unavailable; see DESIGN.md §3).
+//!
+//! Adaptive-iteration timing with warmup, reporting min/median/mean and
+//! a derived throughput. Used by `rust/benches/*` (cargo bench with
+//! `harness = false`) and the §Perf pass.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        );
+    }
+
+    /// Report with an items/second throughput column (items per call).
+    pub fn report_throughput(&self, items_per_call: f64, unit: &str) {
+        let per_sec = items_per_call / self.median.as_secs_f64();
+        println!(
+            "{:<44} {:>10} {:>12} {:>14}",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            format!("{} {unit}/s", fmt_rate(per_sec)),
+        );
+    }
+}
+
+pub fn header() {
+    println!("{:<44} {:>10} {:>12} {:>12}", "benchmark", "min", "median", "mean/thpt");
+    println!("{}", "-".repeat(84));
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Time `f`, choosing the iteration count so total sampling takes
+/// roughly `budget`. Returns per-call statistics over ≥10 samples.
+pub fn bench_with_budget<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(30));
+    let per_sample = (budget.as_secs_f64() / 10.0 / first.as_secs_f64()).max(1.0);
+    let iters_per_sample = per_sample.min(1e7) as usize;
+
+    let mut samples = Vec::with_capacity(10);
+    for _ in 0..10 {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t.elapsed() / iters_per_sample as u32);
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: iters_per_sample * samples.len(),
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean,
+    }
+}
+
+/// Default 0.5s budget.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with_budget(name, Duration::from_millis(500), f)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_cheap_op() {
+        let r = bench_with_budget("noop-add", Duration::from_millis(20), || {
+            black_box(black_box(1u64) + black_box(2u64));
+        });
+        assert!(r.min <= r.median && r.median <= r.mean.max(r.median));
+        assert!(r.iters >= 10);
+    }
+
+    #[test]
+    fn ordering_reflects_work() {
+        // sums over slices: LLVM cannot closed-form these through black_box
+        let small = vec![1.5f32; 16];
+        let large = vec![1.5f32; 64 * 1024];
+        let cheap = bench_with_budget("cheap", Duration::from_millis(20), || {
+            black_box(black_box(&small).iter().sum::<f32>());
+        });
+        let pricey = bench_with_budget("pricey", Duration::from_millis(20), || {
+            black_box(black_box(&large).iter().sum::<f32>());
+        });
+        assert!(pricey.median > cheap.median);
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline-environment substrates: PRNG, JSON, property tests, benching.
+//! (The image's cargo registry is unreachable; DESIGN.md §3 lists the
+//! crates these replace.)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,119 @@
+//! Tiny property-based testing harness — substrate for the offline
+//! environment (proptest unavailable; see DESIGN.md §3).
+//!
+//! `run_prop` executes a property over N randomized cases with
+//! deterministic seeding and, on failure, reports the failing case seed
+//! so it can be replayed exactly. `Gen` wraps the PRNG with the common
+//! generators the test suites need.
+
+use super::rng::Rng;
+
+/// Randomized-case generator handed to each property invocation.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0..cases); properties can use it to scale sizes so
+    /// early cases are small (cheap shrinking surrogate).
+    pub case: usize,
+}
+
+impl Gen {
+    /// Vector of standard normals with case-scaled length in [lo, hi].
+    pub fn vec_normal(&mut self, lo: usize, hi: usize) -> Vec<f32> {
+        let n = self.size(lo, hi);
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    /// Case-scaled size: grows from lo to hi as cases progress, so the
+    /// first failing case tends to be near-minimal.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = hi - lo + 1;
+        let scaled = span.min(1 + self.case * span / 24);
+        lo + self.rng.below(scaled)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` randomized cases. Panics (with the replay
+/// seed) on the first failure. `name` labels the property in the panic
+/// message.
+pub fn run_prop<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    run_prop_seeded(name, cases, 0x5eed_cafe, &mut prop);
+}
+
+/// Like `run_prop` with an explicit base seed (for replaying failures).
+pub fn run_prop_seeded<F>(name: &str, cases: usize, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: run_prop_seeded(\"{name}\", 1, {base_seed}u64 + {case})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("reflexive", 50, |g| {
+            let x = g.f32(-10.0, 10.0);
+            if x == x {
+                Ok(())
+            } else {
+                Err("NaN".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn reports_failure_with_case() {
+        run_prop("always_fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow_with_case_index() {
+        let mut first = usize::MAX;
+        let mut any_large = false;
+        run_prop("sizes", 30, |g| {
+            let n = g.size(1, 1000);
+            if g.case == 0 {
+                first = n;
+            }
+            if n > 500 {
+                any_large = true;
+            }
+            Ok(())
+        });
+        assert!(first <= 42, "first case should be small, got {first}");
+        assert!(any_large, "later cases should reach large sizes");
+    }
+}
