@@ -65,7 +65,7 @@ pub fn encode_raw(data: &[f32]) -> Vec<u8> {
 /// values equal `ops::quantize(data, bits)` exactly (and therefore the
 /// Pallas kernel's output).
 pub fn encode_quant(data: &[f32], bits: u8) -> Vec<u8> {
-    assert!(bits >= 1 && bits <= 16);
+    assert!((1..=16).contains(&bits));
     let (lo, hi, codes) = ops::quantize_codes(data, bits);
     let mut out = Vec::with_capacity(14 + (data.len() * bits as usize).div_ceil(8));
     header(TAG_QUANT, data.len(), &mut out);
@@ -256,6 +256,79 @@ mod tests {
     fn raw_roundtrip() {
         let data = vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE];
         assert_eq!(decode(&encode_raw(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn raw_bytes_formula_exact() {
+        for n in [0usize, 1, 7, 100, 16_384] {
+            let data = vec![1.0f32; n];
+            assert_eq!(encode_raw(&data).len(), raw_wire_bytes(n), "n={n}");
+        }
+    }
+
+    // ---- golden vectors: the exact on-wire bytes are a format contract
+    // (a decoder on the far end of a real link must agree) --------------
+
+    #[test]
+    fn golden_raw_encoding() {
+        let got = encode_raw(&[1.0, -2.0]);
+        let want = [
+            0u8, // TAG_RAW
+            2, 0, 0, 0, // n = 2 (LE)
+            0x00, 0x00, 0x80, 0x3f, // 1.0f32 LE
+            0x00, 0x00, 0x00, 0xc0, // -2.0f32 LE
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn golden_quant_encoding() {
+        // [0, 1, 2, 3] at 2 bits: lo=0, hi=3, codes 0,1,2,3 packed
+        // LSB-first into one byte 0b11_10_01_00 = 0xe4
+        let got = encode_quant(&[0.0, 1.0, 2.0, 3.0], 2);
+        let want = [
+            1u8, // TAG_QUANT
+            4, 0, 0, 0, // n = 4
+            2,  // bits
+            0x00, 0x00, 0x00, 0x00, // lo = 0.0
+            0x00, 0x00, 0x40, 0x40, // hi = 3.0
+            0xe4, // packed codes
+        ];
+        assert_eq!(got, want);
+        assert_eq!(decode(&got).unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn golden_sparse_encoding() {
+        // one nonzero out of 100 -> index list wins (8 B < 13 + 4 B)
+        let mut dense = vec![0.0f32; 100];
+        dense[5] = 5.0;
+        let got = encode_sparse(&dense, 1);
+        let want = [
+            2u8, // TAG_SPARSE
+            100, 0, 0, 0, // n = 100
+            1, 0, 0, 0, // k = 1
+            5, 0, 0, 0, // idx 5
+            0x00, 0x00, 0xa0, 0x40, // 5.0f32 LE
+        ];
+        assert_eq!(got, want);
+        assert_eq!(decode(&got).unwrap(), dense);
+    }
+
+    #[test]
+    fn golden_bitmap_encoding() {
+        // 8 of 16 nonzero -> bitmap wins (16/8 + 4*8 < 8*8)
+        let mut dense = vec![0.0f32; 16];
+        for i in 0..8 {
+            dense[2 * i] = 1.0;
+        }
+        let got = encode_sparse(&dense, 8);
+        assert_eq!(got[0], 3); // TAG_BITMAP
+        assert_eq!(&got[1..5], &[16, 0, 0, 0]); // n
+        assert_eq!(&got[5..9], &[8, 0, 0, 0]); // k
+        assert_eq!(&got[9..11], &[0b0101_0101, 0b0101_0101]); // bitmap
+        assert_eq!(got.len(), sparse_wire_bytes(16, 8));
+        assert_eq!(decode(&got).unwrap(), dense);
     }
 
     #[test]

@@ -96,6 +96,14 @@ pub struct TrainConfig {
     /// Epoch to snapshot for the warm-start protocol (paper: "baseline
     /// weights after N epochs").
     pub snapshot_epoch: Option<usize>,
+    /// Wire profile for the transmission simulator ("wan", "datacenter").
+    pub wire: String,
+    /// Fixed virtual compute cost per schedule op (seconds). `None`
+    /// charges the measured wall time of each stage executable instead;
+    /// tests and ablations pin it for deterministic makespans.
+    pub sim_op_time: Option<f64>,
+    /// Bounded in-flight message window per link direction.
+    pub sim_queue_cap: usize,
 }
 
 impl TrainConfig {
@@ -120,6 +128,9 @@ impl TrainConfig {
             init_checkpoint: None,
             save_checkpoint: None,
             snapshot_epoch: None,
+            wire: "wan".into(),
+            sim_op_time: None,
+            sim_queue_cap: crate::netsim::DEFAULT_QUEUE_CAPACITY,
         }
     }
 
@@ -167,6 +178,11 @@ impl TrainConfig {
         self.train_size = doc.usize_or(s, "train_size", self.train_size)?;
         self.test_size = doc.usize_or(s, "test_size", self.test_size)?;
         self.noise = doc.f64_or(s, "noise", self.noise as f64)? as f32;
+        self.wire = doc.str_or(s, "wire", &self.wire)?;
+        self.sim_queue_cap = doc.usize_or(s, "sim_queue_cap", self.sim_queue_cap)?;
+        if let Some(v) = doc.get(s, "sim_op_time") {
+            self.sim_op_time = Some(v.as_f64()?);
+        }
         Ok(())
     }
 
@@ -189,6 +205,9 @@ impl TrainConfig {
             "train_size" => self.train_size = value.parse()?,
             "test_size" => self.test_size = value.parse()?,
             "noise" => self.noise = value.parse()?,
+            "wire" => self.wire = value.into(),
+            "sim_op_time" => self.sim_op_time = Some(value.parse()?),
+            "sim_queue_cap" => self.sim_queue_cap = value.parse()?,
             "init_checkpoint" => self.init_checkpoint = Some(value.into()),
             "save_checkpoint" => self.save_checkpoint = Some(value.into()),
             "snapshot_epoch" => self.snapshot_epoch = Some(value.parse()?),
@@ -231,6 +250,25 @@ mod tests {
         assert_eq!(c.lr0, 0.05);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("epochs", "x").is_err());
+    }
+
+    #[test]
+    fn sim_transport_knobs() {
+        let mut c = TrainConfig::defaults("cnn16");
+        assert_eq!(c.wire, "wan");
+        assert_eq!(c.sim_op_time, None);
+        assert_eq!(c.sim_queue_cap, crate::netsim::DEFAULT_QUEUE_CAPACITY);
+        c.set("wire", "datacenter").unwrap();
+        c.set("sim_op_time", "0.02").unwrap();
+        c.set("sim_queue_cap", "2").unwrap();
+        assert_eq!(c.wire, "datacenter");
+        assert_eq!(c.sim_op_time, Some(0.02));
+        assert_eq!(c.sim_queue_cap, 2);
+        let doc = toml::Doc::parse("[run]\nwire = \"datacenter\"\nsim_op_time = 0.5\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.wire, "datacenter");
+        assert_eq!(c.sim_op_time, Some(0.5));
     }
 
     #[test]

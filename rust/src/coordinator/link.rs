@@ -3,8 +3,11 @@
 //! A link sits between pipeline stages i and i+1. During training it
 //! compresses activations on the forward pass and gradients on the
 //! backward pass, maintains the error-feedback state, stores activation
-//! sparsity masks for the shared-index mode, and accounts every message
-//! with the wire codecs + netsim.
+//! sparsity masks for the shared-index mode, and ships every message
+//! through the event-driven [`SimNet`] transport: the message departs
+//! at the producer's virtual completion time (`sent_at`), contends for
+//! link bandwidth, and the returned arrival time gates when the
+//! consuming stage may start (see `trainer`).
 //!
 //! Two execution paths produce bit-identical results (asserted by
 //! integration tests): `CompressImpl::Kernel` runs the L1 Pallas
@@ -17,7 +20,7 @@ use anyhow::{Context, Result};
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::CompressImpl;
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
-use crate::netsim::{Dir, NetSim};
+use crate::netsim::{Dir, SimNet};
 use crate::runtime::{artifacts::CompressionFiles, lit_scalar, lit_vec, Runtime};
 use crate::tensor::Tensor;
 
@@ -47,9 +50,13 @@ impl CompressedLink {
         }
     }
 
-    /// Compress activations (forward direction) for microbatch `mb_key`.
+    /// Compress activations (forward direction) for microbatch `mb_key`
+    /// and ship them through the simulated transport; `sent_at` is the
+    /// producer's virtual completion time. Returns the decompressed
+    /// tensor plus its simulated arrival time at the consumer.
     /// `train=false` applies the plain operator without touching any
     /// feedback state (inference-with-compression evals).
+    #[allow(clippy::too_many_arguments)]
     pub fn forward(
         &mut self,
         rt: &Runtime,
@@ -58,12 +65,14 @@ impl CompressedLink {
         t: &Tensor,
         mb_key: u64,
         train: bool,
-        net: &mut NetSim,
-    ) -> Result<Tensor> {
-        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Fwd, net)
+        net: &mut SimNet,
+        sent_at: f64,
+    ) -> Result<(Tensor, f64)> {
+        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Fwd, net, sent_at)
     }
 
-    /// Compress gradients (backward direction).
+    /// Compress gradients (backward direction); see [`Self::forward`].
+    #[allow(clippy::too_many_arguments)]
     pub fn backward(
         &mut self,
         rt: &Runtime,
@@ -72,11 +81,33 @@ impl CompressedLink {
         t: &Tensor,
         mb_key: u64,
         train: bool,
-        net: &mut NetSim,
-    ) -> Result<Tensor> {
-        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Bwd, net)
+        net: &mut SimNet,
+        sent_at: f64,
+    ) -> Result<(Tensor, f64)> {
+        self.transfer(rt, spec, imp, t, mb_key, train, Dir::Bwd, net, sent_at)
     }
 
+    /// Ship one message: send at the producer's virtual time, receive at
+    /// the consumer, return (tensor, arrival).
+    #[allow(clippy::too_many_arguments)]
+    fn ship(
+        &self,
+        net: &mut SimNet,
+        dir: Dir,
+        mb_key: u64,
+        bytes: usize,
+        raw: usize,
+        sent_at: f64,
+        t: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        net.send_to(self.index, dir, mb_key, bytes, raw, sent_at);
+        let msg = net
+            .recv(self.index, dir, mb_key)
+            .with_context(|| format!("link {}: message {mb_key} not delivered", self.index))?;
+        Ok((t, msg.arrival))
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn transfer(
         &mut self,
         rt: &Runtime,
@@ -86,20 +117,18 @@ impl CompressedLink {
         mb_key: u64,
         train: bool,
         dir: Dir,
-        net: &mut NetSim,
-    ) -> Result<Tensor> {
+        net: &mut SimNet,
+        sent_at: f64,
+    ) -> Result<(Tensor, f64)> {
         debug_assert_eq!(t.len(), self.n, "link {} tensor size", self.index);
         let raw = wire::raw_wire_bytes(self.n);
         match spec.method {
-            Method::None => {
-                net.transfer(self.index, dir, raw, raw);
-                Ok(t.clone())
-            }
+            Method::None => self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone()),
             Method::Quant { fw_bits, bw_bits } => {
                 let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
                 let out = self.quantize(rt, imp, t, bits)?;
-                net.transfer(self.index, dir, wire::quant_wire_bytes(self.n, bits), raw);
-                Ok(out)
+                let bytes = wire::quant_wire_bytes(self.n, bits);
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out)
             }
             Method::TopK { frac, shared_idx, feedback } => {
                 let fb = if train { feedback } else { Feedback::None };
@@ -113,8 +142,8 @@ impl CompressedLink {
                         .with_context(|| format!("link {}: no stored mask for mb {mb_key}", self.index))?;
                     let out = self.apply_mask(rt, imp, t, &mask)?;
                     let k = out.count_nonzero();
-                    net.transfer(self.index, dir, wire::sparse_wire_bytes(self.n, k), raw);
-                    return Ok(out);
+                    let bytes = wire::sparse_wire_bytes(self.n, k);
+                    return self.ship(net, dir, mb_key, bytes, raw, sent_at, out);
                 }
                 let (out, k_on_wire) = match fb {
                     Feedback::None => {
@@ -135,8 +164,7 @@ impl CompressedLink {
                             None => {
                                 // bootstrap: first visit sends uncompressed
                                 self.fwd_state.set_sample(mb_key, t.clone());
-                                net.transfer(self.index, dir, raw, raw);
-                                return Ok(t.clone());
+                                return self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone());
                             }
                             Some(buf) => {
                                 self.ef21_step(rt, imp, t, frac, dir, Some((mb_key, buf)))?
@@ -144,8 +172,8 @@ impl CompressedLink {
                         }
                     }
                 };
-                net.transfer(self.index, dir, wire::sparse_wire_bytes(self.n, k_on_wire), raw);
-                Ok(out)
+                let bytes = wire::sparse_wire_bytes(self.n, k_on_wire);
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out)
             }
         }
     }

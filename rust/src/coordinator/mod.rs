@@ -1,22 +1,29 @@
 //! The pipeline-parallel training coordinator (L3).
 //!
 //! * [`pipeline`] — microbatch schedules (GPipe, 1F1B) + validation
+//! * [`simexec`] — event-driven schedule execution over the simulated
+//!   transport (measured makespan; replaces the analytic estimate)
 //! * [`stage`] — per-stage executor (fwd/bwd/update over AOT artifacts)
 //! * [`link`] — compressed inter-stage links (the paper's contribution)
 //! * [`feedback`] — EF / EF-mixed / EF21 / AQ-SGD buffer state
 //! * [`trainer`] — the end-to-end training loop + dual evaluation
 //!
 //! Execution is deterministic and single-threaded: the xla wrappers are
-//! not `Send`, the testbed has one core, and the schedule's observable
-//! effects (dependency order, feedback-buffer update order, simulated
-//! multi-worker makespan) are all preserved by ordered execution.
+//! not `Send`, and the testbed has one core. Multi-worker timing is
+//! virtual: every inter-stage tensor is routed through
+//! [`crate::netsim::SimNet`], each op's start is gated on the simulated
+//! arrival of its inputs, and per-stage virtual clocks measure the
+//! schedule's makespan — while the tensor math stays bit-identical to a
+//! plain ordered replay (asserted by integration tests).
 
 pub mod feedback;
 pub mod link;
 pub mod pipeline;
+pub mod simexec;
 pub mod stage;
 pub mod trainer;
 
 pub use link::CompressedLink;
+pub use simexec::{simulate, SimReport, SimSpec};
 pub use stage::{StageInput, StageRunner};
 pub use trainer::Trainer;

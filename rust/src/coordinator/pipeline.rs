@@ -97,6 +97,14 @@ pub fn one_f_one_b(n_stages: usize, n_mb: usize) -> Vec<Op> {
     ops
 }
 
+/// Ops for a configured schedule (shared by the trainer and ablations).
+pub fn ops_for(sched: crate::config::Schedule, n_stages: usize, n_mb: usize) -> Vec<Op> {
+    match sched {
+        crate::config::Schedule::GPipe => gpipe(n_stages, n_mb),
+        crate::config::Schedule::OneFOneB => one_f_one_b(n_stages, n_mb),
+    }
+}
+
 /// Validate dependency order and completeness of a schedule.
 pub fn validate(ops: &[Op], n_stages: usize, n_mb: usize) -> Result<()> {
     let mut fwd = vec![vec![false; n_mb]; n_stages];
@@ -159,9 +167,11 @@ pub fn peak_in_flight(ops: &[Op], n_stages: usize) -> usize {
     peak as usize
 }
 
-/// Simulated multi-worker makespan of a schedule, assuming every op
-/// costs `op_time` and each inter-stage message costs `wire_time`
-/// (bubble analysis for the schedule ablation bench).
+/// Analytic multi-worker makespan of a schedule, assuming every op
+/// costs `op_time` and each inter-stage message costs a flat
+/// `wire_time` with no bandwidth contention or queueing. Kept as the
+/// closed-form reference model: `simexec` property tests pin the
+/// event-driven simulator to it exactly in the contention-free regime.
 pub fn makespan(ops: &[Op], n_stages: usize, n_mb: usize, op_time: f64, wire_time: f64) -> f64 {
     // event-driven: per-stage clock + per-(stage,mb) data-ready times
     let mut stage_clock = vec![0.0f64; n_stages];

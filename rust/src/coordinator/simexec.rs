@@ -1,0 +1,267 @@
+//! Execute a pipeline schedule through the event-driven [`SimNet`]
+//! transport and measure its makespan — the successor of the analytic
+//! [`pipeline::makespan`] estimate.
+//!
+//! The executor walks the schedule in order, keeping one virtual clock
+//! per stage. A forward op on stage `s > 0` starts no earlier than the
+//! simulated arrival of its input activations (sent when stage `s - 1`
+//! finished producing them); a backward op on stage `s < S - 1` is gated
+//! the same way on the gradient message. Messages contend for link
+//! bandwidth and respect the bounded in-flight window, so — unlike the
+//! analytic model — bursts of traffic (GPipe's all-forward phase) are
+//! charged their queueing delay.
+//!
+//! With zero latency and no contention the two models agree *exactly*;
+//! the property tests below pin that equivalence, which is the
+//! correctness anchor for everything the simulator reports.
+
+use crate::coordinator::pipeline::Op;
+use crate::netsim::{SimNet, SimSocket, WireModel};
+
+/// Static description of one simulated pipeline run.
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    pub n_stages: usize,
+    pub n_mb: usize,
+    /// Compute cost of one forward op.
+    pub fwd_op_s: f64,
+    /// Compute cost of one backward op.
+    pub bwd_op_s: f64,
+    /// Extra forward recomputation charged per backward op (GPipe's
+    /// rematerialization: it discards activations it cannot afford to
+    /// stash for all `n_mb` microbatches and recomputes them in the
+    /// backward phase; 1F1B's depth-bounded stash avoids this).
+    pub recompute_s: f64,
+    /// Payload bytes per forward (activation) message, per link.
+    pub fwd_bytes: Vec<usize>,
+    /// Payload bytes per backward (gradient) message, per link.
+    pub bwd_bytes: Vec<usize>,
+    /// Uncompressed payload bytes per message, per link (ledger).
+    pub raw_bytes: Vec<usize>,
+    pub model: WireModel,
+    /// Bounded in-flight window per link direction.
+    pub capacity: usize,
+}
+
+/// Measured outcome of one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct SimReport {
+    /// End-to-end simulated time of the schedule (max worker clock).
+    pub makespan_s: f64,
+    /// Bandwidth-occupancy seconds summed over channels (no latency).
+    pub busy_s: f64,
+    /// Sum of per-message wire times (latency + serialization) — the
+    /// pre-simulator accounting metric, kept for comparison.
+    pub wire_sum_s: f64,
+    pub bytes: u64,
+    pub raw_bytes: u64,
+}
+
+/// Run `ops` through a fresh `SimNet` described by `spec`.
+pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
+    let (s_count, m_count) = (spec.n_stages, spec.n_mb);
+    let mut net =
+        SimNet::with_capacity(s_count.saturating_sub(1), spec.model, spec.capacity);
+    // producer-side completion times per (stage, mb)
+    let mut fwd_end = vec![vec![0.0f64; m_count]; s_count];
+    let mut bwd_end = vec![vec![0.0f64; m_count]; s_count];
+    for op in ops {
+        match *op {
+            Op::Fwd { stage, mb } => {
+                let ready = if stage == 0 {
+                    0.0
+                } else {
+                    let key = mb as u64;
+                    SimSocket::new(stage - 1).send_fwd(
+                        &mut net,
+                        key,
+                        spec.fwd_bytes[stage - 1],
+                        spec.raw_bytes[stage - 1],
+                        fwd_end[stage - 1][mb],
+                    );
+                    SimSocket::new(stage)
+                        .recv_fwd(&mut net, key)
+                        .expect("fwd message delivered")
+                        .arrival
+                };
+                let start = net.clock(stage).max(ready);
+                let end = start + spec.fwd_op_s;
+                net.advance(stage, end);
+                fwd_end[stage][mb] = end;
+            }
+            Op::Bwd { stage, mb } => {
+                let ready = if stage + 1 == s_count {
+                    fwd_end[stage][mb]
+                } else {
+                    let key = mb as u64;
+                    SimSocket::new(stage + 1).send_bwd(
+                        &mut net,
+                        key,
+                        spec.bwd_bytes[stage],
+                        spec.raw_bytes[stage],
+                        bwd_end[stage + 1][mb],
+                    );
+                    SimSocket::new(stage)
+                        .recv_bwd(&mut net, key)
+                        .expect("bwd message delivered")
+                        .arrival
+                };
+                let start = net.clock(stage).max(ready);
+                let end = start + spec.bwd_op_s + spec.recompute_s;
+                net.advance(stage, end);
+                bwd_end[stage][mb] = end;
+            }
+        }
+    }
+    SimReport {
+        makespan_s: net.makespan(),
+        busy_s: net.busy_time(),
+        wire_sum_s: net.total_sim_time(),
+        bytes: net.total_bytes(),
+        raw_bytes: net.total_uncompressed_bytes(),
+    }
+}
+
+/// Per-direction wire bytes of one message under a compression spec
+/// (what the trainer's links charge, computed without materializing).
+pub fn spec_wire_bytes(spec: &crate::compression::Spec, n: usize) -> (usize, usize) {
+    use crate::compression::{ops, wire, Method};
+    match spec.method {
+        Method::None => (wire::raw_wire_bytes(n), wire::raw_wire_bytes(n)),
+        Method::Quant { fw_bits, bw_bits } => {
+            (wire::quant_wire_bytes(n, fw_bits), wire::quant_wire_bytes(n, bw_bits))
+        }
+        Method::TopK { frac, .. } => {
+            let k = ops::budget(n, frac);
+            let b = wire::sparse_wire_bytes(n, k);
+            (b, b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{self, gpipe, makespan, one_f_one_b};
+    use crate::util::prop::run_prop;
+
+    /// op_time 64, integer byte counts, bandwidth 1 B/s: every quantity
+    /// in both models is an exact small integer in f64.
+    fn exact_spec(s: usize, m: usize, bytes: usize, capacity: usize) -> SimSpec {
+        SimSpec {
+            n_stages: s,
+            n_mb: m,
+            fwd_op_s: 64.0,
+            bwd_op_s: 64.0,
+            recompute_s: 0.0,
+            fwd_bytes: vec![bytes; s.saturating_sub(1)],
+            bwd_bytes: vec![bytes; s.saturating_sub(1)],
+            raw_bytes: vec![bytes; s.saturating_sub(1)],
+            model: WireModel { bandwidth_bytes_per_s: 1.0, latency_s: 0.0 },
+            capacity,
+        }
+    }
+
+    #[test]
+    fn prop_no_contention_matches_analytic_exactly() {
+        // Zero latency, a single in-flight message per link, and wire
+        // time <= op time: the event-driven makespan must equal the
+        // analytic pipeline::makespan() bit for bit.
+        run_prop("simnet == analytic makespan", 40, |g| {
+            let s = g.usize(1, 6);
+            let m = g.usize(1, 10);
+            let bytes = g.usize(0, 64); // tx <= op_time: no contention
+            for ops in [gpipe(s, m), one_f_one_b(s, m)] {
+                let want = makespan(&ops, s, m, 64.0, bytes as f64);
+                let got = simulate(&ops, &exact_spec(s, m, bytes, 1)).makespan_s;
+                if got != want {
+                    return Err(format!(
+                        "s={s} m={m} bytes={bytes}: sim {got} != analytic {want}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_contention_strictly_exceeds_analytic() {
+        // Wire time > op time: the producer emits faster than the link
+        // drains, messages queue, and the measured makespan must be
+        // strictly worse than the contention-blind analytic estimate.
+        run_prop("simnet > analytic under contention", 40, |g| {
+            let s = g.usize(2, 6);
+            let m = g.usize(2, 10);
+            let bytes = g.usize(80, 192); // tx in (op, 3*op]
+            let capacity = *g.choose(&[1usize, 4]);
+            let ops = gpipe(s, m);
+            let want = makespan(&ops, s, m, 64.0, bytes as f64);
+            let got = simulate(&ops, &exact_spec(s, m, bytes, capacity)).makespan_s;
+            if got <= want {
+                return Err(format!(
+                    "s={s} m={m} bytes={bytes} cap={capacity}: sim {got} <= analytic {want}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recompute_charges_gpipe_backward_phase() {
+        let ops = gpipe(4, 8);
+        let base = simulate(&ops, &exact_spec(4, 8, 16, 4));
+        let mut spec = exact_spec(4, 8, 16, 4);
+        spec.recompute_s = 64.0;
+        let rc = simulate(&ops, &spec);
+        assert!(rc.makespan_s > base.makespan_s);
+        // same traffic either way
+        assert_eq!(rc.bytes, base.bytes);
+        assert!((rc.busy_s - base.busy_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_delays_makespan_but_not_busy_time() {
+        let ops = one_f_one_b(4, 8);
+        let mut spec = exact_spec(4, 8, 32, 4);
+        let quiet = simulate(&ops, &spec);
+        spec.model.latency_s = 10.0;
+        let laggy = simulate(&ops, &spec);
+        assert!(laggy.makespan_s > quiet.makespan_s);
+        assert!((laggy.busy_s - quiet.busy_s).abs() < 1e-12);
+        assert!(laggy.wire_sum_s > quiet.wire_sum_s);
+    }
+
+    #[test]
+    fn single_stage_has_no_traffic() {
+        let ops = gpipe(1, 5);
+        let r = simulate(&ops, &exact_spec(1, 5, 1000, 1));
+        assert_eq!(r.bytes, 0);
+        assert!((r.makespan_s - 10.0 * 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedules_agree_with_validation() {
+        // the simulator consumes exactly the ops the validator accepts
+        for (s, m) in [(2, 3), (4, 16)] {
+            for ops in [gpipe(s, m), one_f_one_b(s, m)] {
+                pipeline::validate(&ops, s, m).unwrap();
+                let r = simulate(&ops, &exact_spec(s, m, 8, 2));
+                assert!(r.makespan_s.is_finite() && r.makespan_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_wire_bytes_match_codec_formulas() {
+        use crate::compression::{ops, wire, Spec};
+        let n = 16_384;
+        let (f, b) = spec_wire_bytes(&Spec::none(), n);
+        assert_eq!((f, b), (wire::raw_wire_bytes(n), wire::raw_wire_bytes(n)));
+        let (f, b) = spec_wire_bytes(&Spec::parse("quant:fw4-bw8").unwrap(), n);
+        assert_eq!(f, wire::quant_wire_bytes(n, 4));
+        assert_eq!(b, wire::quant_wire_bytes(n, 8));
+        let (f, b) = spec_wire_bytes(&Spec::parse("topk:10").unwrap(), n);
+        let k = ops::budget(n, 0.1);
+        assert_eq!((f, b), (wire::sparse_wire_bytes(n, k), wire::sparse_wire_bytes(n, k)));
+    }
+}

@@ -3,6 +3,7 @@
 //! stage's AOT executables (fwd / bwd / update).
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -44,6 +45,10 @@ pub struct StageRunner {
     accum_count: usize,
     /// Stashed inputs for in-flight microbatches (consumed by bwd).
     stash: HashMap<u64, StageInput>,
+    /// Wall time of the most recent fwd/bwd executable call — the
+    /// measured per-op compute cost the transmission simulator charges
+    /// when no fixed `sim_op_time` is configured.
+    last_op_wall_s: f64,
 }
 
 impl StageRunner {
@@ -76,7 +81,13 @@ impl StageRunner {
             grad_accum,
             accum_count: 0,
             stash: HashMap::new(),
+            last_op_wall_s: 0.0,
         })
+    }
+
+    /// Measured wall time of the last forward/backward executable call.
+    pub fn last_op_wall_s(&self) -> f64 {
+        self.last_op_wall_s
     }
 
     pub fn params(&self) -> &[Tensor] {
@@ -126,7 +137,9 @@ impl StageRunner {
     ) -> Result<Tensor> {
         let mut args = self.param_literals()?;
         args.push(input.to_literal()?);
+        let t0 = Instant::now();
         let out = rt.call(&self.spec.fwd, &args)?;
+        self.last_op_wall_s = t0.elapsed().as_secs_f64();
         let y = tensor_from(&out[0], &self.spec.out_shape)?;
         if for_training {
             self.stash.insert(mb, input);
@@ -145,7 +158,9 @@ impl StageRunner {
         let mut args = self.param_literals()?;
         args.push(input.to_literal()?);
         args.push(lit_f32(g_out)?);
+        let t0 = Instant::now();
         let out = rt.call(&self.spec.bwd, &args)?;
+        self.last_op_wall_s = t0.elapsed().as_secs_f64();
         let np = self.params.len();
         let want = if self.is_first { np } else { np + 1 };
         if out.len() != want {

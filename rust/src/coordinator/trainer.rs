@@ -1,20 +1,30 @@
 //! The training coordinator: drives the full model-parallel training
-//! loop — schedule execution, compressed links, loss, optimizer updates,
-//! warm-start protocol, and the paper's dual (with/without compression)
-//! evaluation.
+//! loop — schedule execution over the simulated transport, compressed
+//! links, loss, optimizer updates, warm-start protocol, and the paper's
+//! dual (with/without compression) evaluation.
+//!
+//! Every schedule op is an event in virtual time: its start is gated on
+//! the simulated arrival of its input message through [`SimNet`] (plus
+//! the owning stage's clock), its duration is either the measured wall
+//! time of the stage executable or the configured `sim_op_time`, and the
+//! optimizer step is a barrier that syncs all stage clocks. The measured
+//! simulated makespan replaces the old analytic estimate in the run
+//! metrics; the tensor math is unaffected (timing is bookkeeping only),
+//! so results stay bit-identical across wire models — asserted by
+//! integration tests.
 
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint;
-use crate::config::{Schedule, TrainConfig};
+use crate::config::TrainConfig;
 use crate::coordinator::link::CompressedLink;
 use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::stage::{StageInput, StageRunner};
 use crate::data::{ImageDataset, TextDataset};
 use crate::metrics::{CurvePoint, RunMetrics};
-use crate::netsim::{NetSim, WireModel};
+use crate::netsim::{SimNet, WireModel};
 use crate::runtime::{lit_f32, lit_i32, scalar_from, tensor_from, Runtime};
 use crate::tensor::Tensor;
 
@@ -29,7 +39,7 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     stages: Vec<StageRunner>,
     links: Vec<CompressedLink>,
-    pub net: NetSim,
+    pub net: SimNet,
     data: TaskData,
     microbatch: usize,
     n_microbatches: usize,
@@ -73,7 +83,8 @@ impl Trainer {
             let files = rt.manifest().compression_for(n)?.clone();
             links.push(CompressedLink::new(i, n, rt.manifest().padded(n), files));
         }
-        let net = NetSim::new(links.len(), WireModel::default());
+        let wire = WireModel::parse(&cfg.wire)?;
+        let net = SimNet::with_capacity(links.len(), wire, cfg.sim_queue_cap);
 
         // datasets
         let data = match model.task.as_str() {
@@ -149,10 +160,14 @@ impl Trainer {
     }
 
     fn schedule(&self) -> Vec<Op> {
-        match self.cfg.schedule {
-            Schedule::GPipe => pipeline::gpipe(self.stages.len(), self.n_microbatches),
-            Schedule::OneFOneB => pipeline::one_f_one_b(self.stages.len(), self.n_microbatches),
-        }
+        pipeline::ops_for(self.cfg.schedule, self.stages.len(), self.n_microbatches)
+    }
+
+    /// Virtual compute cost of the op a stage just executed: the
+    /// configured fixed `sim_op_time` (deterministic runs / tests), or
+    /// the measured wall time of the stage executable.
+    fn op_time(&self, stage: usize) -> f64 {
+        self.cfg.sim_op_time.unwrap_or_else(|| self.stages[stage].last_op_wall_s())
     }
 
     /// Is compression active at this epoch? (warm-start protocol: the
@@ -203,6 +218,7 @@ impl Trainer {
         m.wire_bytes = self.net.total_bytes();
         m.wire_raw_bytes = self.net.total_uncompressed_bytes();
         m.wire_sim_time_s = self.net.total_sim_time();
+        m.sim_makespan_s = self.net.makespan();
         Ok(m)
     }
 
@@ -297,6 +313,18 @@ impl Trainer {
     }
 
     /// Execute one optimizer step (one batch through the pipeline).
+    ///
+    /// The tensor path is an ordered single-threaded replay; the timing
+    /// path runs the same ops as events in virtual time. `fwd_end` /
+    /// `bwd_end` record when each (stage, mb) op finished on its stage's
+    /// virtual clock — the send timestamps of the messages it produced.
+    ///
+    /// This is the same gating rule `simexec::simulate` applies to
+    /// synthetic schedules (its property tests pin the rule to
+    /// `pipeline::makespan`), minus `recompute_s`: the trainer stashes
+    /// every in-flight activation (see `StageRunner`), so unlike the
+    /// ablation's memory-bounded GPipe it genuinely performs no
+    /// rematerialization and must not be charged for one.
     fn train_batch(&mut self, _epoch: usize, batch: usize, compress: bool, lr: f32) -> Result<f64> {
         let s_count = self.stages.len();
         let m_count = self.n_microbatches;
@@ -305,6 +333,9 @@ impl Trainer {
         let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
         let mut grads: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
         let mut labels_by_mb: Vec<Option<Vec<i32>>> = vec![None; m_count];
+        // virtual completion times per (stage, mb)
+        let mut fwd_end = vec![vec![0.0f64; m_count]; s_count];
+        let mut bwd_end = vec![vec![0.0f64; m_count]; s_count];
         let mut loss_sum = 0.0f64;
 
         let spec = self.cfg.spec;
@@ -316,25 +347,31 @@ impl Trainer {
             match op {
                 Op::Fwd { stage, mb } => {
                     let mb_key = (batch * m_count + mb) as u64;
-                    let input = if stage == 0 {
+                    let (input, ready) = if stage == 0 {
                         let (inp, labels) = self.train_microbatch(batch, mb);
                         labels_by_mb[mb] = Some(labels);
-                        inp
+                        (inp, self.net.clock(0))
                     } else {
                         let prev = acts[stage - 1][mb]
                             .take()
                             .with_context(|| format!("missing act s{} mb{mb}", stage - 1))?;
+                        let sent_at = fwd_end[stage - 1][mb];
                         let link = &mut self.links[stage - 1];
-                        let compressed =
-                            link.forward(&self.rt, active, imp, &prev, mb_key, true, &mut self.net)?;
-                        StageInput::F32(compressed)
+                        let (compressed, arrival) = link.forward(
+                            &self.rt, active, imp, &prev, mb_key, true, &mut self.net, sent_at,
+                        )?;
+                        (StageInput::F32(compressed), arrival)
                     };
                     let y = self.stages[stage].forward(&self.rt, mb as u64, input, true)?;
+                    let start = self.net.clock(stage).max(ready);
+                    let end = start + self.op_time(stage);
+                    self.net.advance(stage, end);
+                    fwd_end[stage][mb] = end;
                     acts[stage][mb] = Some(y);
                 }
                 Op::Bwd { stage, mb } => {
                     let mb_key = (batch * m_count + mb) as u64;
-                    let g_in = if stage == s_count - 1 {
+                    let (g_in, ready) = if stage == s_count - 1 {
                         let logits = acts[stage][mb]
                             .take()
                             .with_context(|| format!("missing logits mb{mb}"))?;
@@ -343,17 +380,24 @@ impl Trainer {
                             .with_context(|| format!("missing labels mb{mb}"))?;
                         let (loss, g) = self.loss_and_grad(&logits, labels)?;
                         loss_sum += loss as f64;
-                        g
+                        (g, fwd_end[stage][mb])
                     } else {
                         let g = grads[stage + 1][mb]
                             .take()
                             .with_context(|| format!("missing grad s{} mb{mb}", stage + 1))?;
+                        let sent_at = bwd_end[stage + 1][mb];
                         let link = &mut self.links[stage];
-                        link.backward(&self.rt, active, imp, &g, mb_key, true, &mut self.net)?
+                        link.backward(
+                            &self.rt, active, imp, &g, mb_key, true, &mut self.net, sent_at,
+                        )?
                     };
                     if let Some(gx) = self.stages[stage].backward(&self.rt, mb as u64, &g_in)? {
                         grads[stage][mb] = Some(gx);
                     }
+                    let start = self.net.clock(stage).max(ready);
+                    let end = start + self.op_time(stage);
+                    self.net.advance(stage, end);
+                    bwd_end[stage][mb] = end;
                 }
             }
         }
@@ -361,6 +405,8 @@ impl Trainer {
         for s in &mut self.stages {
             s.update(&self.rt, lr_eff)?;
         }
+        // optimizer step = synchronization point across workers
+        self.net.barrier();
         Ok(loss_sum / m_count as f64)
     }
 
@@ -372,12 +418,12 @@ impl Trainer {
         let plain = crate::compression::Spec::none();
         let active = if compress { &spec } else { &plain };
         let mut x = input;
-        let mut scratch = NetSim::new(self.links.len(), self.net.model);
+        let mut scratch = SimNet::new(self.links.len(), self.net.model());
         for i in 0..self.stages.len() {
             let y = self.stages[i].forward(&self.rt, u64::MAX, x, false)?;
             x = if i < self.links.len() {
-                let c =
-                    self.links[i].forward(&self.rt, active, imp, &y, u64::MAX, false, &mut scratch)?;
+                let (c, _) = self.links[i]
+                    .forward(&self.rt, active, imp, &y, u64::MAX, false, &mut scratch, 0.0)?;
                 StageInput::F32(c)
             } else {
                 StageInput::F32(y)

@@ -22,6 +22,41 @@ use crate::coordinator::Trainer;
 use crate::metrics::{append_jsonl, RunMetrics};
 use crate::runtime::Runtime;
 
+/// Parameters of the standalone schedule ablation (`mpcomp exp
+/// schedule`): a synthetic pipeline simulated through `SimNet`, no
+/// artifacts required. Defaults model the paper's setting: 4 stages,
+/// 16 microbatches, the LM link size, and op times sized so that the
+/// uncompressed WAN transfer (~5 ms) is comparable to compute.
+#[derive(Clone, Debug)]
+pub struct SchedParams {
+    pub stages: usize,
+    pub mb: usize,
+    /// Elements per inter-stage tensor (16_384 = the LM link).
+    pub link_elems: usize,
+    pub fwd_op_s: f64,
+    pub bwd_op_s: f64,
+    /// Bounded in-flight message window per link direction.
+    pub capacity: usize,
+    /// Charge GPipe backward ops a forward recomputation (the GPipe
+    /// paper's rematerialization — it cannot stash all `mb` activation
+    /// sets; 1F1B's depth-bounded stash is exactly what avoids this).
+    pub recompute: bool,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        SchedParams {
+            stages: 4,
+            mb: 16,
+            link_elems: 16_384,
+            fwd_op_s: 0.020,
+            bwd_op_s: 0.040,
+            capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
+            recompute: true,
+        }
+    }
+}
+
 /// Options shared by every experiment (CLI-controlled).
 #[derive(Clone, Debug)]
 pub struct ExpOpts {
@@ -37,6 +72,8 @@ pub struct ExpOpts {
     pub compress_impl: CompressImpl,
     /// Epoch count override for quick tuning.
     pub epochs: Option<usize>,
+    /// Schedule-ablation simulator parameters.
+    pub sched: SchedParams,
 }
 
 impl Default for ExpOpts {
@@ -49,6 +86,7 @@ impl Default for ExpOpts {
             results_dir: "results".into(),
             compress_impl: CompressImpl::Kernel,
             epochs: None,
+            sched: SchedParams::default(),
         }
     }
 }

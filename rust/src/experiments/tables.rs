@@ -2,12 +2,12 @@
 
 use anyhow::{Context, Result};
 
-use super::{print_acc_table, print_lm_table, run_sweep, ExpOpts, SweepRow};
-use crate::compression::Spec;
-use crate::config::Optimizer;
-use crate::coordinator::Trainer;
+use super::{print_acc_table, print_lm_table, run_sweep, ExpOpts, SchedParams, SweepRow};
+use crate::compression::{wire, Spec};
+use crate::config::{Optimizer, Schedule};
+use crate::coordinator::{pipeline, simexec, Trainer};
 use crate::metrics::append_jsonl;
-use crate::netsim::Dir;
+use crate::netsim::WireModel;
 use crate::runtime::Runtime;
 
 /// Table 1 + Figure 2: quantization sweep fw{2,4} x bw{2,4,6,8}.
@@ -174,7 +174,7 @@ pub fn comm(opts: &ExpOpts) -> Result<()> {
         let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
         let mut trainer = Trainer::new(rt, cfg)?;
         trainer.run()?;
-        let net = &trainer.net;
+        let net = trainer.net.ledger();
         let fwd: u64 = net.fwd.iter().map(|s| s.payload_bytes).sum();
         let bwd: u64 = net.bwd.iter().map(|s| s.payload_bytes).sum();
         println!(
@@ -221,35 +221,149 @@ pub fn impl_ablation(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
-/// Schedule ablation: GPipe vs 1F1B — same convergence, different peak
-/// activation memory and simulated makespan.
+/// One row of the schedule-ablation table.
+#[derive(Clone, Debug)]
+pub struct SchedRow {
+    pub wire: String,
+    pub mode: String,
+    pub schedule: String,
+    pub makespan_s: f64,
+    pub busy_s: f64,
+    pub sent_mb: f64,
+    pub peak_in_flight: usize,
+}
+
+/// The {GPipe, 1F1B} x {WAN, datacenter} x compression sweep, simulated
+/// through the event-driven transport. Pure computation (no artifacts):
+/// `schedule_ablation` prints it, tests assert on it.
+pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
+    let modes = ["none", "topk:10", "topk:30", "quant:fw4-bw8"];
+    let wires = [("wan", WireModel::wan()), ("datacenter", WireModel::datacenter())];
+    let scheds = [(Schedule::GPipe, "gpipe"), (Schedule::OneFOneB, "1f1b")];
+    let links = p.stages.saturating_sub(1);
+    let mut rows = Vec::new();
+    for (wname, model) in wires {
+        for mode in modes {
+            let spec = Spec::parse(mode)?;
+            let (fb, bb) = simexec::spec_wire_bytes(&spec, p.link_elems);
+            for (sched, sname) in scheds {
+                let ops = pipeline::ops_for(sched, p.stages, p.mb);
+                // GPipe must rematerialize: it cannot stash all `mb`
+                // activation sets, so each backward op re-runs the fwd
+                let recompute_s =
+                    if sched == Schedule::GPipe && p.recompute { p.fwd_op_s } else { 0.0 };
+                let sim = simexec::simulate(
+                    &ops,
+                    &simexec::SimSpec {
+                        n_stages: p.stages,
+                        n_mb: p.mb,
+                        fwd_op_s: p.fwd_op_s,
+                        bwd_op_s: p.bwd_op_s,
+                        recompute_s,
+                        fwd_bytes: vec![fb; links],
+                        bwd_bytes: vec![bb; links],
+                        raw_bytes: vec![wire::raw_wire_bytes(p.link_elems); links],
+                        model,
+                        capacity: p.capacity,
+                    },
+                );
+                rows.push(SchedRow {
+                    wire: wname.to_string(),
+                    mode: spec.label(),
+                    schedule: sname.to_string(),
+                    makespan_s: sim.makespan_s,
+                    busy_s: sim.busy_s,
+                    sent_mb: sim.bytes as f64 / 1e6,
+                    peak_in_flight: pipeline::peak_in_flight(&ops, p.stages),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn sched_row<'a>(rows: &'a [SchedRow], wire: &str, mode: &str, sched: &str) -> &'a SchedRow {
+    rows.iter()
+        .find(|r| r.wire == wire && r.mode == mode && r.schedule == sched)
+        .expect("schedule table row")
+}
+
+/// Schedule ablation: GPipe vs 1F1B through the transmission simulator
+/// (communication-reduction table + makespan), plus — when artifacts are
+/// built — a short trained comparison showing identical convergence.
 pub fn schedule_ablation(opts: &ExpOpts) -> Result<()> {
-    use crate::config::Schedule;
-    use crate::coordinator::pipeline;
+    let p = &opts.sched;
+    let rows = schedule_table(p)?;
+    println!(
+        "\nSchedule ablation (event-driven SimNet): stages={} mb={} link={} elems",
+        p.stages, p.mb, p.link_elems
+    );
+    println!(
+        "fwd={:.0}ms bwd={:.0}ms queue cap={} gpipe{}",
+        p.fwd_op_s * 1e3,
+        p.bwd_op_s * 1e3,
+        p.capacity,
+        if p.recompute { " rematerializes activations" } else { ": no recompute" },
+    );
+    println!("{}", "-".repeat(86));
+    println!(
+        "{:<11} {:<17} {:<9} {:>11} {:>11} {:>10} {:>9}",
+        "wire", "mode", "schedule", "makespan", "wire busy", "sent", "peak act"
+    );
+    println!("{}", "-".repeat(86));
+    for r in &rows {
+        println!(
+            "{:<11} {:<17} {:<9} {:>9.3} s {:>9.3} s {:>7.2} MB {:>9}",
+            r.wire, r.mode, r.schedule, r.makespan_s, r.busy_s, r.sent_mb, r.peak_in_flight
+        );
+    }
+    println!("{}", "-".repeat(86));
+    for wire_name in ["wan", "datacenter"] {
+        let g = sched_row(&rows, wire_name, "no compression", "gpipe");
+        let o = sched_row(&rows, wire_name, "no compression", "1f1b");
+        println!(
+            "{wire_name}: 1f1b {:.3} s vs gpipe {:.3} s ({:.2}x) on uncompressed links",
+            o.makespan_s,
+            g.makespan_s,
+            g.makespan_s / o.makespan_s
+        );
+    }
+    let raw = sched_row(&rows, "wan", "no compression", "gpipe");
+    let t10 = sched_row(&rows, "wan", "Top 10%", "gpipe");
+    println!(
+        "Top 10% cuts WAN communication (wire busy) time {:.1}x: {:.3} s -> {:.3} s",
+        raw.busy_s / t10.busy_s,
+        raw.busy_s,
+        t10.busy_s
+    );
+
+    // trained comparison over the real pipeline, if artifacts are built
+    let manifest = std::path::Path::new(&opts.artifacts_dir).join("manifest.json");
+    if !manifest.exists() {
+        println!("(artifacts not built; skipping the trained GPipe-vs-1F1B run)");
+        return Ok(());
+    }
     let mut base = opts.cnn_base();
     base.epochs = 1;
     base.train_size = 400;
     base.test_size = 100;
     base.spec = Spec::parse("topk:10")?;
-    println!("\nSchedule ablation (1 epoch, Top10%)");
+    base.sim_op_time = Some(0.020); // fixed op cost: deterministic makespan
+    println!("\nTrained (1 epoch, Top10%, fixed 20ms op time):");
     for (name, sched) in [("gpipe", Schedule::GPipe), ("1f1b", Schedule::OneFOneB)] {
         let mut cfg = base.clone();
         cfg.schedule = sched;
-        let n_mb = cfg.batch_size / 25;
         let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
         let mut trainer = Trainer::new(rt, cfg)?;
         let m = trainer.run()?;
-        let ops = match sched {
-            Schedule::GPipe => pipeline::gpipe(4, n_mb),
-            Schedule::OneFOneB => pipeline::one_f_one_b(4, n_mb),
-        };
         println!(
-            "  {name:<6} final acc(on)={:.4} peak_in_flight={} makespan(op=1,wire=0.2)={:.1}",
+            "  {name:<6} final acc(on)={:.4} simulated makespan={:.2}s wire={:.2}MB",
             m.final_eval_on(),
-            pipeline::peak_in_flight(&ops, 4),
-            pipeline::makespan(&ops, 4, n_mb, 1.0, 0.2)
+            m.sim_makespan_s,
+            m.wire_bytes as f64 / 1e6,
         );
     }
+    println!("  (identical accuracy: the schedule changes timing, not math)");
     Ok(())
 }
 
@@ -273,10 +387,65 @@ pub fn aqsgd_memory(opts: &ExpOpts) -> Result<()> {
 
 /// Quick check that netsim directions saw traffic (used by tests).
 pub fn wire_dirs_active(trainer: &Trainer) -> (bool, bool) {
-    let fwd = trainer.net.fwd.iter().any(|s| s.messages > 0);
-    let bwd = trainer.net.bwd.iter().any(|s| s.messages > 0);
-    let _ = Dir::Fwd;
+    let fwd = trainer.net.ledger().fwd.iter().any(|s| s.messages > 0);
+    let bwd = trainer.net.ledger().bwd.iter().any(|s| s.messages > 0);
     (fwd, bwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance claims of the schedule ablation, pinned: 1F1B
+    /// beats GPipe on simulated makespan at (stages=4, mb=16) on both
+    /// wire profiles, and Top 10% cuts WAN communication time >= 5x.
+    #[test]
+    fn schedule_table_supports_paper_claims() {
+        let rows = schedule_table(&SchedParams::default()).unwrap();
+        assert_eq!(rows.len(), 2 * 4 * 2);
+        for wire_name in ["wan", "datacenter"] {
+            let g = sched_row(&rows, wire_name, "no compression", "gpipe");
+            let o = sched_row(&rows, wire_name, "no compression", "1f1b");
+            assert!(
+                o.makespan_s < g.makespan_s,
+                "{wire_name}: 1f1b {} !< gpipe {}",
+                o.makespan_s,
+                g.makespan_s
+            );
+        }
+        let raw = sched_row(&rows, "wan", "no compression", "gpipe");
+        let t10 = sched_row(&rows, "wan", "Top 10%", "gpipe");
+        let reduction = raw.busy_s / t10.busy_s;
+        assert!(reduction >= 5.0, "WAN comm-time reduction only {reduction:.2}x");
+        // same schedule => same traffic; compression shrinks bytes
+        assert!(t10.sent_mb < raw.sent_mb / 5.0);
+        // the memory axis: gpipe stashes all 16, 1f1b at most stages+1
+        assert_eq!(raw.peak_in_flight, 16);
+        assert!(sched_row(&rows, "wan", "no compression", "1f1b").peak_in_flight <= 5);
+    }
+
+    #[test]
+    fn schedule_table_contention_shows_on_wan_only() {
+        // datacenter links are effectively free: both schedules sit near
+        // their compute bound; WAN stretches makespans well past it
+        let rows = schedule_table(&SchedParams::default()).unwrap();
+        for mode in ["no compression", "Top 10%"] {
+            let wan = sched_row(&rows, "wan", mode, "1f1b").makespan_s;
+            let dc = sched_row(&rows, "datacenter", mode, "1f1b").makespan_s;
+            assert!(wan > dc, "{mode}: wan {wan} !> dc {dc}");
+        }
+    }
+
+    #[test]
+    fn recompute_flag_is_what_costs_gpipe() {
+        let p = SchedParams { recompute: false, ..SchedParams::default() };
+        let rows = schedule_table(&p).unwrap();
+        // without rematerialization gpipe is at least as fast as 1f1b
+        // on the quiet datacenter wire (the analytic-equality regime)
+        let g = sched_row(&rows, "datacenter", "no compression", "gpipe");
+        let o = sched_row(&rows, "datacenter", "no compression", "1f1b");
+        assert!(g.makespan_s <= o.makespan_s + 1e-9);
+    }
 }
 
 /// Dispatch by experiment name (CLI entry).

@@ -7,10 +7,14 @@
 //! * [`compression`] implements the paper's operators (quantization,
 //!   TopK) and error-feedback state machines (EF, EF-mixed, EF21,
 //!   AQ-SGD), plus the wire codecs that account for real bytes.
+//! * [`netsim`] simulates the inter-stage network: an exact byte ledger
+//!   plus an event-driven transmission simulator (`SimNet`) with
+//!   bandwidth contention, latency, and bounded per-link queues.
 //! * [`coordinator`] is the pipeline-parallel training coordinator:
-//!   stage scheduling (GPipe / 1F1B), compressed links, optimizer
-//!   driving, checkpointing.
-//! * [`experiments`] regenerates every table and figure of the paper.
+//!   stage scheduling (GPipe / 1F1B) executed through the simulated
+//!   transport, compressed links, optimizer driving, checkpointing.
+//! * [`experiments`] regenerates every table and figure of the paper,
+//!   plus the `exp schedule` transmission ablation.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! reproduction results.

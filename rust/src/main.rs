@@ -7,6 +7,8 @@
 //! mpcomp eval --model cnn16 --checkpoint results/x.ckpt [--compression topk:10]
 //! mpcomp exp table1..table5|comm|impl|schedule|aqsgd-mem|all
 //!            [--full] [--seeds N] [--curves] [--impl kernel|native]
+//! mpcomp exp schedule [--stages N] [--mb N] [--link-elems N]
+//!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -21,6 +23,8 @@ use mpcomp::runtime::Runtime;
 const VALUE_FLAGS: &[&str] = &[
     "config", "set", "model", "compression", "checkpoint", "seeds", "impl",
     "artifacts", "results", "epochs", "save-checkpoint",
+    // exp schedule (transmission-simulator ablation)
+    "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
 ];
 
 fn main() -> Result<()> {
@@ -128,10 +132,11 @@ fn train(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "\nwire: {:.2} MB ({:.1}x compression), sim time {:.1}s | wall {:.1}s",
+        "\nwire: {:.2} MB ({:.1}x compression), wire time {:.1}s, simulated makespan {:.1}s | wall {:.1}s",
         m.wire_bytes as f64 / 1e6,
         m.wire_raw_bytes as f64 / m.wire_bytes.max(1) as f64,
         m.wire_sim_time_s,
+        m.sim_makespan_s,
         m.wall_time_s
     );
     append_jsonl(&results_dir, "train", &m)?;
@@ -162,7 +167,7 @@ fn exp(args: &Args) -> Result<()> {
     let Some(name) = args.positional.get(1) else {
         bail!("exp wants a name: table1..table5, comm, impl, schedule, aqsgd-mem, all");
     };
-    let opts = ExpOpts {
+    let mut opts = ExpOpts {
         full: args.has("full"),
         seeds: args.usize("seeds")?,
         curves: args.has("curves"),
@@ -173,6 +178,28 @@ fn exp(args: &Args) -> Result<()> {
             None => CompressImpl::Kernel,
         },
         epochs: args.usize("epochs")?,
+        sched: Default::default(),
     };
+    if let Some(v) = args.usize("stages")? {
+        opts.sched.stages = v;
+    }
+    if let Some(v) = args.usize("mb")? {
+        opts.sched.mb = v;
+    }
+    if let Some(v) = args.usize("link-elems")? {
+        opts.sched.link_elems = v;
+    }
+    if let Some(v) = args.usize("capacity")? {
+        opts.sched.capacity = v;
+    }
+    if let Some(v) = args.get("fwd-op-ms") {
+        opts.sched.fwd_op_s = v.parse::<f64>()? / 1e3;
+    }
+    if let Some(v) = args.get("bwd-op-ms") {
+        opts.sched.bwd_op_s = v.parse::<f64>()? / 1e3;
+    }
+    if args.has("no-recompute") {
+        opts.sched.recompute = false;
+    }
     tables::run(name, &opts)
 }

@@ -32,7 +32,12 @@ pub struct RunMetrics {
     /// Wire accounting summary at end of run.
     pub wire_bytes: u64,
     pub wire_raw_bytes: u64,
+    /// Sum of per-message wire times (latency + serialization).
     pub wire_sim_time_s: f64,
+    /// Measured simulated makespan of the whole run: the latest stage
+    /// clock after the event-driven schedule execution (compute and
+    /// communication overlapped, contention included).
+    pub sim_makespan_s: f64,
     pub wall_time_s: f64,
 }
 
@@ -46,6 +51,7 @@ impl RunMetrics {
             wire_bytes: 0,
             wire_raw_bytes: 0,
             wire_sim_time_s: 0.0,
+            sim_makespan_s: 0.0,
             wall_time_s: 0.0,
         }
     }
@@ -111,6 +117,7 @@ impl RunMetrics {
             .set("wire_bytes", Json::Num(self.wire_bytes as f64))
             .set("wire_raw_bytes", Json::Num(self.wire_raw_bytes as f64))
             .set("wire_sim_time_s", Json::Num(self.wire_sim_time_s))
+            .set("sim_makespan_s", Json::Num(self.sim_makespan_s))
             .set("wall_time_s", Json::Num(self.wall_time_s))
             .set(
                 "train_loss",
@@ -202,6 +209,7 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("label").unwrap().str().unwrap(), "Top 10%");
         assert_eq!(parsed.get("best_eval_on").unwrap().num().unwrap(), 0.8);
+        assert!(parsed.get("sim_makespan_s").is_ok());
         assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
     }
 

@@ -1,12 +1,26 @@
-//! Simulated network: exact byte accounting + a bandwidth/latency model
-//! for the inter-stage links.
+//! Simulated network for the inter-stage links.
 //!
 //! The paper motivates compression by communication time on slow,
 //! geo-distributed links (§1). Convergence does not depend on wire
 //! timing (compression is integrated into the model, paper §2.1), so we
-//! run compute locally and *account* for what each transfer would cost
-//! on a modelled wire; `mpcomp exp comm` reports the communication-
-//! reduction table this produces.
+//! run compute locally and *simulate* what each transfer would cost on a
+//! modelled wire. Two layers:
+//!
+//! * [`NetSim`] — the exact per-link byte ledger (messages, payload vs
+//!   raw bytes, summed per-message wire time). `mpcomp exp comm` reports
+//!   the communication-reduction table this produces.
+//! * [`SimNet`] ([`sim`]) — the event-driven transmission simulator on
+//!   top of the ledger: per-link bounded queues, bandwidth contention
+//!   (messages on one channel serialize), latency, per-worker virtual
+//!   clocks, and a `SimSocket`-style send/recv API. The coordinator
+//!   executes schedules *through* it, turning the analytic
+//!   `pipeline::makespan()` estimate into measured simulated time.
+
+pub mod sim;
+
+pub use sim::{Message, SimNet, SimSocket, DEFAULT_QUEUE_CAPACITY};
+
+use anyhow::{bail, Result};
 
 /// Wire model. Defaults approximate the paper's motivating scenario:
 /// 100 Mbit/s WAN with 20 ms RTT (10 ms one-way).
@@ -23,13 +37,34 @@ impl Default for WireModel {
 }
 
 impl WireModel {
+    /// The paper's motivating profile (alias of `Default`).
+    pub fn wan() -> Self {
+        WireModel::default()
+    }
+
     /// LAN-ish profile (10 Gbit/s, 0.1 ms) for ablations.
     pub fn datacenter() -> Self {
         WireModel { bandwidth_bytes_per_s: 10e9 / 8.0, latency_s: 0.0001 }
     }
 
+    /// Named profile from config/CLI (`wire = "wan" | "datacenter"`).
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "wan" => Ok(WireModel::wan()),
+            "datacenter" | "dc" => Ok(WireModel::datacenter()),
+            _ => bail!("unknown wire profile '{name}' (try wan, datacenter)"),
+        }
+    }
+
+    /// Serialization (bandwidth-occupancy) time of a message, excluding
+    /// propagation latency.
+    pub fn tx_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Full single-message wire time: latency + serialization.
     pub fn transfer_time(&self, bytes: usize) -> f64 {
-        self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+        self.latency_s + self.tx_time(bytes)
     }
 }
 
@@ -117,6 +152,18 @@ mod tests {
         let m = WireModel { bandwidth_bytes_per_s: 1000.0, latency_s: 0.5 };
         assert!((m.transfer_time(1000) - 1.5).abs() < 1e-9);
         assert!((m.transfer_time(0) - 0.5).abs() < 1e-9);
+        assert!((m.tx_time(1000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wire_profiles_parse() {
+        assert!(WireModel::parse("wan").is_ok());
+        assert!(WireModel::parse("datacenter").is_ok());
+        assert!(WireModel::parse("dc").is_ok());
+        assert!(WireModel::parse("carrier-pigeon").is_err());
+        let wan = WireModel::parse("wan").unwrap();
+        let dc = WireModel::parse("dc").unwrap();
+        assert!(wan.transfer_time(1_000_000) > dc.transfer_time(1_000_000));
     }
 
     #[test]

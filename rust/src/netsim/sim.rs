@@ -1,0 +1,408 @@
+//! Event-driven transmission simulator (`SimNet`): virtual time for the
+//! pipeline's inter-stage links.
+//!
+//! Each link is full-duplex: one [`Channel`] per direction. A channel
+//! serializes its messages at the wire bandwidth (a message cannot start
+//! transmitting before the previous one finished), adds propagation
+//! latency on top, and bounds the number of in-flight messages — when
+//! the window is full, the next message queues until the oldest
+//! in-flight one lands. Senders never block: compute and communication
+//! overlap, the delay shows up as a later arrival on the receiver side.
+//!
+//! Workers (pipeline stages) carry per-stage virtual clocks inside the
+//! same struct, so the coordinator can gate an op's start time on the
+//! simulated arrival of its input message and measure the schedule's
+//! *makespan* rather than summing per-message transfer times.
+//!
+//! The send/recv surface ([`SimSocket`], in the spirit of the ce-netsim
+//! examples) delivers [`Message`]s through per-(link, direction)
+//! mailboxes keyed by microbatch, which is how the coordinator and the
+//! schedule simulator consume arrivals.
+
+use std::collections::VecDeque;
+
+use super::{Dir, NetSim, WireModel};
+
+/// Default bound on in-flight messages per link direction.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 4;
+
+/// A delivered message, as seen by the receiver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Message {
+    /// Sender-chosen key (the coordinator uses the microbatch id).
+    pub key: u64,
+    /// Payload bytes that crossed the wire.
+    pub bytes: usize,
+    /// Simulated time the message landed at the receiver.
+    pub arrival: f64,
+}
+
+/// One direction of one link: serialization + latency + bounded window.
+#[derive(Clone, Debug)]
+struct Channel {
+    /// Time the wire finishes transmitting the last accepted message.
+    free_at: f64,
+    /// Arrival times of messages still in flight (bounded window).
+    inflight: VecDeque<f64>,
+    capacity: usize,
+    /// Total bandwidth-occupancy seconds (excludes latency).
+    busy_s: f64,
+    /// Delivered-but-unreceived messages (socket mailbox).
+    mailbox: VecDeque<Message>,
+}
+
+impl Channel {
+    fn new(capacity: usize) -> Self {
+        Channel {
+            free_at: 0.0,
+            inflight: VecDeque::new(),
+            capacity: capacity.max(1),
+            busy_s: 0.0,
+            mailbox: VecDeque::new(),
+        }
+    }
+
+    /// Accept a message handed to the channel at `now`; returns its
+    /// arrival time at the far end.
+    fn send(&mut self, tx: f64, latency: f64, now: f64) -> f64 {
+        while self.inflight.front().is_some_and(|&a| a <= now) {
+            self.inflight.pop_front();
+        }
+        let mut depart = now.max(self.free_at);
+        if self.inflight.len() >= self.capacity {
+            if let Some(oldest) = self.inflight.pop_front() {
+                depart = depart.max(oldest);
+            }
+        }
+        self.free_at = depart + tx;
+        let arrival = depart + tx + latency;
+        self.inflight.push_back(arrival);
+        self.busy_s += tx;
+        arrival
+    }
+
+    fn reset(&mut self) {
+        self.free_at = 0.0;
+        self.inflight.clear();
+        self.busy_s = 0.0;
+        self.mailbox.clear();
+    }
+}
+
+/// The simulated network + worker clocks for one pipeline.
+///
+/// Link `i` connects stage `i` to stage `i + 1`; `Dir::Fwd` carries
+/// activations downstream, `Dir::Bwd` gradients upstream. The exact
+/// byte [`NetSim`] ledger rides along, so all existing accounting
+/// (bytes, compression ratio, summed wire time) stays available.
+#[derive(Clone, Debug)]
+pub struct SimNet {
+    model: WireModel,
+    capacity: usize,
+    fwd_ch: Vec<Channel>,
+    bwd_ch: Vec<Channel>,
+    /// Per-stage virtual clocks (`num_links + 1` workers).
+    clocks: Vec<f64>,
+    ledger: NetSim,
+}
+
+impl SimNet {
+    pub fn new(num_links: usize, model: WireModel) -> Self {
+        Self::with_capacity(num_links, model, DEFAULT_QUEUE_CAPACITY)
+    }
+
+    pub fn with_capacity(num_links: usize, model: WireModel, capacity: usize) -> Self {
+        SimNet {
+            model,
+            capacity: capacity.max(1),
+            fwd_ch: (0..num_links).map(|_| Channel::new(capacity)).collect(),
+            bwd_ch: (0..num_links).map(|_| Channel::new(capacity)).collect(),
+            clocks: vec![0.0; num_links + 1],
+            ledger: NetSim::new(num_links, model),
+        }
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.fwd_ch.len()
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn model(&self) -> WireModel {
+        self.model
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn channel(&mut self, link: usize, dir: Dir) -> &mut Channel {
+        match dir {
+            Dir::Fwd => &mut self.fwd_ch[link],
+            Dir::Bwd => &mut self.bwd_ch[link],
+        }
+    }
+
+    // ---- transport ---------------------------------------------------------
+
+    /// Hand a message to `link`/`dir` at simulated time `now`; it lands
+    /// in the receiving mailbox and its arrival time is returned.
+    /// `raw_bytes` is the uncompressed payload size (ledger accounting).
+    pub fn send_to(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        bytes: usize,
+        raw_bytes: usize,
+        now: f64,
+    ) -> f64 {
+        let (tx, lat) = (self.model.tx_time(bytes), self.model.latency_s);
+        let ch = self.channel(link, dir);
+        let arrival = ch.send(tx, lat, now);
+        ch.mailbox.push_back(Message { key, bytes, arrival });
+        self.ledger.transfer(link, dir, bytes, raw_bytes);
+        arrival
+    }
+
+    /// Receive the message with `key` from `link`/`dir`, if delivered.
+    pub fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Option<Message> {
+        let ch = self.channel(link, dir);
+        let at = ch.mailbox.iter().position(|m| m.key == key)?;
+        ch.mailbox.remove(at)
+    }
+
+    /// Messages delivered but not yet received on a channel.
+    pub fn pending(&self, link: usize, dir: Dir) -> usize {
+        match dir {
+            Dir::Fwd => self.fwd_ch[link].mailbox.len(),
+            Dir::Bwd => self.bwd_ch[link].mailbox.len(),
+        }
+    }
+
+    // ---- worker clocks -----------------------------------------------------
+
+    pub fn clock(&self, stage: usize) -> f64 {
+        self.clocks[stage]
+    }
+
+    /// Move a stage's clock forward (never backward).
+    pub fn advance(&mut self, stage: usize, to: f64) {
+        if to > self.clocks[stage] {
+            self.clocks[stage] = to;
+        }
+    }
+
+    /// Synchronization point (optimizer step): every worker's clock
+    /// jumps to the latest one. Returns the barrier time.
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.makespan();
+        for c in &mut self.clocks {
+            *c = t;
+        }
+        t
+    }
+
+    /// Latest worker clock — the measured simulated makespan.
+    pub fn makespan(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total bandwidth-occupancy seconds across all channels (excludes
+    /// latency; the "communication time" a compression ratio shrinks).
+    pub fn busy_time(&self) -> f64 {
+        self.fwd_ch.iter().chain(&self.bwd_ch).map(|c| c.busy_s).sum()
+    }
+
+    // ---- ledger passthrough ------------------------------------------------
+
+    /// The exact byte ledger (per-link/direction message stats).
+    pub fn ledger(&self) -> &NetSim {
+        &self.ledger
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.ledger.total_bytes()
+    }
+
+    pub fn total_uncompressed_bytes(&self) -> u64 {
+        self.ledger.total_uncompressed_bytes()
+    }
+
+    /// Sum of per-message wire times (latency + serialization), the
+    /// pre-simulator accounting metric.
+    pub fn total_sim_time(&self) -> f64 {
+        self.ledger.total_sim_time()
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.ledger.compression_ratio()
+    }
+
+    /// Clear channels, clocks, mailboxes, and the ledger.
+    pub fn reset(&mut self) {
+        for c in self.fwd_ch.iter_mut().chain(self.bwd_ch.iter_mut()) {
+            c.reset();
+        }
+        for c in &mut self.clocks {
+            *c = 0.0;
+        }
+        self.ledger.reset();
+    }
+}
+
+/// Stage-endpoint view of the transport — the `send_to`/`recv` pairing
+/// of the ce-netsim exemplars, with addressing derived from pipeline
+/// adjacency (stage `s` talks to `s - 1` and `s + 1` only).
+#[derive(Clone, Copy, Debug)]
+pub struct SimSocket {
+    pub stage: usize,
+}
+
+impl SimSocket {
+    pub fn new(stage: usize) -> Self {
+        SimSocket { stage }
+    }
+
+    /// Send activations to stage `self.stage + 1` (link = own stage).
+    pub fn send_fwd(
+        &self,
+        net: &mut SimNet,
+        key: u64,
+        bytes: usize,
+        raw_bytes: usize,
+        now: f64,
+    ) -> f64 {
+        net.send_to(self.stage, Dir::Fwd, key, bytes, raw_bytes, now)
+    }
+
+    /// Send gradients to stage `self.stage - 1` (link = that stage).
+    pub fn send_bwd(
+        &self,
+        net: &mut SimNet,
+        key: u64,
+        bytes: usize,
+        raw_bytes: usize,
+        now: f64,
+    ) -> f64 {
+        net.send_to(self.stage - 1, Dir::Bwd, key, bytes, raw_bytes, now)
+    }
+
+    /// Receive the activation message `key` from stage `self.stage - 1`.
+    pub fn recv_fwd(&self, net: &mut SimNet, key: u64) -> Option<Message> {
+        net.recv(self.stage - 1, Dir::Fwd, key)
+    }
+
+    /// Receive the gradient message `key` from stage `self.stage + 1`.
+    pub fn recv_bwd(&self, net: &mut SimNet, key: u64) -> Option<Message> {
+        net.recv(self.stage, Dir::Bwd, key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(bw: f64, lat: f64) -> WireModel {
+        WireModel { bandwidth_bytes_per_s: bw, latency_s: lat }
+    }
+
+    #[test]
+    fn messages_on_one_channel_serialize() {
+        // bw 1000 B/s, 0.5 s latency; two 1000 B messages sent at t=0:
+        // the second cannot start transmitting before the first is done.
+        let mut n = SimNet::with_capacity(1, model(1000.0, 0.5), 8);
+        let a1 = n.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        let a2 = n.send_to(0, Dir::Fwd, 2, 1000, 1000, 0.0);
+        assert!((a1 - 1.5).abs() < 1e-12);
+        assert!((a2 - 2.5).abs() < 1e-12);
+        // ledger still sums per-message transfer times
+        assert!((n.total_sim_time() - 3.0).abs() < 1e-12);
+        assert!((n.busy_time() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplex_directions_do_not_contend() {
+        let mut n = SimNet::with_capacity(1, model(1000.0, 0.0), 8);
+        let a1 = n.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        let a2 = n.send_to(0, Dir::Bwd, 1, 1000, 1000, 0.0);
+        assert_eq!(a1, a2); // separate channels
+    }
+
+    #[test]
+    fn bounded_queue_delays_departure() {
+        // capacity 1: message 2 cannot depart before message 1 arrives.
+        let mut n = SimNet::with_capacity(1, model(1000.0, 0.5), 1);
+        let a1 = n.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        let a2 = n.send_to(0, Dir::Fwd, 2, 1000, 1000, 0.0);
+        assert!((a1 - 1.5).abs() < 1e-12);
+        assert!((a2 - 3.0).abs() < 1e-12, "a2 = {a2}"); // dep 1.5 + tx 1 + lat .5
+        // with capacity 2 the same send departs at free_at = 1.0
+        let mut n = SimNet::with_capacity(1, model(1000.0, 0.5), 2);
+        n.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        let a2 = n.send_to(0, Dir::Fwd, 2, 1000, 1000, 0.0);
+        assert!((a2 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quiet_channel_has_no_contention() {
+        // messages spaced wider than their tx time depart immediately
+        let mut n = SimNet::with_capacity(1, model(1000.0, 0.0), 1);
+        let a1 = n.send_to(0, Dir::Fwd, 1, 500, 500, 0.0);
+        let a2 = n.send_to(0, Dir::Fwd, 2, 500, 500, 10.0);
+        assert!((a1 - 0.5).abs() < 1e-12);
+        assert!((a2 - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn socket_send_recv_roundtrip() {
+        let mut n = SimNet::new(2, WireModel::default());
+        let s0 = SimSocket::new(0);
+        let s1 = SimSocket::new(1);
+        let arr = s0.send_fwd(&mut n, 7, 100, 400, 0.0);
+        assert_eq!(n.pending(0, Dir::Fwd), 1);
+        let m = s1.recv_fwd(&mut n, 7).expect("message delivered");
+        assert_eq!(m.key, 7);
+        assert_eq!(m.bytes, 100);
+        assert_eq!(m.arrival, arr);
+        assert_eq!(n.pending(0, Dir::Fwd), 0);
+        assert!(s1.recv_fwd(&mut n, 7).is_none());
+        // gradient direction: stage 1 -> stage 0 over link 0
+        s1.send_bwd(&mut n, 9, 50, 400, 1.0);
+        assert!(s0.recv_bwd(&mut n, 9).is_some());
+        // ledger saw both directions
+        assert_eq!(n.ledger().fwd[0].messages, 1);
+        assert_eq!(n.ledger().bwd[0].messages, 1);
+        assert_eq!(n.total_bytes(), 150);
+        assert_eq!(n.total_uncompressed_bytes(), 800);
+    }
+
+    #[test]
+    fn clocks_advance_and_barrier_syncs() {
+        let mut n = SimNet::new(3, WireModel::default());
+        assert_eq!(n.num_stages(), 4);
+        n.advance(2, 5.0);
+        n.advance(2, 3.0); // never backward
+        assert_eq!(n.clock(2), 5.0);
+        assert_eq!(n.makespan(), 5.0);
+        let t = n.barrier();
+        assert_eq!(t, 5.0);
+        for s in 0..4 {
+            assert_eq!(n.clock(s), 5.0);
+        }
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut n = SimNet::new(1, WireModel::default());
+        n.send_to(0, Dir::Fwd, 1, 100, 100, 0.0);
+        n.advance(1, 2.0);
+        n.reset();
+        assert_eq!(n.total_bytes(), 0);
+        assert_eq!(n.makespan(), 0.0);
+        assert_eq!(n.busy_time(), 0.0);
+        assert_eq!(n.pending(0, Dir::Fwd), 0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Simulated-transport integration tests.
+//!
+//! The first half runs with no AOT artifacts: it drives `CompressedLink`
+//! end to end over `SimNet` with the native operators and cross-checks
+//! the bytes the transport charges against the wire codecs' actual
+//! encodings. The second half (artifacts-gated, like
+//! `tests/integration.rs`) asserts the core refactor guarantee: routing
+//! training through the event-driven transport changes *timing only* —
+//! trained parameters are bit-identical across wire models and queue
+//! capacities, exactly as the pre-simulator single-threaded replay
+//! produced them.
+
+use mpcomp::compression::{wire, Method, Spec};
+use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
+use mpcomp::coordinator::{CompressedLink, Trainer};
+use mpcomp::netsim::{SimNet, WireModel};
+use mpcomp::runtime::{artifacts::CompressionFiles, Manifest, Runtime};
+use mpcomp::tensor::Tensor;
+use mpcomp::util::rng::Rng;
+
+/// Enough manifest for a `Runtime` handle; no executables are touched
+/// on the `CompressImpl::Native` path.
+const EMPTY_MANIFEST: &str = r#"{"block": 4, "models": {}, "compression": {}}"#;
+
+fn native_runtime() -> Runtime {
+    let m = Manifest::parse(EMPTY_MANIFEST, std::path::PathBuf::from("/tmp")).unwrap();
+    Runtime::new(m).unwrap()
+}
+
+fn dummy_files() -> CompressionFiles {
+    CompressionFiles {
+        quant: "q".into(),
+        topk: "t".into(),
+        mask: "m".into(),
+        delta_topk: "d".into(),
+        ef_combine: "e".into(),
+    }
+}
+
+fn randt(n: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    Tensor::from_vec(v)
+}
+
+// ---------------------------------------------------------------------------
+// link-level: charged bytes == the codec's real encoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn link_charges_exactly_what_the_codecs_encode() {
+    let rt = native_runtime();
+    let n = 4096;
+    let x = randt(n, 1);
+    for mode in ["none", "quant:fw4-bw6", "topk:10", "topk:30"] {
+        let spec = Spec::parse(mode).unwrap();
+        let mut link = CompressedLink::new(0, n, n, dummy_files());
+        let mut net = SimNet::new(1, WireModel::default());
+        let (out, arrival) = link
+            .forward(&rt, &spec, CompressImpl::Native, &x, 0, true, &mut net, 0.0)
+            .unwrap();
+        let charged = net.total_bytes() as usize;
+        let encoded = match spec.method {
+            Method::None => wire::encode_raw(x.data()),
+            Method::Quant { fw_bits, .. } => wire::encode_quant(x.data(), fw_bits),
+            Method::TopK { .. } => wire::encode_sparse(out.data(), out.count_nonzero()),
+        };
+        assert_eq!(charged, encoded.len(), "{mode}: charged != encoded");
+        assert!(arrival > 0.0, "{mode}: arrival {arrival}");
+        // encode -> decode identity: what a receiver would reconstruct
+        // is exactly the tensor the link handed downstream (raw decodes
+        // to x itself, quant to ops::quantize(x), sparse to the mask)
+        let decoded = wire::decode(&encoded).unwrap();
+        assert_eq!(decoded, out.data(), "{mode}: wire roundtrip != link output");
+        assert_eq!(net.total_uncompressed_bytes() as usize, wire::raw_wire_bytes(n));
+    }
+}
+
+#[test]
+fn shared_index_gradient_charges_masked_support() {
+    let rt = native_runtime();
+    let n = 2048;
+    let x = randt(n, 2);
+    let g = randt(n, 3);
+    let spec = Spec::parse("topk:10:shared").unwrap();
+    let mut link = CompressedLink::new(0, n, n, dummy_files());
+    let mut net = SimNet::new(1, WireModel::default());
+    link.forward(&rt, &spec, CompressImpl::Native, &x, 7, true, &mut net, 0.0).unwrap();
+    let fwd_bytes = net.total_bytes() as usize;
+    let (gout, _) =
+        link.backward(&rt, &spec, CompressImpl::Native, &g, 7, true, &mut net, 0.0).unwrap();
+    let bwd_bytes = net.total_bytes() as usize - fwd_bytes;
+    let k = gout.count_nonzero();
+    assert_eq!(bwd_bytes, wire::sparse_wire_bytes(n, k));
+    assert_eq!(bwd_bytes, wire::encode_sparse(gout.data(), k).len());
+    // the gradient support is a subset of the activation mask's budget
+    assert!(k <= mpcomp::compression::ops::budget(n, 0.1));
+}
+
+#[test]
+fn link_messages_contend_for_bandwidth() {
+    // three uncompressed messages handed to the link at the same virtual
+    // time serialize: arrivals are spaced by at least the tx time
+    let rt = native_runtime();
+    let n = 8192;
+    let spec = Spec::none();
+    let mut link = CompressedLink::new(0, n, n, dummy_files());
+    let model = WireModel::default();
+    let mut net = SimNet::new(1, model);
+    let tx = model.tx_time(wire::raw_wire_bytes(n));
+    let mut last = 0.0;
+    for key in 0..3u64 {
+        let x = randt(n, 10 + key);
+        let (_, arrival) = link
+            .forward(&rt, &spec, CompressImpl::Native, &x, key, true, &mut net, 0.0)
+            .unwrap();
+        if key > 0 {
+            assert!(
+                arrival - last >= tx - 1e-12,
+                "messages overlapped: {last} -> {arrival} (tx {tx})"
+            );
+        }
+        last = arrival;
+    }
+    assert!((net.busy_time() - 3.0 * tx).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// trainer-level (artifacts-gated): timing changes, math does not
+// ---------------------------------------------------------------------------
+
+fn artifacts() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        Some(Runtime::from_dir(dir).expect("loading artifacts"))
+    } else {
+        eprintln!("artifacts not built; skipping integration test");
+        None
+    }
+}
+
+fn tiny_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::defaults("cnn16");
+    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.results_dir = std::env::temp_dir().join("mpcomp_simtest").to_str().unwrap().into();
+    cfg.train_size = 200;
+    cfg.test_size = 100;
+    cfg.epochs = 1;
+    cfg.lr0 = 0.05;
+    cfg.sim_op_time = Some(0.020); // deterministic virtual op cost
+    cfg
+}
+
+/// One trained run; returns (params, simulated makespan).
+fn run_once(cfg: TrainConfig) -> (Vec<Vec<Tensor>>, f64) {
+    let rt = artifacts().unwrap();
+    let mut trainer = Trainer::new(rt, cfg).unwrap();
+    let m = trainer.run().unwrap();
+    (trainer.stage_params(), m.sim_makespan_s)
+}
+
+#[test]
+fn training_is_bit_identical_across_wire_models() {
+    // The event-driven transport must be timing-only: the same seed
+    // trained over a WAN, a datacenter link, or a capacity-1 queue
+    // yields bit-identical parameters (the single-threaded replay
+    // result), while the measured makespans differ.
+    if artifacts().is_none() {
+        return;
+    }
+    for mode in ["none", "topk:10"] {
+        let mut base = tiny_cfg();
+        base.spec = Spec::parse(mode).unwrap();
+        base.compress_impl = CompressImpl::Native;
+
+        let (p_wan, mk_wan) = run_once(base.clone());
+        let mut dc = base.clone();
+        dc.wire = "datacenter".into();
+        let (p_dc, mk_dc) = run_once(dc);
+        let mut tight = base.clone();
+        tight.sim_queue_cap = 1;
+        let (p_tight, _) = run_once(tight);
+
+        for (a, b) in p_wan.iter().flatten().zip(p_dc.iter().flatten()) {
+            assert_eq!(a.data(), b.data(), "{mode}: wan vs datacenter diverged");
+        }
+        for (a, b) in p_wan.iter().flatten().zip(p_tight.iter().flatten()) {
+            assert_eq!(a.data(), b.data(), "{mode}: queue capacity changed math");
+        }
+        assert!(mk_wan > 0.0 && mk_dc > 0.0, "{mode}: makespan not measured");
+        assert!(
+            mk_wan >= mk_dc,
+            "{mode}: WAN makespan {mk_wan} < datacenter {mk_dc}"
+        );
+    }
+}
+
+#[test]
+fn schedules_still_agree_through_the_transport() {
+    // GPipe vs 1F1B through SimNet: same gradients (up to accumulation
+    // rounding), different virtual timing.
+    if artifacts().is_none() {
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.spec = Spec::parse("topk:10").unwrap();
+    cfg.compress_impl = CompressImpl::Native;
+    let (p1, _) = run_once(cfg.clone());
+    cfg.schedule = Schedule::OneFOneB;
+    let (p2, _) = run_once(cfg);
+    for (a, b) in p1.iter().flatten().zip(p2.iter().flatten()) {
+        let max_diff = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "schedules diverged through transport: {max_diff}");
+    }
+}
