@@ -4,7 +4,7 @@
 
 use mpcomp::compression::ops;
 use mpcomp::runtime::{lit_scalar, lit_vec, Runtime};
-use mpcomp::util::bench::{bench, black_box, header};
+use mpcomp::util::bench::{black_box, header, Suite};
 use mpcomp::util::rng::Rng;
 
 fn randvec(n: usize, seed: u64) -> Vec<f32> {
@@ -15,33 +15,34 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
+    let mut suite = Suite::from_env_args();
     header();
     // the LM link and the CNN's largest link
     for &n in &[16_384usize, 102_400] {
         let x = randvec(n, 1);
         let buf = randvec(n, 2);
 
-        bench(&format!("native/quantize_4bit/{n}"), || {
+        suite.bench(&format!("native/quantize_4bit/{n}"), || {
             black_box(ops::quantize(black_box(&x), 4));
         })
         .report_throughput(n as f64, "elem");
 
-        bench(&format!("native/threshold_select/{n}"), || {
+        suite.bench(&format!("native/threshold_select/{n}"), || {
             black_box(ops::threshold_for_frac(black_box(&x), 0.1));
         })
         .report_throughput(n as f64, "elem");
 
-        bench(&format!("native/topk_10pct/{n}"), || {
+        suite.bench(&format!("native/topk_10pct/{n}"), || {
             black_box(ops::topk(black_box(&x), 0.1));
         })
         .report_throughput(n as f64, "elem");
 
-        bench(&format!("native/ef21_step/{n}"), || {
+        suite.bench(&format!("native/ef21_step/{n}"), || {
             black_box(ops::ef21_step(black_box(&x), black_box(&buf), 0.1));
         })
         .report_throughput(n as f64, "elem");
 
-        bench(&format!("native/ef_combine/{n}"), || {
+        suite.bench(&format!("native/ef_combine/{n}"), || {
             black_box(ops::ef_combine(black_box(&x), black_box(&buf), 0.1));
         })
         .report_throughput(n as f64, "elem");
@@ -61,17 +62,17 @@ fn main() {
             rt.call(&files.topk, &[lit_vec(&x), lit_scalar(t)]).unwrap();
             rt.call(&files.delta_topk, &[lit_vec(&x), lit_vec(&buf), lit_scalar(t)]).unwrap();
 
-            bench(&format!("kernel/quantize_4bit/{n}"), || {
+            suite.bench(&format!("kernel/quantize_4bit/{n}"), || {
                 black_box(rt.call(&files.quant, &[lit_vec(&x), lit_scalar(16.0)]).unwrap());
             })
             .report_throughput(n as f64, "elem");
 
-            bench(&format!("kernel/topk_thresh/{n}"), || {
+            suite.bench(&format!("kernel/topk_thresh/{n}"), || {
                 black_box(rt.call(&files.topk, &[lit_vec(&x), lit_scalar(t)]).unwrap());
             })
             .report_throughput(n as f64, "elem");
 
-            bench(&format!("kernel/delta_topk/{n}"), || {
+            suite.bench(&format!("kernel/delta_topk/{n}"), || {
                 black_box(
                     rt.call(&files.delta_topk, &[lit_vec(&x), lit_vec(&buf), lit_scalar(t)])
                         .unwrap(),
@@ -82,4 +83,5 @@ fn main() {
     } else {
         println!("(artifacts not built; kernel-path benches skipped)");
     }
+    suite.finish();
 }

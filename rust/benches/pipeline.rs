@@ -6,21 +6,22 @@
 use mpcomp::coordinator::pipeline::{gpipe, makespan, one_f_one_b, peak_in_flight, validate};
 use mpcomp::coordinator::simexec::{simulate, SimSpec};
 use mpcomp::netsim::WireModel;
-use mpcomp::util::bench::{bench, black_box, header};
+use mpcomp::util::bench::{black_box, header, Suite};
 
 fn main() {
+    let mut suite = Suite::from_env_args();
     header();
     for &(s, m) in &[(4usize, 4usize), (4, 16), (8, 32)] {
-        bench(&format!("gen/gpipe/{s}x{m}"), || {
+        suite.bench(&format!("gen/gpipe/{s}x{m}"), || {
             black_box(gpipe(black_box(s), black_box(m)));
         })
         .report();
-        bench(&format!("gen/1f1b/{s}x{m}"), || {
+        suite.bench(&format!("gen/1f1b/{s}x{m}"), || {
             black_box(one_f_one_b(black_box(s), black_box(m)));
         })
         .report();
         let ops = gpipe(s, m);
-        bench(&format!("validate/{s}x{m}"), || {
+        suite.bench(&format!("validate/{s}x{m}"), || {
             black_box(validate(black_box(&ops), s, m).unwrap());
         })
         .report();
@@ -40,7 +41,7 @@ fn main() {
         model: WireModel::wan(),
         capacity: 4,
     };
-    bench("simexec/gpipe/4x16/wan", || {
+    suite.bench("simexec/gpipe/4x16/wan", || {
         black_box(simulate(black_box(&ops), black_box(&spec)));
     })
     .report();
@@ -102,4 +103,5 @@ fn main() {
             );
         }
     }
+    suite.finish();
 }

@@ -3,7 +3,7 @@
 //! quantitative). Run with `cargo bench --bench wire`.
 
 use mpcomp::compression::{ops, wire};
-use mpcomp::util::bench::{bench, black_box, header};
+use mpcomp::util::bench::{black_box, header, Suite};
 use mpcomp::util::rng::Rng;
 
 fn randvec(n: usize, seed: u64) -> Vec<f32> {
@@ -14,17 +14,18 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
+    let mut suite = Suite::from_env_args();
     header();
     let n = 102_400;
     let x = randvec(n, 1);
 
     for bits in [2u8, 4, 8] {
-        bench(&format!("encode_quant_{bits}bit/{n}"), || {
+        suite.bench(&format!("encode_quant_{bits}bit/{n}"), || {
             black_box(wire::encode_quant(black_box(&x), bits));
         })
         .report_throughput(n as f64, "elem");
         let enc = wire::encode_quant(&x, bits);
-        bench(&format!("decode_quant_{bits}bit/{n}"), || {
+        suite.bench(&format!("decode_quant_{bits}bit/{n}"), || {
             black_box(wire::decode(black_box(&enc)).unwrap());
         })
         .report_throughput(n as f64, "elem");
@@ -33,18 +34,18 @@ fn main() {
     for frac in [0.5f32, 0.1, 0.02] {
         let (dense, _) = ops::topk(&x, frac);
         let k = ops::budget(n, frac);
-        bench(&format!("encode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
+        suite.bench(&format!("encode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
             black_box(wire::encode_sparse(black_box(&dense), k));
         })
         .report_throughput(n as f64, "elem");
         let enc = wire::encode_sparse(&dense, k);
-        bench(&format!("decode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
+        suite.bench(&format!("decode_sparse_{}pct/{n}", (frac * 100.0) as u32), || {
             black_box(wire::decode(black_box(&enc)).unwrap());
         })
         .report_throughput(n as f64, "elem");
     }
 
-    bench(&format!("encode_raw/{n}"), || {
+    suite.bench(&format!("encode_raw/{n}"), || {
         black_box(wire::encode_raw(black_box(&x)));
     })
     .report_throughput(n as f64, "elem");
@@ -67,4 +68,5 @@ fn main() {
         );
     }
     println!("(crossover at K = n/32 = 3.125%: below it the index list wins)");
+    suite.finish();
 }

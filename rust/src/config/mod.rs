@@ -98,6 +98,14 @@ pub struct TrainConfig {
     pub snapshot_epoch: Option<usize>,
     /// Wire profile for the transmission simulator ("wan", "datacenter").
     pub wire: String,
+    /// Transport backend for inter-stage messages: "sim" (event-driven
+    /// simulator, the default), "tcp" or "uds" (real loopback sockets —
+    /// compressed messages actually cross the kernel, `wire_elapsed_s`
+    /// reports measured wall-clock tx time).
+    pub backend: String,
+    /// Receive window (seconds) before the real transport surfaces a
+    /// typed timeout error.
+    pub recv_timeout_s: f64,
     /// Fixed virtual compute cost per schedule op (seconds). `None`
     /// charges the measured wall time of each stage executable instead;
     /// tests and ablations pin it for deterministic makespans.
@@ -129,6 +137,8 @@ impl TrainConfig {
             save_checkpoint: None,
             snapshot_epoch: None,
             wire: "wan".into(),
+            backend: "sim".into(),
+            recv_timeout_s: 10.0,
             sim_op_time: None,
             sim_queue_cap: crate::netsim::DEFAULT_QUEUE_CAPACITY,
         }
@@ -179,6 +189,8 @@ impl TrainConfig {
         self.test_size = doc.usize_or(s, "test_size", self.test_size)?;
         self.noise = doc.f64_or(s, "noise", self.noise as f64)? as f32;
         self.wire = doc.str_or(s, "wire", &self.wire)?;
+        self.backend = doc.str_or(s, "backend", &self.backend)?;
+        self.recv_timeout_s = doc.f64_or(s, "recv_timeout_s", self.recv_timeout_s)?;
         self.sim_queue_cap = doc.usize_or(s, "sim_queue_cap", self.sim_queue_cap)?;
         if let Some(v) = doc.get(s, "sim_op_time") {
             self.sim_op_time = Some(v.as_f64()?);
@@ -206,6 +218,8 @@ impl TrainConfig {
             "test_size" => self.test_size = value.parse()?,
             "noise" => self.noise = value.parse()?,
             "wire" => self.wire = value.into(),
+            "backend" => self.backend = value.into(),
+            "recv_timeout_s" => self.recv_timeout_s = value.parse()?,
             "sim_op_time" => self.sim_op_time = Some(value.parse()?),
             "sim_queue_cap" => self.sim_queue_cap = value.parse()?,
             "init_checkpoint" => self.init_checkpoint = Some(value.into()),
@@ -256,14 +270,24 @@ mod tests {
     fn sim_transport_knobs() {
         let mut c = TrainConfig::defaults("cnn16");
         assert_eq!(c.wire, "wan");
+        assert_eq!(c.backend, "sim");
+        assert_eq!(c.recv_timeout_s, 10.0);
         assert_eq!(c.sim_op_time, None);
         assert_eq!(c.sim_queue_cap, crate::netsim::DEFAULT_QUEUE_CAPACITY);
         c.set("wire", "datacenter").unwrap();
         c.set("sim_op_time", "0.02").unwrap();
         c.set("sim_queue_cap", "2").unwrap();
+        c.set("backend", "uds").unwrap();
+        c.set("recv_timeout_s", "2.5").unwrap();
         assert_eq!(c.wire, "datacenter");
         assert_eq!(c.sim_op_time, Some(0.02));
         assert_eq!(c.sim_queue_cap, 2);
+        assert_eq!(c.backend, "uds");
+        assert_eq!(c.recv_timeout_s, 2.5);
+        let doc = toml::Doc::parse("[run]\nbackend = \"tcp\"\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.backend, "tcp");
         let doc = toml::Doc::parse("[run]\nwire = \"datacenter\"\nsim_op_time = 0.5\n").unwrap();
         let mut c = TrainConfig::defaults("cnn16");
         c.apply_doc(&doc).unwrap();

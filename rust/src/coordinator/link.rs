@@ -4,10 +4,21 @@
 //! compresses activations on the forward pass and gradients on the
 //! backward pass, maintains the error-feedback state, stores activation
 //! sparsity masks for the shared-index mode, and ships every message
-//! through the event-driven [`SimNet`] transport: the message departs
-//! at the producer's virtual completion time (`sent_at`), contends for
-//! link bandwidth, and the returned arrival time gates when the
-//! consuming stage may start (see `trainer`).
+//! through the [`Transport`]: the message departs at the producer's
+//! virtual completion time (`sent_at`), contends for link bandwidth (on
+//! the simulator) or crosses a real socket (tcp/uds backends), and the
+//! arrival time gates when the consuming stage may start (see
+//! `trainer`).
+//!
+//! On real backends the link materializes the actual wire-codec
+//! encoding, puts those bytes on the socket, and — for the stateless
+//! methods, where `decode(encode(x))` is bit-identical to the shipped
+//! tensor — hands the *decoded payload* downstream, so what the
+//! consumer sees genuinely crossed the wire. Error-feedback deltas
+//! (EF21/AQ-SGD) transmit the true compressed-delta bytes but hand the
+//! locally reconstructed tensor downstream, since reconstruction needs
+//! the receiver's buffer replica (state replication is a distributed
+//! protocol this repo does not model yet).
 //!
 //! Two execution paths produce bit-identical results (asserted by
 //! integration tests): `CompressImpl::Kernel` runs the L1 Pallas
@@ -20,7 +31,7 @@ use anyhow::{Context, Result};
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::CompressImpl;
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
-use crate::netsim::{Dir, SimNet};
+use crate::netsim::{Dir, Payload, Transport};
 use crate::runtime::{artifacts::CompressionFiles, lit_scalar, lit_vec, Runtime};
 use crate::tensor::Tensor;
 
@@ -51,11 +62,11 @@ impl CompressedLink {
     }
 
     /// Compress activations (forward direction) for microbatch `mb_key`
-    /// and ship them through the simulated transport; `sent_at` is the
-    /// producer's virtual completion time. Returns the decompressed
-    /// tensor plus its simulated arrival time at the consumer.
-    /// `train=false` applies the plain operator without touching any
-    /// feedback state (inference-with-compression evals).
+    /// and ship them through the transport; `sent_at` is the producer's
+    /// virtual completion time. Returns the decompressed tensor plus its
+    /// arrival time at the consumer. `train=false` applies the plain
+    /// operator without touching any feedback state
+    /// (inference-with-compression evals).
     #[allow(clippy::too_many_arguments)]
     pub fn forward(
         &mut self,
@@ -65,7 +76,7 @@ impl CompressedLink {
         t: &Tensor,
         mb_key: u64,
         train: bool,
-        net: &mut SimNet,
+        net: &mut dyn Transport,
         sent_at: f64,
     ) -> Result<(Tensor, f64)> {
         self.transfer(rt, spec, imp, t, mb_key, train, Dir::Fwd, net, sent_at)
@@ -81,7 +92,7 @@ impl CompressedLink {
         t: &Tensor,
         mb_key: u64,
         train: bool,
-        net: &mut SimNet,
+        net: &mut dyn Transport,
         sent_at: f64,
     ) -> Result<(Tensor, f64)> {
         self.transfer(rt, spec, imp, t, mb_key, train, Dir::Bwd, net, sent_at)
@@ -89,21 +100,42 @@ impl CompressedLink {
 
     /// Ship one message: send at the producer's virtual time, receive at
     /// the consumer, return (tensor, arrival).
+    ///
+    /// `payload` is the materialized wire encoding (present only when the
+    /// backend wants real bytes; its length is then the authoritative
+    /// byte count). When `roundtrip` holds, `decode(payload)` is
+    /// bit-identical to `t` and the decoded frame is handed downstream,
+    /// so on real backends the consumer sees exactly what crossed the
+    /// socket.
     #[allow(clippy::too_many_arguments)]
     fn ship(
         &self,
-        net: &mut SimNet,
+        net: &mut dyn Transport,
         dir: Dir,
         mb_key: u64,
         bytes: usize,
         raw: usize,
         sent_at: f64,
         t: Tensor,
+        payload: Option<Vec<u8>>,
+        roundtrip: bool,
     ) -> Result<(Tensor, f64)> {
-        net.send_to(self.index, dir, mb_key, bytes, raw, sent_at);
+        let bytes = payload.as_ref().map_or(bytes, Vec::len);
+        match &payload {
+            Some(b) => net.send(self.index, dir, mb_key, Payload::Bytes(b), raw, sent_at)?,
+            None => net.send(self.index, dir, mb_key, Payload::Size(bytes), raw, sent_at)?,
+        };
         let msg = net
             .recv(self.index, dir, mb_key)
-            .with_context(|| format!("link {}: message {mb_key} not delivered", self.index))?;
+            .with_context(|| format!("link {}: receiving message {mb_key}", self.index))?;
+        if roundtrip {
+            if let Some(p) = &msg.payload {
+                let data = wire::decode(p)
+                    .with_context(|| format!("link {}: decoding message {mb_key}", self.index))?;
+                let out = Tensor::new(t.shape().to_vec(), data)?;
+                return Ok((out, msg.arrival));
+            }
+        }
         Ok((t, msg.arrival))
     }
 
@@ -117,18 +149,24 @@ impl CompressedLink {
         mb_key: u64,
         train: bool,
         dir: Dir,
-        net: &mut SimNet,
+        net: &mut dyn Transport,
         sent_at: f64,
     ) -> Result<(Tensor, f64)> {
         debug_assert_eq!(t.len(), self.n, "link {} tensor size", self.index);
         let raw = wire::raw_wire_bytes(self.n);
+        let want = net.wants_payload();
         match spec.method {
-            Method::None => self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone()),
+            Method::None => {
+                let payload = want.then(|| wire::encode_raw(t.data()));
+                self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone(), payload, true)
+            }
             Method::Quant { fw_bits, bw_bits } => {
                 let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
                 let out = self.quantize(rt, imp, t, bits)?;
                 let bytes = wire::quant_wire_bytes(self.n, bits);
-                self.ship(net, dir, mb_key, bytes, raw, sent_at, out)
+                // encode_quant(x) decodes to exactly ops::quantize(x) == out
+                let payload = want.then(|| wire::encode_quant(t.data(), bits));
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, true)
             }
             Method::TopK { frac, shared_idx, feedback } => {
                 let fb = if train { feedback } else { Feedback::None };
@@ -143,9 +181,13 @@ impl CompressedLink {
                     let out = self.apply_mask(rt, imp, t, &mask)?;
                     let k = out.count_nonzero();
                     let bytes = wire::sparse_wire_bytes(self.n, k);
-                    return self.ship(net, dir, mb_key, bytes, raw, sent_at, out);
+                    let payload = want.then(|| wire::encode_sparse(out.data(), k));
+                    return self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, true);
                 }
-                let (out, k_on_wire) = match fb {
+                // `delta_msg`, when set, is the dense form of the message
+                // that actually crosses the wire (EF21/AQ-SGD deltas); the
+                // receiver would reconstruct `out` against its buffer.
+                let (out, k_on_wire, delta_msg) = match fb {
                     Feedback::None => {
                         let thresh = ops::threshold_for_frac(t.data(), frac);
                         let (xhat, mask) = self.topk(rt, imp, t, thresh)?;
@@ -153,27 +195,42 @@ impl CompressedLink {
                             self.masks.insert(mb_key, mask);
                         }
                         let k = xhat.count_nonzero();
-                        (xhat, k)
+                        (xhat, k, None)
                     }
-                    Feedback::Ef => self.ef_step(rt, imp, t, frac, dir)?,
-                    Feedback::EfMixed => self.efmixed_step(t, frac, dir)?,
-                    Feedback::Ef21 => self.ef21_step(rt, imp, t, frac, dir, None)?,
+                    Feedback::Ef => {
+                        let (c, k) = self.ef_step(rt, imp, t, frac, dir)?;
+                        (c, k, None)
+                    }
+                    Feedback::EfMixed => {
+                        let (c, k) = self.efmixed_step(t, frac, dir)?;
+                        (c, k, None)
+                    }
+                    Feedback::Ef21 => self.ef21_step(rt, imp, t, frac, dir, None, want)?,
                     Feedback::AqSgd => {
                         debug_assert_eq!(dir, Dir::Fwd);
                         match self.fwd_state.sample(mb_key).cloned() {
                             None => {
                                 // bootstrap: first visit sends uncompressed
                                 self.fwd_state.set_sample(mb_key, t.clone());
-                                return self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone());
+                                let payload = want.then(|| wire::encode_raw(t.data()));
+                                return self.ship(
+                                    net, dir, mb_key, raw, raw, sent_at, t.clone(), payload, true,
+                                );
                             }
                             Some(buf) => {
-                                self.ef21_step(rt, imp, t, frac, dir, Some((mb_key, buf)))?
+                                self.ef21_step(rt, imp, t, frac, dir, Some((mb_key, buf)), want)?
                             }
                         }
                     }
                 };
                 let bytes = wire::sparse_wire_bytes(self.n, k_on_wire);
-                self.ship(net, dir, mb_key, bytes, raw, sent_at, out)
+                let (payload, roundtrip) = match delta_msg {
+                    // delta on the wire, locally reconstructed tensor downstream
+                    Some(d) => (want.then(|| wire::encode_sparse(&d, k_on_wire)), false),
+                    // the message IS the tensor: decode(encode) == out exactly
+                    None => (want.then(|| wire::encode_sparse(out.data(), k_on_wire)), true),
+                };
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, roundtrip)
             }
         }
     }
@@ -291,6 +348,10 @@ impl CompressedLink {
     }
 
     /// EF21 (global buffer) or AQ-SGD (per-sample buffer) delta step.
+    /// When `want_delta` holds, also returns the dense masked delta —
+    /// the message a real wire carries (the receiver reconstructs
+    /// against its buffer replica).
+    #[allow(clippy::too_many_arguments)]
     fn ef21_step(
         &mut self,
         rt: &Runtime,
@@ -299,14 +360,24 @@ impl CompressedLink {
         frac: f32,
         dir: Dir,
         sample: Option<(u64, Tensor)>,
-    ) -> Result<(Tensor, usize)> {
+        want_delta: bool,
+    ) -> Result<(Tensor, usize, Option<Vec<f32>>)> {
         let buf = match &sample {
             Some((_, b)) => b.clone(),
             None => self.state_mut(dir).global_mut(t.len()).clone(),
         };
         let delta: Vec<f32> = t.data().iter().zip(buf.data()).map(|(a, b)| a - b).collect();
         let thresh = ops::threshold_for_frac(&delta, frac);
-        let k = delta.iter().filter(|d| d.abs() >= thresh).count();
+        // exact-zero delta elements are never encoded (the codec skips
+        // them even when thresh == 0), so don't charge them either —
+        // keeps sim-charged bytes == real payload length on all backends
+        let k = delta.iter().filter(|&&d| d != 0.0 && d.abs() >= thresh).count();
+        let delta_msg = want_delta.then(|| {
+            delta
+                .iter()
+                .map(|&d| if d.abs() >= thresh { d } else { 0.0 })
+                .collect::<Vec<f32>>()
+        });
         let xhat = match imp {
             CompressImpl::Native => {
                 let (xh, _) = ops::ef21_step(t.data(), buf.data(), frac);
@@ -327,7 +398,7 @@ impl CompressedLink {
             Some((key, _)) => self.fwd_state.set_sample(key, flat),
             None => self.state_mut(dir).set_global(flat),
         }
-        Ok((xhat, k))
+        Ok((xhat, k, delta_msg))
     }
 
     fn state_mut(&mut self, dir: Dir) -> &mut FeedbackState {

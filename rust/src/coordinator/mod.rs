@@ -1,20 +1,22 @@
 //! The pipeline-parallel training coordinator (L3).
 //!
 //! * [`pipeline`] — microbatch schedules (GPipe, 1F1B) + validation
-//! * [`simexec`] — event-driven schedule execution over the simulated
-//!   transport (measured makespan; replaces the analytic estimate)
+//! * [`simexec`] — schedule execution over the transport (measured
+//!   makespan; replaces the analytic estimate)
 //! * [`stage`] — per-stage executor (fwd/bwd/update over AOT artifacts)
 //! * [`link`] — compressed inter-stage links (the paper's contribution)
 //! * [`feedback`] — EF / EF-mixed / EF21 / AQ-SGD buffer state
 //! * [`trainer`] — the end-to-end training loop + dual evaluation
+//! * [`worker`] — one stage per OS process over the real-socket
+//!   transport (`mpcomp worker`), with the sim/real parity checker
 //!
-//! Execution is deterministic and single-threaded: the xla wrappers are
-//! not `Send`, and the testbed has one core. Multi-worker timing is
-//! virtual: every inter-stage tensor is routed through
-//! [`crate::netsim::SimNet`], each op's start is gated on the simulated
-//! arrival of its inputs, and per-stage virtual clocks measure the
-//! schedule's makespan — while the tensor math stays bit-identical to a
-//! plain ordered replay (asserted by integration tests).
+//! Trainer execution is deterministic and single-threaded: the xla
+//! wrappers are not `Send`, and the testbed has one core. Every
+//! inter-stage tensor is routed through the
+//! [`crate::netsim::Transport`] — the event-driven simulator by default
+//! (virtual clocks, simulated makespan), or real loopback sockets with
+//! `backend = tcp | uds` — while the tensor math stays bit-identical to
+//! a plain ordered replay (asserted by integration tests).
 
 pub mod feedback;
 pub mod link;
@@ -22,8 +24,10 @@ pub mod pipeline;
 pub mod simexec;
 pub mod stage;
 pub mod trainer;
+pub mod worker;
 
 pub use link::CompressedLink;
 pub use simexec::{simulate, SimReport, SimSpec};
 pub use stage::{StageInput, StageRunner};
 pub use trainer::Trainer;
+pub use worker::{WorkerOpts, WorkerSummary};

@@ -1,22 +1,30 @@
-//! Execute a pipeline schedule through the event-driven [`SimNet`]
-//! transport and measure its makespan — the successor of the analytic
-//! [`pipeline::makespan`] estimate.
+//! Execute a pipeline schedule through the [`Transport`] and measure
+//! its makespan — the successor of the analytic [`pipeline::makespan`]
+//! estimate.
 //!
-//! The executor walks the schedule in order, keeping one virtual clock
-//! per stage. A forward op on stage `s > 0` starts no earlier than the
-//! simulated arrival of its input activations (sent when stage `s - 1`
-//! finished producing them); a backward op on stage `s < S - 1` is gated
-//! the same way on the gradient message. Messages contend for link
-//! bandwidth and respect the bounded in-flight window, so — unlike the
-//! analytic model — bursts of traffic (GPipe's all-forward phase) are
-//! charged their queueing delay.
+//! The executor walks the schedule in order, keeping one clock per
+//! stage. A forward op on stage `s > 0` starts no earlier than the
+//! arrival of its input activations (sent when stage `s - 1` finished
+//! producing them); a backward op on stage `s < S - 1` is gated the
+//! same way on the gradient message. On the default [`SimNet`] backend
+//! messages contend for link bandwidth and respect the bounded
+//! in-flight window, so — unlike the analytic model — bursts of traffic
+//! (GPipe's all-forward phase) are charged their queueing delay. On the
+//! real backends ([`simulate_real`]) frames of the scheduled sizes
+//! actually cross loopback kernel sockets and the report's busy/elapsed
+//! columns are measured wall-clock I/O time.
 //!
-//! With zero latency and no contention the two models agree *exactly*;
-//! the property tests below pin that equivalence, which is the
-//! correctness anchor for everything the simulator reports.
+//! With zero latency and no contention the simulated model agrees with
+//! the analytic one *exactly*; the property tests below pin that
+//! equivalence, which is the correctness anchor for everything the
+//! simulator reports.
+
+use std::time::Duration;
 
 use crate::coordinator::pipeline::Op;
-use crate::netsim::{SimNet, SimSocket, WireModel};
+use crate::netsim::{
+    Backend, Dir, Payload, RealTransport, SimNet, Transport, TransportError, WireModel,
+};
 
 /// Static description of one simulated pipeline run.
 #[derive(Clone, Debug)]
@@ -46,22 +54,54 @@ pub struct SimSpec {
 /// Measured outcome of one simulated run.
 #[derive(Clone, Copy, Debug)]
 pub struct SimReport {
-    /// End-to-end simulated time of the schedule (max worker clock).
+    /// End-to-end time of the schedule (max worker clock; wall time of
+    /// the last wire event on real backends).
     pub makespan_s: f64,
-    /// Bandwidth-occupancy seconds summed over channels (no latency).
+    /// Bandwidth-occupancy seconds summed over channels (no latency);
+    /// measured socket-write seconds on real backends.
     pub busy_s: f64,
     /// Sum of per-message wire times (latency + serialization) — the
     /// pre-simulator accounting metric, kept for comparison.
     pub wire_sum_s: f64,
     pub bytes: u64,
     pub raw_bytes: u64,
+    /// Measured wall-clock tx time (0 on the simulator).
+    pub wire_elapsed_s: f64,
 }
 
 /// Run `ops` through a fresh `SimNet` described by `spec`.
 pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
-    let (s_count, m_count) = (spec.n_stages, spec.n_mb);
     let mut net =
-        SimNet::with_capacity(s_count.saturating_sub(1), spec.model, spec.capacity);
+        SimNet::with_capacity(spec.n_stages.saturating_sub(1), spec.model, spec.capacity);
+    simulate_transport(ops, spec, &mut net).expect("SimNet delivers every scheduled message")
+}
+
+/// Run `ops` over a real loopback transport (tcp/uds): frames of the
+/// scheduled sizes actually cross kernel sockets.
+pub fn simulate_real(
+    ops: &[Op],
+    spec: &SimSpec,
+    backend: Backend,
+) -> Result<SimReport, TransportError> {
+    let mut net = RealTransport::loopback(
+        spec.n_stages.saturating_sub(1),
+        backend,
+        spec.model,
+        Duration::from_secs(20),
+    )?;
+    let report = simulate_transport(ops, spec, &mut net)?;
+    net.shutdown()?;
+    Ok(report)
+}
+
+/// Execute the schedule through any [`Transport`], gating each op on
+/// the arrival of its input message.
+pub fn simulate_transport(
+    ops: &[Op],
+    spec: &SimSpec,
+    net: &mut dyn Transport,
+) -> Result<SimReport, TransportError> {
+    let (s_count, m_count) = (spec.n_stages, spec.n_mb);
     // producer-side completion times per (stage, mb)
     let mut fwd_end = vec![vec![0.0f64; m_count]; s_count];
     let mut bwd_end = vec![vec![0.0f64; m_count]; s_count];
@@ -72,17 +112,16 @@ pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
                     0.0
                 } else {
                     let key = mb as u64;
-                    SimSocket::new(stage - 1).send_fwd(
-                        &mut net,
+                    let link = stage - 1;
+                    net.send(
+                        link,
+                        Dir::Fwd,
                         key,
-                        spec.fwd_bytes[stage - 1],
-                        spec.raw_bytes[stage - 1],
-                        fwd_end[stage - 1][mb],
-                    );
-                    SimSocket::new(stage)
-                        .recv_fwd(&mut net, key)
-                        .expect("fwd message delivered")
-                        .arrival
+                        Payload::Size(spec.fwd_bytes[link]),
+                        spec.raw_bytes[link],
+                        fwd_end[link][mb],
+                    )?;
+                    net.recv(link, Dir::Fwd, key)?.arrival
                 };
                 let start = net.clock(stage).max(ready);
                 let end = start + spec.fwd_op_s;
@@ -94,17 +133,16 @@ pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
                     fwd_end[stage][mb]
                 } else {
                     let key = mb as u64;
-                    SimSocket::new(stage + 1).send_bwd(
-                        &mut net,
+                    let link = stage;
+                    net.send(
+                        link,
+                        Dir::Bwd,
                         key,
-                        spec.bwd_bytes[stage],
-                        spec.raw_bytes[stage],
+                        Payload::Size(spec.bwd_bytes[link]),
+                        spec.raw_bytes[link],
                         bwd_end[stage + 1][mb],
-                    );
-                    SimSocket::new(stage)
-                        .recv_bwd(&mut net, key)
-                        .expect("bwd message delivered")
-                        .arrival
+                    )?;
+                    net.recv(link, Dir::Bwd, key)?.arrival
                 };
                 let start = net.clock(stage).max(ready);
                 let end = start + spec.bwd_op_s + spec.recompute_s;
@@ -113,13 +151,14 @@ pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
             }
         }
     }
-    SimReport {
+    Ok(SimReport {
         makespan_s: net.makespan(),
         busy_s: net.busy_time(),
-        wire_sum_s: net.total_sim_time(),
-        bytes: net.total_bytes(),
-        raw_bytes: net.total_uncompressed_bytes(),
-    }
+        wire_sum_s: net.ledger().total_sim_time(),
+        bytes: net.ledger().total_bytes(),
+        raw_bytes: net.ledger().total_uncompressed_bytes(),
+        wire_elapsed_s: net.wire_elapsed_s(),
+    })
 }
 
 /// Per-direction wire bytes of one message under a compression spec
@@ -249,6 +288,21 @@ mod tests {
                 assert!(r.makespan_s.is_finite() && r.makespan_s > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn real_backend_ships_the_same_bytes_and_measures_wall_time() {
+        // the same schedule over loopback TCP moves identical traffic
+        // (ledger parity) and reports measured — not modelled — tx time
+        let ops = gpipe(3, 4);
+        let spec = exact_spec(3, 4, 128, 4);
+        let sim = simulate(&ops, &spec);
+        let real = simulate_real(&ops, &spec, crate::netsim::Backend::Tcp).unwrap();
+        assert_eq!(real.bytes, sim.bytes);
+        assert_eq!(real.raw_bytes, sim.raw_bytes);
+        assert!(real.wire_elapsed_s > 0.0, "no wall tx time measured");
+        assert!(real.makespan_s > 0.0);
+        assert_eq!(sim.wire_elapsed_s, 0.0);
     }
 
     #[test]

@@ -1,19 +1,22 @@
 //! The training coordinator: drives the full model-parallel training
-//! loop — schedule execution over the simulated transport, compressed
-//! links, loss, optimizer updates, warm-start protocol, and the paper's
-//! dual (with/without compression) evaluation.
+//! loop — schedule execution over the transport, compressed links,
+//! loss, optimizer updates, warm-start protocol, and the paper's dual
+//! (with/without compression) evaluation.
 //!
-//! Every schedule op is an event in virtual time: its start is gated on
-//! the simulated arrival of its input message through [`SimNet`] (plus
-//! the owning stage's clock), its duration is either the measured wall
-//! time of the stage executable or the configured `sim_op_time`, and the
-//! optimizer step is a barrier that syncs all stage clocks. The measured
-//! simulated makespan replaces the old analytic estimate in the run
-//! metrics; the tensor math is unaffected (timing is bookkeeping only),
-//! so results stay bit-identical across wire models — asserted by
+//! Every schedule op is an event: its start is gated on the arrival of
+//! its input message through the [`Transport`] (plus the owning stage's
+//! clock), its duration is either the measured wall time of the stage
+//! executable or the configured `sim_op_time`, and the optimizer step
+//! is a barrier. With the default `backend = sim` the transport is
+//! [`SimNet`] and arrivals are simulated; with `backend = tcp | uds`
+//! every compressed message actually crosses a loopback kernel socket
+//! ([`RealTransport`]) and `wire_elapsed_s` reports measured wall-clock
+//! tx time. Either way the tensor math is unaffected (the stateless
+//! codecs roundtrip bit-exactly), so trained parameters stay
+//! bit-identical across wire models *and* backends — asserted by
 //! integration tests.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -24,7 +27,7 @@ use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::stage::{StageInput, StageRunner};
 use crate::data::{ImageDataset, TextDataset};
 use crate::metrics::{CurvePoint, RunMetrics};
-use crate::netsim::{SimNet, WireModel};
+use crate::netsim::{Backend, RealTransport, SimNet, Transport, WireModel};
 use crate::runtime::{lit_f32, lit_i32, scalar_from, tensor_from, Runtime};
 use crate::tensor::Tensor;
 
@@ -39,7 +42,11 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     stages: Vec<StageRunner>,
     links: Vec<CompressedLink>,
-    pub net: SimNet,
+    /// The inter-stage transport: `SimNet` (virtual time, the default)
+    /// or `RealTransport` (loopback tcp/uds sockets, wall-clock time)
+    /// per `cfg.backend`.
+    pub net: Box<dyn Transport>,
+    wire_model: WireModel,
     data: TaskData,
     microbatch: usize,
     n_microbatches: usize,
@@ -84,7 +91,16 @@ impl Trainer {
             links.push(CompressedLink::new(i, n, rt.manifest().padded(n), files));
         }
         let wire = WireModel::parse(&cfg.wire)?;
-        let net = SimNet::with_capacity(links.len(), wire, cfg.sim_queue_cap);
+        let backend = Backend::parse(&cfg.backend)?;
+        let net: Box<dyn Transport> = match backend {
+            Backend::Sim => Box::new(SimNet::with_capacity(links.len(), wire, cfg.sim_queue_cap)),
+            _ => Box::new(RealTransport::loopback(
+                links.len(),
+                backend,
+                wire,
+                Duration::from_secs_f64(cfg.recv_timeout_s),
+            )?),
+        };
 
         // datasets
         let data = match model.task.as_str() {
@@ -123,6 +139,7 @@ impl Trainer {
             stages,
             links,
             net,
+            wire_model: wire,
             data,
             microbatch,
             n_microbatches,
@@ -215,10 +232,11 @@ impl Trainer {
             }
         }
         m.wall_time_s = t0.elapsed().as_secs_f64();
-        m.wire_bytes = self.net.total_bytes();
-        m.wire_raw_bytes = self.net.total_uncompressed_bytes();
-        m.wire_sim_time_s = self.net.total_sim_time();
+        m.wire_bytes = self.net.ledger().total_bytes();
+        m.wire_raw_bytes = self.net.ledger().total_uncompressed_bytes();
+        m.wire_sim_time_s = self.net.ledger().total_sim_time();
         m.sim_makespan_s = self.net.makespan();
+        m.wire_elapsed_s = self.net.wire_elapsed_s();
         Ok(m)
     }
 
@@ -358,7 +376,7 @@ impl Trainer {
                         let sent_at = fwd_end[stage - 1][mb];
                         let link = &mut self.links[stage - 1];
                         let (compressed, arrival) = link.forward(
-                            &self.rt, active, imp, &prev, mb_key, true, &mut self.net, sent_at,
+                            &self.rt, active, imp, &prev, mb_key, true, &mut *self.net, sent_at,
                         )?;
                         (StageInput::F32(compressed), arrival)
                     };
@@ -388,7 +406,7 @@ impl Trainer {
                         let sent_at = bwd_end[stage + 1][mb];
                         let link = &mut self.links[stage];
                         link.backward(
-                            &self.rt, active, imp, &g, mb_key, true, &mut self.net, sent_at,
+                            &self.rt, active, imp, &g, mb_key, true, &mut *self.net, sent_at,
                         )?
                     };
                     if let Some(gx) = self.stages[stage].backward(&self.rt, mb as u64, &g_in)? {
@@ -418,7 +436,9 @@ impl Trainer {
         let plain = crate::compression::Spec::none();
         let active = if compress { &spec } else { &plain };
         let mut x = input;
-        let mut scratch = SimNet::new(self.links.len(), self.net.model());
+        // evals always use a scratch simulator: their timing is not part
+        // of the run and their tensors need not cross a real wire
+        let mut scratch = SimNet::new(self.links.len(), self.wire_model);
         for i in 0..self.stages.len() {
             let y = self.stages[i].forward(&self.rt, u64::MAX, x, false)?;
             x = if i < self.links.len() {

@@ -1,0 +1,478 @@
+//! `mpcomp worker` — run one pipeline stage as its own OS process,
+//! exchanging real compressed activations/gradients over the socket
+//! transport.
+//!
+//! Each rank walks the same {GPipe, 1F1B} schedule and executes only
+//! its stage's ops: a forward op receives the activation frame from the
+//! previous rank (blocking on the real mailbox) and sends the stage's
+//! output activation downstream; a backward op receives the gradient
+//! frame from the next rank and sends upstream. Message tensors are
+//! generated deterministically from `(seed, link, dir, mb)` and
+//! compressed with the configured (stateless) spec through the actual
+//! wire codecs, so the bytes on the socket are exactly what the trainer
+//! would ship — without needing the AOT artifacts, which makes the
+//! multi-process path runnable everywhere (including the CI `loopback`
+//! job).
+//!
+//! Every run produces a [`WorkerSummary`]: per-`(link, dir)` mailbox
+//! logs of `(key, bytes, payload digest)` in delivery order plus sent
+//! totals. [`run_reference`] produces the same summary from a
+//! single-process `SimNet` replay, and [`check`] asserts a set of
+//! worker summaries is bit-identical to it — same per-mailbox message
+//! ordering, byte counts, and payload digests — which is the sim/real
+//! parity contract CI enforces across two OS processes.
+
+use anyhow::{bail, Context, Result};
+
+use crate::compression::{ops, wire, Feedback, Method, Spec};
+use crate::config::Schedule;
+use crate::coordinator::pipeline::{self, Op};
+use crate::netsim::{
+    Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, WireModel,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Parameters of one synthetic multi-process schedule run.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Pipeline depth == world size (one process per stage).
+    pub stages: usize,
+    pub mb: usize,
+    /// Elements per inter-stage tensor.
+    pub link_elems: usize,
+    pub schedule: Schedule,
+    /// Compression spec; stateless modes only (none / quant / plain topk).
+    pub spec: Spec,
+    pub seed: u64,
+    pub wire: WireModel,
+    pub recv_timeout_s: f64,
+}
+
+/// What one endpoint saw on one `(link, dir)` mailbox.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MailboxLog {
+    pub link: usize,
+    pub dir: Dir,
+    /// `(key, bytes, payload digest)` in delivery order.
+    pub recv: Vec<(u64, usize, u64)>,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+}
+
+/// The deterministic outcome of one worker (or reference) run.
+#[derive(Clone, Debug)]
+pub struct WorkerSummary {
+    pub backend: String,
+    /// `None` for the single-process reference run (all stages).
+    pub rank: Option<usize>,
+    /// One log per `(link, dir)`, index `link * 2 + dir`.
+    pub boxes: Vec<MailboxLog>,
+    /// Measured wall-clock tx time (0 for the reference).
+    pub wire_elapsed_s: f64,
+}
+
+/// FNV-1a over a payload — the digest [`check`] compares across ranks.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic synthetic tensor for the message `(link, dir, mb)`.
+fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Vec<f32> {
+    let tag = ((link as u64) << 40) | ((dir.index() as u64) << 32) | mb as u64;
+    let mut rng = Rng::with_stream(opts.seed, tag);
+    let mut v = vec![0.0f32; opts.link_elems];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+/// Compress + encode the message for `(link, dir, mb)` with the actual
+/// wire codecs (what the trainer's links put on a real socket).
+fn encode_message(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Result<Vec<u8>> {
+    let x = gen_tensor(opts, link, dir, mb);
+    match opts.spec.method {
+        Method::None => Ok(wire::encode_raw(&x)),
+        Method::Quant { fw_bits, bw_bits } => {
+            let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
+            Ok(wire::encode_quant(&x, bits))
+        }
+        Method::TopK { frac, shared_idx, feedback } => {
+            if shared_idx || feedback != Feedback::None {
+                bail!(
+                    "worker runs stateless compression only (got '{}'); \
+                     feedback state replication is a trainer concern",
+                    opts.spec.label()
+                );
+            }
+            let (dense, _) = ops::topk(&x, frac);
+            let k = dense.iter().filter(|&&v| v != 0.0).count();
+            Ok(wire::encode_sparse(&dense, k))
+        }
+    }
+}
+
+/// Walk the schedule, executing send/recv for every stage `mine`
+/// accepts, and log what each mailbox saw. With `mine = |_| true` and a
+/// `SimNet` (or loopback real transport) this is the single-process
+/// replay; with `mine = |s| s == rank` over an endpoint transport it is
+/// one rank of a multi-process run.
+fn run_stages(
+    opts: &WorkerOpts,
+    net: &mut dyn Transport,
+    mine: &dyn Fn(usize) -> bool,
+) -> Result<Vec<MailboxLog>> {
+    let stages = opts.stages;
+    let links = stages.saturating_sub(1);
+    let mut boxes: Vec<MailboxLog> = (0..links)
+        .flat_map(|link| {
+            [Dir::Fwd, Dir::Bwd].into_iter().map(move |dir| MailboxLog {
+                link,
+                dir,
+                recv: Vec::new(),
+                sent_msgs: 0,
+                sent_bytes: 0,
+            })
+        })
+        .collect();
+    // payload digests recorded at send time, for backends whose frames
+    // carry no payload (the SimNet reference)
+    let mut sent_digests: Vec<std::collections::HashMap<u64, u64>> =
+        (0..links * 2).map(|_| Default::default()).collect();
+
+    let ops = pipeline::ops_for(opts.schedule, stages, opts.mb);
+    for op in &ops {
+        let (stage, mb, dir) = match *op {
+            Op::Fwd { stage, mb } => (stage, mb, Dir::Fwd),
+            Op::Bwd { stage, mb } => (stage, mb, Dir::Bwd),
+        };
+        if !mine(stage) {
+            continue;
+        }
+        let key = mb as u64;
+        // receive this op's input frame (if the stage has an input link)
+        let recv_link = match dir {
+            Dir::Fwd => stage.checked_sub(1),
+            Dir::Bwd => {
+                if stage + 1 < stages {
+                    Some(stage)
+                } else {
+                    None
+                }
+            }
+        };
+        if let Some(link) = recv_link {
+            let slot = link * 2 + dir.index();
+            let frame = net
+                .recv(link, dir, key)
+                .with_context(|| format!("rank recv link {link} {dir} mb {mb}"))?;
+            let digest = match &frame.payload {
+                Some(p) => fnv1a(p),
+                None => *sent_digests[slot]
+                    .get(&key)
+                    .context("sim reference: recv before send")?,
+            };
+            boxes[slot].recv.push((key, frame.bytes, digest));
+        }
+        // send this op's output frame (if the stage has an output link)
+        let send_link = match dir {
+            Dir::Fwd => {
+                if stage + 1 < stages {
+                    Some(stage)
+                } else {
+                    None
+                }
+            }
+            Dir::Bwd => stage.checked_sub(1),
+        };
+        if let Some(link) = send_link {
+            let slot = link * 2 + dir.index();
+            let buf = encode_message(opts, link, dir, mb)?;
+            sent_digests[slot].insert(key, fnv1a(&buf));
+            let raw = wire::raw_wire_bytes(opts.link_elems);
+            net.send(link, dir, key, Payload::Bytes(&buf), raw, 0.0)
+                .with_context(|| format!("rank send link {link} {dir} mb {mb}"))?;
+            boxes[slot].sent_msgs += 1;
+            boxes[slot].sent_bytes += buf.len() as u64;
+        }
+    }
+    Ok(boxes)
+}
+
+/// Single-process reference: the whole schedule over `SimNet`.
+pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
+    let mut net = SimNet::new(opts.stages.saturating_sub(1), opts.wire);
+    let boxes = run_stages(opts, &mut net, &|_| true)?;
+    Ok(WorkerSummary { backend: "sim".into(), rank: None, boxes, wire_elapsed_s: 0.0 })
+}
+
+/// Single-process run over a real loopback transport (both ends of
+/// every link in this process) — the in-test analogue of the
+/// multi-process path.
+pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
+    let links = opts.stages.saturating_sub(1);
+    let timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
+    let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
+    let boxes = run_stages(opts, &mut net, &|_| true)?;
+    let elapsed = net.wire_elapsed_s();
+    net.shutdown()?;
+    Ok(WorkerSummary {
+        backend: backend.name().into(),
+        rank: None,
+        boxes,
+        wire_elapsed_s: elapsed,
+    })
+}
+
+/// One rank of a multi-process run: rendezvous with the neighbor
+/// processes, execute this stage's ops, shut down gracefully.
+pub fn run_rank(
+    opts: &WorkerOpts,
+    rank: usize,
+    backend: Backend,
+    rendezvous_addr: &str,
+) -> Result<WorkerSummary> {
+    if rank >= opts.stages {
+        bail!("rank {rank} out of range for {} stages", opts.stages);
+    }
+    let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
+    rv.recv_timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
+    let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
+    let boxes = run_stages(opts, &mut net, &|s| s == rank)?;
+    let elapsed = net.wire_elapsed_s();
+    net.shutdown()?;
+    Ok(WorkerSummary {
+        backend: backend.name().into(),
+        rank: Some(rank),
+        boxes,
+        wire_elapsed_s: elapsed,
+    })
+}
+
+/// Assert worker summaries are bit-identical to the reference run:
+/// every mailbox a worker received must match the reference's ordered
+/// `(key, bytes, digest)` log exactly, every sender must have charged
+/// the same bytes, and together the workers must cover every message
+/// the reference saw.
+pub fn check(reference: &WorkerSummary, workers: &[WorkerSummary]) -> Result<()> {
+    for w in workers {
+        if w.boxes.len() != reference.boxes.len() {
+            bail!(
+                "worker {:?}: {} mailboxes, reference has {}",
+                w.rank,
+                w.boxes.len(),
+                reference.boxes.len()
+            );
+        }
+        for (wb, rb) in w.boxes.iter().zip(&reference.boxes) {
+            if !wb.recv.is_empty() && wb.recv != rb.recv {
+                bail!(
+                    "worker {:?} link {} {}: delivery log diverged\n  got:  {:?}\n  want: {:?}",
+                    w.rank,
+                    wb.link,
+                    wb.dir,
+                    wb.recv,
+                    rb.recv
+                );
+            }
+            if wb.sent_msgs > 0
+                && (wb.sent_msgs != rb.sent_msgs || wb.sent_bytes != rb.sent_bytes)
+            {
+                bail!(
+                    "worker {:?} link {} {}: sent {} msgs / {} B, reference {} msgs / {} B",
+                    w.rank,
+                    wb.link,
+                    wb.dir,
+                    wb.sent_msgs,
+                    wb.sent_bytes,
+                    rb.sent_msgs,
+                    rb.sent_bytes
+                );
+            }
+        }
+    }
+    for (i, rb) in reference.boxes.iter().enumerate() {
+        let got: usize = workers.iter().map(|w| w.boxes[i].recv.len()).sum();
+        if got != rb.recv.len() {
+            bail!(
+                "link {} {}: workers received {got} messages, reference saw {}",
+                rb.link,
+                rb.dir,
+                rb.recv.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// summary (de)serialization — the CI job diffs rank files via `--check`
+// ---------------------------------------------------------------------------
+
+impl WorkerSummary {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("backend", Json::Str(self.backend.clone()));
+        o.set("rank", self.rank.map_or(Json::Null, |r| Json::Num(r as f64)));
+        o.set("wire_elapsed_s", Json::Num(self.wire_elapsed_s));
+        let boxes: Vec<Json> = self
+            .boxes
+            .iter()
+            .map(|b| {
+                let mut jb = Json::object();
+                jb.set("link", Json::Num(b.link as f64));
+                jb.set("dir", Json::Str(b.dir.name().into()));
+                jb.set("sent_msgs", Json::Num(b.sent_msgs as f64));
+                jb.set("sent_bytes", Json::Num(b.sent_bytes as f64));
+                let recv: Vec<Json> = b
+                    .recv
+                    .iter()
+                    .map(|(key, bytes, digest)| {
+                        let mut jr = Json::object();
+                        jr.set("key", Json::Num(*key as f64));
+                        jr.set("bytes", Json::Num(*bytes as f64));
+                        // digests exceed f64's integer range: hex string
+                        jr.set("digest", Json::Str(format!("{digest:016x}")));
+                        jr
+                    })
+                    .collect();
+                jb.set("recv", Json::Arr(recv));
+                jb
+            })
+            .collect();
+        o.set("boxes", Json::Arr(boxes));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerSummary> {
+        let rank = match j.get("rank")? {
+            Json::Null => None,
+            v => Some(v.usize()?),
+        };
+        let mut boxes = Vec::new();
+        for jb in j.get("boxes")?.arr()? {
+            let mut recv = Vec::new();
+            for jr in jb.get("recv")?.arr()? {
+                let key = jr.get("key")?.num()? as u64;
+                let bytes = jr.get("bytes")?.usize()?;
+                let digest = u64::from_str_radix(jr.get("digest")?.str()?, 16)
+                    .context("bad digest hex")?;
+                recv.push((key, bytes, digest));
+            }
+            boxes.push(MailboxLog {
+                link: jb.get("link")?.usize()?,
+                dir: Dir::parse(jb.get("dir")?.str()?)?,
+                recv,
+                sent_msgs: jb.get("sent_msgs")?.num()? as u64,
+                sent_bytes: jb.get("sent_bytes")?.num()? as u64,
+            });
+        }
+        Ok(WorkerSummary {
+            backend: j.get("backend")?.str()?.to_string(),
+            rank,
+            boxes,
+            wire_elapsed_s: j.get("wire_elapsed_s")?.num()?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<WorkerSummary> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        WorkerSummary::from_json(&Json::parse(&text)?)
+    }
+
+    /// Total messages this endpoint received.
+    pub fn received(&self) -> usize {
+        self.boxes.iter().map(|b| b.recv.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(stages: usize, mb: usize, mode: &str) -> WorkerOpts {
+        WorkerOpts {
+            stages,
+            mb,
+            link_elems: 64,
+            schedule: Schedule::GPipe,
+            spec: Spec::parse(mode).unwrap(),
+            seed: 11,
+            wire: WireModel::datacenter(),
+            recv_timeout_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn reference_is_deterministic_and_self_consistent() {
+        let o = opts(3, 4, "topk:10");
+        let a = run_reference(&o).unwrap();
+        let b = run_reference(&o).unwrap();
+        assert_eq!(a.boxes, b.boxes);
+        // 2 links x 2 dirs, every mailbox saw all 4 microbatches
+        assert_eq!(a.boxes.len(), 4);
+        for mbx in &a.boxes {
+            assert_eq!(mbx.recv.len(), 4, "link {} {}", mbx.link, mbx.dir);
+            assert_eq!(mbx.sent_msgs, 4);
+        }
+        check(&a, std::slice::from_ref(&b)).unwrap();
+    }
+
+    #[test]
+    fn reference_changes_with_seed_and_spec() {
+        let a = run_reference(&opts(2, 2, "topk:10")).unwrap();
+        let mut o = opts(2, 2, "topk:10");
+        o.seed = 12;
+        let b = run_reference(&o).unwrap();
+        assert_ne!(a.boxes, b.boxes, "digests must depend on the seed");
+        let c = run_reference(&opts(2, 2, "none")).unwrap();
+        assert_ne!(
+            a.boxes[0].sent_bytes, c.boxes[0].sent_bytes,
+            "topk must ship fewer bytes than raw"
+        );
+    }
+
+    #[test]
+    fn feedback_specs_are_rejected() {
+        let o = opts(2, 2, "ef21+topk:10");
+        assert!(run_reference(&o).is_err());
+    }
+
+    #[test]
+    fn summary_json_roundtrip() {
+        let s = run_reference(&opts(2, 3, "quant:fw4-bw6")).unwrap();
+        let j = s.to_json().to_string();
+        let back = WorkerSummary::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.boxes, s.boxes);
+        assert_eq!(back.rank, None);
+        check(&s, &[back]).unwrap();
+    }
+
+    #[test]
+    fn check_flags_divergence() {
+        let a = run_reference(&opts(2, 2, "topk:10")).unwrap();
+        let mut bad = a.clone();
+        bad.boxes[0].recv[0].2 ^= 1; // flip one digest bit
+        assert!(check(&a, &[bad]).is_err());
+        let mut short = a.clone();
+        short.boxes[1].recv.pop(); // lose a message
+        assert!(check(&a, &[short]).is_err());
+    }
+
+    #[test]
+    fn fnv_digest_is_stable() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

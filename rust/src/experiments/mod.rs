@@ -20,6 +20,7 @@ use crate::compression::Spec;
 use crate::config::{CompressImpl, TrainConfig};
 use crate::coordinator::Trainer;
 use crate::metrics::{append_jsonl, RunMetrics};
+use crate::netsim::Backend;
 use crate::runtime::Runtime;
 
 /// Parameters of the standalone schedule ablation (`mpcomp exp
@@ -41,6 +42,10 @@ pub struct SchedParams {
     /// paper's rematerialization — it cannot stash all `mb` activation
     /// sets; 1F1B's depth-bounded stash is exactly what avoids this).
     pub recompute: bool,
+    /// Transport carrying the schedule's messages: the event-driven
+    /// simulator (default) or real loopback sockets (`--backend
+    /// tcp|uds`), where the table reports measured wall-clock wire time.
+    pub backend: Backend,
 }
 
 impl Default for SchedParams {
@@ -53,6 +58,7 @@ impl Default for SchedParams {
             bwd_op_s: 0.040,
             capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
             recompute: true,
+            backend: Backend::Sim,
         }
     }
 }

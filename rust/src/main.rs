@@ -9,22 +9,31 @@
 //!            [--full] [--seeds N] [--curves] [--impl kernel|native]
 //! mpcomp exp schedule [--stages N] [--mb N] [--link-elems N]
 //!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
+//!            [--backend sim|tcp|uds]
+//! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
+//!               [--mb N] [--link-elems N] [--compression M] [--schedule S]
+//!               [--seed N] [--out summary.json]
+//! mpcomp worker --reference ... --out ref.json    # single-process SimNet replay
+//! mpcomp worker --check ref.json rank0.json rank1.json
 //! ```
 
 use anyhow::{bail, Context, Result};
 use mpcomp::cli::Args;
 use mpcomp::compression::Spec;
-use mpcomp::config::{CompressImpl, TrainConfig};
-use mpcomp::coordinator::Trainer;
+use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
+use mpcomp::coordinator::{worker, Trainer, WorkerOpts, WorkerSummary};
 use mpcomp::experiments::{tables, ExpOpts};
 use mpcomp::metrics::append_jsonl;
+use mpcomp::netsim::{Backend, WireModel};
 use mpcomp::runtime::Runtime;
 
 const VALUE_FLAGS: &[&str] = &[
     "config", "set", "model", "compression", "checkpoint", "seeds", "impl",
     "artifacts", "results", "epochs", "save-checkpoint",
-    // exp schedule (transmission-simulator ablation)
+    // exp schedule (transmission-simulator ablation) + worker
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
+    "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
+    "recv-timeout",
 ];
 
 fn main() -> Result<()> {
@@ -35,9 +44,10 @@ fn main() -> Result<()> {
         Some("train") => train(&args),
         Some("eval") => eval(&args),
         Some("exp") => exp(&args),
+        Some("worker") => worker_cmd(&args),
         _ => {
             eprintln!(
-                "usage: mpcomp <info|train|eval|exp> [...]\n\
+                "usage: mpcomp <info|train|eval|exp|worker> [...]\n\
                  see README.md for the full command reference"
             );
             std::process::exit(2);
@@ -201,5 +211,66 @@ fn exp(args: &Args) -> Result<()> {
     if args.has("no-recompute") {
         opts.sched.recompute = false;
     }
+    if let Some(b) = args.get("backend") {
+        opts.sched.backend = Backend::parse(b)?;
+    }
     tables::run(name, &opts)
+}
+
+/// `mpcomp worker`: one pipeline stage per OS process on a synthetic
+/// schedule over the real transport — plus the single-process reference
+/// run and the parity checker the CI `loopback` job drives.
+fn worker_cmd(args: &Args) -> Result<()> {
+    if args.has("check") {
+        let files = &args.positional[1..];
+        if files.len() < 2 {
+            bail!("worker --check wants <reference.json> <rank.json>...");
+        }
+        let reference = WorkerSummary::load(&files[0])?;
+        let workers: Vec<WorkerSummary> =
+            files[1..].iter().map(|f| WorkerSummary::load(f)).collect::<Result<_>>()?;
+        worker::check(&reference, &workers)?;
+        println!(
+            "loopback check OK: {} worker(s) bit-identical to the reference ({} messages)",
+            workers.len(),
+            reference.received()
+        );
+        return Ok(());
+    }
+    let opts = WorkerOpts {
+        stages: args.usize("stages")?.unwrap_or(2),
+        mb: args.usize("mb")?.unwrap_or(4),
+        link_elems: args.usize("link-elems")?.unwrap_or(256),
+        schedule: Schedule::parse(args.get("schedule").unwrap_or("gpipe"))?,
+        spec: Spec::parse(args.get("compression").unwrap_or("none"))?,
+        seed: args.usize("seed")?.unwrap_or(0) as u64,
+        wire: WireModel::parse(args.get("wire").unwrap_or("wan"))?,
+        recv_timeout_s: match args.get("recv-timeout") {
+            Some(v) => v.parse().context("--recv-timeout wants seconds")?,
+            None => 20.0,
+        },
+    };
+    let summary = if args.has("reference") {
+        worker::run_reference(&opts)?
+    } else if let Some(rank) = args.usize("rank")? {
+        let backend = Backend::parse(args.get("backend").unwrap_or("uds"))?;
+        let rv = args
+            .get("rendezvous")
+            .context("worker wants --rendezvous <socket-dir | host:port>")?;
+        worker::run_rank(&opts, rank, backend, rv)?
+    } else {
+        bail!("worker wants --reference, --rank N, or --check");
+    };
+    let rank_label = summary.rank.map_or("reference".to_string(), |r| format!("rank {r}"));
+    println!(
+        "worker {} ({}): {} messages received, wire tx {:.4}s",
+        rank_label,
+        summary.backend,
+        summary.received(),
+        summary.wire_elapsed_s
+    );
+    if let Some(out) = args.get("out") {
+        summary.save(out)?;
+    }
+    Ok(())
 }

@@ -34,6 +34,9 @@ pub struct RunMetrics {
     pub wire_raw_bytes: u64,
     /// Sum of per-message wire times (latency + serialization).
     pub wire_sim_time_s: f64,
+    /// Measured wall-clock seconds spent putting frames on a real
+    /// socket (0 on the `sim` backend).
+    pub wire_elapsed_s: f64,
     /// Measured simulated makespan of the whole run: the latest stage
     /// clock after the event-driven schedule execution (compute and
     /// communication overlapped, contention included).
@@ -51,6 +54,7 @@ impl RunMetrics {
             wire_bytes: 0,
             wire_raw_bytes: 0,
             wire_sim_time_s: 0.0,
+            wire_elapsed_s: 0.0,
             sim_makespan_s: 0.0,
             wall_time_s: 0.0,
         }
@@ -117,6 +121,7 @@ impl RunMetrics {
             .set("wire_bytes", Json::Num(self.wire_bytes as f64))
             .set("wire_raw_bytes", Json::Num(self.wire_raw_bytes as f64))
             .set("wire_sim_time_s", Json::Num(self.wire_sim_time_s))
+            .set("wire_elapsed_s", Json::Num(self.wire_elapsed_s))
             .set("sim_makespan_s", Json::Num(self.sim_makespan_s))
             .set("wall_time_s", Json::Num(self.wall_time_s))
             .set(
@@ -210,6 +215,7 @@ mod tests {
         assert_eq!(parsed.get("label").unwrap().str().unwrap(), "Top 10%");
         assert_eq!(parsed.get("best_eval_on").unwrap().num().unwrap(), 0.8);
         assert!(parsed.get("sim_makespan_s").is_ok());
+        assert!(parsed.get("wire_elapsed_s").is_ok());
         assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
     }
 

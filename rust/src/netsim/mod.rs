@@ -15,10 +15,20 @@
 //!   clocks, and a `SimSocket`-style send/recv API. The coordinator
 //!   executes schedules *through* it, turning the analytic
 //!   `pipeline::makespan()` estimate into measured simulated time.
+//!
+//! Both the simulator and the real TCP/UDS socket backend
+//! ([`RealTransport`], [`real`]) implement the shared [`Transport`]
+//! trait ([`transport`]): the coordinator, the schedule executor, and
+//! `mpcomp worker` are written against it, so a run measures either
+//! simulated or real wall-clock wire time behind one API.
 
+pub mod real;
 pub mod sim;
+pub mod transport;
 
+pub use real::{RealTransport, Rendezvous};
 pub use sim::{Message, SimNet, SimSocket, DEFAULT_QUEUE_CAPACITY};
+pub use transport::{Backend, Frame, Payload, Transport, TransportError};
 
 use anyhow::{bail, Result};
 
@@ -72,6 +82,37 @@ impl WireModel {
 pub enum Dir {
     Fwd,
     Bwd,
+}
+
+impl Dir {
+    /// Stable slot index (fwd = 0, bwd = 1) for per-channel arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Dir::Fwd => 0,
+            Dir::Bwd => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dir::Fwd => "fwd",
+            Dir::Bwd => "bwd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dir> {
+        match s {
+            "fwd" => Ok(Dir::Fwd),
+            "bwd" => Ok(Dir::Bwd),
+            _ => bail!("unknown direction '{s}' (try fwd, bwd)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Dir {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// Accumulated statistics for one link direction.

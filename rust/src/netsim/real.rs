@@ -1,0 +1,791 @@
+//! Real-socket transport: TCP or Unix-domain-socket streams behind the
+//! same [`Transport`] API as the simulator.
+//!
+//! One duplex stream per pipeline link. Frames are length-prefixed and
+//! carry the wire-codec bytes of one compressed activation/gradient
+//! message, tagged with direction and microbatch key:
+//!
+//! ```text
+//! [magic u32][dir u8][key u64][raw u32][len u32][len bytes payload]
+//! ```
+//!
+//! A small handshake maps `(src, dst)` stage pairs onto streams when a
+//! run is launched as N OS processes (`mpcomp worker`): the lower stage
+//! of link `i` listens at the link's rendezvous address, the upper stage
+//! connects (with retry) and both sides exchange
+//! `[magic][version][link][stage]` hellos before any frames flow. Keys
+//! then ride in the frames themselves, so the per-`(link, dir)`
+//! mailboxes look exactly like the simulator's.
+//!
+//! A reader thread per stream drains frames into the shared mailboxes
+//! regardless of schedule progress, so kernel socket buffers never fill
+//! and lockstep schedules cannot deadlock. `recv` blocks on a condvar up
+//! to the configured window and surfaces timeouts/disconnects as typed
+//! [`TransportError`]s. Send time is measured wall clock and feeds the
+//! `wire_elapsed_s` metric (the real-wire analogue of the simulator's
+//! bandwidth-occupancy `busy_time`); graceful [`Transport::shutdown`]
+//! sends an explicit end-of-stream frame before closing the write half.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::transport::{Backend, Frame, Payload, Transport, TransportError};
+use super::{Dir, NetSim, WireModel};
+
+const MAGIC: u32 = 0x4d50_434d; // "MPCM"
+const VERSION: u8 = 1;
+const DIR_FWD: u8 = 0;
+const DIR_BWD: u8 = 1;
+const DIR_SHUTDOWN: u8 = 0xff;
+const FRAME_HEADER: usize = 21;
+const HELLO_LEN: usize = 13;
+/// Sanity bound on a single frame (1 GiB).
+const MAX_FRAME: usize = 1 << 30;
+/// Handshake read window. Must exceed the rendezvous connect window: a
+/// middle rank legitimately delays its hello reply while it waits (up
+/// to `connect_timeout`) for its *other* neighbor to appear.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn dir_byte(dir: Dir) -> u8 {
+    match dir {
+        Dir::Fwd => DIR_FWD,
+        Dir::Bwd => DIR_BWD,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streams
+// ---------------------------------------------------------------------------
+
+/// A connected stream of either flavor (the write and read clones of one
+/// socket share kernel state, so `shutdown` affects all clones).
+enum Sock {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Sock {
+    fn try_clone(&self) -> io::Result<Sock> {
+        Ok(match self {
+            Sock::Tcp(s) => Sock::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Sock::Uds(s) => Sock::Uds(s.try_clone()?),
+        })
+    }
+
+    fn shutdown_write(&self) {
+        let _ = match self {
+            Sock::Tcp(s) => s.shutdown(Shutdown::Write),
+            #[cfg(unix)]
+            Sock::Uds(s) => s.shutdown(Shutdown::Write),
+        };
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Sock::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Sock::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Sock::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Sock::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Sock> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Sock::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Sock::Uds(s))
+            }
+        }
+    }
+
+    /// Accept with a deadline (listener goes non-blocking + polls).
+    fn accept_by(&self, deadline: Instant) -> Result<Sock, TransportError> {
+        self.set_nonblocking(true)?;
+        loop {
+            match self.accept() {
+                Ok(s) => {
+                    self.set_nonblocking(false)?;
+                    // the accepted stream may inherit non-blocking mode
+                    match &s {
+                        Sock::Tcp(t) => t.set_nonblocking(false)?,
+                        #[cfg(unix)]
+                        Sock::Uds(u) => u.set_nonblocking(false)?,
+                    }
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Io("accept timed out".into()));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rendezvous
+// ---------------------------------------------------------------------------
+
+/// How N worker processes find each other. Link `i` (between stages `i`
+/// and `i + 1`) rendezvouses at a per-link address derived from one base
+/// address: a socket directory for UDS (`<dir>/link<i>.sock`), a
+/// host + base port for TCP (`host:(port + i)`). The lower stage
+/// listens; the upper stage connects with retry.
+#[derive(Clone, Debug)]
+pub struct Rendezvous {
+    pub backend: Backend,
+    pub num_stages: usize,
+    /// UDS: directory holding one socket file per link.
+    pub uds_dir: PathBuf,
+    /// TCP: host and base port (link `i` at `port + i`).
+    pub tcp_host: String,
+    pub tcp_base_port: u16,
+    /// How long connect/accept may wait for the peer process.
+    pub connect_timeout: Duration,
+    /// How long `recv` may wait for a frame.
+    pub recv_timeout: Duration,
+}
+
+impl Rendezvous {
+    /// Build from a CLI-style address: a directory path for `uds`, a
+    /// `host:port` pair for `tcp`.
+    pub fn parse(backend: Backend, num_stages: usize, addr: &str) -> Result<Self, TransportError> {
+        let mut rv = Rendezvous {
+            backend,
+            num_stages,
+            uds_dir: PathBuf::new(),
+            tcp_host: String::new(),
+            tcp_base_port: 0,
+            connect_timeout: Duration::from_secs(20),
+            recv_timeout: Duration::from_secs(20),
+        };
+        match backend {
+            Backend::Sim => {
+                return Err(TransportError::Io("rendezvous wants a real backend".into()))
+            }
+            Backend::Uds => rv.uds_dir = PathBuf::from(addr),
+            Backend::Tcp => {
+                let (host, port) = addr.split_once(':').ok_or_else(|| {
+                    TransportError::Io(format!("tcp rendezvous wants host:port, got '{addr}'"))
+                })?;
+                rv.tcp_host = host.to_string();
+                rv.tcp_base_port = port
+                    .parse()
+                    .map_err(|_| TransportError::Io(format!("bad port '{port}'")))?;
+            }
+        }
+        Ok(rv)
+    }
+
+    fn tcp_addr(&self, link: usize) -> Result<String, TransportError> {
+        let port = self.tcp_base_port as u32 + link as u32;
+        if port > u16::MAX as u32 {
+            return Err(TransportError::Io(format!(
+                "tcp port {port} for link {link} exceeds 65535 (base {})",
+                self.tcp_base_port
+            )));
+        }
+        Ok(format!("{}:{port}", self.tcp_host))
+    }
+
+    fn uds_path(&self, link: usize) -> PathBuf {
+        self.uds_dir.join(format!("link{link}.sock"))
+    }
+
+    fn listen(&self, link: usize) -> Result<Listener, TransportError> {
+        match self.backend {
+            Backend::Tcp => Ok(Listener::Tcp(TcpListener::bind(self.tcp_addr(link)?)?)),
+            #[cfg(unix)]
+            Backend::Uds => {
+                let path = self.uds_path(link);
+                if let Some(parent) = path.parent() {
+                    let _ = std::fs::create_dir_all(parent);
+                }
+                let _ = std::fs::remove_file(&path); // stale socket from a dead run
+                Ok(Listener::Uds(UnixListener::bind(&path)?))
+            }
+            #[cfg(not(unix))]
+            Backend::Uds => Err(TransportError::Io("uds unavailable on this platform".into())),
+            Backend::Sim => Err(TransportError::Io("sim backend has no listeners".into())),
+        }
+    }
+
+    /// Connect to the lower stage of `link`, retrying until the deadline
+    /// (the peer process may not have bound its listener yet).
+    fn connect(&self, link: usize, deadline: Instant) -> Result<Sock, TransportError> {
+        loop {
+            let attempt: io::Result<Sock> = match self.backend {
+                Backend::Tcp => {
+                    let addr = self.tcp_addr(link)?;
+                    TcpStream::connect(addr).and_then(|s| {
+                        s.set_nodelay(true)?;
+                        Ok(Sock::Tcp(s))
+                    })
+                }
+                #[cfg(unix)]
+                Backend::Uds => UnixStream::connect(self.uds_path(link)).map(Sock::Uds),
+                #[cfg(not(unix))]
+                Backend::Uds => {
+                    return Err(TransportError::Io("uds unavailable on this platform".into()))
+                }
+                Backend::Sim => {
+                    return Err(TransportError::Io("sim backend has no sockets".into()))
+                }
+            };
+            match attempt {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Io(format!(
+                            "connecting link {link}: {e} (peer never appeared)"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------------
+
+fn hello_bytes(link: usize, stage: usize) -> [u8; HELLO_LEN] {
+    let mut b = [0u8; HELLO_LEN];
+    b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    b[4] = VERSION;
+    b[5..9].copy_from_slice(&(link as u32).to_le_bytes());
+    b[9..13].copy_from_slice(&(stage as u32).to_le_bytes());
+    b
+}
+
+/// Read and validate the peer's hello; returns its stage.
+fn read_hello(sock: &mut Sock, link: usize) -> Result<usize, TransportError> {
+    let mut b = [0u8; HELLO_LEN];
+    sock.read_exact(&mut b)
+        .map_err(|e| TransportError::Io(format!("handshake read on link {link}: {e}")))?;
+    let magic = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    if magic != MAGIC {
+        return Err(TransportError::Corrupt(format!("bad handshake magic {magic:#x}")));
+    }
+    if b[4] != VERSION {
+        return Err(TransportError::Corrupt(format!("protocol version {} != {VERSION}", b[4])));
+    }
+    let got_link = u32::from_le_bytes([b[5], b[6], b[7], b[8]]) as usize;
+    if got_link != link {
+        return Err(TransportError::Corrupt(format!("peer speaks link {got_link}, not {link}")));
+    }
+    Ok(u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize)
+}
+
+/// Connector side (the upper stage of the link): say hello, hear hello.
+fn handshake_connect(sock: &mut Sock, link: usize, stage: usize) -> Result<(), TransportError> {
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    sock.write_all(&hello_bytes(link, stage))?;
+    sock.flush()?;
+    let peer = read_hello(sock, link)?;
+    sock.set_read_timeout(None)?;
+    if peer != link {
+        return Err(TransportError::Corrupt(format!(
+            "link {link}: expected lower stage {link}, peer is stage {peer}"
+        )));
+    }
+    Ok(())
+}
+
+/// Acceptor side (the lower stage): hear hello, say hello.
+fn handshake_accept(sock: &mut Sock, link: usize, stage: usize) -> Result<(), TransportError> {
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let peer = read_hello(sock, link)?;
+    sock.write_all(&hello_bytes(link, stage))?;
+    sock.flush()?;
+    sock.set_read_timeout(None)?;
+    if peer != link + 1 {
+        return Err(TransportError::Corrupt(format!(
+            "link {link}: expected upper stage {}, peer is stage {peer}",
+            link + 1
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// mailboxes + reader threads
+// ---------------------------------------------------------------------------
+
+struct Slot {
+    frames: VecDeque<Frame>,
+    closed: bool,
+}
+
+struct Boxes {
+    /// One slot per `(link, dir)`: index `link * 2 + dir`.
+    slots: Vec<Slot>,
+    /// Wall time of the latest send/arrival (the measured makespan).
+    last_event_s: f64,
+}
+
+struct Shared {
+    boxes: Mutex<Boxes>,
+    cv: Condvar,
+    t0: Instant,
+}
+
+impl Shared {
+    fn bump(&self, t: f64) {
+        let mut b = self.boxes.lock().unwrap();
+        if t > b.last_event_s {
+            b.last_event_s = t;
+        }
+    }
+}
+
+fn slot_index(link: usize, dir: Dir) -> usize {
+    link * 2 + dir.index()
+}
+
+/// Drain one stream into the mailboxes until EOF, an error, or an
+/// explicit shutdown frame; then mark the link's slots closed.
+fn reader_loop(mut sock: Sock, link: usize, shared: Arc<Shared>) {
+    loop {
+        let mut head = [0u8; FRAME_HEADER];
+        if sock.read_exact(&mut head).is_err() {
+            break; // EOF or error: peer is gone
+        }
+        let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        if magic != MAGIC {
+            break; // stream is corrupt; treat as disconnect
+        }
+        let dir = match head[4] {
+            DIR_FWD => Dir::Fwd,
+            DIR_BWD => Dir::Bwd,
+            _ => break, // DIR_SHUTDOWN or unknown: end of stream
+        };
+        let key = u64::from_le_bytes([
+            head[5], head[6], head[7], head[8], head[9], head[10], head[11], head[12],
+        ]);
+        let len = u32::from_le_bytes([head[17], head[18], head[19], head[20]]) as usize;
+        if len > MAX_FRAME {
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        if sock.read_exact(&mut payload).is_err() {
+            break;
+        }
+        let arrival = shared.t0.elapsed().as_secs_f64();
+        let mut b = shared.boxes.lock().unwrap();
+        if arrival > b.last_event_s {
+            b.last_event_s = arrival;
+        }
+        b.slots[slot_index(link, dir)].frames.push_back(Frame {
+            key,
+            bytes: len,
+            arrival,
+            payload: Some(payload),
+        });
+        drop(b);
+        shared.cv.notify_all();
+    }
+    let mut b = shared.boxes.lock().unwrap();
+    b.slots[slot_index(link, Dir::Fwd)].closed = true;
+    b.slots[slot_index(link, Dir::Bwd)].closed = true;
+    drop(b);
+    shared.cv.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// the transport
+// ---------------------------------------------------------------------------
+
+static LOOPBACK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Real-socket [`Transport`]: per-link TCP/UDS streams, keyed mailboxes
+/// fed by reader threads, wall-clock timing. Construct with
+/// [`RealTransport::loopback`] (both ends of every link in one process)
+/// or [`RealTransport::endpoint`] (one stage of a multi-process run).
+pub struct RealTransport {
+    backend: Backend,
+    /// Writer for each `(link, dir)` this endpoint can send on.
+    writers: Vec<Option<Sock>>,
+    shared: Arc<Shared>,
+    readers: Vec<JoinHandle<()>>,
+    ledger: NetSim,
+    busy_s: f64,
+    recv_timeout: Duration,
+    /// UDS socket files owned by this transport (loopback), removed on drop.
+    owned_paths: Vec<PathBuf>,
+}
+
+impl RealTransport {
+    fn empty(
+        backend: Backend,
+        num_links: usize,
+        model: WireModel,
+        recv_timeout: Duration,
+    ) -> RealTransport {
+        let slots = (0..num_links * 2)
+            .map(|_| Slot { frames: VecDeque::new(), closed: false })
+            .collect();
+        RealTransport {
+            backend,
+            writers: (0..num_links * 2).map(|_| None).collect(),
+            shared: Arc::new(Shared {
+                boxes: Mutex::new(Boxes { slots, last_event_s: 0.0 }),
+                cv: Condvar::new(),
+                t0: Instant::now(),
+            }),
+            readers: Vec::new(),
+            ledger: NetSim::new(num_links, model),
+            busy_s: 0.0,
+            recv_timeout,
+            owned_paths: Vec::new(),
+        }
+    }
+
+    fn spawn_reader(&mut self, sock: Sock, link: usize) {
+        let shared = Arc::clone(&self.shared);
+        self.readers.push(std::thread::spawn(move || reader_loop(sock, link, shared)));
+    }
+
+    /// Single-process loopback: both ends of every link live in this
+    /// transport — sends go through real kernel sockets and come back via
+    /// the reader threads. This is how the trainer runs `backend = tcp |
+    /// uds` without multi-process orchestration.
+    pub fn loopback(
+        num_links: usize,
+        backend: Backend,
+        model: WireModel,
+        recv_timeout: Duration,
+    ) -> Result<RealTransport, TransportError> {
+        if !backend.is_real() {
+            return Err(TransportError::Io("loopback wants a real backend (tcp/uds)".into()));
+        }
+        let mut t = RealTransport::empty(backend, num_links, model, recv_timeout);
+        let seq = LOOPBACK_SEQ.fetch_add(1, Ordering::Relaxed);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        for link in 0..num_links {
+            let (listener, uds_path) = match backend {
+                Backend::Tcp => {
+                    let l = TcpListener::bind("127.0.0.1:0")?;
+                    (Listener::Tcp(l), None)
+                }
+                Backend::Uds => {
+                    #[cfg(unix)]
+                    {
+                        let dir = std::env::temp_dir()
+                            .join(format!("mpcomp-loop-{}-{seq}", std::process::id()));
+                        std::fs::create_dir_all(&dir)?;
+                        let path = dir.join(format!("link{link}.sock"));
+                        let _ = std::fs::remove_file(&path);
+                        let l = UnixListener::bind(&path)?;
+                        (Listener::Uds(l), Some(path))
+                    }
+                    #[cfg(not(unix))]
+                    {
+                        return Err(TransportError::Io(
+                            "uds unavailable on this platform".into(),
+                        ));
+                    }
+                }
+                Backend::Sim => unreachable!(),
+            };
+            // connect (pends in the backlog), then accept, then handshake —
+            // the hellos are tiny, so a single thread cannot deadlock here
+            let mut upper = match (&listener, backend) {
+                (Listener::Tcp(l), _) => {
+                    let s = TcpStream::connect(l.local_addr()?)?;
+                    s.set_nodelay(true)?;
+                    Sock::Tcp(s)
+                }
+                #[cfg(unix)]
+                _ => {
+                    let path = uds_path.as_ref().expect("uds listener has a path");
+                    Sock::Uds(UnixStream::connect(path)?)
+                }
+            };
+            let mut lower = listener.accept_by(deadline)?;
+            upper.write_all(&hello_bytes(link, link + 1))?;
+            upper.flush()?;
+            handshake_accept(&mut lower, link, link)?;
+            handshake_connect_finish(&mut upper, link)?;
+            if let Some(p) = uds_path {
+                t.owned_paths.push(p);
+            }
+            // fwd frames: written into the lower end, read from the upper
+            t.writers[slot_index(link, Dir::Fwd)] = Some(lower.try_clone()?);
+            t.spawn_reader(upper.try_clone()?, link);
+            // bwd frames: written into the upper end, read from the lower
+            t.writers[slot_index(link, Dir::Bwd)] = Some(upper);
+            t.spawn_reader(lower, link);
+        }
+        Ok(t)
+    }
+
+    /// One endpoint of a multi-process run: `stage` owns the upper end of
+    /// link `stage - 1` (connects) and the lower end of link `stage`
+    /// (listens). All listeners bind before any connect, so the chain of
+    /// worker processes rendezvouses in any launch order.
+    pub fn endpoint(
+        rv: &Rendezvous,
+        stage: usize,
+        model: WireModel,
+    ) -> Result<RealTransport, TransportError> {
+        let num_links = rv.num_stages.saturating_sub(1);
+        if stage >= rv.num_stages {
+            return Err(TransportError::Io(format!(
+                "stage {stage} out of range for {} stages",
+                rv.num_stages
+            )));
+        }
+        let mut t = RealTransport::empty(rv.backend, num_links, model, rv.recv_timeout);
+        let deadline = Instant::now() + rv.connect_timeout;
+        // bind the downstream listener first so the next rank can connect
+        let listener = if stage + 1 < rv.num_stages { Some(rv.listen(stage)?) } else { None };
+        if stage > 0 {
+            let link = stage - 1;
+            let mut sock = rv.connect(link, deadline)?;
+            handshake_connect(&mut sock, link, stage)?;
+            t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
+            t.spawn_reader(sock, link);
+        }
+        if let Some(l) = listener {
+            let link = stage;
+            let mut sock = l.accept_by(deadline)?;
+            handshake_accept(&mut sock, link, stage)?;
+            t.writers[slot_index(link, Dir::Fwd)] = Some(sock.try_clone()?);
+            t.spawn_reader(sock, link);
+            if rv.backend == Backend::Uds {
+                t.owned_paths.push(rv.uds_path(link));
+            }
+        }
+        Ok(t)
+    }
+
+    /// Send shutdown frames, close write halves, and join the readers.
+    /// Idempotent; also run by `Drop`.
+    fn close_streams(&mut self) {
+        for w in self.writers.iter_mut() {
+            if let Some(mut sock) = w.take() {
+                let mut head = [0u8; FRAME_HEADER];
+                head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+                head[4] = DIR_SHUTDOWN;
+                let _ = sock.write_all(&head);
+                let _ = sock.flush();
+                sock.shutdown_write();
+            }
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        for p in self.owned_paths.drain(..) {
+            let _ = std::fs::remove_file(&p);
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::remove_dir(dir); // only when empty
+            }
+        }
+    }
+}
+
+/// The tail of the connector handshake when the hello was already sent
+/// (single-thread loopback interleaves the two sides by hand).
+fn handshake_connect_finish(sock: &mut Sock, link: usize) -> Result<(), TransportError> {
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let peer = read_hello(sock, link)?;
+    sock.set_read_timeout(None)?;
+    if peer != link {
+        return Err(TransportError::Corrupt(format!(
+            "link {link}: expected lower stage {link}, peer is stage {peer}"
+        )));
+    }
+    Ok(())
+}
+
+impl Drop for RealTransport {
+    fn drop(&mut self) {
+        self.close_streams();
+    }
+}
+
+impl Transport for RealTransport {
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn num_links(&self) -> usize {
+        self.writers.len() / 2
+    }
+
+    fn send(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        payload: Payload<'_>,
+        raw_bytes: usize,
+        _now: f64,
+    ) -> Result<f64, TransportError> {
+        if link >= self.num_links() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        let len = payload.len();
+        let sock = self.writers[slot_index(link, dir)]
+            .as_mut()
+            .ok_or_else(|| TransportError::Io(format!(
+                "link {link} {dir} is not writable from this endpoint"
+            )))?;
+        let mut head = [0u8; FRAME_HEADER];
+        head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        head[4] = dir_byte(dir);
+        head[5..13].copy_from_slice(&key.to_le_bytes());
+        head[13..17].copy_from_slice(&(raw_bytes as u32).to_le_bytes());
+        head[17..21].copy_from_slice(&(len as u32).to_le_bytes());
+        let t = Instant::now();
+        sock.write_all(&head)?;
+        match payload {
+            Payload::Bytes(b) => sock.write_all(b)?,
+            Payload::Size(mut n) => {
+                // synthetic runs ship zero-filled frames of the right size
+                let zeros = [0u8; 4096];
+                while n > 0 {
+                    let chunk = n.min(zeros.len());
+                    sock.write_all(&zeros[..chunk])?;
+                    n -= chunk;
+                }
+            }
+        }
+        sock.flush()?;
+        self.busy_s += t.elapsed().as_secs_f64();
+        self.ledger.transfer(link, dir, len, raw_bytes);
+        let sent = self.shared.t0.elapsed().as_secs_f64();
+        self.shared.bump(sent);
+        Ok(sent)
+    }
+
+    fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
+        if link >= self.num_links() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        let idx = slot_index(link, dir);
+        let deadline = Instant::now() + self.recv_timeout;
+        let mut boxes = self.shared.boxes.lock().unwrap();
+        loop {
+            let slot = &mut boxes.slots[idx];
+            if let Some(at) = slot.frames.iter().position(|f| f.key == key) {
+                return Ok(slot.frames.remove(at).expect("position is in range"));
+            }
+            if slot.closed {
+                return Err(TransportError::Disconnected { link, dir });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout { link, dir, key });
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(boxes, deadline - now).unwrap();
+            boxes = guard;
+        }
+    }
+
+    fn clock(&self, _stage: usize) -> f64 {
+        self.shared.t0.elapsed().as_secs_f64()
+    }
+
+    fn advance(&mut self, _stage: usize, _to: f64) {}
+
+    fn barrier(&mut self) -> f64 {
+        self.shared.t0.elapsed().as_secs_f64()
+    }
+
+    fn makespan(&self) -> f64 {
+        self.shared.boxes.lock().unwrap().last_event_s
+    }
+
+    fn ledger(&self) -> &NetSim {
+        &self.ledger
+    }
+
+    fn busy_time(&self) -> f64 {
+        self.busy_s
+    }
+
+    fn wire_elapsed_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    fn reset(&mut self) {
+        self.ledger.reset();
+        self.busy_s = 0.0;
+        let mut b = self.shared.boxes.lock().unwrap();
+        for s in &mut b.slots {
+            s.frames.clear();
+        }
+        b.last_event_s = 0.0;
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        self.close_streams();
+        Ok(())
+    }
+}

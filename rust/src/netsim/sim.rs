@@ -21,6 +21,7 @@
 
 use std::collections::VecDeque;
 
+use super::transport::{Backend, Frame, Payload, Transport, TransportError};
 use super::{Dir, NetSim, WireModel};
 
 /// Default bound on in-flight messages per link direction.
@@ -168,7 +169,7 @@ impl SimNet {
     }
 
     /// Receive the message with `key` from `link`/`dir`, if delivered.
-    pub fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Option<Message> {
+    pub fn try_recv(&mut self, link: usize, dir: Dir, key: u64) -> Option<Message> {
         let ch = self.channel(link, dir);
         let at = ch.mailbox.iter().position(|m| m.key == key)?;
         ch.mailbox.remove(at)
@@ -253,9 +254,79 @@ impl SimNet {
     }
 }
 
+/// The simulator behind the shared [`Transport`] surface. Mailbox
+/// misses are `Timeout` errors (in virtual time a message that was
+/// never sent will never arrive), and bad link indices are typed
+/// addressing errors instead of panics — the same error path the real
+/// backends use.
+impl Transport for SimNet {
+    fn backend(&self) -> Backend {
+        Backend::Sim
+    }
+
+    fn num_links(&self) -> usize {
+        self.fwd_ch.len()
+    }
+
+    fn send(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        payload: Payload<'_>,
+        raw_bytes: usize,
+        now: f64,
+    ) -> Result<f64, TransportError> {
+        if link >= self.fwd_ch.len() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        Ok(self.send_to(link, dir, key, payload.len(), raw_bytes, now))
+    }
+
+    fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
+        if link >= self.fwd_ch.len() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        match self.try_recv(link, dir, key) {
+            Some(m) => Ok(Frame { key: m.key, bytes: m.bytes, arrival: m.arrival, payload: None }),
+            None => Err(TransportError::Timeout { link, dir, key }),
+        }
+    }
+
+    fn clock(&self, stage: usize) -> f64 {
+        SimNet::clock(self, stage)
+    }
+
+    fn advance(&mut self, stage: usize, to: f64) {
+        SimNet::advance(self, stage, to)
+    }
+
+    fn barrier(&mut self) -> f64 {
+        SimNet::barrier(self)
+    }
+
+    fn makespan(&self) -> f64 {
+        SimNet::makespan(self)
+    }
+
+    fn ledger(&self) -> &NetSim {
+        &self.ledger
+    }
+
+    fn busy_time(&self) -> f64 {
+        SimNet::busy_time(self)
+    }
+
+    fn reset(&mut self) {
+        SimNet::reset(self)
+    }
+}
+
 /// Stage-endpoint view of the transport — the `send_to`/`recv` pairing
 /// of the ce-netsim exemplars, with addressing derived from pipeline
-/// adjacency (stage `s` talks to `s - 1` and `s + 1` only).
+/// adjacency (stage `s` talks to `s - 1` and `s + 1` only). Addressing
+/// mistakes (stage 0 sending backward, receiving past the last link) and
+/// mailbox misses surface as typed [`TransportError`]s, not panics.
 #[derive(Clone, Copy, Debug)]
 pub struct SimSocket {
     pub stage: usize,
@@ -274,8 +345,11 @@ impl SimSocket {
         bytes: usize,
         raw_bytes: usize,
         now: f64,
-    ) -> f64 {
-        net.send_to(self.stage, Dir::Fwd, key, bytes, raw_bytes, now)
+    ) -> Result<f64, TransportError> {
+        if self.stage >= net.num_links() {
+            return Err(TransportError::NoPeer { stage: self.stage, dir: Dir::Fwd });
+        }
+        Ok(net.send_to(self.stage, Dir::Fwd, key, bytes, raw_bytes, now))
     }
 
     /// Send gradients to stage `self.stage - 1` (link = that stage).
@@ -286,18 +360,36 @@ impl SimSocket {
         bytes: usize,
         raw_bytes: usize,
         now: f64,
-    ) -> f64 {
-        net.send_to(self.stage - 1, Dir::Bwd, key, bytes, raw_bytes, now)
+    ) -> Result<f64, TransportError> {
+        let Some(link) = self.stage.checked_sub(1) else {
+            return Err(TransportError::NoPeer { stage: self.stage, dir: Dir::Bwd });
+        };
+        if link >= net.num_links() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        Ok(net.send_to(link, Dir::Bwd, key, bytes, raw_bytes, now))
     }
 
     /// Receive the activation message `key` from stage `self.stage - 1`.
-    pub fn recv_fwd(&self, net: &mut SimNet, key: u64) -> Option<Message> {
-        net.recv(self.stage - 1, Dir::Fwd, key)
+    pub fn recv_fwd(&self, net: &mut SimNet, key: u64) -> Result<Message, TransportError> {
+        let Some(link) = self.stage.checked_sub(1) else {
+            return Err(TransportError::NoPeer { stage: self.stage, dir: Dir::Fwd });
+        };
+        if link >= net.num_links() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        net.try_recv(link, Dir::Fwd, key)
+            .ok_or(TransportError::Timeout { link, dir: Dir::Fwd, key })
     }
 
     /// Receive the gradient message `key` from stage `self.stage + 1`.
-    pub fn recv_bwd(&self, net: &mut SimNet, key: u64) -> Option<Message> {
-        net.recv(self.stage, Dir::Bwd, key)
+    pub fn recv_bwd(&self, net: &mut SimNet, key: u64) -> Result<Message, TransportError> {
+        let link = self.stage;
+        if link >= net.num_links() {
+            return Err(TransportError::NoPeer { stage: self.stage, dir: Dir::Bwd });
+        }
+        net.try_recv(link, Dir::Bwd, key)
+            .ok_or(TransportError::Timeout { link, dir: Dir::Bwd, key })
     }
 }
 
@@ -361,22 +453,72 @@ mod tests {
         let mut n = SimNet::new(2, WireModel::default());
         let s0 = SimSocket::new(0);
         let s1 = SimSocket::new(1);
-        let arr = s0.send_fwd(&mut n, 7, 100, 400, 0.0);
+        let arr = s0.send_fwd(&mut n, 7, 100, 400, 0.0).unwrap();
         assert_eq!(n.pending(0, Dir::Fwd), 1);
         let m = s1.recv_fwd(&mut n, 7).expect("message delivered");
         assert_eq!(m.key, 7);
         assert_eq!(m.bytes, 100);
         assert_eq!(m.arrival, arr);
         assert_eq!(n.pending(0, Dir::Fwd), 0);
-        assert!(s1.recv_fwd(&mut n, 7).is_none());
+        // a drained mailbox is a typed timeout, not a panic
+        assert!(matches!(
+            s1.recv_fwd(&mut n, 7),
+            Err(TransportError::Timeout { link: 0, dir: Dir::Fwd, key: 7 })
+        ));
         // gradient direction: stage 1 -> stage 0 over link 0
-        s1.send_bwd(&mut n, 9, 50, 400, 1.0);
-        assert!(s0.recv_bwd(&mut n, 9).is_some());
+        s1.send_bwd(&mut n, 9, 50, 400, 1.0).unwrap();
+        assert!(s0.recv_bwd(&mut n, 9).is_ok());
         // ledger saw both directions
         assert_eq!(n.ledger().fwd[0].messages, 1);
         assert_eq!(n.ledger().bwd[0].messages, 1);
         assert_eq!(n.total_bytes(), 150);
         assert_eq!(n.total_uncompressed_bytes(), 800);
+    }
+
+    #[test]
+    fn socket_addressing_errors_are_typed() {
+        let mut n = SimNet::new(2, WireModel::default());
+        // stage 0 has no upstream peer
+        assert!(matches!(
+            SimSocket::new(0).send_bwd(&mut n, 1, 10, 10, 0.0),
+            Err(TransportError::NoPeer { stage: 0, dir: Dir::Bwd })
+        ));
+        assert!(matches!(
+            SimSocket::new(0).recv_fwd(&mut n, 1),
+            Err(TransportError::NoPeer { stage: 0, dir: Dir::Fwd })
+        ));
+        // the last stage (2 links => stage 2) has no downstream peer
+        assert!(matches!(
+            SimSocket::new(2).send_fwd(&mut n, 1, 10, 10, 0.0),
+            Err(TransportError::NoPeer { stage: 2, dir: Dir::Fwd })
+        ));
+        assert!(matches!(
+            SimSocket::new(2).recv_bwd(&mut n, 1),
+            Err(TransportError::NoPeer { stage: 2, dir: Dir::Bwd })
+        ));
+    }
+
+    #[test]
+    fn simnet_is_a_transport() {
+        let mut n = SimNet::new(1, WireModel { bandwidth_bytes_per_s: 1000.0, latency_s: 0.0 });
+        let net: &mut dyn Transport = &mut n;
+        assert_eq!(net.backend(), Backend::Sim);
+        assert!(!net.wants_payload());
+        assert_eq!(net.num_links(), 1);
+        net.send(0, Dir::Fwd, 3, Payload::Bytes(&[1, 2, 3, 4]), 16, 0.0).unwrap();
+        net.send(0, Dir::Fwd, 4, Payload::Size(1000), 1000, 0.0).unwrap();
+        let f = net.recv(0, Dir::Fwd, 3).unwrap();
+        assert_eq!((f.key, f.bytes), (3, 4));
+        assert!(f.payload.is_none(), "sim keeps tensors in-process");
+        assert!(matches!(
+            net.recv(0, Dir::Bwd, 9),
+            Err(TransportError::Timeout { link: 0, dir: Dir::Bwd, key: 9 })
+        ));
+        assert!(matches!(net.send(5, Dir::Fwd, 0, Payload::Size(1), 1, 0.0),
+            Err(TransportError::NoSuchLink { link: 5 })));
+        assert_eq!(net.ledger().total_bytes(), 1004);
+        assert_eq!(net.wire_elapsed_s(), 0.0);
+        net.shutdown().unwrap();
     }
 
     #[test]

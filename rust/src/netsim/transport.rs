@@ -1,0 +1,265 @@
+//! The transport abstraction behind the inter-stage links.
+//!
+//! [`Transport`] is the send/recv surface the coordinator and the
+//! schedule executor are written against: framed messages addressed by
+//! `(link, direction)` and delivered through per-channel mailboxes keyed
+//! by microbatch id. Two implementations exist:
+//!
+//! * [`crate::netsim::SimNet`] — the event-driven simulator (virtual
+//!   time, modelled bandwidth/latency/queueing); payloads never leave
+//!   the process, only their byte counts are charged.
+//! * [`crate::netsim::RealTransport`] — real TCP or Unix-domain-socket
+//!   streams ([`crate::netsim::real`]): the encoded wire-codec bytes
+//!   actually cross kernel sockets and arrival/busy times are measured
+//!   wall clock, so multi-process runs report real wire time.
+//!
+//! Failures surface as typed [`TransportError`]s (timeouts,
+//! disconnects, bad addressing) so both backends share one error path.
+
+use std::fmt;
+
+use super::{Dir, NetSim};
+
+/// Which transport implementation carries inter-stage messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Event-driven simulator (virtual time; the default).
+    Sim,
+    /// Real TCP sockets on loopback or across hosts.
+    Tcp,
+    /// Real Unix-domain sockets (same-host multi-process runs).
+    Uds,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "sim" => Ok(Backend::Sim),
+            "tcp" => Ok(Backend::Tcp),
+            "uds" | "unix" => Ok(Backend::Uds),
+            _ => anyhow::bail!("unknown transport backend '{s}' (try sim, tcp, uds)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Tcp => "tcp",
+            Backend::Uds => "uds",
+        }
+    }
+
+    /// Real backends carry actual payload bytes across sockets.
+    pub fn is_real(self) -> bool {
+        !matches!(self, Backend::Sim)
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed transport failures shared by the sim and real backends.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransportError {
+    /// No message with this key was delivered inside the receive window
+    /// (on the simulator: it was never sent).
+    Timeout { link: usize, dir: Dir, key: u64 },
+    /// The peer closed the channel (gracefully or by dying).
+    Disconnected { link: usize, dir: Dir },
+    /// The link index does not exist on this transport.
+    NoSuchLink { link: usize },
+    /// The endpoint has no neighbor in this direction (stage 0 has no
+    /// upstream peer, the last stage no downstream one).
+    NoPeer { stage: usize, dir: Dir },
+    /// Malformed frame or handshake on the wire.
+    Corrupt(String),
+    /// Underlying socket error.
+    Io(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Timeout { link, dir, key } => {
+                write!(f, "transport: timed out waiting for message {key} on link {link} {dir}")
+            }
+            TransportError::Disconnected { link, dir } => {
+                write!(f, "transport: link {link} {dir} disconnected")
+            }
+            TransportError::NoSuchLink { link } => {
+                write!(f, "transport: no such link {link}")
+            }
+            TransportError::NoPeer { stage, dir } => {
+                write!(f, "transport: stage {stage} has no {dir} peer")
+            }
+            TransportError::Corrupt(msg) => write!(f, "transport: corrupt frame: {msg}"),
+            TransportError::Io(msg) => write!(f, "transport: io: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e.to_string())
+    }
+}
+
+/// A delivered message, as seen by the receiver.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// Sender-chosen key (the coordinator uses the microbatch id).
+    pub key: u64,
+    /// Payload bytes that crossed the wire.
+    pub bytes: usize,
+    /// Arrival time: simulated seconds (sim backend) or wall-clock
+    /// seconds since the transport started (real backends).
+    pub arrival: f64,
+    /// The payload itself on real backends; `None` on the simulator
+    /// (tensors stay in-process, only sizes are charged).
+    pub payload: Option<Vec<u8>>,
+}
+
+/// What a sender hands the transport: a byte count (the simulator's
+/// fast path — nothing is materialized) or the actual encoded message
+/// (real backends put exactly these bytes on the wire; the simulator
+/// charges their length).
+#[derive(Clone, Copy, Debug)]
+pub enum Payload<'a> {
+    Size(usize),
+    Bytes(&'a [u8]),
+}
+
+impl Payload<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Size(n) => *n,
+            Payload::Bytes(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The send/recv surface of one pipeline's inter-stage network, plus the
+/// per-worker clocks and the byte-accounting ledger the coordinator
+/// reports from. Link `i` connects stage `i` to stage `i + 1`;
+/// `Dir::Fwd` carries activations downstream, `Dir::Bwd` gradients
+/// upstream.
+pub trait Transport {
+    fn backend(&self) -> Backend;
+
+    fn num_links(&self) -> usize;
+
+    /// Real backends need the actual encoded bytes; the simulator only
+    /// counts them. Senders use this to skip encoding on the sim path.
+    fn wants_payload(&self) -> bool {
+        self.backend().is_real()
+    }
+
+    /// Ship one message over `link`/`dir` under mailbox key `key`.
+    /// `raw_bytes` is the uncompressed payload size (ledger accounting);
+    /// `now` is the sender's virtual clock (ignored by real backends).
+    /// Returns the message's (simulated or measured) departure-complete
+    /// time; the authoritative arrival time rides on the received
+    /// [`Frame`].
+    fn send(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        payload: Payload<'_>,
+        raw_bytes: usize,
+        now: f64,
+    ) -> Result<f64, TransportError>;
+
+    /// Receive the message with `key` from `link`/`dir`. The simulator
+    /// fails immediately with `Timeout` if the message was never sent;
+    /// real backends block up to their configured receive window.
+    fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError>;
+
+    // ---- worker clocks (virtual on sim, wall-clock on real) ---------------
+
+    fn clock(&self, stage: usize) -> f64;
+
+    /// Move a stage's clock forward (no-op on real backends: wall time
+    /// advances by itself).
+    fn advance(&mut self, stage: usize, to: f64);
+
+    /// Synchronization point (optimizer step); returns the barrier time.
+    fn barrier(&mut self) -> f64;
+
+    /// Latest worker clock — the measured (simulated or wall) makespan.
+    fn makespan(&self) -> f64;
+
+    // ---- accounting -------------------------------------------------------
+
+    /// The exact byte ledger (per-link/direction message stats). On real
+    /// backends its `sim_time_s` column stays the *modelled* estimate;
+    /// the measured wall tx time is [`Transport::wire_elapsed_s`].
+    fn ledger(&self) -> &NetSim;
+
+    /// Bandwidth-occupancy seconds: simulated serialization time on the
+    /// simulator, measured wall-clock socket-write time on real backends.
+    fn busy_time(&self) -> f64;
+
+    /// Measured wall-clock seconds spent putting frames on the wire
+    /// (0 on the simulator) — the `wire_elapsed_s` run metric.
+    fn wire_elapsed_s(&self) -> f64 {
+        0.0
+    }
+
+    /// Clear mailboxes, clocks, and accounting (connections stay up).
+    fn reset(&mut self);
+
+    /// Gracefully close the underlying streams; no-op on the simulator.
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!(Backend::parse("sim").unwrap(), Backend::Sim);
+        assert_eq!(Backend::parse("tcp").unwrap(), Backend::Tcp);
+        assert_eq!(Backend::parse("uds").unwrap(), Backend::Uds);
+        assert_eq!(Backend::parse("unix").unwrap(), Backend::Uds);
+        assert!(Backend::parse("carrier-pigeon").is_err());
+        assert!(!Backend::Sim.is_real());
+        assert!(Backend::Tcp.is_real() && Backend::Uds.is_real());
+        assert_eq!(Backend::Uds.to_string(), "uds");
+    }
+
+    #[test]
+    fn errors_display_and_convert() {
+        let e = TransportError::Timeout { link: 1, dir: Dir::Fwd, key: 7 };
+        assert!(e.to_string().contains("link 1"));
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
+        assert!(matches!(TransportError::from(io), TransportError::Io(_)));
+        // anyhow interop: `?` on a TransportError works in anyhow fns
+        fn f() -> anyhow::Result<()> {
+            let r: Result<(), TransportError> = Err(TransportError::NoSuchLink { link: 3 });
+            r?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("link 3"));
+    }
+
+    #[test]
+    fn payload_length() {
+        assert_eq!(Payload::Size(10).len(), 10);
+        assert_eq!(Payload::Bytes(&[1, 2, 3]).len(), 3);
+        assert!(Payload::Size(0).is_empty());
+        assert!(!Payload::Bytes(&[0]).is_empty());
+    }
+}

@@ -104,6 +104,85 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench_with_budget(name, Duration::from_millis(500), f)
 }
 
+/// CLI-driven bench suite for the `harness = false` targets: `--quick`
+/// shrinks per-bench budgets (the CI smoke lane), `--json <path>` writes
+/// a machine-readable summary of every recorded result — the start of a
+/// `BENCH_*.json` trajectory across commits.
+pub struct Suite {
+    quick: bool,
+    json_path: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    /// Parse `--quick` / `--json <path>` from the process arguments
+    /// (cargo forwards everything after `--` to the bench binary).
+    pub fn from_env_args() -> Suite {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut quick = false;
+        let mut json_path = None;
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--json" => json_path = it.next().cloned(),
+                _ => {}
+            }
+        }
+        Suite { quick, json_path, results: Vec::new() }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    pub fn budget(&self) -> Duration {
+        if self.quick {
+            Duration::from_millis(25)
+        } else {
+            Duration::from_millis(500)
+        }
+    }
+
+    /// Time `f` under the suite's budget and record the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = bench_with_budget(name, self.budget(), f);
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Record an externally timed single-sample measurement (end-to-end
+    /// flows that cannot run under the adaptive harness).
+    pub fn record(&mut self, name: &str, dur: Duration) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            min: dur,
+            median: dur,
+            mean: dur,
+        });
+    }
+
+    /// Write the JSON summary if `--json` was given; call once at exit.
+    pub fn finish(&self) {
+        let Some(path) = &self.json_path else { return };
+        use crate::util::json::Json;
+        let mut o = Json::object();
+        for r in &self.results {
+            let mut e = Json::object();
+            e.set("iters", Json::Num(r.iters as f64));
+            e.set("min_ns", Json::Num(r.min.as_nanos() as f64));
+            e.set("median_ns", Json::Num(r.median.as_nanos() as f64));
+            e.set("mean_ns", Json::Num(r.mean.as_nanos() as f64));
+            o.set(&r.name, e);
+        }
+        match std::fs::write(path, o.to_string()) {
+            Ok(()) => println!("(bench summary written to {path})"),
+            Err(e) => eprintln!("failed writing {path}: {e}"),
+        }
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -121,6 +200,36 @@ mod tests {
         });
         assert!(r.min <= r.median && r.median <= r.mean.max(r.median));
         assert!(r.iters >= 10);
+    }
+
+    #[test]
+    fn suite_records_and_reports_budget() {
+        let mut s = Suite { quick: true, json_path: None, results: Vec::new() };
+        assert_eq!(s.budget(), Duration::from_millis(25));
+        s.bench("noop", || {
+            black_box(1u64 + 1);
+        });
+        assert_eq!(s.results.len(), 1);
+        assert_eq!(s.results[0].name, "noop");
+        s.finish(); // no json path: a no-op
+    }
+
+    #[test]
+    fn suite_writes_json_summary() {
+        let path = std::env::temp_dir().join(format!("mpcomp-bench-{}.json", std::process::id()));
+        let mut s = Suite {
+            quick: true,
+            json_path: Some(path.to_str().unwrap().to_string()),
+            results: Vec::new(),
+        };
+        s.bench("a/b", || {
+            black_box(2u64 * 3);
+        });
+        s.finish();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert!(j.get("a/b").unwrap().get("median_ns").unwrap().num().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

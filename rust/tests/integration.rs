@@ -5,6 +5,7 @@
 use mpcomp::compression::{ops, wire, Spec};
 use mpcomp::config::{CompressImpl, TrainConfig};
 use mpcomp::coordinator::Trainer;
+use mpcomp::netsim::Transport as _;
 use mpcomp::runtime::{lit_scalar, lit_vec, Runtime};
 use mpcomp::util::rng::Rng;
 
@@ -201,7 +202,8 @@ fn warmup_epochs_send_uncompressed_bytes() {
     let mut trainer = Trainer::new(rt, cfg).unwrap();
     trainer.run().unwrap();
     // all traffic was uncompressed during warmup
-    assert_eq!(trainer.net.total_bytes(), trainer.net.total_uncompressed_bytes());
+    let ledger = trainer.net.ledger();
+    assert_eq!(ledger.total_bytes(), ledger.total_uncompressed_bytes());
 }
 
 #[test]
