@@ -3,6 +3,7 @@
 //! quantitative). Run with `cargo bench --bench wire`.
 
 use mpcomp::compression::{ops, wire};
+use mpcomp::coordinator::feedback;
 use mpcomp::util::bench::{black_box, header, Suite};
 use mpcomp::util::rng::Rng;
 
@@ -49,6 +50,39 @@ fn main() {
         black_box(wire::encode_raw(black_box(&x)));
     })
     .report_throughput(n as f64, "elem");
+
+    // EF21/AQ-SGD delta frames: gap-coded compressed deltas + protocol
+    // header (gen, key, buffer digest)
+    let buf = randvec(n, 2);
+    for frac in [0.1f32, 0.02] {
+        let (msg, k) = feedback::delta_topk(&x, &buf, frac);
+        let digest = feedback::buffer_digest(&buf);
+        suite
+            .bench(&format!("encode_delta_{}pct/{n}", (frac * 100.0) as u32), || {
+                black_box(wire::encode_delta(
+                    wire::FB_EF21,
+                    1,
+                    0,
+                    digest,
+                    black_box(&msg),
+                    k,
+                ));
+            })
+            .report_throughput(n as f64, "elem");
+        let enc = wire::encode_delta(wire::FB_EF21, 1, 0, digest, &msg, k);
+        suite
+            .bench(&format!("decode_delta_{}pct/{n}", (frac * 100.0) as u32), || {
+                black_box(wire::decode_delta(black_box(&enc)).unwrap());
+            })
+            .report_throughput(n as f64, "elem");
+        println!(
+            "  delta frame at {}%: {} B vs {} B sparse ({:+.1}%)",
+            (frac * 100.0) as u32,
+            enc.len(),
+            wire::sparse_wire_bytes(n, k),
+            100.0 * (enc.len() as f64 / wire::sparse_wire_bytes(n, k) as f64 - 1.0)
+        );
+    }
 
     // crossover table: index-list vs bitmap encoding size by density
     println!("\nsparse encoding size by density (n = {n}):");

@@ -1,31 +1,142 @@
-//! Error-feedback state machines owned by the coordinator, one per link
-//! per direction (paper §2.4-§2.5).
+//! Error-feedback state machines, split into sender and receiver
+//! halves (paper §2.4-§2.5; AQ-SGD is Wang et al., arXiv 2206.01299 — a
+//! *two-sided* protocol where both endpoints hold the per-sample
+//! buffer).
 //!
 //! * **EF** (Seide et al.): global buffer `e`; send `C(x+e)`, carry the
 //!   residual. "Global" = one buffer per compression operator, shared
-//!   across batches (the paper's global-batch-buffer design).
+//!   across batches (the paper's global-batch-buffer design). The
+//!   message *is* the payload, so no receiver state is needed.
 //! * **EF-mixed** (paper's variant): half the K budget on the input,
-//!   half on the buffer.
+//!   half on the buffer. Also stateless on the receiver.
 //! * **EF21** (Richtárik et al.): buffer `g` tracks the receiver's view;
-//!   send `C(x-g)`, `g += C(x-g)`.
+//!   send `C(x-g)`, `g += C(x-g)` — **on both ends**. Only the
+//!   compressed delta crosses the wire ([`crate::compression::wire`]
+//!   delta frames); the receiver applies the same update to its mirror.
 //! * **AQ-SGD** (Wang et al.): EF21-style delta compression with one
 //!   buffer **per training sample** (here: per microbatch id — the
 //!   paper's per-batch buffer), activations only. The first time a
 //!   sample is seen its activations go uncompressed (buffer bootstrap),
-//!   as in the original AQ-SGD design.
+//!   and the receiver stores the same image.
+//!
+//! The same deterministic state machine runs in both roles:
+//! [`FeedbackState::sender_encode`] produces the wire frame and advances
+//! the sender buffer; [`FeedbackState::apply_frame`] decodes it on the
+//! receiver and must arrive at a bit-identical buffer. Every delta frame
+//! carries a per-channel generation counter (reordering/loss shows up as
+//! [`FeedbackError::GenerationSkew`]) and an FNV-1a digest of the
+//! sender's post-update buffer (any divergence — a corrupted value, a
+//! kernel/native mismatch — is [`FeedbackError::DigestMismatch`] at
+//! decode time instead of silently corrupted training).
 
 use std::collections::HashMap;
+use std::fmt;
 
-use crate::compression::Feedback;
+use crate::compression::wire::{self, DeltaFrame, FB_AQSGD, FB_AQSGD_BOOT, FB_EF21};
+use crate::compression::{ops, Feedback};
 use crate::tensor::Tensor;
 
-/// Feedback state for one (link, direction).
-#[derive(Debug, Default)]
+/// Typed failures of the two-sided delta protocol. Wire-level parse
+/// failures (truncation, bad tags) are `wire::decode_delta` errors;
+/// these are the *state* errors a structurally-valid frame can hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FeedbackError {
+    /// Frame generation does not match the receiver's counter: a frame
+    /// was lost, duplicated, or reordered. The mirror is untouched.
+    GenerationSkew { expected: u64, got: u64 },
+    /// The reconstructed buffer's digest disagrees with the sender's:
+    /// the two ends have diverged. The mirror is untouched (the
+    /// reconstruction is discarded, not committed).
+    DigestMismatch { gen: u64, key: u64, expected: u64, got: u64 },
+    /// The frame's feedback tag is not the mode this channel runs.
+    ModeMismatch { expected: Feedback, got: u8 },
+    /// An AQ-SGD update arrived for a sample never bootstrapped.
+    MissingBootstrap { key: u64 },
+    /// The frame's element count does not match the link.
+    SizeMismatch { expected: usize, got: usize },
+}
+
+impl fmt::Display for FeedbackError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FeedbackError::GenerationSkew { expected, got } => {
+                write!(f, "feedback: generation skew (expected {expected}, frame carries {got})")
+            }
+            FeedbackError::DigestMismatch { gen, key, expected, got } => write!(
+                f,
+                "feedback: buffer digest mismatch at gen {gen} key {key}: \
+                 sender {expected:016x}, receiver {got:016x}"
+            ),
+            FeedbackError::ModeMismatch { expected, got } => {
+                write!(f, "feedback: frame mode tag {got} on a {expected:?} channel")
+            }
+            FeedbackError::MissingBootstrap { key } => {
+                write!(f, "feedback: AQ-SGD update for sample {key} before its bootstrap")
+            }
+            FeedbackError::SizeMismatch { expected, got } => {
+                write!(f, "feedback: frame has {got} elements, link carries {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FeedbackError {}
+
+/// FNV-1a over a buffer's f32 LE byte image — the digest delta frames
+/// carry (identical to `util::fnv1a` over the serialized buffer).
+pub fn buffer_digest(data: &[f32]) -> u64 {
+    crate::util::fnv1a_iter(data.iter().flat_map(|v| v.to_le_bytes()))
+}
+
+/// Zero entries of `delta` below `thresh`; returns the dense wire
+/// message and the count of its nonzeros (what the codec will encode).
+pub fn mask_delta(delta: &[f32], thresh: f32) -> (Vec<f32>, usize) {
+    let mut k = 0usize;
+    let msg = delta
+        .iter()
+        .map(|&d| {
+            if d.abs() >= thresh {
+                if d != 0.0 {
+                    k += 1;
+                }
+                d
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (msg, k)
+}
+
+/// Sender-side TopK delta of `x` against the buffer: threshold at the
+/// K-fraction budget, zero the rest.
+pub fn delta_topk(x: &[f32], buf: &[f32], frac: f32) -> (Vec<f32>, usize) {
+    let delta: Vec<f32> = x.iter().zip(buf).map(|(a, b)| a - b).collect();
+    let thresh = ops::threshold_for_frac(&delta, frac);
+    mask_delta(&delta, thresh)
+}
+
+/// The reconstruction rule *both* halves apply: start from the buffer
+/// and add exactly the entries that go on the wire (zeros in the
+/// message leave the buffer byte-identical — the property the digest
+/// check depends on).
+pub fn reconstruct(buf: &[f32], delta_msg: &[f32]) -> Vec<f32> {
+    buf.iter()
+        .zip(delta_msg)
+        .map(|(&g, &d)| if d != 0.0 { g + d } else { g })
+        .collect()
+}
+
+/// Feedback state for one endpoint of one (link, direction) channel —
+/// the sender's buffers, or the receiver's mirror of them.
+#[derive(Clone, Debug, Default)]
 pub struct FeedbackState {
     /// Global buffer (EF / EF-mixed residual, or EF21 receiver view).
     global: Option<Tensor>,
     /// AQ-SGD per-sample buffers, keyed by microbatch id.
     per_sample: HashMap<u64, Tensor>,
+    /// Next delta-frame generation on this channel (send or expect).
+    gen: u64,
 }
 
 impl FeedbackState {
@@ -36,6 +147,10 @@ impl FeedbackState {
     /// Global buffer, zero-initialized on first use.
     pub fn global_mut(&mut self, n: usize) -> &mut Tensor {
         self.global.get_or_insert_with(|| Tensor::zeros(vec![n]))
+    }
+
+    pub fn global(&self) -> Option<&Tensor> {
+        self.global.as_ref()
     }
 
     pub fn set_global(&mut self, t: Tensor) {
@@ -52,17 +167,140 @@ impl FeedbackState {
         self.per_sample.insert(key, t);
     }
 
+    /// Generation the next delta frame on this channel will carry (or
+    /// the one the receiver expects).
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Claim the next generation (sender side).
+    pub fn next_gen(&mut self) -> u64 {
+        let g = self.gen;
+        self.gen += 1;
+        g
+    }
+
     /// Bytes held by this state (the AQ-SGD memory-footprint metric the
-    /// paper's future-work section worries about).
+    /// paper's future-work section worries about), derived from the
+    /// tensor element size.
     pub fn memory_bytes(&self) -> usize {
-        let g = self.global.as_ref().map(|t| 4 * t.len()).unwrap_or(0);
-        let p: usize = self.per_sample.values().map(|t| 4 * t.len()).sum();
+        let g = self.global.as_ref().map(Tensor::byte_len).unwrap_or(0);
+        let p: usize = self.per_sample.values().map(Tensor::byte_len).sum();
         g + p
     }
 
     pub fn reset(&mut self) {
         self.global = None;
         self.per_sample.clear();
+        self.gen = 0;
+    }
+
+    // ---- the two protocol halves ------------------------------------------
+
+    /// Sender half of one EF21/AQ-SGD message: compress `x` into a
+    /// delta frame against this state's buffer (AQ-SGD first visits
+    /// bootstrap), advance the buffer and the generation counter, and
+    /// return `(wire frame, reconstruction)` — the reconstruction is
+    /// what the receiver mirror must arrive at, bit for bit.
+    pub fn sender_encode(
+        &mut self,
+        fb: Feedback,
+        key: u64,
+        x: &[f32],
+        frac: f32,
+    ) -> anyhow::Result<(Vec<u8>, Vec<f32>)> {
+        match fb {
+            Feedback::AqSgd if self.sample(key).is_none() => {
+                let digest = buffer_digest(x);
+                let gen = self.next_gen();
+                self.set_sample(key, Tensor::from_vec(x.to_vec()));
+                Ok((wire::encode_delta_bootstrap(gen, key, digest, x), x.to_vec()))
+            }
+            Feedback::AqSgd | Feedback::Ef21 => {
+                let buf = match fb {
+                    Feedback::AqSgd => self.sample(key).expect("bootstrap handled").data().to_vec(),
+                    _ => self.global_mut(x.len()).data().to_vec(),
+                };
+                let (msg, k) = delta_topk(x, &buf, frac);
+                let recon = reconstruct(&buf, &msg);
+                let digest = buffer_digest(&recon);
+                let gen = self.next_gen();
+                let tag = if fb == Feedback::AqSgd { FB_AQSGD } else { FB_EF21 };
+                let frame = wire::encode_delta(tag, gen, key, digest, &msg, k);
+                let flat = Tensor::from_vec(recon.clone());
+                match fb {
+                    Feedback::AqSgd => self.set_sample(key, flat),
+                    _ => self.set_global(flat),
+                }
+                Ok((frame, recon))
+            }
+            other => anyhow::bail!("{other:?} does not use the delta protocol"),
+        }
+    }
+
+    /// Receiver half: apply one decoded delta frame to this mirror.
+    /// Verifies the generation counter *before* touching state and the
+    /// buffer digest *before* committing the reconstruction, so every
+    /// error leaves the mirror exactly as it was. Returns the
+    /// reconstructed tensor data.
+    pub fn apply_frame(
+        &mut self,
+        expect: Feedback,
+        frame: &DeltaFrame,
+        n: usize,
+    ) -> Result<Vec<f32>, FeedbackError> {
+        if frame.values.len() != n {
+            return Err(FeedbackError::SizeMismatch { expected: n, got: frame.values.len() });
+        }
+        let mode_ok = matches!(
+            (expect, frame.fb),
+            (Feedback::Ef21, FB_EF21) | (Feedback::AqSgd, FB_AQSGD | FB_AQSGD_BOOT)
+        );
+        if !mode_ok {
+            return Err(FeedbackError::ModeMismatch { expected: expect, got: frame.fb });
+        }
+        if frame.gen != self.gen {
+            return Err(FeedbackError::GenerationSkew { expected: self.gen, got: frame.gen });
+        }
+        let zero;
+        let recon = match frame.fb {
+            FB_AQSGD_BOOT => frame.values.clone(),
+            FB_AQSGD => {
+                let buf = self
+                    .sample(frame.key)
+                    .ok_or(FeedbackError::MissingBootstrap { key: frame.key })?;
+                reconstruct(buf.data(), &frame.values)
+            }
+            // zero-init the first EF21 reconstruction without touching
+            // state: a rejected frame must leave the mirror virgin
+            _ => {
+                let buf = match self.global() {
+                    Some(t) => t.data(),
+                    None => {
+                        zero = vec![0.0f32; n];
+                        &zero
+                    }
+                };
+                reconstruct(buf, &frame.values)
+            }
+        };
+        let got = buffer_digest(&recon);
+        if got != frame.digest {
+            return Err(FeedbackError::DigestMismatch {
+                gen: frame.gen,
+                key: frame.key,
+                expected: frame.digest,
+                got,
+            });
+        }
+        self.gen += 1;
+        let flat = Tensor::from_vec(recon.clone());
+        if frame.fb == FB_EF21 {
+            self.set_global(flat);
+        } else {
+            self.set_sample(frame.key, flat);
+        }
+        Ok(recon)
     }
 }
 
@@ -72,9 +310,16 @@ pub fn applies_to_bwd(fb: Feedback) -> bool {
     !matches!(fb, Feedback::AqSgd | Feedback::None)
 }
 
+/// Does this feedback mode ship delta-protocol frames (vs the message
+/// being the payload itself)?
+pub fn uses_delta_frames(fb: Feedback) -> bool {
+    matches!(fb, Feedback::Ef21 | Feedback::AqSgd)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::run_prop;
 
     #[test]
     fn global_zero_init() {
@@ -94,15 +339,25 @@ mod tests {
     }
 
     #[test]
-    fn memory_accounting() {
+    fn memory_accounting_derives_from_element_size() {
         let mut s = FeedbackState::new();
         assert_eq!(s.memory_bytes(), 0);
         s.global_mut(10);
         s.set_sample(0, Tensor::zeros(vec![100]));
         s.set_sample(1, Tensor::zeros(vec![100]));
-        assert_eq!(s.memory_bytes(), 4 * (10 + 200));
+        assert_eq!(s.memory_bytes(), std::mem::size_of::<f32>() * (10 + 200));
         s.reset();
         assert_eq!(s.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn generations_advance_and_reset() {
+        let mut s = FeedbackState::new();
+        assert_eq!(s.next_gen(), 0);
+        assert_eq!(s.next_gen(), 1);
+        assert_eq!(s.gen(), 2);
+        s.reset();
+        assert_eq!(s.gen(), 0);
     }
 
     #[test]
@@ -112,5 +367,192 @@ mod tests {
         assert!(applies_to_bwd(Feedback::Ef));
         assert!(applies_to_bwd(Feedback::EfMixed));
         assert!(applies_to_bwd(Feedback::Ef21));
+        assert!(uses_delta_frames(Feedback::Ef21) && uses_delta_frames(Feedback::AqSgd));
+        assert!(!uses_delta_frames(Feedback::Ef) && !uses_delta_frames(Feedback::None));
+    }
+
+    #[test]
+    fn digest_matches_byte_image_fnv() {
+        let data = [1.5f32, -2.0, 0.0];
+        let mut bytes = Vec::new();
+        for v in &data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(buffer_digest(&data), crate::util::fnv1a(&bytes));
+        assert_eq!(buffer_digest(&[]), crate::util::fnv1a(b""));
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn ef21_sender_and_mirror_agree() {
+        let mut sender = FeedbackState::new();
+        let mut mirror = FeedbackState::new();
+        let x = vec![3.0, -1.0, 0.5, -4.0, 0.1, 2.0, -0.2, 0.05];
+        for step in 0..5u64 {
+            let (frame, recon) = sender.sender_encode(Feedback::Ef21, step, &x, 0.25).unwrap();
+            let df = wire::decode_delta(&frame).unwrap();
+            assert_eq!(df.gen, step);
+            let got = mirror.apply_frame(Feedback::Ef21, &df, x.len()).unwrap();
+            assert_eq!(bits(&got), bits(&recon), "step {step}");
+        }
+        // repeated identical input converges: deltas vanish, frames shrink
+        let (frame, recon) = sender.sender_encode(Feedback::Ef21, 9, &x, 0.25).unwrap();
+        assert_eq!(bits(&recon), bits(sender.global().unwrap().data()));
+        assert!(frame.len() < 45, "converged delta frame should be near-empty: {}", frame.len());
+    }
+
+    #[test]
+    fn aqsgd_bootstrap_then_update() {
+        let mut sender = FeedbackState::new();
+        let mut mirror = FeedbackState::new();
+        let a = vec![1.0, -2.0, 3.0, -4.0];
+        let b = vec![0.5, 0.5, 0.5, 0.5];
+        // first visits bootstrap, interleaved across two sample keys
+        for (key, x) in [(7u64, &a), (3u64, &b), (7u64, &a), (3u64, &a)] {
+            let (frame, recon) = sender.sender_encode(Feedback::AqSgd, key, x, 0.5).unwrap();
+            let df = wire::decode_delta(&frame).unwrap();
+            let got = mirror.apply_frame(Feedback::AqSgd, &df, x.len()).unwrap();
+            assert_eq!(bits(&got), bits(&recon));
+        }
+        assert_eq!(mirror.sample(7).unwrap().data(), sender.sample(7).unwrap().data());
+        assert_eq!(mirror.memory_bytes(), sender.memory_bytes());
+    }
+
+    #[test]
+    fn reordered_frames_are_generation_skew_and_leave_state_alone() {
+        let mut sender = FeedbackState::new();
+        let mut mirror = FeedbackState::new();
+        let x0 = vec![1.0, 2.0, 3.0, 4.0];
+        let x1 = vec![4.0, 3.0, 2.0, 1.0];
+        let (f0, _) = sender.sender_encode(Feedback::Ef21, 0, &x0, 0.5).unwrap();
+        let (f1, _) = sender.sender_encode(Feedback::Ef21, 1, &x1, 0.5).unwrap();
+        let d0 = wire::decode_delta(&f0).unwrap();
+        let d1 = wire::decode_delta(&f1).unwrap();
+        let before = mirror.clone();
+        match mirror.apply_frame(Feedback::Ef21, &d1, 4) {
+            Err(FeedbackError::GenerationSkew { expected: 0, got: 1 }) => {}
+            other => panic!("want generation skew, got {other:?}"),
+        }
+        assert_eq!(mirror.gen(), before.gen());
+        assert!(mirror.global().is_none(), "skew must not touch the mirror");
+        // in-order application recovers
+        mirror.apply_frame(Feedback::Ef21, &d0, 4).unwrap();
+        mirror.apply_frame(Feedback::Ef21, &d1, 4).unwrap();
+        assert_eq!(mirror.global().unwrap().data(), sender.global().unwrap().data());
+    }
+
+    #[test]
+    fn corrupted_value_is_digest_mismatch_and_not_committed() {
+        let mut sender = FeedbackState::new();
+        let mut mirror = FeedbackState::new();
+        let x = vec![1.0, -2.0, 3.0, -4.0];
+        let (frame, _) = sender.sender_encode(Feedback::Ef21, 0, &x, 0.5).unwrap();
+        let mut df = wire::decode_delta(&frame).unwrap();
+        // flip one reconstructed value: structurally valid, semantically wrong
+        df.values[0] += 1.0;
+        match mirror.apply_frame(Feedback::Ef21, &df, 4) {
+            Err(FeedbackError::DigestMismatch { gen: 0, .. }) => {}
+            other => panic!("want digest mismatch, got {other:?}"),
+        }
+        assert_eq!(mirror.gen(), 0, "failed frame must not consume a generation");
+        assert!(mirror.global().is_none(), "corrupt frame must not be committed");
+    }
+
+    #[test]
+    fn update_before_bootstrap_and_mode_mismatch_are_typed() {
+        let mut sender = FeedbackState::new();
+        let x = vec![1.0, 2.0];
+        // build a structurally-valid AQ-SGD update by bootstrapping the
+        // sender, then replay both frames against fresh mirrors
+        sender.sender_encode(Feedback::AqSgd, 5, &x, 0.5).unwrap();
+        let (upd, _) = sender.sender_encode(Feedback::AqSgd, 5, &x, 0.5).unwrap();
+        let mut df = wire::decode_delta(&upd).unwrap();
+        df.gen = 0; // fresh mirror expects gen 0
+        let mut mirror = FeedbackState::new();
+        match mirror.apply_frame(Feedback::AqSgd, &df, 2) {
+            Err(FeedbackError::MissingBootstrap { key: 5 }) => {}
+            other => panic!("want missing bootstrap, got {other:?}"),
+        }
+        match mirror.apply_frame(Feedback::Ef21, &df, 2) {
+            Err(FeedbackError::ModeMismatch { .. }) => {}
+            other => panic!("want mode mismatch, got {other:?}"),
+        }
+        match mirror.apply_frame(Feedback::AqSgd, &df, 3) {
+            Err(FeedbackError::SizeMismatch { expected: 3, got: 2 }) => {}
+            other => panic!("want size mismatch, got {other:?}"),
+        }
+    }
+
+    /// Satellite pin: for random tensor streams and every `Feedback`
+    /// mode, the receiver reconstructs bit-identically to the sender's
+    /// local reconstruction over ≥100 steps, including AQ-SGD
+    /// bootstrap-then-update ordering across interleaved microbatch ids.
+    #[test]
+    fn prop_receiver_mirror_reconstructs_bit_identically() {
+        run_prop("mirror == sender over 100+ steps", 6, |g| {
+            let n = g.usize(4, 400);
+            let frac = *g.choose(&[0.5f32, 0.1, 0.05]);
+            // delta-protocol modes: full sender -> frame -> mirror path
+            for fb in [Feedback::Ef21, Feedback::AqSgd] {
+                let mut sender = FeedbackState::new();
+                let mut mirror = FeedbackState::new();
+                let mut last = vec![0.0f32; n];
+                for step in 0..110usize {
+                    let key = g.usize(0, 4) as u64; // interleaved sample ids
+                    let x = if step > 0 && g.bool() {
+                        last.clone() // repeats hit the near-zero-delta path
+                    } else {
+                        let mut v = vec![0.0f32; n];
+                        g.rng.fill_normal(&mut v, 0.0, 1.0);
+                        v
+                    };
+                    last = x.clone();
+                    let (frame, recon) =
+                        sender.sender_encode(fb, key, &x, frac).map_err(|e| e.to_string())?;
+                    let df = wire::decode_delta(&frame).map_err(|e| e.to_string())?;
+                    let got =
+                        mirror.apply_frame(fb, &df, n).map_err(|e| format!("step {step}: {e}"))?;
+                    if bits(&got) != bits(&recon) {
+                        return Err(format!("{fb:?} step {step}: mirror != sender"));
+                    }
+                }
+                if mirror.gen() != sender.gen() {
+                    return Err("generation counters diverged".into());
+                }
+            }
+            // payload-carrying modes: decode(encode(message)) is the message
+            for fb in [Feedback::None, Feedback::Ef, Feedback::EfMixed] {
+                let mut state = FeedbackState::new();
+                for _ in 0..110usize {
+                    let mut x = vec![0.0f32; n];
+                    g.rng.fill_normal(&mut x, 0.0, 1.0);
+                    let msg = match fb {
+                        Feedback::Ef => {
+                            let buf = state.global_mut(n).data().to_vec();
+                            let (c, e) = ops::ef_combine(&x, &buf, frac);
+                            state.set_global(Tensor::from_vec(e));
+                            c
+                        }
+                        Feedback::EfMixed => {
+                            let buf = state.global_mut(n).data().to_vec();
+                            let (c, e) = ops::ef_mixed(&x, &buf, frac);
+                            state.set_global(Tensor::from_vec(e));
+                            c
+                        }
+                        _ => ops::topk(&x, frac).0,
+                    };
+                    let k = msg.iter().filter(|&&v| v != 0.0).count();
+                    let decoded = wire::decode(&wire::encode_sparse(&msg, k))
+                        .map_err(|e| e.to_string())?;
+                    if bits(&decoded) != bits(&msg) {
+                        return Err(format!("{fb:?}: sparse roundtrip not bit-exact"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

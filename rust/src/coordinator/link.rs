@@ -10,15 +10,17 @@
 //! arrival time gates when the consuming stage may start (see
 //! `trainer`).
 //!
-//! On real backends the link materializes the actual wire-codec
-//! encoding, puts those bytes on the socket, and — for the stateless
-//! methods, where `decode(encode(x))` is bit-identical to the shipped
-//! tensor — hands the *decoded payload* downstream, so what the
-//! consumer sees genuinely crossed the wire. Error-feedback deltas
-//! (EF21/AQ-SGD) transmit the true compressed-delta bytes but hand the
-//! locally reconstructed tensor downstream, since reconstruction needs
-//! the receiver's buffer replica (state replication is a distributed
-//! protocol this repo does not model yet).
+//! The link materializes the actual wire-codec encoding and hands the
+//! *decoded* frame downstream, so what the consumer sees genuinely
+//! crossed the wire (on real backends; the simulator charges the same
+//! bytes and decodes the local copy). For the stateless methods
+//! `decode(encode(x))` is bit-identical to the shipped tensor. For
+//! EF21/AQ-SGD the protocol is two-sided ([`feedback`]): only the
+//! compressed delta frame crosses the wire, the link's **receiver
+//! mirror** applies `g += C(x-g)` (or the per-sample AQ-SGD update)
+//! locally, and the frame's generation counter + buffer digest turn any
+//! divergence into a typed decode-time error instead of silently
+//! corrupted training.
 //!
 //! Two execution paths produce bit-identical results (asserted by
 //! integration tests): `CompressImpl::Kernel` runs the L1 Pallas
@@ -30,7 +32,7 @@ use anyhow::{Context, Result};
 
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::CompressImpl;
-use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
+use crate::coordinator::feedback::{self, applies_to_bwd, FeedbackState};
 use crate::netsim::{Dir, Payload, Transport};
 use crate::runtime::{artifacts::CompressionFiles, lit_scalar, lit_vec, Runtime};
 use crate::tensor::Tensor;
@@ -44,6 +46,10 @@ pub struct CompressedLink {
     files: CompressionFiles,
     pub fwd_state: FeedbackState,
     pub bwd_state: FeedbackState,
+    /// Receiver halves of the EF21/AQ-SGD protocol: mirrors of the
+    /// peer's sender state, advanced only by decoding delta frames.
+    pub fwd_mirror: FeedbackState,
+    pub bwd_mirror: FeedbackState,
     /// Activation masks per in-flight microbatch (shared-index mode).
     masks: HashMap<u64, Vec<f32>>,
 }
@@ -57,6 +63,8 @@ impl CompressedLink {
             files,
             fwd_state: FeedbackState::new(),
             bwd_state: FeedbackState::new(),
+            fwd_mirror: FeedbackState::new(),
+            bwd_mirror: FeedbackState::new(),
             masks: HashMap::new(),
         }
     }
@@ -98,15 +106,14 @@ impl CompressedLink {
         self.transfer(rt, spec, imp, t, mb_key, train, Dir::Bwd, net, sent_at)
     }
 
-    /// Ship one message: send at the producer's virtual time, receive at
-    /// the consumer, return (tensor, arrival).
+    /// Ship one stateless message: send at the producer's virtual time,
+    /// receive at the consumer, return (tensor, arrival).
     ///
     /// `payload` is the materialized wire encoding (present only when the
     /// backend wants real bytes; its length is then the authoritative
-    /// byte count). When `roundtrip` holds, `decode(payload)` is
-    /// bit-identical to `t` and the decoded frame is handed downstream,
-    /// so on real backends the consumer sees exactly what crossed the
-    /// socket.
+    /// byte count). The codecs here are exact — `decode(payload)` is
+    /// bit-identical to `t` — so when a payload crossed a real socket
+    /// the decoded frame is handed downstream.
     #[allow(clippy::too_many_arguments)]
     fn ship(
         &self,
@@ -118,7 +125,6 @@ impl CompressedLink {
         sent_at: f64,
         t: Tensor,
         payload: Option<Vec<u8>>,
-        roundtrip: bool,
     ) -> Result<(Tensor, f64)> {
         let bytes = payload.as_ref().map_or(bytes, Vec::len);
         match &payload {
@@ -128,13 +134,11 @@ impl CompressedLink {
         let msg = net
             .recv(self.index, dir, mb_key)
             .with_context(|| format!("link {}: receiving message {mb_key}", self.index))?;
-        if roundtrip {
-            if let Some(p) = &msg.payload {
-                let data = wire::decode(p)
-                    .with_context(|| format!("link {}: decoding message {mb_key}", self.index))?;
-                let out = Tensor::new(t.shape().to_vec(), data)?;
-                return Ok((out, msg.arrival));
-            }
+        if let Some(p) = &msg.payload {
+            let data = wire::decode(p)
+                .with_context(|| format!("link {}: decoding message {mb_key}", self.index))?;
+            let out = Tensor::new(t.shape().to_vec(), data)?;
+            return Ok((out, msg.arrival));
         }
         Ok((t, msg.arrival))
     }
@@ -158,7 +162,7 @@ impl CompressedLink {
         match spec.method {
             Method::None => {
                 let payload = want.then(|| wire::encode_raw(t.data()));
-                self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone(), payload, true)
+                self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone(), payload)
             }
             Method::Quant { fw_bits, bw_bits } => {
                 let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
@@ -166,7 +170,7 @@ impl CompressedLink {
                 let bytes = wire::quant_wire_bytes(self.n, bits);
                 // encode_quant(x) decodes to exactly ops::quantize(x) == out
                 let payload = want.then(|| wire::encode_quant(t.data(), bits));
-                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, true)
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload)
             }
             Method::TopK { frac, shared_idx, feedback } => {
                 let fb = if train { feedback } else { Feedback::None };
@@ -182,12 +186,14 @@ impl CompressedLink {
                     let k = out.count_nonzero();
                     let bytes = wire::sparse_wire_bytes(self.n, k);
                     let payload = want.then(|| wire::encode_sparse(out.data(), k));
-                    return self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, true);
+                    return self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload);
                 }
-                // `delta_msg`, when set, is the dense form of the message
-                // that actually crosses the wire (EF21/AQ-SGD deltas); the
-                // receiver would reconstruct `out` against its buffer.
-                let (out, k_on_wire, delta_msg) = match fb {
+                // two-sided delta protocol: only the compressed delta
+                // crosses the wire, the receiver mirror reconstructs
+                if feedback::uses_delta_frames(fb) {
+                    return self.delta_transfer(rt, imp, t, frac, fb, mb_key, dir, net, sent_at);
+                }
+                let (out, k_on_wire) = match fb {
                     Feedback::None => {
                         let thresh = ops::threshold_for_frac(t.data(), frac);
                         let (xhat, mask) = self.topk(rt, imp, t, thresh)?;
@@ -195,44 +201,104 @@ impl CompressedLink {
                             self.masks.insert(mb_key, mask);
                         }
                         let k = xhat.count_nonzero();
-                        (xhat, k, None)
+                        (xhat, k)
                     }
-                    Feedback::Ef => {
-                        let (c, k) = self.ef_step(rt, imp, t, frac, dir)?;
-                        (c, k, None)
-                    }
-                    Feedback::EfMixed => {
-                        let (c, k) = self.efmixed_step(t, frac, dir)?;
-                        (c, k, None)
-                    }
-                    Feedback::Ef21 => self.ef21_step(rt, imp, t, frac, dir, None, want)?,
-                    Feedback::AqSgd => {
-                        debug_assert_eq!(dir, Dir::Fwd);
-                        match self.fwd_state.sample(mb_key).cloned() {
-                            None => {
-                                // bootstrap: first visit sends uncompressed
-                                self.fwd_state.set_sample(mb_key, t.clone());
-                                let payload = want.then(|| wire::encode_raw(t.data()));
-                                return self.ship(
-                                    net, dir, mb_key, raw, raw, sent_at, t.clone(), payload, true,
-                                );
-                            }
-                            Some(buf) => {
-                                self.ef21_step(rt, imp, t, frac, dir, Some((mb_key, buf)), want)?
-                            }
-                        }
-                    }
+                    Feedback::Ef => self.ef_step(rt, imp, t, frac, dir)?,
+                    Feedback::EfMixed => self.efmixed_step(t, frac, dir)?,
+                    Feedback::Ef21 | Feedback::AqSgd => unreachable!("delta protocol"),
                 };
                 let bytes = wire::sparse_wire_bytes(self.n, k_on_wire);
-                let (payload, roundtrip) = match delta_msg {
-                    // delta on the wire, locally reconstructed tensor downstream
-                    Some(d) => (want.then(|| wire::encode_sparse(&d, k_on_wire)), false),
-                    // the message IS the tensor: decode(encode) == out exactly
-                    None => (want.then(|| wire::encode_sparse(out.data(), k_on_wire)), true),
-                };
-                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload, roundtrip)
+                // the message IS the tensor: decode(encode) == out exactly
+                let payload = want.then(|| wire::encode_sparse(out.data(), k_on_wire));
+                self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload)
             }
         }
+    }
+
+    /// EF21/AQ-SGD transfer: run the sender half against this link's
+    /// feedback state (kernel or native), put the actual delta frame on
+    /// the transport, and hand downstream what the **receiver mirror**
+    /// reconstructs from the decoded frame — generation and digest
+    /// checked, so sender/receiver divergence fails loudly here.
+    #[allow(clippy::too_many_arguments)]
+    fn delta_transfer(
+        &mut self,
+        rt: &Runtime,
+        imp: CompressImpl,
+        t: &Tensor,
+        frac: f32,
+        fb: Feedback,
+        mb_key: u64,
+        dir: Dir,
+        net: &mut dyn Transport,
+        sent_at: f64,
+    ) -> Result<(Tensor, f64)> {
+        debug_assert!(fb != Feedback::AqSgd || dir == Dir::Fwd, "AQ-SGD is activations-only");
+        let frame = match imp {
+            // the native path IS the shared state machine
+            CompressImpl::Native => {
+                self.state_mut(dir).sender_encode(fb, mb_key, t.data(), frac)?.0
+            }
+            CompressImpl::Kernel => {
+                // bootstrap frames carry the raw tensor — no kernel runs,
+                // so the shared state machine handles the first visit
+                if fb == Feedback::AqSgd && self.fwd_state.sample(mb_key).is_none() {
+                    self.fwd_state.sender_encode(fb, mb_key, t.data(), frac)?.0
+                } else {
+                    let buf = match fb {
+                        Feedback::AqSgd => {
+                            self.fwd_state.sample(mb_key).expect("bootstrap handled").clone()
+                        }
+                        _ => self.state_mut(dir).global_mut(t.len()).clone(),
+                    };
+                    let delta: Vec<f32> =
+                        t.data().iter().zip(buf.data()).map(|(a, b)| a - b).collect();
+                    let thresh = ops::threshold_for_frac(&delta, frac);
+                    let (delta_msg, k) = feedback::mask_delta(&delta, thresh);
+                    // the pallas kernel produces the sender's new buffer;
+                    // padding lanes are truncated away before the digest
+                    let xp = t.padded_flat(self.padded_block());
+                    let mut gp = buf.data().to_vec();
+                    let fill = buf.data().last().copied().unwrap_or(0.0);
+                    gp.resize(self.padded, fill);
+                    let out = rt.call(
+                        &self.files.delta_topk,
+                        &[lit_vec(&xp), lit_vec(&gp), lit_scalar(thresh)],
+                    )?;
+                    let mut xhat = out[0].to_vec::<f32>()?;
+                    xhat.truncate(self.n);
+                    let digest = feedback::buffer_digest(&xhat);
+                    let state = self.state_mut_for(fb, dir);
+                    let gen = state.next_gen();
+                    let flat = Tensor::from_vec(xhat);
+                    match fb {
+                        Feedback::AqSgd => state.set_sample(mb_key, flat),
+                        _ => state.set_global(flat),
+                    }
+                    let tag = if fb == Feedback::AqSgd { wire::FB_AQSGD } else { wire::FB_EF21 };
+                    wire::encode_delta(tag, gen, mb_key, digest, &delta_msg, k)
+                }
+            }
+        };
+        let (index, n) = (self.index, self.n);
+        let raw = wire::raw_wire_bytes(n);
+        net.send(index, dir, mb_key, Payload::Bytes(&frame), raw, sent_at)?;
+        let msg = net
+            .recv(index, dir, mb_key)
+            .with_context(|| format!("link {index}: receiving message {mb_key}"))?;
+        // real backends deliver the socket bytes; the simulator charged
+        // the same frame and the local copy stands in for the wire image
+        let bytes = msg.payload.as_deref().unwrap_or(&frame);
+        let df = wire::decode_delta(bytes)
+            .with_context(|| format!("link {index}: decoding delta frame {mb_key}"))?;
+        let mirror = match dir {
+            Dir::Fwd => &mut self.fwd_mirror,
+            Dir::Bwd => &mut self.bwd_mirror,
+        };
+        let recon = mirror
+            .apply_frame(fb, &df, n)
+            .with_context(|| format!("link {index} {dir}: applying delta frame {mb_key}"))?;
+        Ok((Tensor::new(t.shape().to_vec(), recon)?, msg.arrival))
     }
 
     // ---- operator backends --------------------------------------------------
@@ -347,60 +413,6 @@ impl CompressedLink {
         Ok((Tensor::new(t.shape().to_vec(), msg)?, k))
     }
 
-    /// EF21 (global buffer) or AQ-SGD (per-sample buffer) delta step.
-    /// When `want_delta` holds, also returns the dense masked delta —
-    /// the message a real wire carries (the receiver reconstructs
-    /// against its buffer replica).
-    #[allow(clippy::too_many_arguments)]
-    fn ef21_step(
-        &mut self,
-        rt: &Runtime,
-        imp: CompressImpl,
-        t: &Tensor,
-        frac: f32,
-        dir: Dir,
-        sample: Option<(u64, Tensor)>,
-        want_delta: bool,
-    ) -> Result<(Tensor, usize, Option<Vec<f32>>)> {
-        let buf = match &sample {
-            Some((_, b)) => b.clone(),
-            None => self.state_mut(dir).global_mut(t.len()).clone(),
-        };
-        let delta: Vec<f32> = t.data().iter().zip(buf.data()).map(|(a, b)| a - b).collect();
-        let thresh = ops::threshold_for_frac(&delta, frac);
-        // exact-zero delta elements are never encoded (the codec skips
-        // them even when thresh == 0), so don't charge them either —
-        // keeps sim-charged bytes == real payload length on all backends
-        let k = delta.iter().filter(|&&d| d != 0.0 && d.abs() >= thresh).count();
-        let delta_msg = want_delta.then(|| {
-            delta
-                .iter()
-                .map(|&d| if d.abs() >= thresh { d } else { 0.0 })
-                .collect::<Vec<f32>>()
-        });
-        let xhat = match imp {
-            CompressImpl::Native => {
-                let (xh, _) = ops::ef21_step(t.data(), buf.data(), frac);
-                Tensor::new(t.shape().to_vec(), xh)?
-            }
-            CompressImpl::Kernel => {
-                let xp = t.padded_flat(self.padded_block());
-                let mut gp = buf.data().to_vec();
-                let fill = buf.data().last().copied().unwrap_or(0.0);
-                gp.resize(self.padded, fill);
-                let out =
-                    rt.call(&self.files.delta_topk, &[lit_vec(&xp), lit_vec(&gp), lit_scalar(thresh)])?;
-                Tensor::from_padded(t.shape(), &out[0].to_vec::<f32>()?)?
-            }
-        };
-        let flat = Tensor::new(vec![t.len()], xhat.data().to_vec())?;
-        match sample {
-            Some((key, _)) => self.fwd_state.set_sample(key, flat),
-            None => self.state_mut(dir).set_global(flat),
-        }
-        Ok((xhat, k, delta_msg))
-    }
-
     fn state_mut(&mut self, dir: Dir) -> &mut FeedbackState {
         match dir {
             Dir::Fwd => &mut self.fwd_state,
@@ -408,19 +420,35 @@ impl CompressedLink {
         }
     }
 
+    /// Sender state for a delta-protocol mode: AQ-SGD buffers live on
+    /// the forward state (activations only); EF21 is per-direction.
+    fn state_mut_for(&mut self, fb: Feedback, dir: Dir) -> &mut FeedbackState {
+        match fb {
+            Feedback::AqSgd => &mut self.fwd_state,
+            _ => self.state_mut(dir),
+        }
+    }
+
     fn padded_block(&self) -> usize {
         self.padded
     }
 
-    /// Reset all feedback state + masks (between runs).
+    /// Reset all feedback state (both halves) + masks (between runs).
     pub fn reset(&mut self) {
         self.fwd_state.reset();
         self.bwd_state.reset();
+        self.fwd_mirror.reset();
+        self.bwd_mirror.reset();
         self.masks.clear();
     }
 
-    /// Total feedback memory (paper's AQ-SGD footprint concern).
+    /// Total feedback memory, sender buffers plus receiver mirrors (the
+    /// paper's AQ-SGD footprint concern — doubled by the two-sided
+    /// protocol, which is exactly what this metric should show).
     pub fn feedback_memory_bytes(&self) -> usize {
-        self.fwd_state.memory_bytes() + self.bwd_state.memory_bytes()
+        self.fwd_state.memory_bytes()
+            + self.bwd_state.memory_bytes()
+            + self.fwd_mirror.memory_bytes()
+            + self.bwd_mirror.memory_bytes()
     }
 }

@@ -164,18 +164,43 @@ pub fn simulate_transport(
 /// Per-direction wire bytes of one message under a compression spec
 /// (what the trainer's links charge, computed without materializing).
 pub fn spec_wire_bytes(spec: &crate::compression::Spec, n: usize) -> (usize, usize) {
-    use crate::compression::{ops, wire, Method};
+    use crate::compression::{ops, wire, Feedback, Method};
     match spec.method {
         Method::None => (wire::raw_wire_bytes(n), wire::raw_wire_bytes(n)),
         Method::Quant { fw_bits, bw_bits } => {
             (wire::quant_wire_bytes(n, fw_bits), wire::quant_wire_bytes(n, bw_bits))
         }
-        Method::TopK { frac, .. } => {
+        Method::TopK { frac, feedback, .. } => {
             let k = ops::budget(n, frac);
-            let b = wire::sparse_wire_bytes(n, k);
-            (b, b)
+            let plain = wire::sparse_wire_bytes(n, k);
+            match feedback {
+                // receiver-side protocol: only the gap-coded delta frame
+                // crosses the wire
+                Feedback::Ef21 => {
+                    let d = delta_frame_estimate(n, frac);
+                    (d, d)
+                }
+                // activations ship deltas; gradients fall back to TopK
+                Feedback::AqSgd => (delta_frame_estimate(n, frac), plain),
+                _ => (plain, plain),
+            }
         }
     }
+}
+
+/// Representative steady-state EF21/AQ-SGD delta-frame size for a
+/// TopK-`frac` delta on an n-element link. Delta frames are
+/// data-dependent, but their steady-state support equals the TopK
+/// budget, so one deterministic synthetic delta measured through the
+/// real codec is representative (and exactly reproducible).
+pub fn delta_frame_estimate(n: usize, frac: f32) -> usize {
+    use crate::compression::wire;
+    let mut rng = crate::util::rng::Rng::new(0xef21);
+    let mut x = vec![0.0f32; n];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let zeros = vec![0.0f32; n];
+    let (msg, k) = crate::coordinator::feedback::delta_topk(&x, &zeros, frac);
+    wire::delta_update_bytes(&msg, k)
 }
 
 #[cfg(test)]
@@ -317,5 +342,19 @@ mod tests {
         let (f, b) = spec_wire_bytes(&Spec::parse("topk:10").unwrap(), n);
         let k = ops::budget(n, 0.1);
         assert_eq!((f, b), (wire::sparse_wire_bytes(n, k), wire::sparse_wire_bytes(n, k)));
+    }
+
+    #[test]
+    fn ef_delta_accounting_beats_plain_sparse() {
+        use crate::compression::{ops, wire, Spec};
+        let n = 16_384;
+        let plain = wire::sparse_wire_bytes(n, ops::budget(n, 0.1));
+        let (f, b) = spec_wire_bytes(&Spec::parse("ef21+topk:10").unwrap(), n);
+        assert_eq!(f, b, "EF21 runs the delta protocol in both directions");
+        assert!(f < plain, "ef21 frame {f} !< plain sparse {plain}");
+        assert_eq!(f, delta_frame_estimate(n, 0.1), "estimate is deterministic");
+        // AQ-SGD: deltas forward, plain TopK backward
+        let (f, b) = spec_wire_bytes(&Spec::parse("aqsgd+topk:10").unwrap(), n);
+        assert!(f < plain && b == plain);
     }
 }

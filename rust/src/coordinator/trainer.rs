@@ -11,10 +11,12 @@
 //! [`SimNet`] and arrivals are simulated; with `backend = tcp | uds`
 //! every compressed message actually crosses a loopback kernel socket
 //! ([`RealTransport`]) and `wire_elapsed_s` reports measured wall-clock
-//! tx time. Either way the tensor math is unaffected (the stateless
-//! codecs roundtrip bit-exactly), so trained parameters stay
-//! bit-identical across wire models *and* backends — asserted by
-//! integration tests.
+//! tx time. Either way the tensor math is unaffected: the stateless
+//! codecs roundtrip bit-exactly, and the EF21/AQ-SGD links hand
+//! downstream what their receiver mirrors reconstruct from the decoded
+//! delta frames (bit-identical to the sender by the digest contract) —
+//! so trained parameters stay bit-identical across wire models *and*
+//! backends, asserted by integration tests.
 
 use std::time::{Duration, Instant};
 
@@ -171,7 +173,8 @@ impl Trainer {
         Ok(())
     }
 
-    /// Feedback-state memory across all links (AQ-SGD footprint metric).
+    /// Feedback-state memory across all links, sender buffers plus
+    /// receiver mirrors (AQ-SGD footprint metric).
     pub fn feedback_memory_bytes(&self) -> usize {
         self.links.iter().map(|l| l.feedback_memory_bytes()).sum()
     }
@@ -237,6 +240,7 @@ impl Trainer {
         m.wire_sim_time_s = self.net.ledger().total_sim_time();
         m.sim_makespan_s = self.net.makespan();
         m.wire_elapsed_s = self.net.wire_elapsed_s();
+        m.feedback_memory_bytes = self.feedback_memory_bytes() as u64;
         Ok(m)
     }
 

@@ -2,17 +2,27 @@
 //! exchanging real compressed activations/gradients over the socket
 //! transport.
 //!
-//! Each rank walks the same {GPipe, 1F1B} schedule and executes only
-//! its stage's ops: a forward op receives the activation frame from the
-//! previous rank (blocking on the real mailbox) and sends the stage's
-//! output activation downstream; a backward op receives the gradient
-//! frame from the next rank and sends upstream. Message tensors are
-//! generated deterministically from `(seed, link, dir, mb)` and
-//! compressed with the configured (stateless) spec through the actual
-//! wire codecs, so the bytes on the socket are exactly what the trainer
-//! would ship — without needing the AOT artifacts, which makes the
-//! multi-process path runnable everywhere (including the CI `loopback`
-//! job).
+//! Each rank walks the same {GPipe, 1F1B} schedule (optionally repeated
+//! for `steps` rounds) and executes only its stage's ops: a forward op
+//! receives the activation frame from the previous rank (blocking on
+//! the real mailbox) and sends the stage's output activation
+//! downstream; a backward op receives the gradient frame from the next
+//! rank and sends upstream. Message tensors are generated
+//! deterministically from `(seed, link, dir, mb)` and compressed with
+//! the configured spec through the actual wire codecs, so the bytes on
+//! the socket are exactly what the trainer's links would ship — without
+//! needing the AOT artifacts, which makes the multi-process path
+//! runnable everywhere (including the CI `loopback` job).
+//!
+//! Error-feedback specs run the full two-sided protocol: every rank
+//! keeps sender [`FeedbackState`]s for the channels it produces and
+//! **receiver mirrors** for the channels it consumes; EF21/AQ-SGD
+//! frames carry only the compressed delta, and each received frame is
+//! applied to the mirror (generation + digest verified) before it
+//! counts as delivered. Repeating the schedule (`steps > 1`) exercises
+//! the AQ-SGD bootstrap-then-update path and is what makes the measured
+//! per-mailbox EF traffic drop below the plain-TopK baseline
+//! ([`compare_bytes`], pinned in CI).
 //!
 //! Every run produces a [`WorkerSummary`]: per-`(link, dir)` mailbox
 //! logs of `(key, bytes, payload digest)` in delivery order plus sent
@@ -22,16 +32,21 @@
 //! ordering, byte counts, and payload digests — which is the sim/real
 //! parity contract CI enforces across two OS processes.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Context, Result};
 
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::Schedule;
+use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
 use crate::coordinator::pipeline::{self, Op};
 use crate::netsim::{
     Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, WireModel,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+pub use crate::util::fnv1a;
 
 /// Parameters of one synthetic multi-process schedule run.
 #[derive(Clone, Debug)]
@@ -42,11 +57,15 @@ pub struct WorkerOpts {
     /// Elements per inter-stage tensor.
     pub link_elems: usize,
     pub schedule: Schedule,
-    /// Compression spec; stateless modes only (none / quant / plain topk).
+    /// Compression spec, including error-feedback modes (shared-index
+    /// masks are a trainer concern and stay rejected).
     pub spec: Spec,
     pub seed: u64,
     pub wire: WireModel,
     pub recv_timeout_s: f64,
+    /// Schedule repetitions: microbatch ids repeat across steps, so
+    /// AQ-SGD bootstraps once and then ships deltas.
+    pub steps: usize,
 }
 
 /// What one endpoint saw on one `(link, dir)` mailbox.
@@ -72,17 +91,9 @@ pub struct WorkerSummary {
     pub wire_elapsed_s: f64,
 }
 
-/// FNV-1a over a payload — the digest [`check`] compares across ranks.
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
-/// Deterministic synthetic tensor for the message `(link, dir, mb)`.
+/// Deterministic synthetic tensor for the message `(link, dir, mb)` —
+/// stable across steps, the fixed-batch analogue of revisiting the
+/// same training samples.
 fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Vec<f32> {
     let tag = ((link as u64) << 40) | ((dir.index() as u64) << 32) | mb as u64;
     let mut rng = Rng::with_stream(opts.seed, tag);
@@ -93,7 +104,14 @@ fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Vec<f32> {
 
 /// Compress + encode the message for `(link, dir, mb)` with the actual
 /// wire codecs (what the trainer's links put on a real socket).
-fn encode_message(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Result<Vec<u8>> {
+/// Feedback modes advance `state` — the sender half of this channel.
+fn encode_message(
+    opts: &WorkerOpts,
+    state: &mut FeedbackState,
+    link: usize,
+    dir: Dir,
+    mb: usize,
+) -> Result<Vec<u8>> {
     let x = gen_tensor(opts, link, dir, mb);
     match opts.spec.method {
         Method::None => Ok(wire::encode_raw(&x)),
@@ -102,25 +120,53 @@ fn encode_message(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Result
             Ok(wire::encode_quant(&x, bits))
         }
         Method::TopK { frac, shared_idx, feedback } => {
-            if shared_idx || feedback != Feedback::None {
+            if shared_idx {
                 bail!(
-                    "worker runs stateless compression only (got '{}'); \
-                     feedback state replication is a trainer concern",
+                    "worker does not model shared-index masks (got '{}')",
                     opts.spec.label()
                 );
             }
-            let (dense, _) = ops::topk(&x, frac);
-            let k = dense.iter().filter(|&&v| v != 0.0).count();
-            Ok(wire::encode_sparse(&dense, k))
+            match channel_feedback(feedback, dir) {
+                Feedback::None => {
+                    let (dense, _) = ops::topk(&x, frac);
+                    let k = dense.iter().filter(|&&v| v != 0.0).count();
+                    Ok(wire::encode_sparse(&dense, k))
+                }
+                Feedback::Ef => {
+                    let buf = state.global_mut(x.len()).data().to_vec();
+                    let (c, e) = ops::ef_combine(&x, &buf, frac);
+                    let k = c.iter().filter(|&&v| v != 0.0).count();
+                    state.set_global(crate::tensor::Tensor::from_vec(e));
+                    Ok(wire::encode_sparse(&c, k))
+                }
+                Feedback::EfMixed => {
+                    let buf = state.global_mut(x.len()).data().to_vec();
+                    let (c, e) = ops::ef_mixed(&x, &buf, frac);
+                    let k = c.iter().filter(|&&v| v != 0.0).count();
+                    state.set_global(crate::tensor::Tensor::from_vec(e));
+                    Ok(wire::encode_sparse(&c, k))
+                }
+                fb => Ok(state.sender_encode(fb, mb as u64, &x, frac)?.0),
+            }
         }
     }
 }
 
-/// Walk the schedule, executing send/recv for every stage `mine`
-/// accepts, and log what each mailbox saw. With `mine = |_| true` and a
-/// `SimNet` (or loopback real transport) this is the single-process
-/// replay; with `mine = |s| s == rank` over an endpoint transport it is
-/// one rank of a multi-process run.
+/// The feedback mode active on one channel direction (AQ-SGD is
+/// activations-only, so its backward channels run plain TopK).
+fn channel_feedback(fb: Feedback, dir: Dir) -> Feedback {
+    if dir == Dir::Bwd && !applies_to_bwd(fb) {
+        Feedback::None
+    } else {
+        fb
+    }
+}
+
+/// Walk the schedule (repeated `steps` times), executing send/recv for
+/// every stage `mine` accepts, and log what each mailbox saw. With
+/// `mine = |_| true` and a `SimNet` (or loopback real transport) this
+/// is the single-process replay; with `mine = |s| s == rank` over an
+/// endpoint transport it is one rank of a multi-process run.
 fn run_stages(
     opts: &WorkerOpts,
     net: &mut dyn Transport,
@@ -139,65 +185,89 @@ fn run_stages(
             })
         })
         .collect();
-    // payload digests recorded at send time, for backends whose frames
-    // carry no payload (the SimNet reference)
-    let mut sent_digests: Vec<std::collections::HashMap<u64, u64>> =
+    // per-channel protocol state: sender half for channels this endpoint
+    // produces, receiver mirror for channels it consumes
+    let mut senders: Vec<FeedbackState> = (0..links * 2).map(|_| FeedbackState::new()).collect();
+    let mut mirrors: Vec<FeedbackState> = (0..links * 2).map(|_| FeedbackState::new()).collect();
+    // frames recorded at send time, for backends whose delivered frames
+    // carry no payload (the SimNet reference decodes its local copy)
+    let mut sent_frames: Vec<HashMap<u64, Vec<u8>>> =
         (0..links * 2).map(|_| Default::default()).collect();
 
     let ops = pipeline::ops_for(opts.schedule, stages, opts.mb);
-    for op in &ops {
-        let (stage, mb, dir) = match *op {
-            Op::Fwd { stage, mb } => (stage, mb, Dir::Fwd),
-            Op::Bwd { stage, mb } => (stage, mb, Dir::Bwd),
-        };
-        if !mine(stage) {
-            continue;
-        }
-        let key = mb as u64;
-        // receive this op's input frame (if the stage has an input link)
-        let recv_link = match dir {
-            Dir::Fwd => stage.checked_sub(1),
-            Dir::Bwd => {
-                if stage + 1 < stages {
-                    Some(stage)
-                } else {
-                    None
-                }
-            }
-        };
-        if let Some(link) = recv_link {
-            let slot = link * 2 + dir.index();
-            let frame = net
-                .recv(link, dir, key)
-                .with_context(|| format!("rank recv link {link} {dir} mb {mb}"))?;
-            let digest = match &frame.payload {
-                Some(p) => fnv1a(p),
-                None => *sent_digests[slot]
-                    .get(&key)
-                    .context("sim reference: recv before send")?,
+    for step in 0..opts.steps.max(1) {
+        for op in &ops {
+            let (stage, mb, dir) = match *op {
+                Op::Fwd { stage, mb } => (stage, mb, Dir::Fwd),
+                Op::Bwd { stage, mb } => (stage, mb, Dir::Bwd),
             };
-            boxes[slot].recv.push((key, frame.bytes, digest));
-        }
-        // send this op's output frame (if the stage has an output link)
-        let send_link = match dir {
-            Dir::Fwd => {
-                if stage + 1 < stages {
-                    Some(stage)
-                } else {
-                    None
-                }
+            if !mine(stage) {
+                continue;
             }
-            Dir::Bwd => stage.checked_sub(1),
-        };
-        if let Some(link) = send_link {
-            let slot = link * 2 + dir.index();
-            let buf = encode_message(opts, link, dir, mb)?;
-            sent_digests[slot].insert(key, fnv1a(&buf));
-            let raw = wire::raw_wire_bytes(opts.link_elems);
-            net.send(link, dir, key, Payload::Bytes(&buf), raw, 0.0)
-                .with_context(|| format!("rank send link {link} {dir} mb {mb}"))?;
-            boxes[slot].sent_msgs += 1;
-            boxes[slot].sent_bytes += buf.len() as u64;
+            // transport keys are unique per message; the AQ-SGD sample
+            // key (inside the delta frame) stays the microbatch id
+            let key = (step * opts.mb + mb) as u64;
+            // receive this op's input frame (if the stage has an input link)
+            let recv_link = match dir {
+                Dir::Fwd => stage.checked_sub(1),
+                Dir::Bwd => {
+                    if stage + 1 < stages {
+                        Some(stage)
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(link) = recv_link {
+                let slot = link * 2 + dir.index();
+                let frame = net
+                    .recv(link, dir, key)
+                    .with_context(|| format!("rank recv link {link} {dir} mb {mb}"))?;
+                let local = sent_frames[slot].get(&key);
+                let buf: &[u8] = match (&frame.payload, local) {
+                    (Some(p), _) => p,
+                    (None, Some(l)) => l,
+                    (None, None) => bail!("sim reference: recv before send"),
+                };
+                // receiver half: delta frames must advance the mirror
+                // (generation + digest verified) before the payload
+                // counts as delivered — no silent state skew
+                if wire::is_delta_frame(buf) {
+                    let fb = match opts.spec.method {
+                        Method::TopK { feedback, .. } => channel_feedback(feedback, dir),
+                        _ => Feedback::None,
+                    };
+                    let df = wire::decode_delta(buf)
+                        .with_context(|| format!("link {link} {dir} mb {mb}"))?;
+                    mirrors[slot]
+                        .apply_frame(fb, &df, opts.link_elems)
+                        .with_context(|| format!("link {link} {dir} mb {mb}: mirror"))?;
+                }
+                boxes[slot].recv.push((key, frame.bytes, fnv1a(buf)));
+            }
+            // send this op's output frame (if the stage has an output link)
+            let send_link = match dir {
+                Dir::Fwd => {
+                    if stage + 1 < stages {
+                        Some(stage)
+                    } else {
+                        None
+                    }
+                }
+                Dir::Bwd => stage.checked_sub(1),
+            };
+            if let Some(link) = send_link {
+                let slot = link * 2 + dir.index();
+                let buf = encode_message(opts, &mut senders[slot], link, dir, mb)?;
+                if !net.wants_payload() {
+                    sent_frames[slot].insert(key, buf.clone());
+                }
+                let raw = wire::raw_wire_bytes(opts.link_elems);
+                net.send(link, dir, key, Payload::Bytes(&buf), raw, 0.0)
+                    .with_context(|| format!("rank send link {link} {dir} mb {mb}"))?;
+                boxes[slot].sent_msgs += 1;
+                boxes[slot].sent_bytes += buf.len() as u64;
+            }
         }
     }
     Ok(boxes)
@@ -309,6 +379,47 @@ pub fn check(reference: &WorkerSummary, workers: &[WorkerSummary]) -> Result<()>
     Ok(())
 }
 
+/// Byte-accounting check for the error-feedback protocol: summed per
+/// mailbox across `candidates` (e.g. the ranks of an EF run), sent
+/// bytes must never exceed the `baseline` run's (same schedule,
+/// feedback=none), and the grand total must be **strictly** below —
+/// the paper's communication-saving claim, enforced on measured
+/// traffic. Returns `(baseline_total, candidate_total)`.
+pub fn compare_bytes(
+    baseline: &WorkerSummary,
+    candidates: &[WorkerSummary],
+) -> Result<(u64, u64)> {
+    for c in candidates {
+        if c.boxes.len() != baseline.boxes.len() {
+            bail!(
+                "candidate {:?}: {} mailboxes, baseline has {}",
+                c.rank,
+                c.boxes.len(),
+                baseline.boxes.len()
+            );
+        }
+    }
+    let mut base_total = 0u64;
+    let mut cand_total = 0u64;
+    for (i, rb) in baseline.boxes.iter().enumerate() {
+        let cand: u64 = candidates.iter().map(|c| c.boxes[i].sent_bytes).sum();
+        if cand > rb.sent_bytes {
+            bail!(
+                "link {} {}: error feedback sent {cand} B, exceeding the {} B baseline",
+                rb.link,
+                rb.dir,
+                rb.sent_bytes
+            );
+        }
+        base_total += rb.sent_bytes;
+        cand_total += cand;
+    }
+    if cand_total >= base_total {
+        bail!("error feedback sent {cand_total} B, not below the {base_total} B baseline");
+    }
+    Ok((base_total, cand_total))
+}
+
 // ---------------------------------------------------------------------------
 // summary (de)serialization — the CI job diffs rank files via `--check`
 // ---------------------------------------------------------------------------
@@ -394,6 +505,11 @@ impl WorkerSummary {
     pub fn received(&self) -> usize {
         self.boxes.iter().map(|b| b.recv.len()).sum()
     }
+
+    /// Total bytes this endpoint sent across all mailboxes.
+    pub fn sent_bytes(&self) -> u64 {
+        self.boxes.iter().map(|b| b.sent_bytes).sum()
+    }
 }
 
 #[cfg(test)]
@@ -410,6 +526,7 @@ mod tests {
             seed: 11,
             wire: WireModel::datacenter(),
             recv_timeout_s: 5.0,
+            steps: 1,
         }
     }
 
@@ -443,9 +560,86 @@ mod tests {
     }
 
     #[test]
-    fn feedback_specs_are_rejected() {
-        let o = opts(2, 2, "ef21+topk:10");
+    fn shared_index_specs_are_rejected() {
+        let o = opts(2, 2, "topk:10:shared");
         assert!(run_reference(&o).is_err());
+    }
+
+    #[test]
+    fn every_feedback_mode_runs_and_is_deterministic() {
+        for mode in ["ef+topk:10", "efmixed+topk:10", "ef21+topk:10", "aqsgd+topk:30"] {
+            let mut o = opts(2, 3, mode);
+            o.steps = 2;
+            let a = run_reference(&o).unwrap_or_else(|e| panic!("{mode}: {e}"));
+            let b = run_reference(&o).unwrap();
+            assert_eq!(a.boxes, b.boxes, "{mode}: not deterministic");
+            for mbx in &a.boxes {
+                assert_eq!(mbx.recv.len(), 6, "{mode}: {} {}", mbx.link, mbx.dir);
+            }
+            check(&a, std::slice::from_ref(&b)).unwrap();
+        }
+    }
+
+    #[test]
+    fn multi_step_runs_repeat_the_schedule_with_unique_keys() {
+        let mut o = opts(2, 2, "none");
+        o.steps = 3;
+        let s = run_reference(&o).unwrap();
+        for mbx in &s.boxes {
+            assert_eq!(mbx.recv.len(), 6);
+            let keys: Vec<u64> = mbx.recv.iter().map(|r| r.0).collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 6, "transport keys must be unique: {keys:?}");
+        }
+    }
+
+    /// Acceptance pin: measured wire bytes under EF21 + Top10% (and
+    /// AQ-SGD once its buffers are warm) are strictly below the
+    /// feedback=none TopK baseline — the inversion PR 2 had is gone.
+    #[test]
+    fn error_feedback_cuts_wire_bytes_below_plain_topk() {
+        let big = |mode: &str| {
+            let mut o = opts(2, 4, mode);
+            o.link_elems = 4096;
+            o.steps = 10;
+            o
+        };
+        let base = run_reference(&big("topk:10")).unwrap();
+        let ef = run_reference(&big("ef21+topk:10")).unwrap();
+        let (b, c) = compare_bytes(&base, std::slice::from_ref(&ef)).unwrap();
+        assert!(c < b, "ef21 {c} !< baseline {b}");
+        // EF21 runs the delta protocol in both directions: every
+        // mailbox individually ships less
+        for (eb, bb) in ef.boxes.iter().zip(&base.boxes) {
+            assert!(eb.sent_bytes < bb.sent_bytes, "{} {}", eb.link, eb.dir);
+        }
+        let aq = run_reference(&big("aqsgd+topk:10")).unwrap();
+        let (b2, c2) = compare_bytes(&base, std::slice::from_ref(&aq)).unwrap();
+        assert!(c2 < b2, "aqsgd {c2} !< baseline {b2}");
+        // activations: bootstraps amortize into near-zero deltas;
+        // gradients fall back to plain TopK (equal bytes)
+        assert!(aq.boxes[0].sent_bytes < base.boxes[0].sent_bytes);
+        assert_eq!(aq.boxes[1].sent_bytes, base.boxes[1].sent_bytes);
+        // and a same-cost candidate fails the strict check
+        assert!(compare_bytes(&base, std::slice::from_ref(&base)).is_err());
+    }
+
+    #[test]
+    fn aqsgd_bootstraps_once_then_ships_deltas() {
+        let mut o = opts(2, 2, "aqsgd+topk:10");
+        o.steps = 3;
+        let s = run_reference(&o).unwrap();
+        let fwd = &s.boxes[0];
+        let boot = wire::delta_bootstrap_bytes(o.link_elems);
+        // step 1: both microbatches bootstrap at full size
+        assert_eq!(fwd.recv[0].1, boot);
+        assert_eq!(fwd.recv[1].1, boot);
+        // repeated identical samples: zero deltas, near-empty frames
+        for r in &fwd.recv[2..] {
+            assert!(r.1 < 64, "update frame {} B should be near-empty", r.1);
+        }
     }
 
     #[test]

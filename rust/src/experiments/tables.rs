@@ -242,7 +242,12 @@ pub struct SchedRow {
 /// where every row's traffic actually crosses the kernel and
 /// `wire_elapsed_s` is measured.
 pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
-    let modes = ["none", "topk:10", "topk:30", "quant:fw4-bw8"];
+    // ef21+topk:10 rides along to quantify the receiver-side protocol:
+    // its rows charge the measured delta-frame size (gap-coded indices
+    // + protocol header), which lands *below* the plain Top10% sparse
+    // frames — PR 2's accounting could not show this because EF bytes
+    // were sender-reconstructed
+    let modes = ["none", "topk:10", "topk:30", "quant:fw4-bw8", "ef21+topk:10"];
     // real backends measure one physical loopback link: running both
     // modelled wire profiles would duplicate identical I/O under
     // misleading labels, so they get a single "loopback" row set
@@ -350,6 +355,14 @@ pub fn schedule_ablation(opts: &ExpOpts) -> Result<()> {
             raw.busy_s,
             t10.busy_s
         );
+        let ef = sched_row(&rows, "wan", "EF21 + Top 10%", "gpipe");
+        println!(
+            "EF21 delta frames ship {:.2} MB vs {:.2} MB for plain Top 10% frames \
+             ({:.1}% less: receiver-side reconstruction, gap-coded indices)",
+            ef.sent_mb,
+            t10.sent_mb,
+            100.0 * (1.0 - ef.sent_mb / t10.sent_mb)
+        );
     } else {
         // real backend: busy/makespan columns are measured wall clock on
         // one physical loopback link
@@ -406,9 +419,17 @@ pub fn aqsgd_memory(opts: &ExpOpts) -> Result<()> {
     let mut trainer = Trainer::new(rt, cfg.clone())?;
     trainer.run()?;
     let bytes = trainer.feedback_memory_bytes();
-    let per_sample = 3.0 * 4.0; // 3 links x 4 bytes per element
-    println!("\nAQ-SGD buffer footprint: {:.1} MB for {} training examples", bytes as f64 / 1e6, cfg.train_size);
-    println!("  (grows linearly: ~{per_sample:.0} bytes x link elements per microbatch — the paper's noted limitation)");
+    // sender + receiver mirror on each of the 3 links, 4 bytes/element
+    let per_sample = 2.0 * 3.0 * 4.0;
+    println!(
+        "\nAQ-SGD buffer footprint: {:.1} MB for {} training examples (both protocol halves)",
+        bytes as f64 / 1e6,
+        cfg.train_size
+    );
+    println!(
+        "  (grows linearly: ~{per_sample:.0} bytes x link elements per microbatch — the \
+         paper's noted limitation, doubled by the two-sided protocol)"
+    );
     Ok(())
 }
 
@@ -429,7 +450,7 @@ mod tests {
     #[test]
     fn schedule_table_supports_paper_claims() {
         let rows = schedule_table(&SchedParams::default()).unwrap();
-        assert_eq!(rows.len(), 2 * 4 * 2);
+        assert_eq!(rows.len(), 2 * 5 * 2);
         for wire_name in ["wan", "datacenter"] {
             let g = sched_row(&rows, wire_name, "no compression", "gpipe");
             let o = sched_row(&rows, wire_name, "no compression", "1f1b");
@@ -449,6 +470,28 @@ mod tests {
         // the memory axis: gpipe stashes all 16, 1f1b at most stages+1
         assert_eq!(raw.peak_in_flight, 16);
         assert!(sched_row(&rows, "wan", "no compression", "1f1b").peak_in_flight <= 5);
+    }
+
+    /// Acceptance pin at the table level: the receiver-side EF21
+    /// protocol ships strictly fewer bytes (and so less wire-busy
+    /// time) than plain Top 10% — the opposite of PR 2's accounting,
+    /// where EF traffic could not beat its own base compressor.
+    #[test]
+    fn ef21_rows_undercut_plain_topk() {
+        let rows = schedule_table(&SchedParams::default()).unwrap();
+        for wire_name in ["wan", "datacenter"] {
+            for sched in ["gpipe", "1f1b"] {
+                let t10 = sched_row(&rows, wire_name, "Top 10%", sched);
+                let ef = sched_row(&rows, wire_name, "EF21 + Top 10%", sched);
+                assert!(
+                    ef.sent_mb < t10.sent_mb,
+                    "{wire_name}/{sched}: ef21 {} MB !< topk {} MB",
+                    ef.sent_mb,
+                    t10.sent_mb
+                );
+                assert!(ef.busy_s <= t10.busy_s + 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //!            [--backend sim|tcp|uds]
 //! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
 //!               [--mb N] [--link-elems N] [--compression M] [--schedule S]
-//!               [--seed N] [--out summary.json]
+//!               [--seed N] [--steps N] [--out summary.json]
 //! mpcomp worker --reference ... --out ref.json    # single-process SimNet replay
 //! mpcomp worker --check ref.json rank0.json rank1.json
+//! mpcomp worker --compare-bytes baseline.json rank0.json rank1.json
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -33,7 +34,7 @@ const VALUE_FLAGS: &[&str] = &[
     // exp schedule (transmission-simulator ablation) + worker
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
-    "recv-timeout",
+    "recv-timeout", "steps", "compare-bytes",
 ];
 
 fn main() -> Result<()> {
@@ -237,6 +238,21 @@ fn worker_cmd(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+    if let Some(basefile) = args.get("compare-bytes") {
+        let files = &args.positional[1..];
+        if files.is_empty() {
+            bail!("worker --compare-bytes <baseline.json> wants candidate summaries");
+        }
+        let baseline = WorkerSummary::load(basefile)?;
+        let candidates: Vec<WorkerSummary> =
+            files.iter().map(|f| WorkerSummary::load(f)).collect::<Result<_>>()?;
+        let (base, cand) = worker::compare_bytes(&baseline, &candidates)?;
+        println!(
+            "byte check OK: error feedback sent {cand} B vs {base} B baseline ({:.1}% saved)",
+            100.0 * (1.0 - cand as f64 / base as f64)
+        );
+        return Ok(());
+    }
     let opts = WorkerOpts {
         stages: args.usize("stages")?.unwrap_or(2),
         mb: args.usize("mb")?.unwrap_or(4),
@@ -249,6 +265,7 @@ fn worker_cmd(args: &Args) -> Result<()> {
             Some(v) => v.parse().context("--recv-timeout wants seconds")?,
             None => 20.0,
         },
+        steps: args.usize("steps")?.unwrap_or(1),
     };
     let summary = if args.has("reference") {
         worker::run_reference(&opts)?

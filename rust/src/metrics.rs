@@ -42,6 +42,9 @@ pub struct RunMetrics {
     /// communication overlapped, contention included).
     pub sim_makespan_s: f64,
     pub wall_time_s: f64,
+    /// Error-feedback buffer footprint at end of run, sender buffers
+    /// plus receiver mirrors (the paper's AQ-SGD memory concern).
+    pub feedback_memory_bytes: u64,
 }
 
 impl RunMetrics {
@@ -57,6 +60,7 @@ impl RunMetrics {
             wire_elapsed_s: 0.0,
             sim_makespan_s: 0.0,
             wall_time_s: 0.0,
+            feedback_memory_bytes: 0,
         }
     }
 
@@ -124,6 +128,7 @@ impl RunMetrics {
             .set("wire_elapsed_s", Json::Num(self.wire_elapsed_s))
             .set("sim_makespan_s", Json::Num(self.sim_makespan_s))
             .set("wall_time_s", Json::Num(self.wall_time_s))
+            .set("feedback_memory_bytes", Json::Num(self.feedback_memory_bytes as f64))
             .set(
                 "train_loss",
                 Json::from_f64s(&self.points.iter().map(|p| p.train_loss).collect::<Vec<_>>()),
@@ -216,6 +221,7 @@ mod tests {
         assert_eq!(parsed.get("best_eval_on").unwrap().num().unwrap(), 0.8);
         assert!(parsed.get("sim_makespan_s").is_ok());
         assert!(parsed.get("wire_elapsed_s").is_ok());
+        assert!(parsed.get("feedback_memory_bytes").is_ok());
         assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
     }
 

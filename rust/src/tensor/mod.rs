@@ -58,6 +58,12 @@ impl Tensor {
         &self.data
     }
 
+    /// Bytes this tensor's payload occupies, derived from the element
+    /// type (feedback-buffer memory accounting).
+    pub fn byte_len(&self) -> usize {
+        std::mem::size_of_val(self.data.as_slice())
+    }
+
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }

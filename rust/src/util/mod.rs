@@ -6,3 +6,21 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+
+/// FNV-1a over a byte slice — the digest shared by the multi-process
+/// parity checker (`coordinator::worker`) and the error-feedback buffer
+/// digests riding in delta frames (`coordinator::feedback`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_iter(bytes.iter().copied())
+}
+
+/// FNV-1a over a byte stream (the one definition of the wire digest;
+/// lets callers hash serialized views without materializing them).
+pub fn fnv1a_iter(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}

@@ -133,6 +133,7 @@ fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u6
         seed,
         wire: WireModel::datacenter(),
         recv_timeout_s: 10.0,
+        steps: 1,
     }
 }
 
@@ -140,13 +141,16 @@ fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u6
 fn prop_real_backend_matches_sim_mailboxes() {
     // For the same schedule, the TCP loopback transport must deliver
     // the same per-(link, dir) mailbox ordering, byte counts, and
-    // payload digests as the SimNet reference.
+    // payload digests as the SimNet reference — error-feedback specs
+    // included (the delta protocol runs its receiver mirrors on both).
     run_prop("tcp mailboxes == sim mailboxes", 6, |g| {
         let stages = g.usize(2, 3);
         let mb = g.usize(1, 4);
         let elems = g.usize(8, 200);
-        let mode = *g.choose(&["none", "topk:10", "quant:fw4-bw6"]);
+        let mode =
+            *g.choose(&["none", "topk:10", "quant:fw4-bw6", "ef21+topk:10", "aqsgd+topk:30"]);
         let mut opts = worker_opts(stages, mb, elems, mode, g.usize(0, 1 << 20) as u64);
+        opts.steps = g.usize(1, 2);
         if g.bool() {
             opts.schedule = Schedule::OneFOneB;
         }

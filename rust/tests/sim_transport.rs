@@ -10,8 +10,9 @@
 //! capacities, exactly as the pre-simulator single-threaded replay
 //! produced them.
 
-use mpcomp::compression::{wire, Method, Spec};
+use mpcomp::compression::{ops, wire, Feedback, Method, Spec};
 use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
+use mpcomp::coordinator::feedback::FeedbackState;
 use mpcomp::coordinator::{CompressedLink, Trainer};
 use mpcomp::netsim::{SimNet, WireModel};
 use mpcomp::runtime::{artifacts::CompressionFiles, Manifest, Runtime};
@@ -96,6 +97,68 @@ fn shared_index_gradient_charges_masked_support() {
     assert_eq!(bwd_bytes, wire::encode_sparse(gout.data(), k).len());
     // the gradient support is a subset of the activation mask's budget
     assert!(k <= mpcomp::compression::ops::budget(n, 0.1));
+}
+
+#[test]
+fn link_ef21_ships_delta_frames_reconstructed_by_the_mirror() {
+    // the link's encode path has no local-reconstruction shortcut left:
+    // it charges exactly the delta frame the shared state machine
+    // produces, and hands downstream what its receiver mirror decodes
+    let rt = native_runtime();
+    let n = 4096;
+    let spec = Spec::parse("ef21+topk:10").unwrap();
+    let mut link = CompressedLink::new(0, n, n, dummy_files());
+    let mut net = SimNet::new(1, WireModel::default());
+    let mut shadow = FeedbackState::new();
+    let plain = wire::sparse_wire_bytes(n, ops::budget(n, 0.1));
+    for key in 0..3u64 {
+        let x = randt(n, 20 + key);
+        let before = net.total_bytes() as usize;
+        let (out, _) = link
+            .forward(&rt, &spec, CompressImpl::Native, &x, key, true, &mut net, 0.0)
+            .unwrap();
+        let charged = net.total_bytes() as usize - before;
+        let (frame, recon) = shadow.sender_encode(Feedback::Ef21, key, x.data(), 0.1).unwrap();
+        assert_eq!(charged, frame.len(), "key {key}: charged != delta frame");
+        assert!(charged < plain, "key {key}: delta {charged} !< plain sparse {plain}");
+        assert_eq!(out.data(), &recon[..], "key {key}: mirror output != sender view");
+    }
+    // the footprint metric counts both protocol halves (fwd only here)
+    assert_eq!(link.feedback_memory_bytes(), 2 * 4 * n);
+    link.reset();
+    assert_eq!(link.feedback_memory_bytes(), 0);
+}
+
+#[test]
+fn link_aqsgd_bootstraps_then_ships_near_empty_deltas() {
+    let rt = native_runtime();
+    let n = 2048;
+    let spec = Spec::parse("aqsgd+topk:30").unwrap();
+    let mut link = CompressedLink::new(0, n, n, dummy_files());
+    let mut net = SimNet::new(1, WireModel::default());
+    let x = randt(n, 9);
+    // first visit of sample 7: uncompressed bootstrap frame
+    let (out, _) = link
+        .forward(&rt, &spec, CompressImpl::Native, &x, 7, true, &mut net, 0.0)
+        .unwrap();
+    assert_eq!(net.total_bytes() as usize, wire::delta_bootstrap_bytes(n));
+    assert_eq!(out.data(), x.data());
+    // revisit with identical activations: the delta is exactly zero
+    let before = net.total_bytes() as usize;
+    let (out, _) = link
+        .forward(&rt, &spec, CompressImpl::Native, &x, 7, true, &mut net, 0.0)
+        .unwrap();
+    let update = net.total_bytes() as usize - before;
+    assert!(update < 64, "zero-delta update frame is near-empty, got {update} B");
+    assert_eq!(out.data(), x.data(), "reconstruction tracks the buffer");
+    // gradients under AQ-SGD are plain TopK (activations-only feedback)
+    let g = randt(n, 10);
+    let before = net.total_bytes() as usize;
+    let (gout, _) = link
+        .backward(&rt, &spec, CompressImpl::Native, &g, 7, true, &mut net, 0.0)
+        .unwrap();
+    let bwd = net.total_bytes() as usize - before;
+    assert_eq!(bwd, wire::sparse_wire_bytes(n, gout.count_nonzero()));
 }
 
 #[test]
