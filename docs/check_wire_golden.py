@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Drift check between docs/WIRE.md and the wire-format golden vectors.
+
+Rebuilds the golden frames of `rust/src/compression/wire.rs`'s
+golden-vector tests from the byte-layout rules WIRE.md specifies, then
+asserts each frame's hex appears (contiguously) in WIRE.md's code
+blocks. If the codec changes, the rust golden tests fail; if WIRE.md's
+examples drift from the format, this fails — the spec and the tests
+cannot diverge silently. Run from the repo root (CI `docs` job).
+"""
+import re
+import struct
+import sys
+
+def f32(x):
+    return struct.pack("<f", x)
+
+def u32(x):
+    return struct.pack("<I", x)
+
+def u64(x):
+    return struct.pack("<Q", x)
+
+def header(tag, n):
+    return bytes([tag]) + u32(n)
+
+# golden_raw_encoding: encode_raw(&[1.0, -2.0])
+raw = header(0, 2) + f32(1.0) + f32(-2.0)
+
+# golden_quant_encoding: encode_quant(&[0.0, 1.0, 2.0, 3.0], 2)
+# codes 0,1,2,3 packed LSB-first -> 0b11_10_01_00
+quant = header(1, 4) + bytes([2]) + f32(0.0) + f32(3.0) + bytes([0b11100100])
+
+# golden_sparse_encoding: one nonzero of 100 at index 5, value 5.0
+sparse = header(2, 100) + u32(1) + u32(5) + f32(5.0)
+
+# golden_bitmap_encoding: 8 of 16 nonzero at even indices, all 1.0
+bitmap = header(3, 16) + u32(8) + bytes([0b0101_0101] * 2) + f32(1.0) * 8
+
+# golden_delta_update_encoding: EF21, gen 3, key 7, digest
+# 0x0102030405060708, dense[5] = 5.0 of n = 8, k = 1, GAPS rep
+delta = (
+    header(4, 8)
+    + bytes([1])  # fb = EF21
+    + u64(3)
+    + u64(7)
+    + u64(0x0102030405060708)
+    + u32(1)
+    + bytes([0])  # rep = GAPS
+    + bytes([5])  # varint gap: first index 5
+    + f32(5.0)
+)
+
+FRAMES = {"raw": raw, "quant": quant, "sparse": sparse, "bitmap": bitmap, "delta": delta}
+
+def main():
+    text = open("docs/WIRE.md").read()
+    # hex-pair tokens inside fenced code blocks, in document order
+    tokens = []
+    for block in re.findall(r"```text\n(.*?)```", text, re.S):
+        for tok in block.split():
+            if re.fullmatch(r"[0-9a-f]{2}", tok):
+                tokens.append(tok)
+    stream = " ".join(tokens)
+    bad = []
+    for name, frame in FRAMES.items():
+        want = " ".join(f"{b:02x}" for b in frame)
+        if name == "bitmap":
+            # the doc abbreviates the 8 repeated values; check the
+            # prefix through the bitmap plus one value
+            want = " ".join(f"{b:02x}" for b in frame[:15])
+        if want not in stream:
+            bad.append(f"WIRE.md drifted from the {name} golden frame:\n  want {want}")
+    for b in bad:
+        print(b)
+    if not bad:
+        print(f"WIRE.md golden hex matches all {len(FRAMES)} frame layouts")
+    sys.exit(1 if bad else 0)
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,32 @@
 //! Pipeline-schedule benchmarks: schedule generation cost, the analytic
-//! makespan / memory comparison between GPipe and 1F1B, and the
-//! event-driven SimNet execution (contention + latency) that replaces
-//! the analytic estimate. Run with `cargo bench --bench pipeline`.
+//! makespan / memory comparison between GPipe, 1F1B, and interleaved
+//! 1F1B, and the event-driven SimNet execution (contention + latency)
+//! that replaces the analytic estimate. Run with `cargo bench --bench
+//! pipeline`.
 
-use mpcomp::coordinator::pipeline::{gpipe, makespan, one_f_one_b, peak_in_flight, validate};
+use mpcomp::coordinator::pipeline::{
+    gpipe, interleaved, makespan, num_wire_links, one_f_one_b, peak_in_flight, validate,
+};
 use mpcomp::coordinator::simexec::{simulate, SimSpec};
 use mpcomp::netsim::WireModel;
 use mpcomp::util::bench::{black_box, header, Suite};
+
+fn spec(v: usize, model: WireModel, recompute_s: f64) -> SimSpec {
+    let links = num_wire_links(4, v);
+    SimSpec {
+        n_stages: 4,
+        v,
+        n_mb: 16,
+        fwd_op_s: 0.020 / v as f64,
+        bwd_op_s: 0.040 / v as f64,
+        recompute_s,
+        fwd_bytes: vec![65_541; links],
+        bwd_bytes: vec![65_541; links],
+        raw_bytes: vec![65_541; links],
+        model,
+        capacity: 4,
+    }
+}
 
 fn main() {
     let mut suite = Suite::from_env_args();
@@ -20,45 +40,50 @@ fn main() {
             black_box(one_f_one_b(black_box(s), black_box(m)));
         })
         .report();
+        suite.bench(&format!("gen/interleaved2/{s}x{m}"), || {
+            black_box(interleaved(black_box(s), 2, black_box(m)).unwrap());
+        })
+        .report();
         let ops = gpipe(s, m);
         suite.bench(&format!("validate/{s}x{m}"), || {
-            black_box(validate(black_box(&ops), s, m).unwrap());
+            black_box(validate(black_box(&ops), s, 1, m).unwrap());
         })
         .report();
     }
 
     // event-driven execution cost (the hot loop of `exp schedule`)
     let ops = gpipe(4, 16);
-    let spec = SimSpec {
-        n_stages: 4,
-        n_mb: 16,
-        fwd_op_s: 0.020,
-        bwd_op_s: 0.040,
-        recompute_s: 0.020,
-        fwd_bytes: vec![65_541; 3],
-        bwd_bytes: vec![65_541; 3],
-        raw_bytes: vec![65_541; 3],
-        model: WireModel::wan(),
-        capacity: 4,
-    };
+    let run_spec = spec(1, WireModel::wan(), 0.020);
     suite.bench("simexec/gpipe/4x16/wan", || {
-        black_box(simulate(black_box(&ops), black_box(&spec)));
+        black_box(simulate(black_box(&ops), black_box(&run_spec)));
+    })
+    .report();
+    let il_ops = interleaved(4, 2, 16).unwrap();
+    let il_spec = spec(2, WireModel::wan(), 0.0);
+    suite.bench("simexec/interleaved2/4x16/wan", || {
+        black_box(simulate(black_box(&il_ops), black_box(&il_spec)));
     })
     .report();
 
     // schedule quality table: bubble + memory, with/without wire cost
-    println!("\nschedule quality (analytic, op_time = 1.0):");
+    println!("\nschedule quality (analytic, per-rank op time = 1.0):");
     println!(
-        "{:>8} {:>6} {:>10} {:>14} {:>14} {:>12} {:>12}",
+        "{:>8} {:>6} {:>14} {:>14} {:>14} {:>12} {:>12}",
         "stages", "mb", "schedule", "makespan w=0", "makespan w=.5", "peak stash", "bubble %"
     );
     for &(s, m) in &[(4usize, 4usize), (4, 8), (4, 16), (8, 16)] {
-        for (name, ops) in [("gpipe", gpipe(s, m)), ("1f1b", one_f_one_b(s, m))] {
-            let ms0 = makespan(&ops, s, m, 1.0, 0.0);
-            let ms5 = makespan(&ops, s, m, 1.0, 0.5);
-            let ideal = 2.0 * m as f64; // per-stage serial work
+        let rows: Vec<(String, Vec<_>, usize)> = vec![
+            ("gpipe".into(), gpipe(s, m), 1),
+            ("1f1b".into(), one_f_one_b(s, m), 1),
+            ("interleaved:2".into(), interleaved(s, 2, m).unwrap(), 2),
+        ];
+        for (name, ops, v) in rows {
+            let op = 1.0 / v as f64;
+            let ms0 = makespan(&ops, s, v, m, op, 0.0);
+            let ms5 = makespan(&ops, s, v, m, op, 0.5);
+            let ideal = 2.0 * m as f64; // per-rank serial work
             println!(
-                "{:>8} {:>6} {:>10} {:>14.1} {:>14.1} {:>12} {:>11.1}%",
+                "{:>8} {:>6} {:>14} {:>14.1} {:>14.1} {:>12} {:>11.1}%",
                 s,
                 m,
                 name,
@@ -70,35 +95,24 @@ fn main() {
         }
     }
     println!(
-        "(the analytic model ignores contention and GPipe's rematerialization,\n\
-         so the two schedules tie here; `mpcomp exp schedule` runs the\n\
-         event-driven SimNet comparison where they differ)"
+        "(the analytic model ignores contention and GPipe's rematerialization;\n\
+         `mpcomp exp schedule` runs the event-driven SimNet comparison where\n\
+         the schedules differ further)"
     );
 
     // event-driven: contention separates the schedules
     println!("\nevent-driven simulated makespan (fwd 20ms, bwd 40ms, 16384-elem links):");
-    println!("{:>12} {:>10} {:>14} {:>14}", "wire", "schedule", "makespan", "wire busy");
+    println!("{:>12} {:>14} {:>14} {:>14}", "wire", "schedule", "makespan", "wire busy");
     for (wname, model) in [("wan", WireModel::wan()), ("datacenter", WireModel::datacenter())] {
-        for (sname, ops, recompute_s) in
-            [("gpipe", gpipe(4, 16), 0.020), ("1f1b", one_f_one_b(4, 16), 0.0)]
-        {
-            let r = simulate(
-                &ops,
-                &SimSpec {
-                    n_stages: 4,
-                    n_mb: 16,
-                    fwd_op_s: 0.020,
-                    bwd_op_s: 0.040,
-                    recompute_s,
-                    fwd_bytes: vec![65_541; 3],
-                    bwd_bytes: vec![65_541; 3],
-                    raw_bytes: vec![65_541; 3],
-                    model,
-                    capacity: 4,
-                },
-            );
+        let rows: Vec<(&str, Vec<_>, usize, f64)> = vec![
+            ("gpipe", gpipe(4, 16), 1, 0.020),
+            ("1f1b", one_f_one_b(4, 16), 1, 0.0),
+            ("interleaved:2", interleaved(4, 2, 16).unwrap(), 2, 0.0),
+        ];
+        for (sname, ops, v, recompute_s) in rows {
+            let r = simulate(&ops, &spec(v, model, recompute_s));
             println!(
-                "{:>12} {:>10} {:>12.3}s {:>12.3}s",
+                "{:>12} {:>14} {:>12.3}s {:>12.3}s",
                 wname, sname, r.makespan_s, r.busy_s
             );
         }

@@ -11,6 +11,12 @@
 //! Integration tests assert both produce identical bytes. The mode
 //! grammar ([`spec`]) maps the paper's experiment labels (`fw4-bw8`,
 //! `Top10%`, `EF21 + Top 5%`, `AQ-SGD + Top 30%`) onto configurations.
+//!
+//! The byte-level layout of every frame the codecs produce is specified
+//! in `docs/WIRE.md`, with golden examples mirrored from this module's
+//! golden-vector tests.
+
+#![warn(missing_docs)]
 
 pub mod ops;
 pub mod spec;

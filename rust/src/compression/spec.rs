@@ -41,9 +41,15 @@ pub enum Method {
     None,
     /// Uniform min-max quantization, independently parameterized for the
     /// forward (activations) and backward (gradients) directions.
-    Quant { fw_bits: u8, bw_bits: u8 },
+    Quant {
+        /// Bits per activation element.
+        fw_bits: u8,
+        /// Bits per gradient element.
+        bw_bits: u8,
+    },
     /// TopK sparsification at fraction `frac` (e.g. 0.10 for Top10%).
     TopK {
+        /// Kept fraction of elements.
         frac: f32,
         /// Table 5's index-reuse mode: gradients are masked with the
         /// indices selected for the corresponding activations instead of
@@ -58,6 +64,7 @@ pub enum Method {
 /// Method plus run-protocol knobs that the paper attaches to mode labels.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Spec {
+    /// The compression operator pair applied on every link.
     pub method: Method,
     /// "warmup N": train uncompressed for N epochs (from the baseline
     /// checkpoint in the paper's protocol) before enabling compression.
@@ -65,6 +72,7 @@ pub struct Spec {
 }
 
 impl Spec {
+    /// The uncompressed baseline mode.
     pub fn none() -> Spec {
         Spec { method: Method::None, warmup_epochs: 0 }
     }
@@ -132,6 +140,7 @@ impl Spec {
         }
     }
 
+    /// Whether this is the uncompressed baseline.
     pub fn is_none(&self) -> bool {
         self.method == Method::None
     }

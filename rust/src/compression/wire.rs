@@ -55,9 +55,11 @@ const TAG_SPARSE: u8 = 2;
 const TAG_BITMAP: u8 = 3;
 const TAG_DELTA: u8 = 4;
 
-/// Feedback-mode tags riding in delta frames.
+/// Delta-frame feedback tag: EF21 update.
 pub const FB_EF21: u8 = 1;
+/// Delta-frame feedback tag: AQ-SGD per-sample update.
 pub const FB_AQSGD: u8 = 2;
+/// Delta-frame feedback tag: AQ-SGD bootstrap (raw buffer image).
 pub const FB_AQSGD_BOOT: u8 = 3;
 
 const REP_GAPS: u8 = 0;
@@ -135,6 +137,7 @@ fn read_varint(b: &[u8], at: &mut usize) -> Result<u64> {
 // raw
 // ---------------------------------------------------------------------------
 
+/// Encode at full precision (tag 0): the `none` baseline's frames.
 pub fn encode_raw(data: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + 4 * data.len());
     header(TAG_RAW, data.len(), &mut out);
@@ -231,10 +234,15 @@ pub fn encode_sparse(dense: &[f32], k_budget: usize) -> Vec<u8> {
 /// buffer is `coordinator::feedback`'s job.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeltaFrame {
+    /// Feedback-mode tag ([`FB_EF21`] / [`FB_AQSGD`] / [`FB_AQSGD_BOOT`]).
     pub fb: u8,
+    /// Per-channel generation counter.
     pub gen: u64,
+    /// Microbatch/sample key (selects the AQ-SGD buffer).
     pub key: u64,
+    /// FNV-1a digest of the sender's post-update buffer.
     pub digest: u64,
+    /// Dense zero-filled delta (or raw buffer image for bootstraps).
     pub values: Vec<f32>,
 }
 
@@ -537,12 +545,15 @@ pub fn quant_wire_bytes(n: usize, bits: u8) -> usize {
     5 + 9 + (n * bits as usize).div_ceil(8)
 }
 
+/// Bytes of an `encode_sparse` frame with `k` of `n` nonzeros (the
+/// smaller of index-list and bitmap coding).
 pub fn sparse_wire_bytes(n: usize, k: usize) -> usize {
     let sparse = 8 * k;
     let bitmap = n.div_ceil(8) + 4 * k;
     5 + 4 + sparse.min(bitmap)
 }
 
+/// Bytes of an `encode_raw` frame for `n` elements.
 pub fn raw_wire_bytes(n: usize) -> usize {
     5 + 4 * n
 }

@@ -47,16 +47,56 @@ impl Optimizer {
 /// Microbatch pipeline schedule (coordinator ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
+    /// All forwards (wavefront), then all backwards.
     GPipe,
+    /// PipeDream-flush: one forward, one backward after warm-up.
     OneFOneB,
+    /// Megatron-style interleaved 1F1B: each rank hosts `v` model chunks
+    /// (virtual stages) and alternates between them, shrinking the
+    /// pipeline bubble to ~1/v at the cost of `v`x more wire messages.
+    Interleaved {
+        /// Virtual stages (model chunks) per rank.
+        v: usize,
+    },
 }
 
 impl Schedule {
+    /// Parse a schedule name: `gpipe`, `1f1b`, `interleaved:<v>` (or
+    /// bare `interleaved`, meaning v = 2).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "gpipe" => Ok(Schedule::GPipe),
             "1f1b" => Ok(Schedule::OneFOneB),
-            _ => bail!("schedule must be 'gpipe' or '1f1b', got '{s}'"),
+            "interleaved" => Ok(Schedule::Interleaved { v: 2 }),
+            _ => {
+                if let Some(v) = s.strip_prefix("interleaved:") {
+                    let v: usize = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad virtual-stage count '{v}'"))?;
+                    if v == 0 {
+                        bail!("interleaved schedule wants v >= 1 virtual stages");
+                    }
+                    return Ok(Schedule::Interleaved { v });
+                }
+                bail!("schedule must be 'gpipe', '1f1b', or 'interleaved:<v>', got '{s}'")
+            }
+        }
+    }
+
+    /// The canonical CLI/TOML name (`parse(name())` roundtrips).
+    pub fn name(self) -> String {
+        match self {
+            Schedule::GPipe => "gpipe".into(),
+            Schedule::OneFOneB => "1f1b".into(),
+            Schedule::Interleaved { v } => format!("interleaved:{v}"),
+        }
+    }
+
+    /// Virtual stages (model chunks) per rank: 1 for the flat schedules.
+    pub fn chunks(self) -> usize {
+        match self {
+            Schedule::Interleaved { v } => v,
+            _ => 1,
         }
     }
 }
@@ -174,11 +214,7 @@ impl TrainConfig {
             "optimizer",
             if self.optimizer == Optimizer::Sgd { "sgd" } else { "adamw" },
         )?)?;
-        self.schedule = Schedule::parse(&doc.str_or(
-            s,
-            "schedule",
-            if self.schedule == Schedule::GPipe { "gpipe" } else { "1f1b" },
-        )?)?;
+        self.schedule = Schedule::parse(&doc.str_or(s, "schedule", &self.schedule.name())?)?;
         self.epochs = doc.usize_or(s, "epochs", self.epochs)?;
         self.batch_size = doc.usize_or(s, "batch_size", self.batch_size)?;
         self.lr0 = doc.f64_or(s, "lr", self.lr0)?;
@@ -293,6 +329,27 @@ mod tests {
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.wire, "datacenter");
         assert_eq!(c.sim_op_time, Some(0.5));
+    }
+
+    #[test]
+    fn schedule_parse_roundtrips() {
+        for s in ["gpipe", "1f1b", "interleaved:2", "interleaved:4"] {
+            assert_eq!(Schedule::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(Schedule::parse("interleaved").unwrap(), Schedule::Interleaved { v: 2 });
+        assert_eq!(Schedule::parse("interleaved:3").unwrap().chunks(), 3);
+        assert_eq!(Schedule::GPipe.chunks(), 1);
+        assert_eq!(Schedule::OneFOneB.chunks(), 1);
+        assert!(Schedule::parse("interleaved:0").is_err());
+        assert!(Schedule::parse("interleaved:x").is_err());
+        assert!(Schedule::parse("pipedream").is_err());
+        let mut c = TrainConfig::defaults("cnn16");
+        c.set("schedule", "interleaved:2").unwrap();
+        assert_eq!(c.schedule, Schedule::Interleaved { v: 2 });
+        let doc = toml::Doc::parse("[run]\nschedule = \"interleaved:4\"\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.schedule, Schedule::Interleaved { v: 4 });
     }
 
     #[test]

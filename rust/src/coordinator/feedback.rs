@@ -43,17 +43,44 @@ use crate::tensor::Tensor;
 pub enum FeedbackError {
     /// Frame generation does not match the receiver's counter: a frame
     /// was lost, duplicated, or reordered. The mirror is untouched.
-    GenerationSkew { expected: u64, got: u64 },
+    GenerationSkew {
+        /// Generation the receiver expected next.
+        expected: u64,
+        /// Generation the frame carried.
+        got: u64,
+    },
     /// The reconstructed buffer's digest disagrees with the sender's:
     /// the two ends have diverged. The mirror is untouched (the
     /// reconstruction is discarded, not committed).
-    DigestMismatch { gen: u64, key: u64, expected: u64, got: u64 },
+    DigestMismatch {
+        /// Generation of the offending frame.
+        gen: u64,
+        /// Sample key of the offending frame.
+        key: u64,
+        /// Digest the sender computed.
+        expected: u64,
+        /// Digest the receiver reconstructed.
+        got: u64,
+    },
     /// The frame's feedback tag is not the mode this channel runs.
-    ModeMismatch { expected: Feedback, got: u8 },
+    ModeMismatch {
+        /// Mode configured on the channel.
+        expected: Feedback,
+        /// Feedback tag the frame carried.
+        got: u8,
+    },
     /// An AQ-SGD update arrived for a sample never bootstrapped.
-    MissingBootstrap { key: u64 },
+    MissingBootstrap {
+        /// The sample key with no stored buffer.
+        key: u64,
+    },
     /// The frame's element count does not match the link.
-    SizeMismatch { expected: usize, got: usize },
+    SizeMismatch {
+        /// Element count of the link.
+        expected: usize,
+        /// Element count the frame carried.
+        got: usize,
+    },
 }
 
 impl fmt::Display for FeedbackError {
@@ -140,6 +167,7 @@ pub struct FeedbackState {
 }
 
 impl FeedbackState {
+    /// Empty state: no buffers, generation 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -149,10 +177,12 @@ impl FeedbackState {
         self.global.get_or_insert_with(|| Tensor::zeros(vec![n]))
     }
 
+    /// Global buffer, if one has been materialized.
     pub fn global(&self) -> Option<&Tensor> {
         self.global.as_ref()
     }
 
+    /// Replace the global buffer (post-update sender/receiver commit).
     pub fn set_global(&mut self, t: Tensor) {
         self.global = Some(t);
     }
@@ -163,6 +193,7 @@ impl FeedbackState {
         self.per_sample.get(&key)
     }
 
+    /// Store (bootstrap or update) the buffer for a sample key.
     pub fn set_sample(&mut self, key: u64, t: Tensor) {
         self.per_sample.insert(key, t);
     }
@@ -189,6 +220,7 @@ impl FeedbackState {
         g + p
     }
 
+    /// Drop all buffers and rewind the generation counter.
     pub fn reset(&mut self) {
         self.global = None;
         self.per_sample.clear();

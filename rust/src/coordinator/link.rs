@@ -37,27 +37,48 @@ use crate::netsim::{Dir, Payload, Transport};
 use crate::runtime::{artifacts::CompressionFiles, lit_scalar, lit_vec, Runtime};
 use crate::tensor::Tensor;
 
+/// One compressed channel between adjacent model stages (a pipeline
+/// boundary), carrying its own compression + feedback state and routed
+/// over a physical wire link.
 pub struct CompressedLink {
+    /// Boundary index: this link connects model stages `index` and
+    /// `index + 1`.
     pub index: usize,
+    /// Physical transport link this boundary's messages ride on. Equal
+    /// to `index` on a flat chain; with interleaved schedules several
+    /// boundaries share one ring link (`index % n_ranks`) and contend
+    /// for its bandwidth while keeping separate channel state here.
+    pub wire_link: usize,
     /// Unpadded element count of tensors crossing this link.
     pub n: usize,
     /// Padded size for the kernel executables.
     pub padded: usize,
     files: CompressionFiles,
+    /// Sender half of the forward (activation) channel's feedback state.
     pub fwd_state: FeedbackState,
+    /// Sender half of the backward (gradient) channel's feedback state.
     pub bwd_state: FeedbackState,
     /// Receiver halves of the EF21/AQ-SGD protocol: mirrors of the
     /// peer's sender state, advanced only by decoding delta frames.
     pub fwd_mirror: FeedbackState,
+    /// Backward-direction receiver mirror (see [`Self::fwd_mirror`]).
     pub bwd_mirror: FeedbackState,
     /// Activation masks per in-flight microbatch (shared-index mode).
     masks: HashMap<u64, Vec<f32>>,
 }
 
 impl CompressedLink {
-    pub fn new(index: usize, n: usize, padded: usize, files: CompressionFiles) -> Self {
+    /// A fresh link for boundary `index`, shipping over `wire_link`.
+    pub fn new(
+        index: usize,
+        wire_link: usize,
+        n: usize,
+        padded: usize,
+        files: CompressionFiles,
+    ) -> Self {
         CompressedLink {
             index,
+            wire_link,
             n,
             padded,
             files,
@@ -128,11 +149,11 @@ impl CompressedLink {
     ) -> Result<(Tensor, f64)> {
         let bytes = payload.as_ref().map_or(bytes, Vec::len);
         match &payload {
-            Some(b) => net.send(self.index, dir, mb_key, Payload::Bytes(b), raw, sent_at)?,
-            None => net.send(self.index, dir, mb_key, Payload::Size(bytes), raw, sent_at)?,
+            Some(b) => net.send(self.wire_link, dir, mb_key, Payload::Bytes(b), raw, sent_at)?,
+            None => net.send(self.wire_link, dir, mb_key, Payload::Size(bytes), raw, sent_at)?,
         };
         let msg = net
-            .recv(self.index, dir, mb_key)
+            .recv(self.wire_link, dir, mb_key)
             .with_context(|| format!("link {}: receiving message {mb_key}", self.index))?;
         if let Some(p) = &msg.payload {
             let data = wire::decode(p)
@@ -280,11 +301,11 @@ impl CompressedLink {
                 }
             }
         };
-        let (index, n) = (self.index, self.n);
+        let (index, wire_link, n) = (self.index, self.wire_link, self.n);
         let raw = wire::raw_wire_bytes(n);
-        net.send(index, dir, mb_key, Payload::Bytes(&frame), raw, sent_at)?;
+        net.send(wire_link, dir, mb_key, Payload::Bytes(&frame), raw, sent_at)?;
         let msg = net
-            .recv(index, dir, mb_key)
+            .recv(wire_link, dir, mb_key)
             .with_context(|| format!("link {index}: receiving message {mb_key}"))?;
         // real backends deliver the socket bytes; the simulator charged
         // the same frame and the local copy stands in for the wire image

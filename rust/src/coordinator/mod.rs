@@ -1,6 +1,7 @@
 //! The pipeline-parallel training coordinator (L3).
 //!
-//! * [`pipeline`] — microbatch schedules (GPipe, 1F1B) + validation
+//! * [`pipeline`] — microbatch schedules (GPipe, 1F1B, interleaved
+//!   1F1B with virtual stages) + validation and wire topology
 //! * [`simexec`] — schedule execution over the transport (measured
 //!   makespan; replaces the analytic estimate)
 //! * [`stage`] — per-stage executor (fwd/bwd/update over AOT artifacts)
@@ -17,6 +18,8 @@
 //! (virtual clocks, simulated makespan), or real loopback sockets with
 //! `backend = tcp | uds` — while the tensor math stays bit-identical to
 //! a plain ordered replay (asserted by integration tests).
+
+#![warn(missing_docs)]
 
 pub mod feedback;
 pub mod link;

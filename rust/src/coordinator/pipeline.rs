@@ -1,4 +1,6 @@
-//! Microbatch pipeline schedules (GPipe and 1F1B) and their validation.
+//! Microbatch pipeline schedules — GPipe, 1F1B, and interleaved 1F1B
+//! (Megatron-style virtual stages) — plus their validation and the
+//! analytic makespan reference model.
 //!
 //! The coordinator executes these deterministically on one thread — the
 //! xla wrappers are not `Send`, and the testbed has one core, so the
@@ -7,36 +9,187 @@
 //! and bubble fraction differ between schedules — the ablation bench),
 //! and (c) the order feedback buffers observe microbatches in, which is
 //! semantically visible (EF buffers are updated per message).
+//!
+//! # The (rank, chunk) op key
+//!
+//! Every [`Op`] names a *rank* (the worker executing it), a *chunk*
+//! (which of the rank's virtual stages), and a microbatch. The flat
+//! schedules always use chunk 0; interleaved 1F1B splits the model into
+//! `n_ranks * v` stages and assigns model stage `m` to rank `m %
+//! n_ranks`, chunk `m / n_ranks` — Megatron's round-robin layout, which
+//! makes every stage boundary a cross-rank wire hop and adds a
+//! wrap-around link from the last rank back to rank 0 (the wire becomes
+//! a ring; see [`num_wire_links`]). The bubble shrinks to roughly `1/v`
+//! of plain 1F1B's because each warm-up step advances a chunk-sized op
+//! instead of a full per-rank stage, at the cost of `v`x more (equally
+//! sized) messages per microbatch.
 
 use anyhow::{bail, Result};
 
-/// One schedule step. `mb` is the microbatch index within the batch.
+use crate::config::Schedule;
+
+/// One schedule step, keyed by `(rank, chunk, microbatch, direction)`.
+///
+/// `rank` is the worker executing the op, `chunk` the virtual stage on
+/// that rank (always 0 for GPipe/1F1B), and `mb` the microbatch index
+/// within the batch. The global model stage is `chunk * n_ranks + rank`
+/// ([`Op::model_stage`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
-    Fwd { stage: usize, mb: usize },
-    Bwd { stage: usize, mb: usize },
+    /// Forward pass of one model chunk over one microbatch.
+    Fwd {
+        /// Executing worker.
+        rank: usize,
+        /// Virtual stage on that worker.
+        chunk: usize,
+        /// Microbatch index.
+        mb: usize,
+    },
+    /// Backward pass of one model chunk over one microbatch.
+    Bwd {
+        /// Executing worker.
+        rank: usize,
+        /// Virtual stage on that worker.
+        chunk: usize,
+        /// Microbatch index.
+        mb: usize,
+    },
 }
 
+impl Op {
+    /// The worker executing this op.
+    pub fn rank(&self) -> usize {
+        match *self {
+            Op::Fwd { rank, .. } | Op::Bwd { rank, .. } => rank,
+        }
+    }
+
+    /// The virtual stage (model chunk) on the executing worker.
+    pub fn chunk(&self) -> usize {
+        match *self {
+            Op::Fwd { chunk, .. } | Op::Bwd { chunk, .. } => chunk,
+        }
+    }
+
+    /// The microbatch index within the batch.
+    pub fn mb(&self) -> usize {
+        match *self {
+            Op::Fwd { mb, .. } | Op::Bwd { mb, .. } => mb,
+        }
+    }
+
+    /// Is this a forward op?
+    pub fn is_fwd(&self) -> bool {
+        matches!(self, Op::Fwd { .. })
+    }
+
+    /// Global model-stage index of this op's chunk (`chunk * n_ranks +
+    /// rank` — Megatron's round-robin chunk placement).
+    pub fn model_stage(&self, n_ranks: usize) -> usize {
+        self.chunk() * n_ranks + self.rank()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire topology
+// ---------------------------------------------------------------------------
+
+/// Physical wire links a schedule needs: a chain of `n_ranks - 1` for
+/// the flat schedules, a ring of `n_ranks` once chunks interleave
+/// (link `n_ranks - 1` wraps from the last rank back to rank 0, carrying
+/// the inter-chunk boundary). Single-rank pipelines have no wire.
+pub fn num_wire_links(n_ranks: usize, v: usize) -> usize {
+    if n_ranks <= 1 {
+        0
+    } else if v > 1 {
+        n_ranks
+    } else {
+        n_ranks - 1
+    }
+}
+
+/// Pipeline boundary (edge between model stages `b` and `b + 1`) whose
+/// message this op *consumes*: the upstream activation for a forward op,
+/// the downstream gradient for a backward op. `None` at the pipeline
+/// ends (stage 0 forwards read input data; the last stage's backward
+/// starts from the loss).
+pub fn input_boundary(op: &Op, n_ranks: usize, v: usize) -> Option<usize> {
+    let ms = op.model_stage(n_ranks);
+    match op {
+        Op::Fwd { .. } => ms.checked_sub(1),
+        Op::Bwd { .. } => {
+            if ms + 1 < n_ranks * v {
+                Some(ms)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Pipeline boundary whose message this op *produces* (mirror of
+/// [`input_boundary`]): the output activation of a forward op, the
+/// upstream gradient of a backward op.
+pub fn output_boundary(op: &Op, n_ranks: usize, v: usize) -> Option<usize> {
+    let ms = op.model_stage(n_ranks);
+    match op {
+        Op::Fwd { .. } => {
+            if ms + 1 < n_ranks * v {
+                Some(ms)
+            } else {
+                None
+            }
+        }
+        Op::Bwd { .. } => ms.checked_sub(1),
+    }
+}
+
+/// Physical wire link carrying boundary `b`'s messages: the link out of
+/// the lower stage's rank, `b % n_ranks` in the ring numbering (for a
+/// chain this is just `b`). `None` when everything lives on one rank.
+pub fn boundary_link(b: usize, n_ranks: usize) -> Option<usize> {
+    if n_ranks > 1 {
+        Some(b % n_ranks)
+    } else {
+        None
+    }
+}
+
+/// Wire link this op's input message arrives on (`None`: no input wire —
+/// a pipeline end, or a single-rank pipeline).
+pub fn input_link(op: &Op, n_ranks: usize, v: usize) -> Option<usize> {
+    input_boundary(op, n_ranks, v).and_then(|b| boundary_link(b, n_ranks))
+}
+
+/// Wire link this op's output message departs on (`None`: no output).
+pub fn output_link(op: &Op, n_ranks: usize, v: usize) -> Option<usize> {
+    output_boundary(op, n_ranks, v).and_then(|b| boundary_link(b, n_ranks))
+}
+
+// ---------------------------------------------------------------------------
+// schedule generators
+// ---------------------------------------------------------------------------
+
 /// GPipe: all forwards (wavefront order), then all backwards.
-pub fn gpipe(n_stages: usize, n_mb: usize) -> Vec<Op> {
-    let mut ops = Vec::with_capacity(2 * n_stages * n_mb);
-    // forward wavefront: step t runs Fwd(stage s, mb t-s)
-    for t in 0..(n_mb + n_stages - 1) {
-        for s in 0..n_stages {
+pub fn gpipe(n_ranks: usize, n_mb: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(2 * n_ranks * n_mb);
+    // forward wavefront: step t runs Fwd(rank s, mb t-s)
+    for t in 0..(n_mb + n_ranks - 1) {
+        for s in 0..n_ranks {
             if let Some(mb) = t.checked_sub(s) {
                 if mb < n_mb {
-                    ops.push(Op::Fwd { stage: s, mb });
+                    ops.push(Op::Fwd { rank: s, chunk: 0, mb });
                 }
             }
         }
     }
-    // backward wavefront, stages in reverse
-    for t in 0..(n_mb + n_stages - 1) {
-        for s in (0..n_stages).rev() {
-            let depth = n_stages - 1 - s;
+    // backward wavefront, ranks in reverse
+    for t in 0..(n_mb + n_ranks - 1) {
+        for s in (0..n_ranks).rev() {
+            let depth = n_ranks - 1 - s;
             if let Some(mb) = t.checked_sub(depth) {
                 if mb < n_mb {
-                    ops.push(Op::Bwd { stage: s, mb });
+                    ops.push(Op::Bwd { rank: s, chunk: 0, mb });
                 }
             }
         }
@@ -44,37 +197,37 @@ pub fn gpipe(n_stages: usize, n_mb: usize) -> Vec<Op> {
     ops
 }
 
-/// 1F1B (PipeDream-flush): after warm-up, each stage alternates one
+/// 1F1B (PipeDream-flush): after warm-up, each rank alternates one
 /// forward with one backward, bounding in-flight activations by the
-/// stage depth instead of the microbatch count.
-pub fn one_f_one_b(n_stages: usize, n_mb: usize) -> Vec<Op> {
-    // Emit per-stage op streams, then merge respecting dependencies via
-    // simulation. Per-stage stream: stage s warms up with
-    // min(n_stages - s, n_mb) forwards, then alternates 1B1F, then
+/// pipeline depth instead of the microbatch count.
+pub fn one_f_one_b(n_ranks: usize, n_mb: usize) -> Vec<Op> {
+    // Emit per-rank op streams, then merge respecting dependencies via
+    // simulation. Per-rank stream: rank s warms up with
+    // min(n_ranks - s, n_mb) forwards, then alternates 1B1F, then
     // drains backwards.
-    let mut ops = Vec::with_capacity(2 * n_stages * n_mb);
-    let mut fwd_done = vec![0usize; n_stages]; // next mb to forward
-    let mut bwd_done = vec![0usize; n_stages]; // next mb to backward
+    let mut ops = Vec::with_capacity(2 * n_ranks * n_mb);
+    let mut fwd_done = vec![0usize; n_ranks]; // next mb to forward
+    let mut bwd_done = vec![0usize; n_ranks]; // next mb to backward
     // Ready predicates: Fwd(s, m) needs Fwd(s-1, m) done; Bwd(s, m)
     // needs Fwd(s, m) and Bwd(s+1, m) done.
-    let warmup: Vec<usize> = (0..n_stages).map(|s| (n_stages - s).min(n_mb)).collect();
-    let total = 2 * n_stages * n_mb;
+    let warmup: Vec<usize> = (0..n_ranks).map(|s| (n_ranks - s).min(n_mb)).collect();
+    let total = 2 * n_ranks * n_mb;
     while ops.len() < total {
         let mut progressed = false;
-        for s in 0..n_stages {
-            // choose next op for this stage under 1F1B policy
+        for s in 0..n_ranks {
+            // choose next op for this rank under 1F1B policy
             let want_fwd = fwd_done[s] < n_mb
                 && (fwd_done[s] < warmup[s] || fwd_done[s] - bwd_done[s] < warmup[s]);
             let can_fwd = fwd_done[s] < n_mb
                 && (s == 0 || fwd_done[s] < fwd_done[s - 1]);
             let can_bwd = bwd_done[s] < fwd_done[s]
-                && (s == n_stages - 1 || bwd_done[s] < bwd_done[s + 1]);
+                && (s == n_ranks - 1 || bwd_done[s] < bwd_done[s + 1]);
             if can_bwd && (!want_fwd || !can_fwd) {
-                ops.push(Op::Bwd { stage: s, mb: bwd_done[s] });
+                ops.push(Op::Bwd { rank: s, chunk: 0, mb: bwd_done[s] });
                 bwd_done[s] += 1;
                 progressed = true;
             } else if can_fwd {
-                ops.push(Op::Fwd { stage: s, mb: fwd_done[s] });
+                ops.push(Op::Fwd { rank: s, chunk: 0, mb: fwd_done[s] });
                 fwd_done[s] += 1;
                 progressed = true;
             }
@@ -82,11 +235,11 @@ pub fn one_f_one_b(n_stages: usize, n_mb: usize) -> Vec<Op> {
         if !progressed {
             // fall back: drain any remaining backwards
             let mut any = false;
-            for s in (0..n_stages).rev() {
+            for s in (0..n_ranks).rev() {
                 if bwd_done[s] < fwd_done[s]
-                    && (s == n_stages - 1 || bwd_done[s] < bwd_done[s + 1])
+                    && (s == n_ranks - 1 || bwd_done[s] < bwd_done[s + 1])
                 {
-                    ops.push(Op::Bwd { stage: s, mb: bwd_done[s] });
+                    ops.push(Op::Bwd { rank: s, chunk: 0, mb: bwd_done[s] });
                     bwd_done[s] += 1;
                     any = true;
                 }
@@ -97,109 +250,235 @@ pub fn one_f_one_b(n_stages: usize, n_mb: usize) -> Vec<Op> {
     ops
 }
 
-/// Ops for a configured schedule (shared by the trainer and ablations).
-pub fn ops_for(sched: crate::config::Schedule, n_stages: usize, n_mb: usize) -> Vec<Op> {
-    match sched {
-        crate::config::Schedule::GPipe => gpipe(n_stages, n_mb),
-        crate::config::Schedule::OneFOneB => one_f_one_b(n_stages, n_mb),
+/// Interleaved 1F1B (Megatron-style virtual pipeline): each rank hosts
+/// `v` model chunks and walks its virtual microbatches in groups of
+/// `n_ranks`, cycling chunks within a group window — forwards ascend
+/// chunks, backwards descend. Warm-up is `2 * (n_ranks - rank) +
+/// (v - 1) * n_ranks` forwards (the doubled rank stagger is what hides
+/// per-hop wire latency; with `v == 1` the warm-up drops to `n_ranks -
+/// rank` and the generated ops are *identical* to [`one_f_one_b`] —
+/// pinned by a property test).
+///
+/// Requires `n_mb % n_ranks == 0` when `v > 1` (the group structure
+/// Megatron also imposes).
+pub fn interleaved(n_ranks: usize, v: usize, n_mb: usize) -> Result<Vec<Op>> {
+    if v == 0 {
+        bail!("interleaved schedule wants v >= 1 virtual stages");
     }
-}
-
-/// Validate dependency order and completeness of a schedule.
-pub fn validate(ops: &[Op], n_stages: usize, n_mb: usize) -> Result<()> {
-    let mut fwd = vec![vec![false; n_mb]; n_stages];
-    let mut bwd = vec![vec![false; n_mb]; n_stages];
-    for (i, op) in ops.iter().enumerate() {
-        match *op {
-            Op::Fwd { stage, mb } => {
-                if stage >= n_stages || mb >= n_mb {
-                    bail!("op {i}: out of range {op:?}");
-                }
-                if fwd[stage][mb] {
-                    bail!("op {i}: duplicate {op:?}");
-                }
-                if stage > 0 && !fwd[stage - 1][mb] {
-                    bail!("op {i}: {op:?} before upstream fwd");
-                }
-                fwd[stage][mb] = true;
+    if n_ranks == 0 {
+        return Ok(Vec::new());
+    }
+    if v > 1 && n_mb % n_ranks != 0 {
+        bail!(
+            "interleaved:{v} wants microbatches divisible by ranks, got {n_mb} mb over \
+             {n_ranks} ranks"
+        );
+    }
+    let s = n_ranks;
+    let total = v * n_mb; // virtual microbatches per rank per direction
+    let group = s.min(n_mb).max(1);
+    // virtual microbatch index -> (chunk, mb): groups of `group`
+    // microbatches sweep chunk 0..v before moving to the next group
+    let fwd_vm = |i: usize| -> (usize, usize) {
+        ((i / group) % v, (i / (group * v)) * group + i % group)
+    };
+    let bwd_vm = |i: usize| -> (usize, usize) {
+        let (c, m) = fwd_vm(i);
+        (v - 1 - c, m)
+    };
+    let n_ms = s * v;
+    let stagger = if v > 1 { 2 } else { 1 };
+    let warmup: Vec<usize> =
+        (0..s).map(|r| (stagger * (s - r) + (v - 1) * s).min(total)).collect();
+    let mut fwd_done = vec![0usize; s]; // next virtual mb to forward
+    let mut bwd_done = vec![0usize; s]; // next virtual mb to backward
+    let mut fwd_ok = vec![vec![false; n_mb]; n_ms];
+    let mut bwd_ok = vec![vec![false; n_mb]; n_ms];
+    let target = 2 * s * total;
+    let mut ops = Vec::with_capacity(target);
+    let mut rounds = 0usize;
+    while ops.len() < target {
+        rounds += 1;
+        if rounds > 10 * target + 100 {
+            bail!("interleaved schedule failed to converge (s={s} v={v} mb={n_mb})");
+        }
+        let mut progressed = false;
+        for r in 0..s {
+            let want_fwd = fwd_done[r] < total
+                && (fwd_done[r] < warmup[r] || fwd_done[r] - bwd_done[r] < warmup[r]);
+            let can_fwd = fwd_done[r] < total && {
+                let (c, m) = fwd_vm(fwd_done[r]);
+                let ms = c * s + r;
+                ms == 0 || fwd_ok[ms - 1][m]
+            };
+            let can_bwd = bwd_done[r] < total && {
+                let (c, m) = bwd_vm(bwd_done[r]);
+                let ms = c * s + r;
+                fwd_ok[ms][m] && (ms + 1 == n_ms || bwd_ok[ms + 1][m])
+            };
+            if can_bwd && (!want_fwd || !can_fwd) {
+                let (chunk, mb) = bwd_vm(bwd_done[r]);
+                ops.push(Op::Bwd { rank: r, chunk, mb });
+                bwd_ok[chunk * s + r][mb] = true;
+                bwd_done[r] += 1;
+                progressed = true;
+            } else if can_fwd {
+                let (chunk, mb) = fwd_vm(fwd_done[r]);
+                ops.push(Op::Fwd { rank: r, chunk, mb });
+                fwd_ok[chunk * s + r][mb] = true;
+                fwd_done[r] += 1;
+                progressed = true;
             }
-            Op::Bwd { stage, mb } => {
-                if stage >= n_stages || mb >= n_mb {
-                    bail!("op {i}: out of range {op:?}");
+        }
+        if !progressed {
+            // fall back: drain any ready backwards, deepest rank first
+            let mut any = false;
+            for r in (0..s).rev() {
+                if bwd_done[r] < total {
+                    let (chunk, mb) = bwd_vm(bwd_done[r]);
+                    let ms = chunk * s + r;
+                    if fwd_ok[ms][mb] && (ms + 1 == n_ms || bwd_ok[ms + 1][mb]) {
+                        ops.push(Op::Bwd { rank: r, chunk, mb });
+                        bwd_ok[ms][mb] = true;
+                        bwd_done[r] += 1;
+                        any = true;
+                    }
                 }
-                if bwd[stage][mb] {
-                    bail!("op {i}: duplicate {op:?}");
-                }
-                if !fwd[stage][mb] {
-                    bail!("op {i}: {op:?} before its fwd");
-                }
-                if stage + 1 < n_stages && !bwd[stage + 1][mb] {
-                    bail!("op {i}: {op:?} before downstream bwd");
-                }
-                bwd[stage][mb] = true;
+            }
+            if !any {
+                bail!("interleaved schedule deadlocked (s={s} v={v} mb={n_mb})");
             }
         }
     }
-    for s in 0..n_stages {
+    Ok(ops)
+}
+
+/// Ops for a configured schedule (shared by the trainer and ablations).
+/// Fails for interleaved schedules whose microbatch count is not a
+/// multiple of the rank count.
+pub fn ops_for(sched: Schedule, n_ranks: usize, n_mb: usize) -> Result<Vec<Op>> {
+    match sched {
+        Schedule::GPipe => Ok(gpipe(n_ranks, n_mb)),
+        Schedule::OneFOneB => Ok(one_f_one_b(n_ranks, n_mb)),
+        Schedule::Interleaved { v } => interleaved(n_ranks, v, n_mb),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// validation + metrics
+// ---------------------------------------------------------------------------
+
+/// Validate dependency order and completeness of a schedule over
+/// `n_ranks * v` model stages.
+pub fn validate(ops: &[Op], n_ranks: usize, v: usize, n_mb: usize) -> Result<()> {
+    let n_ms = n_ranks * v;
+    let mut fwd = vec![vec![false; n_mb]; n_ms];
+    let mut bwd = vec![vec![false; n_mb]; n_ms];
+    for (i, op) in ops.iter().enumerate() {
+        if op.rank() >= n_ranks || op.chunk() >= v || op.mb() >= n_mb {
+            bail!("op {i}: out of range {op:?}");
+        }
+        let ms = op.model_stage(n_ranks);
+        let mb = op.mb();
+        match *op {
+            Op::Fwd { .. } => {
+                if fwd[ms][mb] {
+                    bail!("op {i}: duplicate {op:?}");
+                }
+                if ms > 0 && !fwd[ms - 1][mb] {
+                    bail!("op {i}: {op:?} before upstream fwd");
+                }
+                fwd[ms][mb] = true;
+            }
+            Op::Bwd { .. } => {
+                if bwd[ms][mb] {
+                    bail!("op {i}: duplicate {op:?}");
+                }
+                if !fwd[ms][mb] {
+                    bail!("op {i}: {op:?} before its fwd");
+                }
+                if ms + 1 < n_ms && !bwd[ms + 1][mb] {
+                    bail!("op {i}: {op:?} before downstream bwd");
+                }
+                bwd[ms][mb] = true;
+            }
+        }
+    }
+    for ms in 0..n_ms {
         for m in 0..n_mb {
-            if !fwd[s][m] || !bwd[s][m] {
-                bail!("incomplete schedule: stage {s} mb {m}");
+            if !fwd[ms][m] || !bwd[ms][m] {
+                bail!("incomplete schedule: model stage {ms} mb {m}");
             }
         }
     }
     Ok(())
 }
 
-/// Peak number of stashed activations any stage holds (memory metric —
-/// the axis on which 1F1B beats GPipe).
-pub fn peak_in_flight(ops: &[Op], n_stages: usize) -> usize {
-    let mut in_flight = vec![0isize; n_stages];
+/// Peak number of stashed activations any rank holds across its chunks
+/// (memory metric — the axis on which 1F1B beats GPipe; interleaving
+/// raises it again through the longer chunked warm-up).
+pub fn peak_in_flight(ops: &[Op], n_ranks: usize) -> usize {
+    let mut in_flight = vec![0isize; n_ranks];
     let mut peak = 0isize;
     for op in ops {
-        match *op {
-            Op::Fwd { stage, .. } => {
-                in_flight[stage] += 1;
-                peak = peak.max(in_flight[stage]);
-            }
-            Op::Bwd { stage, .. } => in_flight[stage] -= 1,
+        if op.is_fwd() {
+            in_flight[op.rank()] += 1;
+            peak = peak.max(in_flight[op.rank()]);
+        } else {
+            in_flight[op.rank()] -= 1;
         }
     }
     peak as usize
 }
 
 /// Analytic multi-worker makespan of a schedule, assuming every op
-/// costs `op_time` and each inter-stage message costs a flat
-/// `wire_time` with no bandwidth contention or queueing. Kept as the
-/// closed-form reference model: `simexec` property tests pin the
-/// event-driven simulator to it exactly in the contention-free regime.
-pub fn makespan(ops: &[Op], n_stages: usize, n_mb: usize, op_time: f64, wire_time: f64) -> f64 {
-    // event-driven: per-stage clock + per-(stage,mb) data-ready times
-    let mut stage_clock = vec![0.0f64; n_stages];
-    let mut fwd_out = vec![vec![0.0f64; n_mb]; n_stages];
-    let mut bwd_out = vec![vec![0.0f64; n_mb]; n_stages];
+/// costs `op_time` and each cross-rank message costs a flat `wire_time`
+/// with no bandwidth contention or queueing (same-rank chunk boundaries
+/// are free). Kept as the closed-form reference model: `simexec`
+/// property tests pin the event-driven simulator to it exactly in the
+/// contention-free regime.
+pub fn makespan(
+    ops: &[Op],
+    n_ranks: usize,
+    v: usize,
+    n_mb: usize,
+    op_time: f64,
+    wire_time: f64,
+) -> f64 {
+    // event-driven: per-rank clock + per-(model stage, mb) ready times
+    let n_ms = n_ranks * v;
+    let hop = if n_ranks > 1 { wire_time } else { 0.0 };
+    let mut rank_clock = vec![0.0f64; n_ranks];
+    let mut fwd_out = vec![vec![0.0f64; n_mb]; n_ms];
+    let mut bwd_out = vec![vec![0.0f64; n_mb]; n_ms];
     for op in ops {
-        match *op {
-            Op::Fwd { stage, mb } => {
-                let ready = if stage == 0 { 0.0 } else { fwd_out[stage - 1][mb] + wire_time };
-                let start = stage_clock[stage].max(ready);
-                let end = start + op_time;
-                stage_clock[stage] = end;
-                fwd_out[stage][mb] = end;
-            }
-            Op::Bwd { stage, mb } => {
-                let ready = if stage + 1 == n_stages {
-                    fwd_out[stage][mb]
+        let (rank, mb) = (op.rank(), op.mb());
+        let ms = op.model_stage(n_ranks);
+        let ready = match op {
+            Op::Fwd { .. } => {
+                if ms == 0 {
+                    0.0
                 } else {
-                    bwd_out[stage + 1][mb] + wire_time
-                };
-                let start = stage_clock[stage].max(ready);
-                let end = start + op_time;
-                stage_clock[stage] = end;
-                bwd_out[stage][mb] = end;
+                    fwd_out[ms - 1][mb] + hop
+                }
             }
+            Op::Bwd { .. } => {
+                if ms + 1 == n_ms {
+                    fwd_out[ms][mb]
+                } else {
+                    bwd_out[ms + 1][mb] + hop
+                }
+            }
+        };
+        let start = rank_clock[rank].max(ready);
+        let end = start + op_time;
+        rank_clock[rank] = end;
+        match op {
+            Op::Fwd { .. } => fwd_out[ms][mb] = end,
+            Op::Bwd { .. } => bwd_out[ms][mb] = end,
         }
     }
-    stage_clock.iter().cloned().fold(0.0, f64::max)
+    rank_clock.iter().cloned().fold(0.0, f64::max)
 }
 
 #[cfg(test)]
@@ -212,7 +491,7 @@ mod tests {
         for (s, m) in [(4, 4), (4, 1), (1, 4), (2, 8), (8, 2)] {
             let ops = gpipe(s, m);
             assert_eq!(ops.len(), 2 * s * m);
-            validate(&ops, s, m).unwrap();
+            validate(&ops, s, 1, m).unwrap();
         }
     }
 
@@ -221,7 +500,16 @@ mod tests {
         for (s, m) in [(4, 4), (4, 1), (1, 4), (2, 8), (8, 2), (4, 16)] {
             let ops = one_f_one_b(s, m);
             assert_eq!(ops.len(), 2 * s * m, "s={s} m={m}");
-            validate(&ops, s, m).unwrap();
+            validate(&ops, s, 1, m).unwrap();
+        }
+    }
+
+    #[test]
+    fn interleaved_valid_for_typical_sizes() {
+        for (s, v, m) in [(2, 2, 4), (4, 2, 16), (4, 4, 16), (2, 3, 6), (3, 2, 12), (1, 4, 3)] {
+            let ops = interleaved(s, v, m).unwrap();
+            assert_eq!(ops.len(), 2 * s * v * m, "s={s} v={v} m={m}");
+            validate(&ops, s, v, m).unwrap();
         }
     }
 
@@ -230,33 +518,128 @@ mod tests {
         run_prop("schedule validity", 30, |g| {
             let s = g.usize(1, 8);
             let m = g.usize(1, 12);
-            validate(&gpipe(s, m), s, m).map_err(|e| e.to_string())?;
-            validate(&one_f_one_b(s, m), s, m).map_err(|e| e.to_string())?;
+            validate(&gpipe(s, m), s, 1, m).map_err(|e| e.to_string())?;
+            validate(&one_f_one_b(s, m), s, 1, m).map_err(|e| e.to_string())?;
+            let v = g.usize(2, 4);
+            let m = s * g.usize(1, 4); // interleaving wants divisibility
+            let ops = interleaved(s, v, m).map_err(|e| e.to_string())?;
+            if ops.len() != 2 * s * v * m {
+                return Err(format!("s={s} v={v} m={m}: {} ops", ops.len()));
+            }
+            validate(&ops, s, v, m).map_err(|e| e.to_string())
+        });
+    }
+
+    /// The satellite pin: `Interleaved{v=1}` is plain 1F1B — not just a
+    /// valid schedule, the *identical op sequence* (makespan and wire
+    /// bytes equality follow; `simexec` pins bytes separately).
+    #[test]
+    fn prop_interleaved_v1_is_exactly_one_f_one_b() {
+        run_prop("interleaved v=1 == 1f1b", 40, |g| {
+            let s = g.usize(1, 8);
+            let m = g.usize(1, 12);
+            let flat = one_f_one_b(s, m);
+            let il = interleaved(s, 1, m).map_err(|e| e.to_string())?;
+            if flat != il {
+                return Err(format!("s={s} m={m}: op sequences diverge"));
+            }
+            let a = makespan(&flat, s, 1, m, 1.0, 0.25);
+            let b = makespan(&il, s, 1, m, 1.0, 0.25);
+            if a != b {
+                return Err(format!("s={s} m={m}: makespan {a} != {b}"));
+            }
             Ok(())
         });
     }
 
     #[test]
+    fn interleaved_rejects_bad_shapes() {
+        assert!(interleaved(4, 0, 16).is_err());
+        assert!(interleaved(4, 2, 15).is_err(), "mb not divisible by ranks");
+        assert!(interleaved(3, 2, 4).is_err());
+        assert!(interleaved(4, 2, 16).is_ok());
+    }
+
+    #[test]
+    fn ops_for_dispatches_all_schedules() {
+        let s = Schedule::parse("interleaved:2").unwrap();
+        let ops = ops_for(s, 4, 16).unwrap();
+        assert_eq!(ops.len(), 2 * 4 * 2 * 16);
+        assert!(ops.iter().any(|o| o.chunk() == 1));
+        assert!(ops_for(s, 4, 15).is_err());
+        for sched in [Schedule::GPipe, Schedule::OneFOneB] {
+            let ops = ops_for(sched, 4, 15).unwrap();
+            assert_eq!(ops.len(), 2 * 4 * 15);
+            assert!(ops.iter().all(|o| o.chunk() == 0));
+        }
+    }
+
+    #[test]
+    fn wire_topology_is_a_chain_then_a_ring() {
+        assert_eq!(num_wire_links(4, 1), 3);
+        assert_eq!(num_wire_links(4, 2), 4);
+        assert_eq!(num_wire_links(2, 4), 2);
+        assert_eq!(num_wire_links(1, 4), 0);
+        assert_eq!(num_wire_links(1, 1), 0);
+        // chain: same link indices as before the refactor
+        let f = Op::Fwd { rank: 2, chunk: 0, mb: 0 };
+        assert_eq!(input_link(&f, 4, 1), Some(1));
+        assert_eq!(output_link(&f, 4, 1), Some(2));
+        let b = Op::Bwd { rank: 2, chunk: 0, mb: 0 };
+        assert_eq!(input_link(&b, 4, 1), Some(2));
+        assert_eq!(output_link(&b, 4, 1), Some(1));
+        // pipeline ends
+        assert_eq!(input_link(&Op::Fwd { rank: 0, chunk: 0, mb: 0 }, 4, 1), None);
+        assert_eq!(output_link(&Op::Fwd { rank: 3, chunk: 0, mb: 0 }, 4, 1), None);
+        assert_eq!(input_link(&Op::Bwd { rank: 3, chunk: 0, mb: 0 }, 4, 1), None);
+        assert_eq!(output_link(&Op::Bwd { rank: 0, chunk: 0, mb: 0 }, 4, 1), None);
+        // ring: the last rank's chunk-0 output wraps to rank 0 chunk 1
+        let wrap_out = Op::Fwd { rank: 3, chunk: 0, mb: 0 };
+        assert_eq!(output_link(&wrap_out, 4, 2), Some(3));
+        let wrap_in = Op::Fwd { rank: 0, chunk: 1, mb: 0 };
+        assert_eq!(input_link(&wrap_in, 4, 2), Some(3));
+        assert_eq!(input_boundary(&wrap_in, 4, 2), Some(3));
+        // the true last model stage (rank 3 chunk 1) has no output
+        assert_eq!(output_link(&Op::Fwd { rank: 3, chunk: 1, mb: 0 }, 4, 2), None);
+        // single-rank pipelines never touch a wire
+        assert_eq!(input_link(&Op::Fwd { rank: 0, chunk: 2, mb: 0 }, 1, 4), None);
+    }
+
+    #[test]
     fn one_f_one_b_bounds_in_flight_memory() {
-        // GPipe stashes all M microbatches; 1F1B caps at the stage depth
+        // GPipe stashes all M microbatches; 1F1B caps at the pipeline
+        // depth; interleaving pays its deeper warm-up back in stash
         let (s, m) = (4, 16);
         let g = peak_in_flight(&gpipe(s, m), s);
         let o = peak_in_flight(&one_f_one_b(s, m), s);
         assert_eq!(g, m);
         assert!(o <= s + 1, "1f1b peak {o}");
+        let i2 = peak_in_flight(&interleaved(s, 2, m).unwrap(), s);
+        assert!(i2 > o && i2 < m, "interleaved:2 peak {i2}");
     }
 
     #[test]
     fn validate_catches_violations() {
         // bwd before fwd
-        assert!(validate(&[Op::Bwd { stage: 0, mb: 0 }], 1, 1).is_err());
+        assert!(validate(&[Op::Bwd { rank: 0, chunk: 0, mb: 0 }], 1, 1, 1).is_err());
         // skipping upstream stage
-        assert!(validate(&[Op::Fwd { stage: 1, mb: 0 }], 2, 1).is_err());
+        assert!(validate(&[Op::Fwd { rank: 1, chunk: 0, mb: 0 }], 2, 1, 1).is_err());
+        // skipping the wrap boundary (rank 0 chunk 1 before rank 1 chunk 0)
+        assert!(validate(
+            &[Op::Fwd { rank: 0, chunk: 0, mb: 0 }, Op::Fwd { rank: 0, chunk: 1, mb: 0 }],
+            2,
+            2,
+            1
+        )
+        .is_err());
+        // chunk out of range
+        assert!(validate(&[Op::Fwd { rank: 0, chunk: 1, mb: 0 }], 1, 1, 1).is_err());
         // incomplete
-        assert!(validate(&[Op::Fwd { stage: 0, mb: 0 }], 1, 1).is_err());
+        assert!(validate(&[Op::Fwd { rank: 0, chunk: 0, mb: 0 }], 1, 1, 1).is_err());
         // duplicate
         assert!(validate(
-            &[Op::Fwd { stage: 0, mb: 0 }, Op::Fwd { stage: 0, mb: 0 }],
+            &[Op::Fwd { rank: 0, chunk: 0, mb: 0 }, Op::Fwd { rank: 0, chunk: 0, mb: 0 }],
+            1,
             1,
             1
         )
@@ -265,22 +648,40 @@ mod tests {
 
     #[test]
     fn makespan_shows_pipeline_bubble() {
-        // 1 stage: no bubble; serial time = 2*M ops
-        let m1 = makespan(&gpipe(1, 8), 1, 8, 1.0, 0.0);
+        // 1 rank: no bubble; serial time = 2*M ops
+        let m1 = makespan(&gpipe(1, 8), 1, 1, 8, 1.0, 0.0);
         assert!((m1 - 16.0).abs() < 1e-9);
-        // 4 stages, 1 microbatch: fully serial = 8 ops
-        let m2 = makespan(&gpipe(4, 1), 4, 1, 1.0, 0.0);
+        // 4 ranks, 1 microbatch: fully serial = 8 ops
+        let m2 = makespan(&gpipe(4, 1), 4, 1, 1, 1.0, 0.0);
         assert!((m2 - 8.0).abs() < 1e-9);
-        // 4 stages, many microbatches: approaches 2*M + 2*(S-1) bubble
-        let m3 = makespan(&gpipe(4, 16), 4, 16, 1.0, 0.0);
+        // 4 ranks, many microbatches: approaches 2*M + 2*(S-1) bubble
+        let m3 = makespan(&gpipe(4, 16), 4, 1, 16, 1.0, 0.0);
         assert!(m3 < 2.0 * 16.0 + 2.0 * 16.0, "pipelining must overlap: {m3}");
-        assert!(m3 >= 2.0 * 16.0, "cannot beat per-stage serial work: {m3}");
+        assert!(m3 >= 2.0 * 16.0, "cannot beat per-rank serial work: {m3}");
+    }
+
+    #[test]
+    fn interleaving_shrinks_the_zero_wire_bubble() {
+        // with free wire, the bubble is pure schedule structure: each
+        // warm-up step is a chunk op, so v=2 roughly halves it. Op cost
+        // 1/v keeps per-rank serial work fixed at 2*M.
+        let (s, m) = (4, 16);
+        let flat = makespan(&one_f_one_b(s, m), s, 1, m, 1.0, 0.0);
+        let il = makespan(&interleaved(s, 2, m).unwrap(), s, 2, m, 0.5, 0.0);
+        let ideal = 2.0 * m as f64;
+        assert!(il < flat, "interleaved {il} !< 1f1b {flat}");
+        assert!(il - ideal < 0.75 * (flat - ideal), "bubble {} vs {}", il - ideal, flat - ideal);
     }
 
     #[test]
     fn wire_time_increases_makespan() {
-        let a = makespan(&gpipe(4, 8), 4, 8, 1.0, 0.0);
-        let b = makespan(&gpipe(4, 8), 4, 8, 1.0, 0.5);
+        let a = makespan(&gpipe(4, 8), 4, 1, 8, 1.0, 0.0);
+        let b = makespan(&gpipe(4, 8), 4, 1, 8, 1.0, 0.5);
         assert!(b > a);
+        // single-rank pipelines never pay wire time
+        let ops = interleaved(1, 3, 4).unwrap();
+        let x = makespan(&ops, 1, 3, 4, 1.0, 0.0);
+        let y = makespan(&ops, 1, 3, 4, 1.0, 9.0);
+        assert_eq!(x, y);
     }
 }

@@ -1,27 +1,31 @@
 //! Execute a pipeline schedule through the [`Transport`] and measure
-//! its makespan — the successor of the analytic [`pipeline::makespan`]
+//! its makespan — the successor of the analytic `pipeline::makespan`
 //! estimate.
 //!
 //! The executor walks the schedule in order, keeping one clock per
-//! stage. A forward op on stage `s > 0` starts no earlier than the
-//! arrival of its input activations (sent when stage `s - 1` finished
-//! producing them); a backward op on stage `s < S - 1` is gated the
+//! rank. A forward op whose model chunk has an upstream boundary starts
+//! no earlier than the arrival of its input activations (sent when the
+//! upstream chunk finished producing them); a backward op is gated the
 //! same way on the gradient message. On the default [`SimNet`] backend
 //! messages contend for link bandwidth and respect the bounded
 //! in-flight window, so — unlike the analytic model — bursts of traffic
-//! (GPipe's all-forward phase) are charged their queueing delay. On the
-//! real backends ([`simulate_real`]) frames of the scheduled sizes
-//! actually cross loopback kernel sockets and the report's busy/elapsed
-//! columns are measured wall-clock I/O time.
+//! (GPipe's all-forward phase) are charged their queueing delay, and
+//! with interleaved schedules the chunks sharing one physical link
+//! genuinely contend (each boundary keys its messages separately, but
+//! they serialize on the same [`SimNet`] channel). On the real backends
+//! ([`simulate_real`]) frames of the scheduled sizes actually cross
+//! loopback kernel sockets and the report's busy/elapsed columns are
+//! measured wall-clock I/O time.
 //!
 //! With zero latency and no contention the simulated model agrees with
 //! the analytic one *exactly*; the property tests below pin that
-//! equivalence, which is the correctness anchor for everything the
-//! simulator reports.
+//! equivalence — for the flat schedules and the interleaved ring alike
+//! — which is the correctness anchor for everything the simulator
+//! reports.
 
 use std::time::Duration;
 
-use crate::coordinator::pipeline::Op;
+use crate::coordinator::pipeline::{self, Op};
 use crate::netsim::{
     Backend, Dir, Payload, RealTransport, SimNet, Transport, TransportError, WireModel,
 };
@@ -29,26 +33,39 @@ use crate::netsim::{
 /// Static description of one simulated pipeline run.
 #[derive(Clone, Debug)]
 pub struct SimSpec {
+    /// Worker (process) count; model stages = `n_stages * v`.
     pub n_stages: usize,
+    /// Virtual stages (model chunks) per rank — 1 for GPipe/1F1B.
+    pub v: usize,
+    /// Microbatches per optimizer step.
     pub n_mb: usize,
-    /// Compute cost of one forward op.
+    /// Compute cost of one forward op (one chunk's forward).
     pub fwd_op_s: f64,
-    /// Compute cost of one backward op.
+    /// Compute cost of one backward op (one chunk's backward).
     pub bwd_op_s: f64,
     /// Extra forward recomputation charged per backward op (GPipe's
     /// rematerialization: it discards activations it cannot afford to
     /// stash for all `n_mb` microbatches and recomputes them in the
     /// backward phase; 1F1B's depth-bounded stash avoids this).
     pub recompute_s: f64,
-    /// Payload bytes per forward (activation) message, per link.
+    /// Payload bytes per forward (activation) message, per wire link.
     pub fwd_bytes: Vec<usize>,
-    /// Payload bytes per backward (gradient) message, per link.
+    /// Payload bytes per backward (gradient) message, per wire link.
     pub bwd_bytes: Vec<usize>,
-    /// Uncompressed payload bytes per message, per link (ledger).
+    /// Uncompressed payload bytes per message, per wire link (ledger).
     pub raw_bytes: Vec<usize>,
+    /// Bandwidth/latency of every link.
     pub model: WireModel,
     /// Bounded in-flight window per link direction.
     pub capacity: usize,
+}
+
+impl SimSpec {
+    /// Physical wire links this spec's topology needs (chain for flat
+    /// schedules, ring once chunks interleave).
+    pub fn wire_links(&self) -> usize {
+        pipeline::num_wire_links(self.n_stages, self.v)
+    }
 }
 
 /// Measured outcome of one simulated run.
@@ -63,7 +80,9 @@ pub struct SimReport {
     /// Sum of per-message wire times (latency + serialization) — the
     /// pre-simulator accounting metric, kept for comparison.
     pub wire_sum_s: f64,
+    /// Compressed bytes that crossed the wire.
     pub bytes: u64,
+    /// Uncompressed-equivalent bytes (the ledger's raw column).
     pub raw_bytes: u64,
     /// Measured wall-clock tx time (0 on the simulator).
     pub wire_elapsed_s: f64,
@@ -71,8 +90,7 @@ pub struct SimReport {
 
 /// Run `ops` through a fresh `SimNet` described by `spec`.
 pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
-    let mut net =
-        SimNet::with_capacity(spec.n_stages.saturating_sub(1), spec.model, spec.capacity);
+    let mut net = SimNet::with_capacity(spec.wire_links(), spec.model, spec.capacity);
     simulate_transport(ops, spec, &mut net).expect("SimNet delivers every scheduled message")
 }
 
@@ -84,7 +102,7 @@ pub fn simulate_real(
     backend: Backend,
 ) -> Result<SimReport, TransportError> {
     let mut net = RealTransport::loopback(
-        spec.n_stages.saturating_sub(1),
+        spec.wire_links(),
         backend,
         spec.model,
         Duration::from_secs(20),
@@ -95,59 +113,72 @@ pub fn simulate_real(
 }
 
 /// Execute the schedule through any [`Transport`], gating each op on
-/// the arrival of its input message.
+/// the arrival of its input message. Messages are keyed by
+/// `(boundary, mb)` so boundaries sharing a physical ring link (the
+/// interleaved case) stay distinguishable while still contending for
+/// the link's bandwidth and in-flight window.
 pub fn simulate_transport(
     ops: &[Op],
     spec: &SimSpec,
     net: &mut dyn Transport,
 ) -> Result<SimReport, TransportError> {
-    let (s_count, m_count) = (spec.n_stages, spec.n_mb);
-    // producer-side completion times per (stage, mb)
-    let mut fwd_end = vec![vec![0.0f64; m_count]; s_count];
-    let mut bwd_end = vec![vec![0.0f64; m_count]; s_count];
+    let (s_count, v, m_count) = (spec.n_stages, spec.v, spec.n_mb);
+    let n_ms = s_count * v;
+    // producer-side completion times per (model stage, mb)
+    let mut fwd_end = vec![vec![0.0f64; m_count]; n_ms];
+    let mut bwd_end = vec![vec![0.0f64; m_count]; n_ms];
     for op in ops {
-        match *op {
-            Op::Fwd { stage, mb } => {
-                let ready = if stage == 0 {
+        let (rank, mb) = (op.rank(), op.mb());
+        let ms = op.model_stage(s_count);
+        match op {
+            Op::Fwd { .. } => {
+                let ready = if ms == 0 {
                     0.0
+                } else if s_count == 1 {
+                    // same-rank chunk boundary: handoff is free
+                    fwd_end[ms - 1][mb]
                 } else {
-                    let key = mb as u64;
-                    let link = stage - 1;
+                    let boundary = ms - 1;
+                    let link = boundary % s_count;
+                    let key = (boundary * m_count + mb) as u64;
                     net.send(
                         link,
                         Dir::Fwd,
                         key,
                         Payload::Size(spec.fwd_bytes[link]),
                         spec.raw_bytes[link],
-                        fwd_end[link][mb],
+                        fwd_end[boundary][mb],
                     )?;
                     net.recv(link, Dir::Fwd, key)?.arrival
                 };
-                let start = net.clock(stage).max(ready);
+                let start = net.clock(rank).max(ready);
                 let end = start + spec.fwd_op_s;
-                net.advance(stage, end);
-                fwd_end[stage][mb] = end;
+                net.advance(rank, end);
+                fwd_end[ms][mb] = end;
             }
-            Op::Bwd { stage, mb } => {
-                let ready = if stage + 1 == s_count {
-                    fwd_end[stage][mb]
+            Op::Bwd { .. } => {
+                let ready = if ms + 1 == n_ms {
+                    fwd_end[ms][mb]
+                } else if s_count == 1 {
+                    bwd_end[ms + 1][mb]
                 } else {
-                    let key = mb as u64;
-                    let link = stage;
+                    let boundary = ms;
+                    let link = boundary % s_count;
+                    let key = (boundary * m_count + mb) as u64;
                     net.send(
                         link,
                         Dir::Bwd,
                         key,
                         Payload::Size(spec.bwd_bytes[link]),
                         spec.raw_bytes[link],
-                        bwd_end[stage + 1][mb],
+                        bwd_end[ms + 1][mb],
                     )?;
                     net.recv(link, Dir::Bwd, key)?.arrival
                 };
-                let start = net.clock(stage).max(ready);
+                let start = net.clock(rank).max(ready);
                 let end = start + spec.bwd_op_s + spec.recompute_s;
-                net.advance(stage, end);
-                bwd_end[stage][mb] = end;
+                net.advance(rank, end);
+                bwd_end[ms][mb] = end;
             }
         }
     }
@@ -206,21 +237,23 @@ pub fn delta_frame_estimate(n: usize, frac: f32) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::pipeline::{self, gpipe, makespan, one_f_one_b};
+    use crate::coordinator::pipeline::{gpipe, interleaved, makespan, one_f_one_b, validate};
     use crate::util::prop::run_prop;
 
     /// op_time 64, integer byte counts, bandwidth 1 B/s: every quantity
     /// in both models is an exact small integer in f64.
-    fn exact_spec(s: usize, m: usize, bytes: usize, capacity: usize) -> SimSpec {
+    fn exact_spec(s: usize, v: usize, m: usize, bytes: usize, capacity: usize) -> SimSpec {
+        let links = pipeline::num_wire_links(s, v);
         SimSpec {
             n_stages: s,
+            v,
             n_mb: m,
             fwd_op_s: 64.0,
             bwd_op_s: 64.0,
             recompute_s: 0.0,
-            fwd_bytes: vec![bytes; s.saturating_sub(1)],
-            bwd_bytes: vec![bytes; s.saturating_sub(1)],
-            raw_bytes: vec![bytes; s.saturating_sub(1)],
+            fwd_bytes: vec![bytes; links],
+            bwd_bytes: vec![bytes; links],
+            raw_bytes: vec![bytes; links],
             model: WireModel { bandwidth_bytes_per_s: 1.0, latency_s: 0.0 },
             capacity,
         }
@@ -230,19 +263,30 @@ mod tests {
     fn prop_no_contention_matches_analytic_exactly() {
         // Zero latency, a single in-flight message per link, and wire
         // time <= op time: the event-driven makespan must equal the
-        // analytic pipeline::makespan() bit for bit.
+        // analytic pipeline::makespan() bit for bit — on the flat
+        // schedules and on the interleaved ring.
         run_prop("simnet == analytic makespan", 40, |g| {
             let s = g.usize(1, 6);
             let m = g.usize(1, 10);
             let bytes = g.usize(0, 64); // tx <= op_time: no contention
             for ops in [gpipe(s, m), one_f_one_b(s, m)] {
-                let want = makespan(&ops, s, m, 64.0, bytes as f64);
-                let got = simulate(&ops, &exact_spec(s, m, bytes, 1)).makespan_s;
+                let want = makespan(&ops, s, 1, m, 64.0, bytes as f64);
+                let got = simulate(&ops, &exact_spec(s, 1, m, bytes, 1)).makespan_s;
                 if got != want {
                     return Err(format!(
                         "s={s} m={m} bytes={bytes}: sim {got} != analytic {want}"
                     ));
                 }
+            }
+            let v = g.usize(2, 3);
+            let m = s * g.usize(1, 3);
+            let ops = interleaved(s, v, m).map_err(|e| e.to_string())?;
+            let want = makespan(&ops, s, v, m, 64.0, bytes as f64);
+            let got = simulate(&ops, &exact_spec(s, v, m, bytes, 1)).makespan_s;
+            if got != want {
+                return Err(format!(
+                    "interleaved s={s} v={v} m={m} bytes={bytes}: sim {got} != analytic {want}"
+                ));
             }
             Ok(())
         });
@@ -259,8 +303,8 @@ mod tests {
             let bytes = g.usize(80, 192); // tx in (op, 3*op]
             let capacity = *g.choose(&[1usize, 4]);
             let ops = gpipe(s, m);
-            let want = makespan(&ops, s, m, 64.0, bytes as f64);
-            let got = simulate(&ops, &exact_spec(s, m, bytes, capacity)).makespan_s;
+            let want = makespan(&ops, s, 1, m, 64.0, bytes as f64);
+            let got = simulate(&ops, &exact_spec(s, 1, m, bytes, capacity)).makespan_s;
             if got <= want {
                 return Err(format!(
                     "s={s} m={m} bytes={bytes} cap={capacity}: sim {got} <= analytic {want}"
@@ -270,11 +314,41 @@ mod tests {
         });
     }
 
+    /// The satellite pin at the traffic level: `Interleaved{v=1}` moves
+    /// exactly the bytes of plain 1F1B through exactly the same links
+    /// (op equality is pinned in `pipeline`; this closes the loop on
+    /// makespan + bytes over the transport).
+    #[test]
+    fn interleaved_v1_matches_one_f_one_b_bytes_and_makespan() {
+        for (s, m) in [(2, 3), (4, 8), (4, 16), (5, 7)] {
+            let spec = exact_spec(s, 1, m, 48, 2);
+            let flat = simulate(&one_f_one_b(s, m), &spec);
+            let il = simulate(&interleaved(s, 1, m).unwrap(), &spec);
+            assert_eq!(flat.bytes, il.bytes, "s={s} m={m}");
+            assert_eq!(flat.raw_bytes, il.raw_bytes);
+            assert_eq!(flat.makespan_s, il.makespan_s);
+            assert_eq!(flat.busy_s, il.busy_s);
+        }
+    }
+
+    #[test]
+    fn interleaved_ring_ships_v_times_the_boundaries() {
+        // v chunks per rank: 2*S*v - 2 messages per microbatch round
+        // trip vs 2*(S-1) flat — same per-message size, ~v x bytes.
+        let (s, m) = (4, 8);
+        let flat = simulate(&one_f_one_b(s, m), &exact_spec(s, 1, m, 10, 4));
+        let il = simulate(&interleaved(s, 2, m).unwrap(), &exact_spec(s, 2, m, 10, 4));
+        let per_mb_flat = 2 * (s - 1);
+        let per_mb_il = 2 * (2 * s - 1);
+        assert_eq!(flat.bytes, (per_mb_flat * m * 10) as u64);
+        assert_eq!(il.bytes, (per_mb_il * m * 10) as u64);
+    }
+
     #[test]
     fn recompute_charges_gpipe_backward_phase() {
         let ops = gpipe(4, 8);
-        let base = simulate(&ops, &exact_spec(4, 8, 16, 4));
-        let mut spec = exact_spec(4, 8, 16, 4);
+        let base = simulate(&ops, &exact_spec(4, 1, 8, 16, 4));
+        let mut spec = exact_spec(4, 1, 8, 16, 4);
         spec.recompute_s = 64.0;
         let rc = simulate(&ops, &spec);
         assert!(rc.makespan_s > base.makespan_s);
@@ -286,7 +360,7 @@ mod tests {
     #[test]
     fn latency_delays_makespan_but_not_busy_time() {
         let ops = one_f_one_b(4, 8);
-        let mut spec = exact_spec(4, 8, 32, 4);
+        let mut spec = exact_spec(4, 1, 8, 32, 4);
         let quiet = simulate(&ops, &spec);
         spec.model.latency_s = 10.0;
         let laggy = simulate(&ops, &spec);
@@ -298,9 +372,14 @@ mod tests {
     #[test]
     fn single_stage_has_no_traffic() {
         let ops = gpipe(1, 5);
-        let r = simulate(&ops, &exact_spec(1, 5, 1000, 1));
+        let r = simulate(&ops, &exact_spec(1, 1, 5, 1000, 1));
         assert_eq!(r.bytes, 0);
         assert!((r.makespan_s - 10.0 * 64.0).abs() < 1e-9);
+        // all chunks on one rank: still no wire
+        let ops = interleaved(1, 3, 5).unwrap();
+        let r = simulate(&ops, &exact_spec(1, 3, 5, 1000, 1));
+        assert_eq!(r.bytes, 0);
+        assert!((r.makespan_s - 3.0 * 10.0 * 64.0).abs() < 1e-9);
     }
 
     #[test]
@@ -308,10 +387,16 @@ mod tests {
         // the simulator consumes exactly the ops the validator accepts
         for (s, m) in [(2, 3), (4, 16)] {
             for ops in [gpipe(s, m), one_f_one_b(s, m)] {
-                pipeline::validate(&ops, s, m).unwrap();
-                let r = simulate(&ops, &exact_spec(s, m, 8, 2));
+                validate(&ops, s, 1, m).unwrap();
+                let r = simulate(&ops, &exact_spec(s, 1, m, 8, 2));
                 assert!(r.makespan_s.is_finite() && r.makespan_s > 0.0);
             }
+        }
+        for (s, v, m) in [(2, 2, 4), (4, 2, 16)] {
+            let ops = interleaved(s, v, m).unwrap();
+            validate(&ops, s, v, m).unwrap();
+            let r = simulate(&ops, &exact_spec(s, v, m, 8, 2));
+            assert!(r.makespan_s.is_finite() && r.makespan_s > 0.0);
         }
     }
 
@@ -320,7 +405,7 @@ mod tests {
         // the same schedule over loopback TCP moves identical traffic
         // (ledger parity) and reports measured — not modelled — tx time
         let ops = gpipe(3, 4);
-        let spec = exact_spec(3, 4, 128, 4);
+        let spec = exact_spec(3, 1, 4, 128, 4);
         let sim = simulate(&ops, &spec);
         let real = simulate_real(&ops, &spec, crate::netsim::Backend::Tcp).unwrap();
         assert_eq!(real.bytes, sim.bytes);
@@ -328,6 +413,19 @@ mod tests {
         assert!(real.wire_elapsed_s > 0.0, "no wall tx time measured");
         assert!(real.makespan_s > 0.0);
         assert_eq!(sim.wire_elapsed_s, 0.0);
+    }
+
+    #[test]
+    fn real_backend_carries_the_interleaved_ring() {
+        // v=2 over loopback: the wrap link (index = n_stages) exists and
+        // the ring moves the same traffic the simulator charges
+        let ops = interleaved(2, 2, 4).unwrap();
+        let spec = exact_spec(2, 2, 4, 64, 4);
+        assert_eq!(spec.wire_links(), 2);
+        let sim = simulate(&ops, &spec);
+        let real = simulate_real(&ops, &spec, crate::netsim::Backend::Tcp).unwrap();
+        assert_eq!(real.bytes, sim.bytes);
+        assert!(real.wire_elapsed_s > 0.0);
     }
 
     #[test]

@@ -15,8 +15,15 @@ use crate::tensor::Tensor;
 /// take f32 activations.
 #[derive(Clone, Debug)]
 pub enum StageInput {
+    /// Activation tensor (every stage after the first).
     F32(Tensor),
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Integer data input — token ids for the LM task (stage 0 only).
+    I32 {
+        /// Logical shape of the id tensor.
+        shape: Vec<usize>,
+        /// Row-major token ids.
+        data: Vec<i32>,
+    },
 }
 
 impl StageInput {
@@ -28,9 +35,14 @@ impl StageInput {
     }
 }
 
+/// Executor for one model stage: parameters, optimizer state, in-flight
+/// stash, gradient accumulator, and the stage's AOT executables.
 pub struct StageRunner {
+    /// Manifest description of this stage (shapes, executable files).
     pub spec: StageSpec,
+    /// Model-stage index in the pipeline.
     pub index: usize,
+    /// Whether this is stage 0 (takes data instead of activations).
     pub is_first: bool,
     /// Shape of this stage's input activation (empty for stage 0, whose
     /// input is data). Set at construction from the previous stage's
@@ -52,6 +64,7 @@ pub struct StageRunner {
 }
 
 impl StageRunner {
+    /// Build a runner for stage `index` with its initial parameters.
     pub fn new(
         index: usize,
         spec: StageSpec,
@@ -90,10 +103,12 @@ impl StageRunner {
         self.last_op_wall_s
     }
 
+    /// Current parameter tensors.
     pub fn params(&self) -> &[Tensor] {
         &self.params
     }
 
+    /// Replace the parameters (shape-checked against the current ones).
     pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
         if params.len() != self.params.len() {
             bail!("stage {}: param count mismatch", self.index);

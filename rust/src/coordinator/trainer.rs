@@ -39,8 +39,11 @@ enum TaskData {
     Text { corpus: TextDataset, train_seqs: usize, test_seqs: usize },
 }
 
+/// The end-to-end training coordinator (see the module docs).
 pub struct Trainer {
+    /// PJRT runtime executing the AOT stage/loss/compression artifacts.
     pub rt: Runtime,
+    /// The run's full configuration.
     pub cfg: TrainConfig,
     stages: Vec<StageRunner>,
     links: Vec<CompressedLink>,
@@ -49,6 +52,10 @@ pub struct Trainer {
     /// per `cfg.backend`.
     pub net: Box<dyn Transport>,
     wire_model: WireModel,
+    /// Workers executing the pipeline: `model stages / v`. With an
+    /// interleaved schedule each rank hosts `v` chunks and the wire is
+    /// a ring; flat schedules keep one stage per rank on a chain.
+    n_ranks: usize,
     data: TaskData,
     microbatch: usize,
     n_microbatches: usize,
@@ -59,6 +66,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Build a trainer: stage runners (AOT init or checkpoint),
+    /// compressed links, datasets, and the configured transport.
     pub fn new(rt: Runtime, cfg: TrainConfig) -> Result<Trainer> {
         let model = rt.manifest().model(&cfg.model)?.clone();
         let microbatch = model.microbatch();
@@ -86,18 +95,51 @@ impl Trainer {
             stages.push(StageRunner::new(i, spec.clone(), in_shape, params, cfg.optimizer)?);
         }
 
-        // compressed links
+        // rank layout: flat schedules run one model stage per rank; an
+        // interleaved schedule folds `v` chunks onto each rank
+        // (round-robin: model stage m -> rank m % n_ranks) and needs
+        // the ring wire topology
+        let v = cfg.schedule.chunks();
+        let n_stages_total = model.stages.len();
+        if v > 1 {
+            if n_stages_total % v != 0 {
+                bail!(
+                    "schedule {} wants model stages divisible by v, got {n_stages_total}",
+                    cfg.schedule.name()
+                );
+            }
+            if n_stages_total / v < 2 {
+                bail!(
+                    "schedule {} leaves fewer than 2 ranks for {n_stages_total} model stages",
+                    cfg.schedule.name()
+                );
+            }
+        }
+        let n_ranks = n_stages_total / v;
+        if v > 1 && n_microbatches % n_ranks != 0 {
+            bail!(
+                "schedule {} wants microbatches divisible by ranks: {} mb over {} ranks",
+                cfg.schedule.name(),
+                n_microbatches,
+                n_ranks
+            );
+        }
+
+        // compressed links: one per model-stage boundary; each routes
+        // through the physical wire link of its lower stage's rank
         let mut links = Vec::new();
         for (i, &n) in model.links.iter().enumerate() {
             let files = rt.manifest().compression_for(n)?.clone();
-            links.push(CompressedLink::new(i, n, rt.manifest().padded(n), files));
+            let wire_link = pipeline::boundary_link(i, n_ranks).unwrap_or(0);
+            links.push(CompressedLink::new(i, wire_link, n, rt.manifest().padded(n), files));
         }
         let wire = WireModel::parse(&cfg.wire)?;
         let backend = Backend::parse(&cfg.backend)?;
+        let wire_links = pipeline::num_wire_links(n_ranks, v);
         let net: Box<dyn Transport> = match backend {
-            Backend::Sim => Box::new(SimNet::with_capacity(links.len(), wire, cfg.sim_queue_cap)),
+            Backend::Sim => Box::new(SimNet::with_capacity(wire_links, wire, cfg.sim_queue_cap)),
             _ => Box::new(RealTransport::loopback(
-                links.len(),
+                wire_links,
                 backend,
                 wire,
                 Duration::from_secs_f64(cfg.recv_timeout_s),
@@ -142,6 +184,7 @@ impl Trainer {
             links,
             net,
             wire_model: wire,
+            n_ranks,
             data,
             microbatch,
             n_microbatches,
@@ -153,18 +196,27 @@ impl Trainer {
         })
     }
 
+    /// The manifest name of the model this trainer runs.
     pub fn model_name(&self) -> &str {
         &self.model_name
     }
 
+    /// Total model stages (chunks), across all ranks.
     pub fn num_stages(&self) -> usize {
         self.stages.len()
     }
 
+    /// Workers executing the pipeline (`num_stages / v`).
+    pub fn num_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    /// Current parameters of every model stage.
     pub fn stage_params(&self) -> Vec<Vec<Tensor>> {
         self.stages.iter().map(|s| s.params().to_vec()).collect()
     }
 
+    /// Replace every stage's parameters (resets optimizer state).
     pub fn set_stage_params(&mut self, params: Vec<Vec<Tensor>>) -> Result<()> {
         for (s, p) in self.stages.iter_mut().zip(params) {
             s.set_params(p)?;
@@ -179,8 +231,8 @@ impl Trainer {
         self.links.iter().map(|l| l.feedback_memory_bytes()).sum()
     }
 
-    fn schedule(&self) -> Vec<Op> {
-        pipeline::ops_for(self.cfg.schedule, self.stages.len(), self.n_microbatches)
+    fn schedule(&self) -> Result<Vec<Op>> {
+        pipeline::ops_for(self.cfg.schedule, self.n_ranks, self.n_microbatches)
     }
 
     /// Virtual compute cost of the op a stage just executed: the
@@ -338,8 +390,12 @@ impl Trainer {
     ///
     /// The tensor path is an ordered single-threaded replay; the timing
     /// path runs the same ops as events in virtual time. `fwd_end` /
-    /// `bwd_end` record when each (stage, mb) op finished on its stage's
-    /// virtual clock — the send timestamps of the messages it produced.
+    /// `bwd_end` record when each (model stage, mb) op finished on its
+    /// *rank's* virtual clock — the send timestamps of the messages it
+    /// produced. With an interleaved schedule a rank hosts several
+    /// chunks, so its clock serializes ops across chunks while each
+    /// boundary still ships through its own compressed link (keyed by
+    /// boundary, contending on the shared physical ring link).
     ///
     /// This is the same gating rule `simexec::simulate` applies to
     /// synthetic schedules (its property tests pin the rule to
@@ -348,53 +404,67 @@ impl Trainer {
     /// ablation's memory-bounded GPipe it genuinely performs no
     /// rematerialization and must not be charged for one.
     fn train_batch(&mut self, _epoch: usize, batch: usize, compress: bool, lr: f32) -> Result<f64> {
-        let s_count = self.stages.len();
+        let ms_count = self.stages.len();
+        let n_ranks = self.n_ranks;
         let m_count = self.n_microbatches;
-        let ops = self.schedule();
-        // in-flight activations / gradients per (stage, mb)
-        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
-        let mut grads: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; s_count];
+        let ops = self.schedule()?;
+        // in-flight activations / gradients per (model stage, mb)
+        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; ms_count];
+        let mut grads: Vec<Vec<Option<Tensor>>> = vec![vec![None; m_count]; ms_count];
         let mut labels_by_mb: Vec<Option<Vec<i32>>> = vec![None; m_count];
-        // virtual completion times per (stage, mb)
-        let mut fwd_end = vec![vec![0.0f64; m_count]; s_count];
-        let mut bwd_end = vec![vec![0.0f64; m_count]; s_count];
+        // virtual completion times per (model stage, mb)
+        let mut fwd_end = vec![vec![0.0f64; m_count]; ms_count];
+        let mut bwd_end = vec![vec![0.0f64; m_count]; ms_count];
         let mut loss_sum = 0.0f64;
 
         let spec = self.cfg.spec;
         let imp = self.cfg.compress_impl;
         let plain = crate::compression::Spec::none();
         let active = if compress { &spec } else { &plain };
+        // channel keys: unique per (boundary, sample) — boundaries
+        // sharing a ring link must not collide, and AQ-SGD sample
+        // buffers key on the stable per-link sample id
+        let key_for = |boundary: usize, mb: usize| -> u64 {
+            ((boundary as u64) << 48) | (batch * m_count + mb) as u64
+        };
 
         for op in ops {
+            let (rank, mb) = (op.rank(), op.mb());
+            let ms = op.model_stage(n_ranks);
             match op {
-                Op::Fwd { stage, mb } => {
-                    let mb_key = (batch * m_count + mb) as u64;
-                    let (input, ready) = if stage == 0 {
+                Op::Fwd { .. } => {
+                    let (input, ready) = if ms == 0 {
                         let (inp, labels) = self.train_microbatch(batch, mb);
                         labels_by_mb[mb] = Some(labels);
-                        (inp, self.net.clock(0))
+                        (inp, self.net.clock(rank))
                     } else {
-                        let prev = acts[stage - 1][mb]
+                        let prev = acts[ms - 1][mb]
                             .take()
-                            .with_context(|| format!("missing act s{} mb{mb}", stage - 1))?;
-                        let sent_at = fwd_end[stage - 1][mb];
-                        let link = &mut self.links[stage - 1];
+                            .with_context(|| format!("missing act s{} mb{mb}", ms - 1))?;
+                        let sent_at = fwd_end[ms - 1][mb];
+                        let link = &mut self.links[ms - 1];
                         let (compressed, arrival) = link.forward(
-                            &self.rt, active, imp, &prev, mb_key, true, &mut *self.net, sent_at,
+                            &self.rt,
+                            active,
+                            imp,
+                            &prev,
+                            key_for(ms - 1, mb),
+                            true,
+                            &mut *self.net,
+                            sent_at,
                         )?;
                         (StageInput::F32(compressed), arrival)
                     };
-                    let y = self.stages[stage].forward(&self.rt, mb as u64, input, true)?;
-                    let start = self.net.clock(stage).max(ready);
-                    let end = start + self.op_time(stage);
-                    self.net.advance(stage, end);
-                    fwd_end[stage][mb] = end;
-                    acts[stage][mb] = Some(y);
+                    let y = self.stages[ms].forward(&self.rt, mb as u64, input, true)?;
+                    let start = self.net.clock(rank).max(ready);
+                    let end = start + self.op_time(ms);
+                    self.net.advance(rank, end);
+                    fwd_end[ms][mb] = end;
+                    acts[ms][mb] = Some(y);
                 }
-                Op::Bwd { stage, mb } => {
-                    let mb_key = (batch * m_count + mb) as u64;
-                    let (g_in, ready) = if stage == s_count - 1 {
-                        let logits = acts[stage][mb]
+                Op::Bwd { .. } => {
+                    let (g_in, ready) = if ms == ms_count - 1 {
+                        let logits = acts[ms][mb]
                             .take()
                             .with_context(|| format!("missing logits mb{mb}"))?;
                         let labels = labels_by_mb[mb]
@@ -402,24 +472,31 @@ impl Trainer {
                             .with_context(|| format!("missing labels mb{mb}"))?;
                         let (loss, g) = self.loss_and_grad(&logits, labels)?;
                         loss_sum += loss as f64;
-                        (g, fwd_end[stage][mb])
+                        (g, fwd_end[ms][mb])
                     } else {
-                        let g = grads[stage + 1][mb]
+                        let g = grads[ms + 1][mb]
                             .take()
-                            .with_context(|| format!("missing grad s{} mb{mb}", stage + 1))?;
-                        let sent_at = bwd_end[stage + 1][mb];
-                        let link = &mut self.links[stage];
+                            .with_context(|| format!("missing grad s{} mb{mb}", ms + 1))?;
+                        let sent_at = bwd_end[ms + 1][mb];
+                        let link = &mut self.links[ms];
                         link.backward(
-                            &self.rt, active, imp, &g, mb_key, true, &mut *self.net, sent_at,
+                            &self.rt,
+                            active,
+                            imp,
+                            &g,
+                            key_for(ms, mb),
+                            true,
+                            &mut *self.net,
+                            sent_at,
                         )?
                     };
-                    if let Some(gx) = self.stages[stage].backward(&self.rt, mb as u64, &g_in)? {
-                        grads[stage][mb] = Some(gx);
+                    if let Some(gx) = self.stages[ms].backward(&self.rt, mb as u64, &g_in)? {
+                        grads[ms][mb] = Some(gx);
                     }
-                    let start = self.net.clock(stage).max(ready);
-                    let end = start + self.op_time(stage);
-                    self.net.advance(stage, end);
-                    bwd_end[stage][mb] = end;
+                    let start = self.net.clock(rank).max(ready);
+                    let end = start + self.op_time(ms);
+                    self.net.advance(rank, end);
+                    bwd_end[ms][mb] = end;
                 }
             }
         }
@@ -442,7 +519,8 @@ impl Trainer {
         let mut x = input;
         // evals always use a scratch simulator: their timing is not part
         // of the run and their tensors need not cross a real wire
-        let mut scratch = SimNet::new(self.links.len(), self.wire_model);
+        let wire_links = pipeline::num_wire_links(self.n_ranks, self.cfg.schedule.chunks());
+        let mut scratch = SimNet::new(wire_links, self.wire_model);
         for i in 0..self.stages.len() {
             let y = self.stages[i].forward(&self.rt, u64::MAX, x, false)?;
             x = if i < self.links.len() {

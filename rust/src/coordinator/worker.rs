@@ -1,18 +1,23 @@
-//! `mpcomp worker` — run one pipeline stage as its own OS process,
+//! `mpcomp worker` — run one pipeline rank as its own OS process,
 //! exchanging real compressed activations/gradients over the socket
 //! transport.
 //!
-//! Each rank walks the same {GPipe, 1F1B} schedule (optionally repeated
-//! for `steps` rounds) and executes only its stage's ops: a forward op
-//! receives the activation frame from the previous rank (blocking on
-//! the real mailbox) and sends the stage's output activation
-//! downstream; a backward op receives the gradient frame from the next
-//! rank and sends upstream. Message tensors are generated
-//! deterministically from `(seed, link, dir, mb)` and compressed with
-//! the configured spec through the actual wire codecs, so the bytes on
-//! the socket are exactly what the trainer's links would ship — without
-//! needing the AOT artifacts, which makes the multi-process path
-//! runnable everywhere (including the CI `loopback` job).
+//! Each rank walks the same {GPipe, 1F1B, interleaved} schedule
+//! (optionally repeated for `steps` rounds) and executes only its own
+//! ops: a forward op receives the activation frame of its chunk's
+//! upstream boundary (blocking on the real mailbox) and sends the
+//! chunk's output activation downstream; a backward op receives the
+//! gradient frame from the downstream boundary and sends upstream.
+//! With `--virtual-stages v` (`schedule = interleaved:v`) every rank
+//! hosts `v` model chunks, the wire becomes a *ring* (the last rank's
+//! chunk output wraps to rank 0), and boundaries sharing a physical
+//! link are distinguished by chunk-qualified message keys and
+//! per-channel protocol state. Message tensors are generated
+//! deterministically from `(seed, link, dir, chunk, mb)` and compressed
+//! with the configured spec through the actual wire codecs, so the
+//! bytes on the socket are exactly what the trainer's links would ship
+//! — without needing the AOT artifacts, which makes the multi-process
+//! path runnable everywhere (including the CI `loopback` job).
 //!
 //! Error-feedback specs run the full two-sided protocol: every rank
 //! keeps sender [`FeedbackState`]s for the channels it produces and
@@ -39,7 +44,7 @@ use anyhow::{bail, Context, Result};
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::Schedule;
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
-use crate::coordinator::pipeline::{self, Op};
+use crate::coordinator::pipeline;
 use crate::netsim::{
     Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, WireModel,
 };
@@ -51,37 +56,61 @@ pub use crate::util::fnv1a;
 /// Parameters of one synthetic multi-process schedule run.
 #[derive(Clone, Debug)]
 pub struct WorkerOpts {
-    /// Pipeline depth == world size (one process per stage).
+    /// World size: one process per rank. With an interleaved schedule
+    /// each rank hosts `schedule.chunks()` model chunks.
     pub stages: usize,
+    /// Microbatches per schedule round.
     pub mb: usize,
     /// Elements per inter-stage tensor.
     pub link_elems: usize,
+    /// The pipeline schedule every rank walks (its `chunks()` sets the
+    /// virtual-stage count and thereby the chain-vs-ring topology).
     pub schedule: Schedule,
     /// Compression spec, including error-feedback modes (shared-index
     /// masks are a trainer concern and stay rejected).
     pub spec: Spec,
+    /// Seed for the deterministic synthetic message tensors.
     pub seed: u64,
+    /// Wire model used by the `SimNet` reference replay.
     pub wire: WireModel,
+    /// Receive window (seconds) before a typed timeout error.
     pub recv_timeout_s: f64,
     /// Schedule repetitions: microbatch ids repeat across steps, so
     /// AQ-SGD bootstraps once and then ships deltas.
     pub steps: usize,
 }
 
+impl WorkerOpts {
+    /// Virtual stages per rank (1 for the flat schedules).
+    pub fn chunks(&self) -> usize {
+        self.schedule.chunks()
+    }
+
+    /// Physical wire links of this run's topology.
+    pub fn wire_links(&self) -> usize {
+        pipeline::num_wire_links(self.stages, self.chunks())
+    }
+}
+
 /// What one endpoint saw on one `(link, dir)` mailbox.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MailboxLog {
+    /// Physical wire link of this mailbox.
     pub link: usize,
+    /// Message direction of this mailbox.
     pub dir: Dir,
     /// `(key, bytes, payload digest)` in delivery order.
     pub recv: Vec<(u64, usize, u64)>,
+    /// Messages this endpoint sent on the mailbox's channel.
     pub sent_msgs: u64,
+    /// Bytes this endpoint sent on the mailbox's channel.
     pub sent_bytes: u64,
 }
 
 /// The deterministic outcome of one worker (or reference) run.
 #[derive(Clone, Debug)]
 pub struct WorkerSummary {
+    /// Transport backend name (`sim`, `tcp`, `uds`).
     pub backend: String,
     /// `None` for the single-process reference run (all stages).
     pub rank: Option<usize>,
@@ -91,28 +120,34 @@ pub struct WorkerSummary {
     pub wire_elapsed_s: f64,
 }
 
-/// Deterministic synthetic tensor for the message `(link, dir, mb)` —
-/// stable across steps, the fixed-batch analogue of revisiting the
-/// same training samples.
-fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, mb: usize) -> Vec<f32> {
-    let tag = ((link as u64) << 40) | ((dir.index() as u64) << 32) | mb as u64;
+/// Deterministic synthetic tensor for the message `(link, dir, chunk,
+/// mb)` — stable across steps, the fixed-batch analogue of revisiting
+/// the same training samples. `chunk` distinguishes boundaries sharing
+/// a ring link (always 0 on a chain, keeping v=1 tensors identical to
+/// the pre-interleaving ones).
+fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, chunk: usize, mb: usize) -> Vec<f32> {
+    let tag = ((link as u64) << 40)
+        | ((dir.index() as u64) << 32)
+        | ((chunk as u64) << 24)
+        | mb as u64;
     let mut rng = Rng::with_stream(opts.seed, tag);
     let mut v = vec![0.0f32; opts.link_elems];
     rng.fill_normal(&mut v, 0.0, 1.0);
     v
 }
 
-/// Compress + encode the message for `(link, dir, mb)` with the actual
-/// wire codecs (what the trainer's links put on a real socket).
+/// Compress + encode the message for `(link, dir, chunk, mb)` with the
+/// actual wire codecs (what the trainer's links put on a real socket).
 /// Feedback modes advance `state` — the sender half of this channel.
 fn encode_message(
     opts: &WorkerOpts,
     state: &mut FeedbackState,
     link: usize,
     dir: Dir,
+    chunk: usize,
     mb: usize,
 ) -> Result<Vec<u8>> {
-    let x = gen_tensor(opts, link, dir, mb);
+    let x = gen_tensor(opts, link, dir, chunk, mb);
     match opts.spec.method {
         Method::None => Ok(wire::encode_raw(&x)),
         Method::Quant { fw_bits, bw_bits } => {
@@ -163,17 +198,24 @@ fn channel_feedback(fb: Feedback, dir: Dir) -> Feedback {
 }
 
 /// Walk the schedule (repeated `steps` times), executing send/recv for
-/// every stage `mine` accepts, and log what each mailbox saw. With
+/// every rank `mine` accepts, and log what each mailbox saw. With
 /// `mine = |_| true` and a `SimNet` (or loopback real transport) this
-/// is the single-process replay; with `mine = |s| s == rank` over an
+/// is the single-process replay; with `mine = |r| r == rank` over an
 /// endpoint transport it is one rank of a multi-process run.
+///
+/// Protocol state (feedback sender halves + receiver mirrors) is kept
+/// **per channel**: one slot per `(link, dir, chunk)`, where `chunk`
+/// is the boundary's index among the boundaries sharing that physical
+/// link (`boundary / stages`) — always 0 on a chain, so flat runs are
+/// byte-identical to the pre-interleaving protocol.
 fn run_stages(
     opts: &WorkerOpts,
     net: &mut dyn Transport,
     mine: &dyn Fn(usize) -> bool,
 ) -> Result<Vec<MailboxLog>> {
     let stages = opts.stages;
-    let links = stages.saturating_sub(1);
+    let v = opts.chunks();
+    let links = opts.wire_links();
     let mut boxes: Vec<MailboxLog> = (0..links)
         .flat_map(|link| {
             [Dir::Fwd, Dir::Bwd].into_iter().map(move |dir| MailboxLog {
@@ -186,44 +228,44 @@ fn run_stages(
         })
         .collect();
     // per-channel protocol state: sender half for channels this endpoint
-    // produces, receiver mirror for channels it consumes
-    let mut senders: Vec<FeedbackState> = (0..links * 2).map(|_| FeedbackState::new()).collect();
-    let mut mirrors: Vec<FeedbackState> = (0..links * 2).map(|_| FeedbackState::new()).collect();
+    // produces, receiver mirror for channels it consumes — one slot per
+    // (link, dir, chunk)
+    let slots = links * 2 * v;
+    let mut senders: Vec<FeedbackState> = (0..slots).map(|_| FeedbackState::new()).collect();
+    let mut mirrors: Vec<FeedbackState> = (0..slots).map(|_| FeedbackState::new()).collect();
     // frames recorded at send time, for backends whose delivered frames
     // carry no payload (the SimNet reference decodes its local copy)
     let mut sent_frames: Vec<HashMap<u64, Vec<u8>>> =
         (0..links * 2).map(|_| Default::default()).collect();
 
-    let ops = pipeline::ops_for(opts.schedule, stages, opts.mb);
+    let ops = pipeline::ops_for(opts.schedule, stages, opts.mb)?;
+    // one boundary -> one channel: its physical link, its chunk index
+    // among the boundaries sharing that link, its unique transport key
+    // (stable AQ-SGD sample keys ride *inside* the delta frames), the
+    // mailbox index, and the protocol-state slot. Sender and receiver
+    // must derive these identically, so there is exactly one place.
+    let channel = |boundary: usize, dir: Dir, step: usize, mb: usize| {
+        let link = pipeline::boundary_link(boundary, stages)
+            .expect("multi-rank runs have wire links");
+        let chunk = boundary / stages;
+        let key = ((step * v + chunk) * opts.mb + mb) as u64;
+        let mbx = link * 2 + dir.index();
+        (link, chunk, key, mbx, mbx * v + chunk)
+    };
     for step in 0..opts.steps.max(1) {
         for op in &ops {
-            let (stage, mb, dir) = match *op {
-                Op::Fwd { stage, mb } => (stage, mb, Dir::Fwd),
-                Op::Bwd { stage, mb } => (stage, mb, Dir::Bwd),
-            };
-            if !mine(stage) {
+            let (rank, mb) = (op.rank(), op.mb());
+            let dir = if op.is_fwd() { Dir::Fwd } else { Dir::Bwd };
+            if !mine(rank) {
                 continue;
             }
-            // transport keys are unique per message; the AQ-SGD sample
-            // key (inside the delta frame) stays the microbatch id
-            let key = (step * opts.mb + mb) as u64;
-            // receive this op's input frame (if the stage has an input link)
-            let recv_link = match dir {
-                Dir::Fwd => stage.checked_sub(1),
-                Dir::Bwd => {
-                    if stage + 1 < stages {
-                        Some(stage)
-                    } else {
-                        None
-                    }
-                }
-            };
-            if let Some(link) = recv_link {
-                let slot = link * 2 + dir.index();
+            // receive this op's input frame (if its boundary has a wire)
+            if let Some(boundary) = pipeline::input_boundary(op, stages, v) {
+                let (link, chunk, key, mbx, slot) = channel(boundary, dir, step, mb);
                 let frame = net
                     .recv(link, dir, key)
-                    .with_context(|| format!("rank recv link {link} {dir} mb {mb}"))?;
-                let local = sent_frames[slot].get(&key);
+                    .with_context(|| format!("rank recv link {link} {dir} chunk {chunk} mb {mb}"))?;
+                let local = sent_frames[mbx].get(&key);
                 let buf: &[u8] = match (&frame.payload, local) {
                     (Some(p), _) => p,
                     (None, Some(l)) => l,
@@ -243,30 +285,20 @@ fn run_stages(
                         .apply_frame(fb, &df, opts.link_elems)
                         .with_context(|| format!("link {link} {dir} mb {mb}: mirror"))?;
                 }
-                boxes[slot].recv.push((key, frame.bytes, fnv1a(buf)));
+                boxes[mbx].recv.push((key, frame.bytes, fnv1a(buf)));
             }
-            // send this op's output frame (if the stage has an output link)
-            let send_link = match dir {
-                Dir::Fwd => {
-                    if stage + 1 < stages {
-                        Some(stage)
-                    } else {
-                        None
-                    }
-                }
-                Dir::Bwd => stage.checked_sub(1),
-            };
-            if let Some(link) = send_link {
-                let slot = link * 2 + dir.index();
-                let buf = encode_message(opts, &mut senders[slot], link, dir, mb)?;
+            // send this op's output frame (if its boundary has a wire)
+            if let Some(boundary) = pipeline::output_boundary(op, stages, v) {
+                let (link, chunk, key, mbx, slot) = channel(boundary, dir, step, mb);
+                let buf = encode_message(opts, &mut senders[slot], link, dir, chunk, mb)?;
                 if !net.wants_payload() {
-                    sent_frames[slot].insert(key, buf.clone());
+                    sent_frames[mbx].insert(key, buf.clone());
                 }
                 let raw = wire::raw_wire_bytes(opts.link_elems);
                 net.send(link, dir, key, Payload::Bytes(&buf), raw, 0.0)
-                    .with_context(|| format!("rank send link {link} {dir} mb {mb}"))?;
-                boxes[slot].sent_msgs += 1;
-                boxes[slot].sent_bytes += buf.len() as u64;
+                    .with_context(|| format!("rank send link {link} {dir} chunk {chunk} mb {mb}"))?;
+                boxes[mbx].sent_msgs += 1;
+                boxes[mbx].sent_bytes += buf.len() as u64;
             }
         }
     }
@@ -275,7 +307,7 @@ fn run_stages(
 
 /// Single-process reference: the whole schedule over `SimNet`.
 pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
-    let mut net = SimNet::new(opts.stages.saturating_sub(1), opts.wire);
+    let mut net = SimNet::new(opts.wire_links(), opts.wire);
     let boxes = run_stages(opts, &mut net, &|_| true)?;
     Ok(WorkerSummary { backend: "sim".into(), rank: None, boxes, wire_elapsed_s: 0.0 })
 }
@@ -284,7 +316,7 @@ pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
 /// every link in this process) — the in-test analogue of the
 /// multi-process path.
 pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
-    let links = opts.stages.saturating_sub(1);
+    let links = opts.wire_links();
     let timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
     let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
     let boxes = run_stages(opts, &mut net, &|_| true)?;
@@ -299,7 +331,8 @@ pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary
 }
 
 /// One rank of a multi-process run: rendezvous with the neighbor
-/// processes, execute this stage's ops, shut down gracefully.
+/// processes (a chain for flat schedules, a ring once chunks
+/// interleave), execute this rank's ops, shut down gracefully.
 pub fn run_rank(
     opts: &WorkerOpts,
     rank: usize,
@@ -311,6 +344,7 @@ pub fn run_rank(
     }
     let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
     rv.recv_timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
+    rv.ring = opts.chunks() > 1 && opts.stages > 1;
     let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
     let boxes = run_stages(opts, &mut net, &|s| s == rank)?;
     let elapsed = net.wire_elapsed_s();
@@ -425,6 +459,7 @@ pub fn compare_bytes(
 // ---------------------------------------------------------------------------
 
 impl WorkerSummary {
+    /// Serialize for the CI parity files (`--out`).
     pub fn to_json(&self) -> Json {
         let mut o = Json::object();
         o.set("backend", Json::Str(self.backend.clone()));
@@ -459,6 +494,7 @@ impl WorkerSummary {
         o
     }
 
+    /// Inverse of [`Self::to_json`].
     pub fn from_json(j: &Json) -> Result<WorkerSummary> {
         let rank = match j.get("rank")? {
             Json::Null => None,
@@ -490,11 +526,13 @@ impl WorkerSummary {
         })
     }
 
+    /// Write the JSON summary to `path`.
     pub fn save(&self, path: &str) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())
             .with_context(|| format!("writing {path}"))
     }
 
+    /// Read a JSON summary produced by [`Self::save`].
     pub fn load(path: &str) -> Result<WorkerSummary> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -578,6 +616,80 @@ mod tests {
             }
             check(&a, std::slice::from_ref(&b)).unwrap();
         }
+    }
+
+    #[test]
+    fn interleaved_reference_covers_the_ring() {
+        let mut o = opts(2, 4, "topk:10");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        let a = run_reference(&o).unwrap();
+        let b = run_reference(&o).unwrap();
+        assert_eq!(a.boxes, b.boxes, "interleaved reference must be deterministic");
+        // ring topology: 2 physical links x 2 dirs
+        assert_eq!(a.boxes.len(), 4);
+        // 3 boundaries x 4 mb per direction: the chain link carries
+        // boundaries 0 and 2 (8 messages), the wrap link boundary 1
+        assert_eq!(a.boxes[0].recv.len(), 8, "link 0 fwd");
+        assert_eq!(a.boxes[2].recv.len(), 4, "wrap link fwd");
+        assert_eq!(a.boxes[1].recv.len(), 8, "link 0 bwd");
+        assert_eq!(a.boxes[3].recv.len(), 4, "wrap link bwd");
+        check(&a, std::slice::from_ref(&b)).unwrap();
+        // keys on a shared link are chunk-qualified: all unique
+        for mbx in &a.boxes {
+            let mut keys: Vec<u64> = mbx.recv.iter().map(|r| r.0).collect();
+            keys.sort_unstable();
+            keys.dedup();
+            assert_eq!(keys.len(), mbx.recv.len(), "link {} {}", mbx.link, mbx.dir);
+        }
+    }
+
+    #[test]
+    fn interleaved_v1_reference_matches_plain_1f1b() {
+        // the worker-level half of the v=1 pin: same mailboxes, same
+        // delivery logs, same bytes as the flat 1F1B run
+        for mode in ["topk:10", "ef21+topk:10"] {
+            let mut flat = opts(3, 6, mode);
+            flat.schedule = Schedule::OneFOneB;
+            flat.steps = 2;
+            let mut il = flat.clone();
+            il.schedule = Schedule::Interleaved { v: 1 };
+            let a = run_reference(&flat).unwrap();
+            let b = run_reference(&il).unwrap();
+            assert_eq!(a.boxes, b.boxes, "{mode}: v=1 diverged from 1f1b");
+        }
+    }
+
+    #[test]
+    fn interleaved_feedback_runs_per_channel_state() {
+        // EF21 over the ring: per-(link, dir, chunk) generations stay
+        // consistent, so repeated steps decode cleanly and determinism
+        // holds end to end
+        let mut o = opts(2, 4, "ef21+topk:10");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        o.steps = 3;
+        let a = run_reference(&o).unwrap();
+        let b = run_reference(&o).unwrap();
+        assert_eq!(a.boxes, b.boxes);
+        for mbx in &a.boxes {
+            assert!(mbx.recv.len() == 12 || mbx.recv.len() == 24, "{}", mbx.recv.len());
+        }
+        // and the byte-saving claim survives interleaving
+        let mut base = o.clone();
+        base.spec = Spec::parse("topk:10").unwrap();
+        base.link_elems = 4096;
+        let mut ef = base.clone();
+        ef.spec = Spec::parse("ef21+topk:10").unwrap();
+        let base_run = run_reference(&base).unwrap();
+        let ef_run = run_reference(&ef).unwrap();
+        let (b0, c0) = compare_bytes(&base_run, &[ef_run]).unwrap();
+        assert!(c0 < b0, "interleaved ef21 {c0} !< baseline {b0}");
+    }
+
+    #[test]
+    fn interleaved_rejects_indivisible_microbatches() {
+        let mut o = opts(2, 3, "none");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        assert!(run_reference(&o).is_err());
     }
 
     #[test]

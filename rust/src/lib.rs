@@ -11,8 +11,9 @@
 //!   plus an event-driven transmission simulator (`SimNet`) with
 //!   bandwidth contention, latency, and bounded per-link queues.
 //! * [`coordinator`] is the pipeline-parallel training coordinator:
-//!   stage scheduling (GPipe / 1F1B) executed through the simulated
-//!   transport, compressed links, optimizer driving, checkpointing.
+//!   stage scheduling (GPipe / 1F1B / interleaved 1F1B with virtual
+//!   stages) executed through the simulated transport, compressed
+//!   links, optimizer driving, checkpointing.
 //! * [`experiments`] regenerates every table and figure of the paper,
 //!   plus the `exp schedule` transmission ablation.
 //!

@@ -11,7 +11,8 @@
 //!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
 //!            [--backend sim|tcp|uds]
 //! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
-//!               [--mb N] [--link-elems N] [--compression M] [--schedule S]
+//!               [--mb N] [--link-elems N] [--compression M]
+//!               [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
 //!               [--seed N] [--steps N] [--out summary.json]
 //! mpcomp worker --reference ... --out ref.json    # single-process SimNet replay
 //! mpcomp worker --check ref.json rank0.json rank1.json
@@ -34,7 +35,7 @@ const VALUE_FLAGS: &[&str] = &[
     // exp schedule (transmission-simulator ablation) + worker
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
-    "recv-timeout", "steps", "compare-bytes",
+    "recv-timeout", "steps", "compare-bytes", "virtual-stages",
 ];
 
 fn main() -> Result<()> {
@@ -253,11 +254,23 @@ fn worker_cmd(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+    // --virtual-stages V is shorthand for --schedule interleaved:V
+    // (V = 1 falls back to plain 1f1b semantics via Interleaved{1})
+    let schedule = match args.usize("virtual-stages")? {
+        Some(0) => bail!("--virtual-stages wants V >= 1"),
+        Some(v) => {
+            if args.has("schedule") {
+                bail!("--virtual-stages and --schedule are mutually exclusive");
+            }
+            Schedule::Interleaved { v }
+        }
+        None => Schedule::parse(args.get("schedule").unwrap_or("gpipe"))?,
+    };
     let opts = WorkerOpts {
         stages: args.usize("stages")?.unwrap_or(2),
         mb: args.usize("mb")?.unwrap_or(4),
         link_elems: args.usize("link-elems")?.unwrap_or(256),
-        schedule: Schedule::parse(args.get("schedule").unwrap_or("gpipe"))?,
+        schedule,
         spec: Spec::parse(args.get("compression").unwrap_or("none"))?,
         seed: args.usize("seed")?.unwrap_or(0) as u64,
         wire: WireModel::parse(args.get("wire").unwrap_or("wan"))?,

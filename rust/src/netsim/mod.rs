@@ -21,6 +21,14 @@
 //! trait ([`transport`]): the coordinator, the schedule executor, and
 //! `mpcomp worker` are written against it, so a run measures either
 //! simulated or real wall-clock wire time behind one API.
+//!
+//! Link `i` connects stage `i` to stage `i + 1` on a chain; interleaved
+//! schedules add a wrap-around link from the last rank back to rank 0
+//! (`coordinator::pipeline::num_wire_links`), turning the topology into
+//! a ring — the mailbox surface is unchanged, only the link count and
+//! the rendezvous adjacency differ.
+
+#![warn(missing_docs)]
 
 pub mod real;
 pub mod sim;
@@ -36,7 +44,9 @@ use anyhow::{bail, Result};
 /// 100 Mbit/s WAN with 20 ms RTT (10 ms one-way).
 #[derive(Clone, Copy, Debug)]
 pub struct WireModel {
+    /// Link bandwidth in bytes per second.
     pub bandwidth_bytes_per_s: f64,
+    /// One-way propagation latency in seconds.
     pub latency_s: f64,
 }
 
@@ -78,9 +88,13 @@ impl WireModel {
     }
 }
 
+/// Message direction on a link: activations flow forward (downstream),
+/// gradients backward (upstream).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dir {
+    /// Activations: lower stage to upper stage.
     Fwd,
+    /// Gradients: upper stage to lower stage.
     Bwd,
 }
 
@@ -93,6 +107,7 @@ impl Dir {
         }
     }
 
+    /// Stable lowercase name (`fwd` / `bwd`).
     pub fn name(self) -> &'static str {
         match self {
             Dir::Fwd => "fwd",
@@ -100,6 +115,7 @@ impl Dir {
         }
     }
 
+    /// Inverse of [`Dir::name`].
     pub fn parse(s: &str) -> Result<Dir> {
         match s {
             "fwd" => Ok(Dir::Fwd),
@@ -118,21 +134,29 @@ impl std::fmt::Display for Dir {
 /// Accumulated statistics for one link direction.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DirStats {
+    /// Messages carried.
     pub messages: u64,
+    /// Compressed bytes that crossed the wire.
     pub payload_bytes: u64,
+    /// Uncompressed-equivalent bytes (what `none` would have shipped).
     pub uncompressed_bytes: u64,
+    /// Summed per-message transfer times (latency + serialization).
     pub sim_time_s: f64,
 }
 
-/// Per-link accounting (one entry per pipeline boundary).
+/// Per-link accounting (one entry per physical wire link).
 #[derive(Clone, Debug)]
 pub struct NetSim {
+    /// The wire model every transfer is priced with.
     pub model: WireModel,
+    /// Forward-direction stats, one entry per link.
     pub fwd: Vec<DirStats>,
+    /// Backward-direction stats, one entry per link.
     pub bwd: Vec<DirStats>,
 }
 
 impl NetSim {
+    /// A zeroed ledger for `num_links` links.
     pub fn new(num_links: usize, model: WireModel) -> Self {
         NetSim {
             model,
@@ -155,14 +179,17 @@ impl NetSim {
         t
     }
 
+    /// Compressed bytes summed over every link and direction.
     pub fn total_bytes(&self) -> u64 {
         self.fwd.iter().chain(&self.bwd).map(|s| s.payload_bytes).sum()
     }
 
+    /// Uncompressed-equivalent bytes summed over every link/direction.
     pub fn total_uncompressed_bytes(&self) -> u64 {
         self.fwd.iter().chain(&self.bwd).map(|s| s.uncompressed_bytes).sum()
     }
 
+    /// Summed per-message transfer times across all channels.
     pub fn total_sim_time(&self) -> f64 {
         self.fwd.iter().chain(&self.bwd).map(|s| s.sim_time_s).sum()
     }
@@ -177,6 +204,7 @@ impl NetSim {
         raw as f64 / got as f64
     }
 
+    /// Zero every counter (the wire model is kept).
     pub fn reset(&mut self) {
         for s in self.fwd.iter_mut().chain(self.bwd.iter_mut()) {
             *s = DirStats::default();

@@ -189,18 +189,28 @@ impl Listener {
 // ---------------------------------------------------------------------------
 
 /// How N worker processes find each other. Link `i` (between stages `i`
-/// and `i + 1`) rendezvouses at a per-link address derived from one base
+/// and `i + 1`, or — on a ring — wrapping from the last stage back to
+/// stage 0) rendezvouses at a per-link address derived from one base
 /// address: a socket directory for UDS (`<dir>/link<i>.sock`), a
 /// host + base port for TCP (`host:(port + i)`). The lower stage
 /// listens; the upper stage connects with retry.
 #[derive(Clone, Debug)]
 pub struct Rendezvous {
+    /// Which real backend carries the streams.
     pub backend: Backend,
+    /// World size (one process per stage/rank).
     pub num_stages: usize,
+    /// Ring topology: every stage listens on link `stage` and connects
+    /// on link `(stage - 1) mod num_stages`, adding the wrap-around
+    /// link `num_stages - 1` from the last rank to rank 0 that
+    /// interleaved schedules need. `false` keeps the chain (stage 0
+    /// only listens, the last stage only connects).
+    pub ring: bool,
     /// UDS: directory holding one socket file per link.
     pub uds_dir: PathBuf,
-    /// TCP: host and base port (link `i` at `port + i`).
+    /// TCP: rendezvous host (link `i` at `tcp_base_port + i`).
     pub tcp_host: String,
+    /// TCP: base port (link `i` at `tcp_base_port + i`).
     pub tcp_base_port: u16,
     /// How long connect/accept may wait for the peer process.
     pub connect_timeout: Duration,
@@ -215,6 +225,7 @@ impl Rendezvous {
         let mut rv = Rendezvous {
             backend,
             num_stages,
+            ring: false,
             uds_dir: PathBuf::new(),
             tcp_host: String::new(),
             tcp_base_port: 0,
@@ -341,32 +352,23 @@ fn read_hello(sock: &mut Sock, link: usize) -> Result<usize, TransportError> {
     Ok(u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize)
 }
 
-/// Connector side (the upper stage of the link): say hello, hear hello.
-fn handshake_connect(sock: &mut Sock, link: usize, stage: usize) -> Result<(), TransportError> {
-    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-    sock.write_all(&hello_bytes(link, stage))?;
-    sock.flush()?;
-    let peer = read_hello(sock, link)?;
-    sock.set_read_timeout(None)?;
-    if peer != link {
-        return Err(TransportError::Corrupt(format!(
-            "link {link}: expected lower stage {link}, peer is stage {peer}"
-        )));
-    }
-    Ok(())
-}
-
-/// Acceptor side (the lower stage): hear hello, say hello.
-fn handshake_accept(sock: &mut Sock, link: usize, stage: usize) -> Result<(), TransportError> {
+/// Acceptor side (the lower stage): hear hello, say hello. The
+/// expected upper stage is `link + 1` on a chain, `(link + 1) mod
+/// num_stages` on a ring (the wrap link's upper end is stage 0).
+fn handshake_accept(
+    sock: &mut Sock,
+    link: usize,
+    stage: usize,
+    expect_upper: usize,
+) -> Result<(), TransportError> {
     sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let peer = read_hello(sock, link)?;
     sock.write_all(&hello_bytes(link, stage))?;
     sock.flush()?;
     sock.set_read_timeout(None)?;
-    if peer != link + 1 {
+    if peer != expect_upper {
         return Err(TransportError::Corrupt(format!(
-            "link {link}: expected upper stage {}, peer is stage {peer}",
-            link + 1
+            "link {link}: expected upper stage {expect_upper}, peer is stage {peer}"
         )));
     }
     Ok(())
@@ -569,7 +571,7 @@ impl RealTransport {
             let mut lower = listener.accept_by(deadline)?;
             upper.write_all(&hello_bytes(link, link + 1))?;
             upper.flush()?;
-            handshake_accept(&mut lower, link, link)?;
+            handshake_accept(&mut lower, link, link, link + 1)?;
             handshake_connect_finish(&mut upper, link)?;
             if let Some(p) = uds_path {
                 t.owned_paths.push(p);
@@ -584,42 +586,67 @@ impl RealTransport {
         Ok(t)
     }
 
-    /// One endpoint of a multi-process run: `stage` owns the upper end of
-    /// link `stage - 1` (connects) and the lower end of link `stage`
-    /// (listens). All listeners bind before any connect, so the chain of
-    /// worker processes rendezvouses in any launch order.
+    /// One endpoint of a multi-process run: `stage` owns the upper end
+    /// of its upstream link (connects) and the lower end of link
+    /// `stage` (listens). On a chain the upstream link is `stage - 1`
+    /// (stage 0 has none, the last stage listens on nothing); on a
+    /// *ring* ([`Rendezvous::ring`]) every stage listens on link
+    /// `stage` and connects on `(stage - 1) mod num_stages`, which adds
+    /// the wrap-around link interleaved schedules route chunk
+    /// boundaries over. All listeners bind before any connect, so the
+    /// processes rendezvous in any launch order; on a ring the
+    /// connector defers reading its handshake reply until after its own
+    /// accept (two mutually-connecting ranks would otherwise deadlock
+    /// waiting for each other's reply).
     pub fn endpoint(
         rv: &Rendezvous,
         stage: usize,
         model: WireModel,
     ) -> Result<RealTransport, TransportError> {
-        let num_links = rv.num_stages.saturating_sub(1);
         if stage >= rv.num_stages {
             return Err(TransportError::Io(format!(
                 "stage {stage} out of range for {} stages",
                 rv.num_stages
             )));
         }
+        let ring = rv.ring && rv.num_stages > 1;
+        let num_links = if ring { rv.num_stages } else { rv.num_stages.saturating_sub(1) };
         let mut t = RealTransport::empty(rv.backend, num_links, model, rv.recv_timeout);
         let deadline = Instant::now() + rv.connect_timeout;
         // bind the downstream listener first so the next rank can connect
-        let listener = if stage + 1 < rv.num_stages { Some(rv.listen(stage)?) } else { None };
-        if stage > 0 {
-            let link = stage - 1;
-            let mut sock = rv.connect(link, deadline)?;
-            handshake_connect(&mut sock, link, stage)?;
-            t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
-            t.spawn_reader(sock, link);
-        }
+        let listens = ring || stage + 1 < rv.num_stages;
+        let listener = if listens { Some(rv.listen(stage)?) } else { None };
+        let connect_link = if ring {
+            Some((stage + rv.num_stages - 1) % rv.num_stages)
+        } else {
+            stage.checked_sub(1)
+        };
+        // connect + say hello, but read the reply only after our own
+        // accept completed (see the ring note above)
+        let upstream = match connect_link {
+            Some(link) => {
+                let mut sock = rv.connect(link, deadline)?;
+                sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+                sock.write_all(&hello_bytes(link, stage))?;
+                sock.flush()?;
+                Some((link, sock))
+            }
+            None => None,
+        };
         if let Some(l) = listener {
             let link = stage;
             let mut sock = l.accept_by(deadline)?;
-            handshake_accept(&mut sock, link, stage)?;
+            handshake_accept(&mut sock, link, stage, (link + 1) % rv.num_stages)?;
             t.writers[slot_index(link, Dir::Fwd)] = Some(sock.try_clone()?);
             t.spawn_reader(sock, link);
             if rv.backend == Backend::Uds {
                 t.owned_paths.push(rv.uds_path(link));
             }
+        }
+        if let Some((link, mut sock)) = upstream {
+            handshake_connect_finish(&mut sock, link)?;
+            t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
+            t.spawn_reader(sock, link);
         }
         Ok(t)
     }

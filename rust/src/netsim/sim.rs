@@ -1,7 +1,7 @@
 //! Event-driven transmission simulator (`SimNet`): virtual time for the
 //! pipeline's inter-stage links.
 //!
-//! Each link is full-duplex: one [`Channel`] per direction. A channel
+//! Each link is full-duplex: one `Channel` per direction. A channel
 //! serializes its messages at the wire bandwidth (a message cannot start
 //! transmitting before the previous one finished), adds propagation
 //! latency on top, and bounds the number of in-flight messages — when
@@ -108,10 +108,12 @@ pub struct SimNet {
 }
 
 impl SimNet {
+    /// A fresh simulator with the default in-flight window.
     pub fn new(num_links: usize, model: WireModel) -> Self {
         Self::with_capacity(num_links, model, DEFAULT_QUEUE_CAPACITY)
     }
 
+    /// A fresh simulator with `capacity` in-flight messages per channel.
     pub fn with_capacity(num_links: usize, model: WireModel, capacity: usize) -> Self {
         SimNet {
             model,
@@ -123,18 +125,22 @@ impl SimNet {
         }
     }
 
+    /// Physical links this simulator models.
     pub fn num_links(&self) -> usize {
         self.fwd_ch.len()
     }
 
+    /// Worker clocks carried (`num_links + 1`).
     pub fn num_stages(&self) -> usize {
         self.clocks.len()
     }
 
+    /// The wire model every channel is priced with.
     pub fn model(&self) -> WireModel {
         self.model
     }
 
+    /// Bounded in-flight window per channel.
     pub fn queue_capacity(&self) -> usize {
         self.capacity
     }
@@ -185,6 +191,7 @@ impl SimNet {
 
     // ---- worker clocks -----------------------------------------------------
 
+    /// A worker's virtual clock.
     pub fn clock(&self, stage: usize) -> f64 {
         self.clocks[stage]
     }
@@ -224,10 +231,12 @@ impl SimNet {
         &self.ledger
     }
 
+    /// Compressed bytes charged so far (ledger passthrough).
     pub fn total_bytes(&self) -> u64 {
         self.ledger.total_bytes()
     }
 
+    /// Uncompressed-equivalent bytes charged so far.
     pub fn total_uncompressed_bytes(&self) -> u64 {
         self.ledger.total_uncompressed_bytes()
     }
@@ -238,6 +247,7 @@ impl SimNet {
         self.ledger.total_sim_time()
     }
 
+    /// Raw-to-compressed ratio achieved on the wire so far.
     pub fn compression_ratio(&self) -> f64 {
         self.ledger.compression_ratio()
     }
@@ -329,10 +339,12 @@ impl Transport for SimNet {
 /// mailbox misses surface as typed [`TransportError`]s, not panics.
 #[derive(Clone, Copy, Debug)]
 pub struct SimSocket {
+    /// The pipeline stage this endpoint speaks for.
     pub stage: usize,
 }
 
 impl SimSocket {
+    /// The endpoint view of `stage`.
     pub fn new(stage: usize) -> Self {
         SimSocket { stage }
     }

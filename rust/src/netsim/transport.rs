@@ -32,6 +32,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a backend name (`sim`, `tcp`, `uds`/`unix`).
     pub fn parse(s: &str) -> anyhow::Result<Backend> {
         match s {
             "sim" => Ok(Backend::Sim),
@@ -41,6 +42,7 @@ impl Backend {
         }
     }
 
+    /// Stable lowercase name (inverse of [`Backend::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             Backend::Sim => "sim",
@@ -66,14 +68,34 @@ impl fmt::Display for Backend {
 pub enum TransportError {
     /// No message with this key was delivered inside the receive window
     /// (on the simulator: it was never sent).
-    Timeout { link: usize, dir: Dir, key: u64 },
+    Timeout {
+        /// Link waited on.
+        link: usize,
+        /// Direction waited on.
+        dir: Dir,
+        /// Mailbox key waited for.
+        key: u64,
+    },
     /// The peer closed the channel (gracefully or by dying).
-    Disconnected { link: usize, dir: Dir },
+    Disconnected {
+        /// Link whose stream closed.
+        link: usize,
+        /// Direction of the closed channel.
+        dir: Dir,
+    },
     /// The link index does not exist on this transport.
-    NoSuchLink { link: usize },
+    NoSuchLink {
+        /// The out-of-range link index.
+        link: usize,
+    },
     /// The endpoint has no neighbor in this direction (stage 0 has no
     /// upstream peer, the last stage no downstream one).
-    NoPeer { stage: usize, dir: Dir },
+    NoPeer {
+        /// The stage that tried to address a missing neighbor.
+        stage: usize,
+        /// Direction with no peer.
+        dir: Dir,
+    },
     /// Malformed frame or handshake on the wire.
     Corrupt(String),
     /// Underlying socket error.
@@ -130,11 +152,14 @@ pub struct Frame {
 /// charges their length).
 #[derive(Clone, Copy, Debug)]
 pub enum Payload<'a> {
+    /// Just a byte count (simulator fast path; nothing materialized).
     Size(usize),
+    /// The actual encoded message (real backends ship exactly this).
     Bytes(&'a [u8]),
 }
 
 impl Payload<'_> {
+    /// Bytes this payload charges/ships.
     pub fn len(&self) -> usize {
         match self {
             Payload::Size(n) => *n,
@@ -142,6 +167,7 @@ impl Payload<'_> {
         }
     }
 
+    /// Whether the payload is zero bytes long.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

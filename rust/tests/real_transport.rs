@@ -198,6 +198,51 @@ fn endpoint_rendezvous_two_threads_uds() {
 }
 
 #[test]
+fn interleaved_loopback_matches_sim_reference() {
+    // v=2 over real UDS sockets: the ring (wrap link included) delivers
+    // the same per-mailbox logs as the SimNet reference, per-channel
+    // feedback mirrors included.
+    for mode in ["topk:10", "ef21+topk:10"] {
+        let mut opts = worker_opts(2, 4, 256, mode, 11);
+        opts.schedule = Schedule::Interleaved { v: 2 };
+        opts.steps = 2;
+        let reference = worker::run_reference(&opts).unwrap();
+        let real = worker::run_loopback(&opts, Backend::Uds).unwrap();
+        worker::check(&reference, &[real]).unwrap_or_else(|e| panic!("{mode}: {e}"));
+    }
+}
+
+#[test]
+fn interleaved_endpoint_rendezvous_two_threads_uds() {
+    // Two ranks, two chunks each: the ring rendezvous (every rank
+    // listens AND connects — the wrap link carries rank 1's chunk-0
+    // output back to rank 0's chunk 1) must come up from two threads
+    // and match the single-process reference bit for bit.
+    let mut opts = worker_opts(2, 4, 128, "topk:10", 13);
+    opts.schedule = Schedule::Interleaved { v: 2 };
+    let dir = std::env::temp_dir().join(format!("mpcomp-rv-il-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let addr = dir.to_str().unwrap().to_string();
+
+    let o0 = opts.clone();
+    let a0 = addr.clone();
+    let h0 = std::thread::spawn(move || worker::run_rank(&o0, 0, Backend::Uds, &a0));
+    let o1 = opts.clone();
+    let h1 = std::thread::spawn(move || worker::run_rank(&o1, 1, Backend::Uds, &addr));
+    let s0 = h0.join().unwrap().unwrap();
+    let s1 = h1.join().unwrap().unwrap();
+
+    // 3 boundaries x 4 mb per direction, split by consumer rank:
+    // rank 0 consumes the wrap fwd (4) + both bwd boundaries (8)
+    assert_eq!(s0.received(), 12);
+    assert_eq!(s1.received(), 12);
+    let reference = worker::run_reference(&opts).unwrap();
+    worker::check(&reference, &[s0, s1]).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn endpoint_rendezvous_two_threads_tcp() {
     let opts = worker_opts(2, 2, 64, "none", 9);
     // fixed high port; the link offset keeps runs on port + 0 only here

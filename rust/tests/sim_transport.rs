@@ -271,14 +271,20 @@ fn schedules_still_agree_through_the_transport() {
     cfg.compress_impl = CompressImpl::Native;
     let (p1, _) = run_once(cfg.clone());
     cfg.schedule = Schedule::OneFOneB;
-    let (p2, _) = run_once(cfg);
-    for (a, b) in p1.iter().flatten().zip(p2.iter().flatten()) {
-        let max_diff = a
-            .data()
-            .iter()
-            .zip(b.data())
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_diff < 1e-5, "schedules diverged through transport: {max_diff}");
+    let (p2, _) = run_once(cfg.clone());
+    // interleaved:2 folds cnn16's 4 stages onto 2 ranks (ring wire,
+    // per-boundary channels) — the math must not notice
+    cfg.schedule = Schedule::Interleaved { v: 2 };
+    let (p3, _) = run_once(cfg);
+    for (p_other, label) in [(&p2, "1f1b"), (&p3, "interleaved:2")] {
+        for (a, b) in p1.iter().flatten().zip(p_other.iter().flatten()) {
+            let max_diff = a
+                .data()
+                .iter()
+                .zip(b.data())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-5, "{label} diverged through transport: {max_diff}");
+        }
     }
 }
