@@ -5,14 +5,14 @@
 //! pipeline`.
 
 use mpcomp::coordinator::pipeline::{
-    gpipe, interleaved, makespan, num_wire_links, one_f_one_b, peak_in_flight, validate,
+    gpipe, interleaved, makespan, num_boundaries, one_f_one_b, peak_in_flight, validate,
 };
 use mpcomp::coordinator::simexec::{simulate, SimSpec};
 use mpcomp::netsim::WireModel;
 use mpcomp::util::bench::{black_box, header, Suite};
 
 fn spec(v: usize, model: WireModel, recompute_s: f64) -> SimSpec {
-    let links = num_wire_links(4, v);
+    let boundaries = num_boundaries(4, v);
     SimSpec {
         n_stages: 4,
         v,
@@ -20,9 +20,9 @@ fn spec(v: usize, model: WireModel, recompute_s: f64) -> SimSpec {
         fwd_op_s: 0.020 / v as f64,
         bwd_op_s: 0.040 / v as f64,
         recompute_s,
-        fwd_bytes: vec![65_541; links],
-        bwd_bytes: vec![65_541; links],
-        raw_bytes: vec![65_541; links],
+        fwd_bytes: vec![65_541; boundaries],
+        bwd_bytes: vec![65_541; boundaries],
+        raw_bytes: vec![65_541; boundaries],
         model,
         capacity: 4,
     }

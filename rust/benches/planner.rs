@@ -1,0 +1,70 @@
+//! Planner benchmarks: search cost on the pinned shapes, plus the
+//! predicted-vs-simulated makespan deltas bench-smoke uploads into
+//! `BENCH_planner.json` — tracking how far the analytic cost model
+//! drifts from the event-driven simulation the plan is validated on.
+//! Run with `cargo bench --bench planner`.
+
+use std::time::Duration;
+
+use mpcomp::config::Schedule;
+use mpcomp::experiments::{tables, SchedParams};
+use mpcomp::netsim::WireModel;
+use mpcomp::planner::{search, PlannerInputs};
+use mpcomp::util::bench::{black_box, header, Suite};
+
+fn inputs(stages: usize, mb: usize, sched: Schedule, model: WireModel) -> PlannerInputs {
+    let p = SchedParams { stages, mb, ..SchedParams::default() };
+    tables::plan_inputs(&p, sched, model)
+}
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+
+    for (name, stages, mb, sched) in [
+        ("1f1b/4x16", 4usize, 16usize, Schedule::OneFOneB),
+        ("interleaved2/4x16", 4, 16, Schedule::Interleaved { v: 2 }),
+        ("interleaved2/8x32", 8, 32, Schedule::Interleaved { v: 2 }),
+    ] {
+        let inp = inputs(stages, mb, sched, WireModel::wan());
+        suite
+            .bench(&format!("search/wan/{name}"), || {
+                black_box(search(black_box(&inp)).unwrap());
+            })
+            .report();
+    }
+
+    // predicted-vs-simulated deltas: recorded as single-sample entries
+    // so the JSON carries the *value* (in ns == 1e-9 s units of delta)
+    // next to the timing rows — the trajectory bench-smoke uploads
+    for (wire_name, model) in [("wan", WireModel::wan()), ("datacenter", WireModel::datacenter())]
+    {
+        for (name, sched) in [
+            ("1f1b", Schedule::OneFOneB),
+            ("interleaved2", Schedule::Interleaved { v: 2 }),
+        ] {
+            let inp = inputs(4, 16, sched, model);
+            let report = search(&inp).unwrap();
+            let delta = (report.sim_makespan_s - report.analytic_makespan_s).max(0.0);
+            suite.record(
+                &format!("delta/{wire_name}/{name}/predicted-vs-simulated"),
+                Duration::from_secs_f64(delta),
+            );
+            suite.record(
+                &format!("delta/{wire_name}/{name}/plan-makespan"),
+                Duration::from_secs_f64(report.sim_makespan_s),
+            );
+            println!(
+                "{wire_name}/{name}: plan sim {:.4} s, analytic {:.4} s (delta {:.3} ms), \
+                 {} channels, wire_bound={}",
+                report.sim_makespan_s,
+                report.analytic_makespan_s,
+                delta * 1e3,
+                report.channels.len(),
+                report.wire_bound
+            );
+        }
+    }
+
+    suite.finish();
+}

@@ -100,18 +100,53 @@ impl Spec {
                     "efmixed" => Feedback::EfMixed,
                     "ef21" => Feedback::Ef21,
                     "aqsgd" => Feedback::AqSgd,
-                    _ => bail!("unknown feedback '{fb}' in '{s}'"),
+                    _ => bail!(
+                        "unknown feedback '{fb}' in compression spec '{s}': valid feedback \
+                         prefixes are ef, efmixed, ef21, aqsgd"
+                    ),
                 };
                 match parse_base(base)? {
                     Method::TopK { frac, shared_idx, .. } => {
                         Method::TopK { frac, shared_idx, feedback }
                     }
-                    _ => bail!("feedback requires a topk base in '{s}'"),
+                    _ => bail!(
+                        "feedback '{fb}' requires a topk base (e.g. '{fb}+topk:10'), \
+                         got '{base}' in '{s}'"
+                    ),
                 }
             }
-            _ => bail!("cannot parse compression spec '{s}'"),
+            _ => bail!(
+                "cannot parse compression spec '{s}': expected \
+                 [feedback+]method[+warmupN] with {VALID_METHODS}"
+            ),
         };
         Ok(Spec { method, warmup_epochs: warmup })
+    }
+
+    /// The canonical grammar string: `Spec::parse(spec.canon())` yields
+    /// `spec` back (the inverse of [`Spec::parse`], used for plan files
+    /// and plan digests, where a stable parseable form matters).
+    pub fn canon(&self) -> String {
+        let base = match self.method {
+            Method::None => "none".to_string(),
+            Method::Quant { fw_bits, bw_bits } => format!("quant:fw{fw_bits}-bw{bw_bits}"),
+            Method::TopK { frac, shared_idx, feedback } => {
+                let fb = match feedback {
+                    Feedback::None => "",
+                    Feedback::Ef => "ef+",
+                    Feedback::EfMixed => "efmixed+",
+                    Feedback::Ef21 => "ef21+",
+                    Feedback::AqSgd => "aqsgd+",
+                };
+                let idx = if shared_idx { ":shared" } else { "" };
+                format!("{fb}topk:{}{idx}", canon_pct(frac))
+            }
+        };
+        if self.warmup_epochs > 0 {
+            format!("{base}+warmup{}", self.warmup_epochs)
+        } else {
+            base
+        }
     }
 
     /// The paper-style display label, e.g. "fw4-bw8", "Top 10%",
@@ -146,6 +181,29 @@ impl Spec {
     }
 }
 
+/// The method vocabulary, echoed by every parse error so a typo'd mode
+/// string names its valid alternatives.
+const VALID_METHODS: &str =
+    "methods: none, quant:fwA-bwB (bits 1..=16), topk:P (percent, optionally :shared/:separate)";
+
+/// The shortest percent string that reparses (as f32, divided by 100)
+/// to exactly `frac`. Plain `frac * 100.0` in f32 can pick up rounding
+/// artifacts ("30.000002" for topk:30), so candidates are verified:
+/// the rounded integer percent first, then the f32 product's shortest
+/// display, then the full-precision f64 product as a last resort.
+fn canon_pct(frac: f32) -> String {
+    let roundtrips = |s: &str| s.parse::<f32>().is_ok_and(|p| p / 100.0 == frac);
+    let rounded = format!("{}", (frac as f64 * 100.0).round());
+    if roundtrips(&rounded) {
+        return rounded;
+    }
+    let shortest = format!("{}", frac * 100.0);
+    if roundtrips(&shortest) {
+        return shortest;
+    }
+    format!("{}", frac as f64 * 100.0)
+}
+
 fn parse_base(s: &str) -> Result<Method> {
     if s == "none" {
         return Ok(Method::None);
@@ -175,7 +233,7 @@ fn parse_base(s: &str) -> Result<Method> {
         }
         return Ok(Method::TopK { frac: pct / 100.0, shared_idx, feedback: Feedback::None });
     }
-    bail!("cannot parse compression method '{s}'")
+    bail!("unknown compression method '{s}' ({VALID_METHODS})")
 }
 
 #[cfg(test)]
@@ -228,6 +286,46 @@ mod tests {
         assert!(Spec::parse("ef+quant:fw4-bw4").is_err());
         assert!(Spec::parse("bogus").is_err());
         assert!(Spec::parse("zz+topk:10").is_err());
+    }
+
+    #[test]
+    fn parse_errors_echo_token_and_valid_methods() {
+        // the offending token and the method vocabulary must both appear
+        let e = Spec::parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("'bogus'"), "{e}");
+        assert!(e.contains("quant:fwA-bwB") && e.contains("topk:P"), "{e}");
+        let e = Spec::parse("zz+topk:10").unwrap_err().to_string();
+        assert!(e.contains("'zz'"), "{e}");
+        assert!(e.contains("ef21") && e.contains("aqsgd"), "{e}");
+        let e = Spec::parse("ef+quant:fw4-bw4").unwrap_err().to_string();
+        assert!(e.contains("'quant:fw4-bw4'") && e.contains("topk"), "{e}");
+        let e = Spec::parse("a+b+c").unwrap_err().to_string();
+        assert!(e.contains("'a+b+c'") && e.contains("methods:"), "{e}");
+    }
+
+    #[test]
+    fn canon_roundtrips_every_paper_mode() {
+        for m in [
+            "none",
+            "quant:fw4-bw8", "quant:fw2-bw6", "quant:fw8-bw8",
+            "topk:50", "topk:30", "topk:10", "topk:5", "topk:2", "topk:12.5",
+            "topk:50:shared",
+            "ef+topk:10+warmup20", "efmixed+topk:10",
+            "ef21+topk:5", "ef21+topk:10+warmup20",
+            "aqsgd+topk:30+warmup10",
+        ] {
+            let s = Spec::parse(m).unwrap();
+            let c = s.canon();
+            let back = Spec::parse(&c).unwrap_or_else(|e| panic!("{m} -> {c}: {e}"));
+            assert_eq!(back, s, "{m} -> {c}");
+        }
+        assert_eq!(Spec::parse("topk:10").unwrap().canon(), "topk:10");
+        assert_eq!(Spec::parse("ef21+topk:5").unwrap().canon(), "ef21+topk:5");
+        assert_eq!(Spec::none().canon(), "none");
+        // the f32 product of topk:30 rounds to 30.000002; the verified
+        // integer-percent candidate must win instead
+        assert_eq!(Spec::parse("topk:30").unwrap().canon(), "topk:30");
+        assert_eq!(Spec::parse("topk:12.5").unwrap().canon(), "topk:12.5");
     }
 
     #[test]

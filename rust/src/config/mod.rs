@@ -6,6 +6,7 @@ pub mod toml;
 use anyhow::{bail, Result};
 
 use crate::compression::Spec;
+use crate::planner::PlanMode;
 
 /// Which implementation executes the compression math on links.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,8 +108,13 @@ pub struct TrainConfig {
     pub model: String,
     pub artifacts_dir: String,
     pub results_dir: String,
-    /// Compression mode (the paper's experiment label).
+    /// Compression mode (the paper's experiment label). With `plan =
+    /// global` (the default) this single spec governs every boundary.
     pub spec: Spec,
+    /// Per-boundary spec source: `global` applies `spec` everywhere
+    /// (legacy), `auto` runs the overlap-aware planner search at
+    /// startup, `file:<path>` loads an `mpcomp plan --out` file.
+    pub plan: PlanMode,
     pub compress_impl: CompressImpl,
     pub optimizer: Optimizer,
     pub schedule: Schedule,
@@ -161,6 +167,7 @@ impl TrainConfig {
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
             spec: Spec::none(),
+            plan: PlanMode::Global,
             compress_impl: CompressImpl::Kernel,
             optimizer: if model.starts_with("lm") { Optimizer::AdamW } else { Optimizer::Sgd },
             schedule: Schedule::GPipe,
@@ -204,6 +211,7 @@ impl TrainConfig {
         self.artifacts_dir = doc.str_or(s, "artifacts_dir", &self.artifacts_dir)?;
         self.results_dir = doc.str_or(s, "results_dir", &self.results_dir)?;
         self.spec = Spec::parse(&doc.str_or(s, "compression", &self.spec_string())?)?;
+        self.plan = PlanMode::parse(&doc.str_or(s, "plan", &self.plan.name())?)?;
         self.compress_impl = CompressImpl::parse(&doc.str_or(
             s,
             "compress_impl",
@@ -241,6 +249,7 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "results_dir" => self.results_dir = value.into(),
             "compression" => self.spec = Spec::parse(value)?,
+            "plan" => self.plan = PlanMode::parse(value)?,
             "compress_impl" => self.compress_impl = CompressImpl::parse(value)?,
             "optimizer" => self.optimizer = Optimizer::parse(value)?,
             "schedule" => self.schedule = Schedule::parse(value)?,
@@ -329,6 +338,23 @@ mod tests {
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.wire, "datacenter");
         assert_eq!(c.sim_op_time, Some(0.5));
+    }
+
+    #[test]
+    fn plan_knob_parses_all_modes() {
+        let mut c = TrainConfig::defaults("cnn16");
+        assert_eq!(c.plan, PlanMode::Global);
+        c.set("plan", "auto").unwrap();
+        assert_eq!(c.plan, PlanMode::Auto);
+        c.set("plan", "file:results/plan.json").unwrap();
+        assert_eq!(c.plan, PlanMode::File("results/plan.json".into()));
+        c.set("plan", "global").unwrap();
+        assert_eq!(c.plan, PlanMode::Global);
+        assert!(c.set("plan", "bogus").is_err());
+        let doc = toml::Doc::parse("[run]\nplan = \"auto\"\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.plan, PlanMode::Auto);
     }
 
     #[test]

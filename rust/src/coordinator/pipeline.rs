@@ -108,6 +108,20 @@ pub fn num_wire_links(n_ranks: usize, v: usize) -> usize {
     }
 }
 
+/// Stage boundaries (edges between adjacent model stages) a schedule's
+/// messages cross: `n_ranks * v - 1` once there is more than one rank,
+/// zero when the whole pipeline lives on a single rank (same-rank chunk
+/// handoffs are free and never touch a wire). Boundary `b` rides
+/// physical wire link `b % n_ranks` ([`boundary_link`]); with
+/// interleaved schedules several boundaries share one ring link.
+pub fn num_boundaries(n_ranks: usize, v: usize) -> usize {
+    if n_ranks <= 1 {
+        0
+    } else {
+        n_ranks * v - 1
+    }
+}
+
 /// Pipeline boundary (edge between model stages `b` and `b + 1`) whose
 /// message this op *consumes*: the upstream activation for a forward op,
 /// the downstream gradient for a backward op. `None` at the pipeline
@@ -431,6 +445,29 @@ pub fn peak_in_flight(ops: &[Op], n_ranks: usize) -> usize {
     peak as usize
 }
 
+/// Peak bytes of stashed activations any rank holds, with per-model-
+/// stage activation sizes (`act_bytes[ms]` = bytes one forward op of
+/// model stage `ms` must keep until its backward). The byte-resolution
+/// successor of [`peak_in_flight`]: interleaving stashes chunk-sized
+/// activations but its doubled warm-up stagger holds *more* of them —
+/// at 4 ranks x 16 microbatches, `interleaved:4` exceeds even GPipe's
+/// all-microbatch stash (the ROADMAP PR 4 memory follow-up, pinned by
+/// tests and exported as the `peak_stash_bytes` run metric).
+pub fn peak_stash_bytes(ops: &[Op], n_ranks: usize, act_bytes: &[usize]) -> usize {
+    let mut held = vec![0usize; n_ranks];
+    let mut peak = 0usize;
+    for op in ops {
+        let bytes = act_bytes[op.model_stage(n_ranks)];
+        if op.is_fwd() {
+            held[op.rank()] += bytes;
+            peak = peak.max(held[op.rank()]);
+        } else {
+            held[op.rank()] = held[op.rank()].saturating_sub(bytes);
+        }
+    }
+    peak
+}
+
 /// Analytic multi-worker makespan of a schedule, assuming every op
 /// costs `op_time` and each cross-rank message costs a flat `wire_time`
 /// with no bandwidth contention or queueing (same-rank chunk boundaries
@@ -616,6 +653,42 @@ mod tests {
         assert!(o <= s + 1, "1f1b peak {o}");
         let i2 = peak_in_flight(&interleaved(s, 2, m).unwrap(), s);
         assert!(i2 > o && i2 < m, "interleaved:2 peak {i2}");
+    }
+
+    /// The ROADMAP PR 4 memory follow-up, pinned in bytes: at 4 ranks x
+    /// 16 microbatches with equal-size chunk activations, interleaved
+    /// v=4's doubled warm-up stagger stashes more bytes than GPipe's
+    /// all-microbatch stash, while v=2 stays between 1F1B and GPipe.
+    #[test]
+    fn interleaved_v4_peak_stash_exceeds_gpipe_at_4x16() {
+        let (s, m) = (4, 16);
+        let sz = 4 * 16_384; // one chunk activation, bytes
+        let g = peak_stash_bytes(&gpipe(s, m), s, &vec![sz; s]);
+        let o = peak_stash_bytes(&one_f_one_b(s, m), s, &vec![sz; s]);
+        let i2 = peak_stash_bytes(&interleaved(s, 2, m).unwrap(), s, &vec![sz; 2 * s]);
+        let i4 = peak_stash_bytes(&interleaved(s, 4, m).unwrap(), s, &vec![sz; 4 * s]);
+        assert_eq!(g, m * sz, "gpipe stashes every microbatch");
+        assert!(o < i2 && i2 < g, "1f1b {o} < v=2 {i2} < gpipe {g}");
+        assert!(i4 > g, "interleaved:4 peak stash {i4} !> gpipe {g}");
+        // byte-weighted generalization: heavier later stages move the peak
+        let ops = gpipe(2, 2);
+        let light = peak_stash_bytes(&ops, 2, &[8, 8]);
+        let heavy = peak_stash_bytes(&ops, 2, &[8, 64]);
+        assert_eq!(light, 16);
+        assert_eq!(heavy, 128);
+    }
+
+    #[test]
+    fn num_boundaries_counts_cross_rank_edges() {
+        assert_eq!(num_boundaries(4, 1), 3);
+        assert_eq!(num_boundaries(4, 2), 7);
+        assert_eq!(num_boundaries(2, 4), 7);
+        assert_eq!(num_boundaries(1, 4), 0);
+        assert_eq!(num_boundaries(1, 1), 0);
+        // every boundary maps onto a physical link inside the ring/chain
+        for b in 0..num_boundaries(4, 2) {
+            assert!(boundary_link(b, 4).unwrap() < num_wire_links(4, 2));
+        }
     }
 
     #[test]

@@ -48,11 +48,15 @@ pub struct SimSpec {
     /// stash for all `n_mb` microbatches and recomputes them in the
     /// backward phase; 1F1B's depth-bounded stash avoids this).
     pub recompute_s: f64,
-    /// Payload bytes per forward (activation) message, per wire link.
+    /// Payload bytes per forward (activation) message, per **stage
+    /// boundary** (`pipeline::num_boundaries` entries). Boundaries
+    /// sharing a ring link may carry differently-compressed messages —
+    /// the planner's per-channel specs — while still contending for the
+    /// same physical link's bandwidth and in-flight window.
     pub fwd_bytes: Vec<usize>,
-    /// Payload bytes per backward (gradient) message, per wire link.
+    /// Payload bytes per backward (gradient) message, per boundary.
     pub bwd_bytes: Vec<usize>,
-    /// Uncompressed payload bytes per message, per wire link (ledger).
+    /// Uncompressed payload bytes per message, per boundary (ledger).
     pub raw_bytes: Vec<usize>,
     /// Bandwidth/latency of every link.
     pub model: WireModel,
@@ -65,6 +69,11 @@ impl SimSpec {
     /// schedules, ring once chunks interleave).
     pub fn wire_links(&self) -> usize {
         pipeline::num_wire_links(self.n_stages, self.v)
+    }
+
+    /// Stage boundaries the byte vectors are indexed by.
+    pub fn boundaries(&self) -> usize {
+        pipeline::num_boundaries(self.n_stages, self.v)
     }
 }
 
@@ -145,8 +154,8 @@ pub fn simulate_transport(
                         link,
                         Dir::Fwd,
                         key,
-                        Payload::Size(spec.fwd_bytes[link]),
-                        spec.raw_bytes[link],
+                        Payload::Size(spec.fwd_bytes[boundary]),
+                        spec.raw_bytes[boundary],
                         fwd_end[boundary][mb],
                     )?;
                     net.recv(link, Dir::Fwd, key)?.arrival
@@ -169,8 +178,8 @@ pub fn simulate_transport(
                         link,
                         Dir::Bwd,
                         key,
-                        Payload::Size(spec.bwd_bytes[link]),
-                        spec.raw_bytes[link],
+                        Payload::Size(spec.bwd_bytes[boundary]),
+                        spec.raw_bytes[boundary],
                         bwd_end[ms + 1][mb],
                     )?;
                     net.recv(link, Dir::Bwd, key)?.arrival
@@ -243,7 +252,7 @@ mod tests {
     /// op_time 64, integer byte counts, bandwidth 1 B/s: every quantity
     /// in both models is an exact small integer in f64.
     fn exact_spec(s: usize, v: usize, m: usize, bytes: usize, capacity: usize) -> SimSpec {
-        let links = pipeline::num_wire_links(s, v);
+        let boundaries = pipeline::num_boundaries(s, v);
         SimSpec {
             n_stages: s,
             v,
@@ -251,9 +260,9 @@ mod tests {
             fwd_op_s: 64.0,
             bwd_op_s: 64.0,
             recompute_s: 0.0,
-            fwd_bytes: vec![bytes; links],
-            bwd_bytes: vec![bytes; links],
-            raw_bytes: vec![bytes; links],
+            fwd_bytes: vec![bytes; boundaries],
+            bwd_bytes: vec![bytes; boundaries],
+            raw_bytes: vec![bytes; boundaries],
             model: WireModel { bandwidth_bytes_per_s: 1.0, latency_s: 0.0 },
             capacity,
         }
@@ -342,6 +351,35 @@ mod tests {
         let per_mb_il = 2 * (2 * s - 1);
         assert_eq!(flat.bytes, (per_mb_flat * m * 10) as u64);
         assert_eq!(il.bytes, (per_mb_il * m * 10) as u64);
+    }
+
+    /// Per-boundary bytes: two boundaries sharing one ring link may
+    /// carry differently-sized messages (the planner's heterogeneous
+    /// specs) — the ledger charges exactly the per-boundary sizes, and
+    /// shrinking only the *wrap* boundary's messages still shortens the
+    /// makespan when that boundary gates the critical path.
+    #[test]
+    fn boundaries_sharing_a_link_carry_their_own_bytes() {
+        let (s, v, m) = (2, 2, 4);
+        let ops = interleaved(s, v, m).unwrap();
+        let mut spec = exact_spec(s, v, m, 40, 4);
+        assert_eq!(spec.boundaries(), 3);
+        assert_eq!(spec.wire_links(), 2);
+        let uniform = simulate(&ops, &spec);
+        // boundaries 0 and 2 share physical link 0; boundary 1 wraps
+        spec.fwd_bytes = vec![40, 8, 40];
+        spec.bwd_bytes = vec![40, 8, 40];
+        let het = simulate(&ops, &spec);
+        let per_dir = (2 * 40 + 8) * m;
+        assert_eq!(het.bytes, 2 * per_dir as u64);
+        assert!(
+            het.makespan_s < uniform.makespan_s,
+            "{} !< {}",
+            het.makespan_s,
+            uniform.makespan_s
+        );
+        // raw ledger unchanged: compression, not topology, changed
+        assert_eq!(het.raw_bytes, uniform.raw_bytes);
     }
 
     #[test]

@@ -23,15 +23,22 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint;
+use crate::compression::Spec;
 use crate::config::TrainConfig;
 use crate::coordinator::link::CompressedLink;
 use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::stage::{StageInput, StageRunner};
 use crate::data::{ImageDataset, TextDataset};
 use crate::metrics::{CurvePoint, RunMetrics};
-use crate::netsim::{Backend, RealTransport, SimNet, Transport, WireModel};
+use crate::netsim::{Backend, Dir, RealTransport, SimNet, Transport, WireModel};
+use crate::planner::{self, Plan, PlanMode, PlannerInputs};
 use crate::runtime::{lit_f32, lit_i32, scalar_from, tensor_from, Runtime};
 use crate::tensor::Tensor;
+
+/// Default virtual op cost the `plan = auto` search assumes when the
+/// run measures real stage wall time instead of pinning `sim_op_time`
+/// (the `exp schedule` ablation's fixed cost).
+const AUTO_PLAN_OP_S: f64 = 0.020;
 
 /// Task-specific data + label plumbing.
 enum TaskData {
@@ -45,6 +52,10 @@ pub struct Trainer {
     pub rt: Runtime,
     /// The run's full configuration.
     pub cfg: TrainConfig,
+    /// The resolved per-boundary compression plan (`cfg.plan`):
+    /// uniform from `cfg.spec` under `plan = global`, loaded from a
+    /// plan file, or emitted by the overlap-aware search (`auto`).
+    pub plan: Plan,
     stages: Vec<StageRunner>,
     links: Vec<CompressedLink>,
     /// The inter-stage transport: `SimNet` (virtual time, the default)
@@ -62,6 +73,8 @@ pub struct Trainer {
     loss_file: String,
     label_shape: Vec<usize>,
     model_name: String,
+    /// Bytes of one stashed activation per model stage (out shape x 4).
+    act_bytes: Vec<usize>,
     steps_done: usize,
 }
 
@@ -135,6 +148,33 @@ impl Trainer {
         }
         let wire = WireModel::parse(&cfg.wire)?;
         let backend = Backend::parse(&cfg.backend)?;
+
+        // resolve the per-boundary compression plan before any link or
+        // feedback state exists: a rejected plan (typed PlanError)
+        // leaves nothing half-configured
+        let plan = match &cfg.plan {
+            PlanMode::Global => Plan::uniform(cfg.spec, n_ranks, v, cfg.sim_queue_cap),
+            PlanMode::File(path) => {
+                let p = Plan::load(path)?;
+                p.validate_for(n_ranks, v, cfg.sim_queue_cap)?;
+                p
+            }
+            PlanMode::Auto => {
+                let op_s = cfg.sim_op_time.unwrap_or(AUTO_PLAN_OP_S);
+                let inputs = PlannerInputs {
+                    n_ranks,
+                    schedule: cfg.schedule,
+                    n_mb: n_microbatches,
+                    fwd_op_s: op_s,
+                    bwd_op_s: op_s,
+                    recompute_s: 0.0,
+                    elems: model.links.clone(),
+                    model: wire,
+                    capacity: cfg.sim_queue_cap,
+                };
+                planner::search(&inputs)?.plan
+            }
+        };
         let wire_links = pipeline::num_wire_links(n_ranks, v);
         let net: Box<dyn Transport> = match backend {
             Backend::Sim => Box::new(SimNet::with_capacity(wire_links, wire, cfg.sim_queue_cap)),
@@ -178,8 +218,11 @@ impl Trainer {
             t => bail!("unknown task '{t}'"),
         };
 
+        let act_bytes =
+            model.stages.iter().map(|s| 4 * s.out_shape.iter().product::<usize>()).collect();
         Ok(Trainer {
             rt,
+            plan,
             stages,
             links,
             net,
@@ -191,6 +234,7 @@ impl Trainer {
             loss_file: model.loss.clone(),
             label_shape: model.label.shape.clone(),
             model_name: model.name.clone(),
+            act_bytes,
             cfg,
             steps_done: 0,
         })
@@ -245,9 +289,20 @@ impl Trainer {
     /// Is compression active at this epoch? (warm-start protocol: the
     /// paper resumes from uncompressed baseline weights after N epochs;
     /// with identical seeds, training uncompressed until epoch N is
-    /// bit-identical to that.)
+    /// bit-identical to that.) Plans warm up as a unit: the latest
+    /// warmup across channels gates all of them.
     fn compression_active(&self, epoch: usize) -> bool {
-        !self.cfg.spec.is_none() && epoch >= self.cfg.spec.warmup_epochs
+        !self.plan.is_none() && epoch >= self.plan.warmup_epochs()
+    }
+
+    /// The spec governing one directed boundary channel this epoch
+    /// (uncompressed while compression is inactive).
+    fn channel_spec(&self, boundary: usize, dir: Dir, compress: bool) -> Spec {
+        if compress {
+            *self.plan.spec_for(boundary, dir)
+        } else {
+            Spec::none()
+        }
     }
 
     /// Train for `cfg.epochs`; returns the run metrics.
@@ -256,7 +311,7 @@ impl Trainer {
             TaskData::Images { .. } => "accuracy",
             TaskData::Text { .. } => "loss",
         };
-        let mut m = RunMetrics::new(&self.cfg.spec.label(), self.cfg.seed, metric);
+        let mut m = RunMetrics::new(&self.plan.label(), self.cfg.seed, metric);
         let t0 = Instant::now();
         for epoch in 0..self.cfg.epochs {
             let train_loss = self.train_epoch(epoch)?;
@@ -268,7 +323,7 @@ impl Trainer {
                 }
             }
             if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
-                let compressed_eval = !self.cfg.spec.is_none();
+                let compressed_eval = !self.plan.is_none();
                 let eval_on = if compressed_eval { self.evaluate(true)? } else { f64::NAN };
                 let eval_off = self.evaluate(false)?;
                 let eval_on = if eval_on.is_nan() { eval_off } else { eval_on };
@@ -293,6 +348,8 @@ impl Trainer {
         m.sim_makespan_s = self.net.makespan();
         m.wire_elapsed_s = self.net.wire_elapsed_s();
         m.feedback_memory_bytes = self.feedback_memory_bytes() as u64;
+        m.peak_stash_bytes =
+            pipeline::peak_stash_bytes(&self.schedule()?, self.n_ranks, &self.act_bytes) as u64;
         Ok(m)
     }
 
@@ -417,10 +474,7 @@ impl Trainer {
         let mut bwd_end = vec![vec![0.0f64; m_count]; ms_count];
         let mut loss_sum = 0.0f64;
 
-        let spec = self.cfg.spec;
         let imp = self.cfg.compress_impl;
-        let plain = crate::compression::Spec::none();
-        let active = if compress { &spec } else { &plain };
         // channel keys: unique per (boundary, sample) — boundaries
         // sharing a ring link must not collide, and AQ-SGD sample
         // buffers key on the stable per-link sample id
@@ -442,10 +496,14 @@ impl Trainer {
                             .take()
                             .with_context(|| format!("missing act s{} mb{mb}", ms - 1))?;
                         let sent_at = fwd_end[ms - 1][mb];
+                        // the *plan* keys specs by boundary channel: two
+                        // boundaries sharing a ring link may compress
+                        // their activations differently
+                        let spec = self.channel_spec(ms - 1, Dir::Fwd, compress);
                         let link = &mut self.links[ms - 1];
                         let (compressed, arrival) = link.forward(
                             &self.rt,
-                            active,
+                            &spec,
                             imp,
                             &prev,
                             key_for(ms - 1, mb),
@@ -478,10 +536,11 @@ impl Trainer {
                             .take()
                             .with_context(|| format!("missing grad s{} mb{mb}", ms + 1))?;
                         let sent_at = bwd_end[ms + 1][mb];
+                        let spec = self.channel_spec(ms, Dir::Bwd, compress);
                         let link = &mut self.links[ms];
                         link.backward(
                             &self.rt,
-                            active,
+                            &spec,
                             imp,
                             &g,
                             key_for(ms, mb),
@@ -510,12 +569,9 @@ impl Trainer {
     }
 
     /// Forward-only pass over one microbatch (eval). `compress` applies
-    /// the *plain* operator on links (no feedback state mutation).
+    /// each boundary's *plain* operator (no feedback state mutation).
     fn eval_forward(&mut self, input: StageInput, compress: bool) -> Result<Tensor> {
-        let spec = self.cfg.spec;
         let imp = self.cfg.compress_impl;
-        let plain = crate::compression::Spec::none();
-        let active = if compress { &spec } else { &plain };
         let mut x = input;
         // evals always use a scratch simulator: their timing is not part
         // of the run and their tensors need not cross a real wire
@@ -524,8 +580,9 @@ impl Trainer {
         for i in 0..self.stages.len() {
             let y = self.stages[i].forward(&self.rt, u64::MAX, x, false)?;
             x = if i < self.links.len() {
+                let spec = self.channel_spec(i, Dir::Fwd, compress);
                 let (c, _) = self.links[i]
-                    .forward(&self.rt, active, imp, &y, u64::MAX, false, &mut scratch, 0.0)?;
+                    .forward(&self.rt, &spec, imp, &y, u64::MAX, false, &mut scratch, 0.0)?;
                 StageInput::F32(c)
             } else {
                 StageInput::F32(y)

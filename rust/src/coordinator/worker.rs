@@ -48,6 +48,7 @@ use crate::coordinator::pipeline;
 use crate::netsim::{
     Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, WireModel,
 };
+use crate::planner::Plan;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -67,8 +68,13 @@ pub struct WorkerOpts {
     /// virtual-stage count and thereby the chain-vs-ring topology).
     pub schedule: Schedule,
     /// Compression spec, including error-feedback modes (shared-index
-    /// masks are a trainer concern and stay rejected).
+    /// masks are a trainer concern and stay rejected). With a `plan`
+    /// this is only the fallback label; the plan's per-channel specs
+    /// govern the wire.
     pub spec: Spec,
+    /// Per-boundary compression plan (`--plan file.json`). `None`: the
+    /// single `spec` on every channel, exactly the legacy behavior.
+    pub plan: Option<Plan>,
     /// Seed for the deterministic synthetic message tensors.
     pub seed: u64,
     /// Wire model used by the `SimNet` reference replay.
@@ -89,6 +95,30 @@ impl WorkerOpts {
     /// Physical wire links of this run's topology.
     pub fn wire_links(&self) -> usize {
         pipeline::num_wire_links(self.stages, self.chunks())
+    }
+
+    /// The plan every channel spec is keyed through: the loaded plan
+    /// file, or the uniform plan of the CLI spec. Its digest is what
+    /// the rendezvous handshake negotiates — so two ranks launched with
+    /// different `--compression` flags (or different plan files) fail
+    /// with a typed `PlanMismatch` instead of decoding garbage.
+    pub fn effective_plan(&self) -> Result<Plan> {
+        let v = self.chunks();
+        let plan = match &self.plan {
+            Some(p) => {
+                // byte parity doesn't model queue windows, so only the
+                // shape is validated here (cap passes trivially)
+                p.validate_for(self.stages, v, usize::MAX)?;
+                p.clone()
+            }
+            None => Plan::uniform(
+                self.spec,
+                self.stages,
+                v,
+                crate::netsim::DEFAULT_QUEUE_CAPACITY,
+            ),
+        };
+        Ok(plan)
     }
 }
 
@@ -137,10 +167,12 @@ fn gen_tensor(opts: &WorkerOpts, link: usize, dir: Dir, chunk: usize, mb: usize)
 }
 
 /// Compress + encode the message for `(link, dir, chunk, mb)` with the
-/// actual wire codecs (what the trainer's links put on a real socket).
+/// actual wire codecs (what the trainer's links put on a real socket),
+/// under the channel's own `spec` (plans assign these per boundary).
 /// Feedback modes advance `state` — the sender half of this channel.
 fn encode_message(
     opts: &WorkerOpts,
+    spec: &Spec,
     state: &mut FeedbackState,
     link: usize,
     dir: Dir,
@@ -148,7 +180,7 @@ fn encode_message(
     mb: usize,
 ) -> Result<Vec<u8>> {
     let x = gen_tensor(opts, link, dir, chunk, mb);
-    match opts.spec.method {
+    match spec.method {
         Method::None => Ok(wire::encode_raw(&x)),
         Method::Quant { fw_bits, bw_bits } => {
             let bits = if dir == Dir::Fwd { fw_bits } else { bw_bits };
@@ -158,7 +190,7 @@ fn encode_message(
             if shared_idx {
                 bail!(
                     "worker does not model shared-index masks (got '{}')",
-                    opts.spec.label()
+                    spec.label()
                 );
             }
             match channel_feedback(feedback, dir) {
@@ -210,6 +242,7 @@ fn channel_feedback(fb: Feedback, dir: Dir) -> Feedback {
 /// byte-identical to the pre-interleaving protocol.
 fn run_stages(
     opts: &WorkerOpts,
+    plan: &Plan,
     net: &mut dyn Transport,
     mine: &dyn Fn(usize) -> bool,
 ) -> Result<Vec<MailboxLog>> {
@@ -273,9 +306,10 @@ fn run_stages(
                 };
                 // receiver half: delta frames must advance the mirror
                 // (generation + digest verified) before the payload
-                // counts as delivered — no silent state skew
+                // counts as delivered — no silent state skew. The mode
+                // comes from this *channel's* planned spec.
                 if wire::is_delta_frame(buf) {
-                    let fb = match opts.spec.method {
+                    let fb = match plan.spec_for(boundary, dir).method {
                         Method::TopK { feedback, .. } => channel_feedback(feedback, dir),
                         _ => Feedback::None,
                     };
@@ -290,7 +324,8 @@ fn run_stages(
             // send this op's output frame (if its boundary has a wire)
             if let Some(boundary) = pipeline::output_boundary(op, stages, v) {
                 let (link, chunk, key, mbx, slot) = channel(boundary, dir, step, mb);
-                let buf = encode_message(opts, &mut senders[slot], link, dir, chunk, mb)?;
+                let spec = plan.spec_for(boundary, dir);
+                let buf = encode_message(opts, spec, &mut senders[slot], link, dir, chunk, mb)?;
                 if !net.wants_payload() {
                     sent_frames[mbx].insert(key, buf.clone());
                 }
@@ -307,8 +342,9 @@ fn run_stages(
 
 /// Single-process reference: the whole schedule over `SimNet`.
 pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
+    let plan = opts.effective_plan()?;
     let mut net = SimNet::new(opts.wire_links(), opts.wire);
-    let boxes = run_stages(opts, &mut net, &|_| true)?;
+    let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
     Ok(WorkerSummary { backend: "sim".into(), rank: None, boxes, wire_elapsed_s: 0.0 })
 }
 
@@ -316,10 +352,11 @@ pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
 /// every link in this process) — the in-test analogue of the
 /// multi-process path.
 pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
+    let plan = opts.effective_plan()?;
     let links = opts.wire_links();
     let timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
     let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
-    let boxes = run_stages(opts, &mut net, &|_| true)?;
+    let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
     let elapsed = net.wire_elapsed_s();
     net.shutdown()?;
     Ok(WorkerSummary {
@@ -342,11 +379,18 @@ pub fn run_rank(
     if rank >= opts.stages {
         bail!("rank {rank} out of range for {} stages", opts.stages);
     }
+    let plan = opts.effective_plan()?;
     let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
     rv.recv_timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
     rv.ring = opts.chunks() > 1 && opts.stages > 1;
+    // the handshake negotiates the plan digest: a peer that loaded a
+    // different plan (or a different --compression) is refused with a
+    // typed PlanMismatch before any frame or mirror update happens —
+    // and the digest comes from the same resolved plan the stage loop
+    // encodes with
+    rv.plan_digest = plan.digest();
     let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
-    let boxes = run_stages(opts, &mut net, &|s| s == rank)?;
+    let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
     let elapsed = net.wire_elapsed_s();
     net.shutdown()?;
     Ok(WorkerSummary {
@@ -561,6 +605,7 @@ mod tests {
             link_elems: 64,
             schedule: Schedule::GPipe,
             spec: Spec::parse(mode).unwrap(),
+            plan: None,
             seed: 11,
             wire: WireModel::datacenter(),
             recv_timeout_s: 5.0,
@@ -601,6 +646,62 @@ mod tests {
     fn shared_index_specs_are_rejected() {
         let o = opts(2, 2, "topk:10:shared");
         assert!(run_reference(&o).is_err());
+    }
+
+    /// A heterogeneous plan keys every channel's codec and feedback
+    /// state by boundary: the reference replay is deterministic, the
+    /// per-mailbox frames differ from any uniform run, and byte counts
+    /// match each channel's own spec.
+    #[test]
+    fn plan_keys_specs_by_boundary_channel() {
+        use crate::planner::{BoundaryPlan, Plan};
+        let mut o = opts(2, 4, "topk:10");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        o.steps = 2;
+        o.link_elems = 512;
+        let plan = Plan {
+            n_ranks: 2,
+            v: 2,
+            queue_cap: 4,
+            boundaries: vec![
+                BoundaryPlan {
+                    fwd: Spec::parse("topk:10").unwrap(),
+                    bwd: Spec::parse("quant:fw8-bw8").unwrap(),
+                },
+                BoundaryPlan {
+                    fwd: Spec::parse("ef21+topk:10").unwrap(),
+                    bwd: Spec::parse("topk:30").unwrap(),
+                },
+                BoundaryPlan {
+                    fwd: Spec::parse("quant:fw4-bw8").unwrap(),
+                    bwd: Spec::none(),
+                },
+            ],
+        };
+        o.plan = Some(plan.clone());
+        let a = run_reference(&o).unwrap();
+        let b = run_reference(&o).unwrap();
+        assert_eq!(a.boxes, b.boxes, "planned reference must be deterministic");
+        check(&a, std::slice::from_ref(&b)).unwrap();
+        // boundary 2 bwd is uncompressed: that channel's frames are the
+        // raw size; boundary 0 bwd is 8-bit quant (smaller); both ride
+        // link 0 bwd, distinguished by chunk-qualified keys
+        let raw = wire::raw_wire_bytes(o.link_elems);
+        let quant = wire::quant_wire_bytes(o.link_elems, 8);
+        let bwd0 = &a.boxes[1]; // link 0, bwd carries boundaries 0 and 2
+        let sizes: std::collections::HashSet<usize> =
+            bwd0.recv.iter().map(|r| r.1).collect();
+        assert!(sizes.contains(&raw), "uncompressed boundary missing: {sizes:?}");
+        assert!(sizes.contains(&quant), "quantized boundary missing: {sizes:?}");
+        // and the run differs from the uniform spec it would fall back to
+        let mut uniform = o.clone();
+        uniform.plan = None;
+        let u = run_reference(&uniform).unwrap();
+        assert_ne!(a.boxes, u.boxes);
+        // a plan whose shape doesn't match the run is a typed error
+        let mut wrong = o.clone();
+        wrong.stages = 3;
+        assert!(run_reference(&wrong).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::config::{Optimizer, Schedule};
 use crate::coordinator::{pipeline, simexec, Trainer};
 use crate::metrics::append_jsonl;
 use crate::netsim::{Backend, Transport, WireModel};
+use crate::planner::{self, PlanReport, PlannerInputs};
 use crate::runtime::Runtime;
 
 /// Table 1 + Figure 2: quantization sweep fw{2,4} x bw{2,4,6,8}.
@@ -231,6 +232,10 @@ pub struct SchedRow {
     pub busy_s: f64,
     pub sent_mb: f64,
     pub peak_in_flight: usize,
+    /// Peak stashed-activation bytes any rank holds (the memory axis:
+    /// interleaved v=4 exceeds even GPipe at 4x16 — ROADMAP PR 4's
+    /// follow-up, pinned by a test below).
+    pub peak_stash_bytes: u64,
     /// Measured wall-clock tx time (0 on the `sim` backend).
     pub wire_elapsed_s: f64,
 }
@@ -275,7 +280,7 @@ pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
             for sched in scheds {
                 let v = sched.chunks();
                 let ops = pipeline::ops_for(sched, p.stages, p.mb)?;
-                let links = pipeline::num_wire_links(p.stages, v);
+                let boundaries = pipeline::num_boundaries(p.stages, v);
                 // GPipe must rematerialize: it cannot stash all `mb`
                 // activation sets, so each backward op re-runs the fwd
                 let recompute_s =
@@ -289,9 +294,9 @@ pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
                     fwd_op_s: p.fwd_op_s / v as f64,
                     bwd_op_s: p.bwd_op_s / v as f64,
                     recompute_s,
-                    fwd_bytes: vec![fb; links],
-                    bwd_bytes: vec![bb; links],
-                    raw_bytes: vec![wire::raw_wire_bytes(p.link_elems); links],
+                    fwd_bytes: vec![fb; boundaries],
+                    bwd_bytes: vec![bb; boundaries],
+                    raw_bytes: vec![wire::raw_wire_bytes(p.link_elems); boundaries],
                     model,
                     capacity: p.capacity,
                 };
@@ -299,6 +304,8 @@ pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
                     Backend::Sim => simexec::simulate(&ops, &spec_run),
                     b => simexec::simulate_real(&ops, &spec_run, b)?,
                 };
+                // every chunk activation is one link tensor (4 B/elem)
+                let act = vec![4 * p.link_elems; p.stages * v];
                 rows.push(SchedRow {
                     wire: wname.to_string(),
                     mode: spec.label(),
@@ -307,6 +314,7 @@ pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
                     busy_s: sim.busy_s,
                     sent_mb: sim.bytes as f64 / 1e6,
                     peak_in_flight: pipeline::peak_in_flight(&ops, p.stages),
+                    peak_stash_bytes: pipeline::peak_stash_bytes(&ops, p.stages, &act) as u64,
                     wire_elapsed_s: sim.wire_elapsed_s,
                 });
             }
@@ -338,19 +346,26 @@ pub fn schedule_ablation(opts: &ExpOpts) -> Result<()> {
         p.capacity,
         if p.recompute { " rematerializes activations" } else { ": no recompute" },
     );
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(103));
     println!(
-        "{:<11} {:<17} {:<14} {:>11} {:>11} {:>10} {:>9}",
-        "wire", "mode", "schedule", "makespan", "wire busy", "sent", "peak act"
+        "{:<11} {:<17} {:<14} {:>11} {:>11} {:>10} {:>9} {:>10}",
+        "wire", "mode", "schedule", "makespan", "wire busy", "sent", "peak act", "stash"
     );
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(103));
     for r in &rows {
         println!(
-            "{:<11} {:<17} {:<14} {:>9.3} s {:>9.3} s {:>7.2} MB {:>9}",
-            r.wire, r.mode, r.schedule, r.makespan_s, r.busy_s, r.sent_mb, r.peak_in_flight
+            "{:<11} {:<17} {:<14} {:>9.3} s {:>9.3} s {:>7.2} MB {:>9} {:>7.2} MB",
+            r.wire,
+            r.mode,
+            r.schedule,
+            r.makespan_s,
+            r.busy_s,
+            r.sent_mb,
+            r.peak_in_flight,
+            r.peak_stash_bytes as f64 / 1e6,
         );
     }
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(103));
     if p.backend == Backend::Sim {
         for wire_name in ["wan", "datacenter"] {
             let g = sched_row(&rows, wire_name, "no compression", "gpipe");
@@ -438,6 +453,54 @@ pub fn schedule_ablation(opts: &ExpOpts) -> Result<()> {
     println!(
         "  (identical accuracy: the schedule changes timing, not math; \
          interleaved:2 folds the 4 model stages onto 2 ranks)"
+    );
+    Ok(())
+}
+
+/// Planner inputs for the `exp plan` / `mpcomp plan` shape built from
+/// the schedule-ablation parameters (chunk op costs = per-rank cost/v).
+pub fn plan_inputs(p: &SchedParams, sched: Schedule, model: WireModel) -> PlannerInputs {
+    let v = sched.chunks();
+    PlannerInputs {
+        n_ranks: p.stages,
+        schedule: sched,
+        n_mb: p.mb,
+        fwd_op_s: p.fwd_op_s / v as f64,
+        bwd_op_s: p.bwd_op_s / v as f64,
+        recompute_s: 0.0,
+        elems: vec![p.link_elems; pipeline::num_boundaries(p.stages, v)],
+        model,
+        capacity: p.capacity,
+    }
+}
+
+/// The planner table: run the overlap-aware search on the acceptance
+/// config (interleaved v=2 over the ablation's shape) for both wire
+/// profiles. Returns `(wire name, report)` per profile.
+pub fn plan_table(p: &SchedParams) -> Result<Vec<(String, PlanReport)>> {
+    let mut out = Vec::new();
+    for (wname, model) in [("wan", WireModel::wan()), ("datacenter", WireModel::datacenter())] {
+        let inputs = plan_inputs(p, Schedule::Interleaved { v: 2 }, model);
+        out.push((wname.to_string(), planner::search(&inputs)?));
+    }
+    Ok(out)
+}
+
+/// `exp plan`: print the planner's chosen per-channel plan and its
+/// baselines on both wire profiles — the `exp schedule` table turned
+/// into an optimizer (the ROADMAP item this subsystem closes).
+pub fn plan_ablation(opts: &ExpOpts) -> Result<()> {
+    let p = &opts.sched;
+    for (wname, report) in plan_table(p)? {
+        report.print(&format!(
+            "Overlap-aware plan ({wname}): stages={} mb={} interleaved:2, {} elems/link",
+            p.stages, p.mb, p.link_elems
+        ));
+    }
+    println!(
+        "\n(gradient channels relax to milder specs first; on the datacenter wire the \
+         Agarwal rule keeps everything uncompressed. `mpcomp plan --out plan.json` emits \
+         the file `--set plan=file:…` and `mpcomp worker --plan` consume.)"
     );
     Ok(())
 }
@@ -573,6 +636,45 @@ mod tests {
         assert!(d4.makespan_s < d2.makespan_s);
     }
 
+    /// The satellite pin through the experiment surface: the schedule
+    /// table's `peak_stash_bytes` column shows interleaved v=4
+    /// exceeding GPipe's all-microbatch stash at the pinned 4x16
+    /// config, while 1F1B stays the floor.
+    #[test]
+    fn schedule_table_stash_column_shows_v4_memory_cost() {
+        let rows = schedule_table(&SchedParams::default()).unwrap();
+        let g = sched_row(&rows, "wan", "no compression", "gpipe").peak_stash_bytes;
+        let o = sched_row(&rows, "wan", "no compression", "1f1b").peak_stash_bytes;
+        let i4 = sched_row(&rows, "wan", "no compression", "interleaved:4").peak_stash_bytes;
+        assert!(o < g, "1f1b stash {o} !< gpipe {g}");
+        assert!(i4 > g, "interleaved:4 stash {i4} !> gpipe {g}");
+    }
+
+    /// The planner acceptance claim through the `exp plan` surface: on
+    /// the WAN ring the emitted plan strictly beats every global-spec
+    /// baseline's simulated makespan; on the datacenter wire it relaxes
+    /// to uncompressed and never exceeds the uncompressed makespan.
+    #[test]
+    fn plan_table_beats_globals_on_wan_and_relaxes_on_datacenter() {
+        let reports = plan_table(&SchedParams::default()).unwrap();
+        let (_, wan) = &reports[0];
+        assert!(wan.wire_bound);
+        for b in &wan.baselines {
+            assert!(
+                wan.sim_makespan_s < b.sim_makespan_s,
+                "wan plan {} !< global '{}' {}",
+                wan.sim_makespan_s,
+                b.label,
+                b.sim_makespan_s
+            );
+        }
+        let (_, dc) = &reports[1];
+        assert!(!dc.wire_bound);
+        assert!(dc.plan.is_none());
+        let none = dc.baselines.iter().find(|b| b.label == "no compression").unwrap();
+        assert!(dc.sim_makespan_s <= none.sim_makespan_s + 1e-12);
+    }
+
     #[test]
     fn schedule_table_contention_shows_on_wan_only() {
         // datacenter links are effectively free: both schedules sit near
@@ -608,6 +710,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "comm" => comm(opts),
         "impl" => impl_ablation(opts),
         "schedule" => schedule_ablation(opts),
+        "plan" => plan_ablation(opts),
         "aqsgd-mem" => aqsgd_memory(opts),
         "all" => {
             for t in ["table1", "table2", "table3", "table4", "table5", "comm"] {
@@ -616,7 +719,8 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
             Ok(())
         }
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try table1..table5, comm, impl, schedule, aqsgd-mem, all)"
+            "unknown experiment '{name}' (try table1..table5, comm, impl, schedule, plan, \
+             aqsgd-mem, all)"
         ),
     }
     .context(format!("experiment {name}"))

@@ -14,8 +14,14 @@
 //!   stage scheduling (GPipe / 1F1B / interleaved 1F1B with virtual
 //!   stages) executed through the simulated transport, compressed
 //!   links, optimizer driving, checkpointing.
+//! * [`planner`] is the overlap-aware compression planner: it searches
+//!   the spec lattice per boundary channel and emits a `Plan` keeping
+//!   each link's tx time under the overlapped op time at minimal
+//!   accuracy risk; the trainer, `simexec`, and `mpcomp worker` key
+//!   their specs by boundary through it, and the real-transport
+//!   handshake negotiates its digest across ranks.
 //! * [`experiments`] regenerates every table and figure of the paper,
-//!   plus the `exp schedule` transmission ablation.
+//!   plus the `exp schedule` transmission ablation and `exp plan`.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! reproduction results.
@@ -29,6 +35,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod netsim;
+pub mod planner;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

@@ -10,8 +10,12 @@
 //! mpcomp exp schedule [--stages N] [--mb N] [--link-elems N]
 //!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
 //!            [--backend sim|tcp|uds]
+//! mpcomp plan [--stages N] [--mb N] [--link-elems N] [--wire wan|datacenter]
+//!             [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
+//!             [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N]
+//!             [--out plan.json]              # overlap-aware per-link spec search
 //! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
-//!               [--mb N] [--link-elems N] [--compression M]
+//!               [--mb N] [--link-elems N] [--compression M] [--plan plan.json]
 //!               [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
 //!               [--seed N] [--steps N] [--out summary.json]
 //! mpcomp worker --reference ... --out ref.json    # single-process SimNet replay
@@ -23,19 +27,20 @@ use anyhow::{bail, Context, Result};
 use mpcomp::cli::Args;
 use mpcomp::compression::Spec;
 use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
-use mpcomp::coordinator::{worker, Trainer, WorkerOpts, WorkerSummary};
+use mpcomp::coordinator::{pipeline, worker, Trainer, WorkerOpts, WorkerSummary};
 use mpcomp::experiments::{tables, ExpOpts};
 use mpcomp::metrics::append_jsonl;
 use mpcomp::netsim::{Backend, WireModel};
+use mpcomp::planner::{self, Plan, PlannerInputs};
 use mpcomp::runtime::Runtime;
 
 const VALUE_FLAGS: &[&str] = &[
     "config", "set", "model", "compression", "checkpoint", "seeds", "impl",
     "artifacts", "results", "epochs", "save-checkpoint",
-    // exp schedule (transmission-simulator ablation) + worker
+    // exp schedule (transmission-simulator ablation) + worker + plan
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
-    "recv-timeout", "steps", "compare-bytes", "virtual-stages",
+    "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan",
 ];
 
 fn main() -> Result<()> {
@@ -46,10 +51,11 @@ fn main() -> Result<()> {
         Some("train") => train(&args),
         Some("eval") => eval(&args),
         Some("exp") => exp(&args),
+        Some("plan") => plan_cmd(&args),
         Some("worker") => worker_cmd(&args),
         _ => {
             eprintln!(
-                "usage: mpcomp <info|train|eval|exp|worker> [...]\n\
+                "usage: mpcomp <info|train|eval|exp|plan|worker> [...]\n\
                  see README.md for the full command reference"
             );
             std::process::exit(2);
@@ -131,10 +137,11 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    println!("training {} with '{}' ({} epochs)", cfg.model, cfg.spec.label(), cfg.epochs);
     let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
     let results_dir = cfg.results_dir.clone();
+    let (model, epochs) = (cfg.model.clone(), cfg.epochs);
     let mut trainer = Trainer::new(rt, cfg)?;
+    println!("training {model} with '{}' ({epochs} epochs)", trainer.plan.label());
     let m = trainer.run()?;
     println!("\nepoch  train_loss     eval(on)    eval(off)");
     for p in &m.points {
@@ -177,7 +184,7 @@ fn eval(args: &Args) -> Result<()> {
 
 fn exp(args: &Args) -> Result<()> {
     let Some(name) = args.positional.get(1) else {
-        bail!("exp wants a name: table1..table5, comm, impl, schedule, aqsgd-mem, all");
+        bail!("exp wants a name: table1..table5, comm, impl, schedule, plan, aqsgd-mem, all");
     };
     let mut opts = ExpOpts {
         full: args.has("full"),
@@ -219,6 +226,69 @@ fn exp(args: &Args) -> Result<()> {
     tables::run(name, &opts)
 }
 
+/// `--virtual-stages V` is shorthand for `--schedule interleaved:V`
+/// (shared by `worker` and `plan`; V = 1 falls back to plain 1f1b
+/// semantics via `Interleaved{1}`).
+fn schedule_from_flags(args: &Args, default: &str) -> Result<Schedule> {
+    match args.usize("virtual-stages")? {
+        Some(0) => bail!("--virtual-stages wants V >= 1"),
+        Some(v) => {
+            if args.has("schedule") {
+                bail!("--virtual-stages and --schedule are mutually exclusive");
+            }
+            Ok(Schedule::Interleaved { v })
+        }
+        None => Schedule::parse(args.get("schedule").unwrap_or(default)),
+    }
+}
+
+/// `mpcomp plan`: run the overlap-aware planner search on a synthetic
+/// pipeline shape (no artifacts needed), print the chosen per-channel
+/// plan against the global-spec baselines, optionally write the plan
+/// file that `--set plan=file:…` and `mpcomp worker --plan` consume.
+fn plan_cmd(args: &Args) -> Result<()> {
+    let stages = args.usize("stages")?.unwrap_or(4);
+    let schedule = schedule_from_flags(args, "1f1b")?;
+    let v = schedule.chunks();
+    let mb = args.usize("mb")?.unwrap_or(16);
+    let link_elems = args.usize("link-elems")?.unwrap_or(16_384);
+    let wire_name = args.get("wire").unwrap_or("wan");
+    let fwd_op_s = match args.get("fwd-op-ms") {
+        Some(x) => x.parse::<f64>()? / 1e3,
+        None => 0.020,
+    };
+    let bwd_op_s = match args.get("bwd-op-ms") {
+        Some(x) => x.parse::<f64>()? / 1e3,
+        None => 0.040,
+    };
+    let inputs = PlannerInputs {
+        n_ranks: stages,
+        schedule,
+        n_mb: mb,
+        // chunk ops: per-rank compute splits across the v chunks
+        fwd_op_s: fwd_op_s / v as f64,
+        bwd_op_s: bwd_op_s / v as f64,
+        recompute_s: 0.0,
+        elems: vec![link_elems; pipeline::num_boundaries(stages, v)],
+        model: WireModel::parse(wire_name)?,
+        capacity: args.usize("capacity")?.unwrap_or(mpcomp::netsim::DEFAULT_QUEUE_CAPACITY),
+    };
+    let report = planner::search(&inputs)?;
+    report.print(&format!(
+        "Overlap-aware compression plan: {} x {} mb, {} ({} wire, {} elems/link)",
+        stages,
+        mb,
+        schedule.name(),
+        wire_name,
+        link_elems
+    ));
+    if let Some(out) = args.get("out") {
+        report.plan.save(out)?;
+        println!("(plan written to {out}; run it with --set plan=file:{out} or --plan {out})");
+    }
+    Ok(())
+}
+
 /// `mpcomp worker`: one pipeline stage per OS process on a synthetic
 /// schedule over the real transport — plus the single-process reference
 /// run and the parity checker the CI `loopback` job drives.
@@ -254,24 +324,16 @@ fn worker_cmd(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
-    // --virtual-stages V is shorthand for --schedule interleaved:V
-    // (V = 1 falls back to plain 1f1b semantics via Interleaved{1})
-    let schedule = match args.usize("virtual-stages")? {
-        Some(0) => bail!("--virtual-stages wants V >= 1"),
-        Some(v) => {
-            if args.has("schedule") {
-                bail!("--virtual-stages and --schedule are mutually exclusive");
-            }
-            Schedule::Interleaved { v }
-        }
-        None => Schedule::parse(args.get("schedule").unwrap_or("gpipe"))?,
-    };
+    let schedule = schedule_from_flags(args, "gpipe")?;
     let opts = WorkerOpts {
         stages: args.usize("stages")?.unwrap_or(2),
         mb: args.usize("mb")?.unwrap_or(4),
         link_elems: args.usize("link-elems")?.unwrap_or(256),
         schedule,
         spec: Spec::parse(args.get("compression").unwrap_or("none"))?,
+        // every rank must load the same plan file: its digest is what
+        // the rendezvous handshake negotiates
+        plan: args.get("plan").map(Plan::load).transpose()?,
         seed: args.usize("seed")?.unwrap_or(0) as u64,
         wire: WireModel::parse(args.get("wire").unwrap_or("wan"))?,
         recv_timeout_s: match args.get("recv-timeout") {

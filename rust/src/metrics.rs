@@ -45,6 +45,10 @@ pub struct RunMetrics {
     /// Error-feedback buffer footprint at end of run, sender buffers
     /// plus receiver mirrors (the paper's AQ-SGD memory concern).
     pub feedback_memory_bytes: u64,
+    /// Peak bytes of stashed activations any rank holds under the
+    /// run's schedule (the memory axis GPipe/1F1B/interleaving trade:
+    /// interleaved v=4 exceeds even GPipe's all-microbatch stash).
+    pub peak_stash_bytes: u64,
 }
 
 impl RunMetrics {
@@ -61,6 +65,7 @@ impl RunMetrics {
             sim_makespan_s: 0.0,
             wall_time_s: 0.0,
             feedback_memory_bytes: 0,
+            peak_stash_bytes: 0,
         }
     }
 
@@ -129,6 +134,7 @@ impl RunMetrics {
             .set("sim_makespan_s", Json::Num(self.sim_makespan_s))
             .set("wall_time_s", Json::Num(self.wall_time_s))
             .set("feedback_memory_bytes", Json::Num(self.feedback_memory_bytes as f64))
+            .set("peak_stash_bytes", Json::Num(self.peak_stash_bytes as f64))
             .set(
                 "train_loss",
                 Json::from_f64s(&self.points.iter().map(|p| p.train_loss).collect::<Vec<_>>()),
@@ -222,6 +228,7 @@ mod tests {
         assert!(parsed.get("sim_makespan_s").is_ok());
         assert!(parsed.get("wire_elapsed_s").is_ok());
         assert!(parsed.get("feedback_memory_bytes").is_ok());
+        assert!(parsed.get("peak_stash_bytes").is_ok());
         assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
     }
 

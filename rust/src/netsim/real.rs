@@ -13,9 +13,15 @@
 //! run is launched as N OS processes (`mpcomp worker`): the lower stage
 //! of link `i` listens at the link's rendezvous address, the upper stage
 //! connects (with retry) and both sides exchange
-//! `[magic][version][link][stage]` hellos before any frames flow. Keys
-//! then ride in the frames themselves, so the per-`(link, dir)`
-//! mailboxes look exactly like the simulator's.
+//! `[magic][version][link][stage][plan digest]` hellos before any
+//! frames flow. The digest is the FNV-1a of the endpoint's negotiated
+//! compression plan ([`crate::planner::Plan::digest`]): two ranks
+//! launched with different plans would encode and decode boundary
+//! messages with mismatched specs, so both sides refuse the connection
+//! with a typed [`TransportError::PlanMismatch`] *before* any frame is
+//! sent — feedback mirrors on either end are never touched. Keys then
+//! ride in the frames themselves, so the per-`(link, dir)` mailboxes
+//! look exactly like the simulator's.
 //!
 //! A reader thread per stream drains frames into the shared mailboxes
 //! regardless of schedule progress, so kernel socket buffers never fill
@@ -41,12 +47,12 @@ use super::transport::{Backend, Frame, Payload, Transport, TransportError};
 use super::{Dir, NetSim, WireModel};
 
 const MAGIC: u32 = 0x4d50_434d; // "MPCM"
-const VERSION: u8 = 1;
+const VERSION: u8 = 2; // v2: hello carries the 8-byte plan digest
 const DIR_FWD: u8 = 0;
 const DIR_BWD: u8 = 1;
 const DIR_SHUTDOWN: u8 = 0xff;
 const FRAME_HEADER: usize = 21;
-const HELLO_LEN: usize = 13;
+const HELLO_LEN: usize = 21;
 /// Sanity bound on a single frame (1 GiB).
 const MAX_FRAME: usize = 1 << 30;
 /// Handshake read window. Must exceed the rendezvous connect window: a
@@ -216,6 +222,11 @@ pub struct Rendezvous {
     pub connect_timeout: Duration,
     /// How long `recv` may wait for a frame.
     pub recv_timeout: Duration,
+    /// Digest of the compression plan this endpoint will run
+    /// ([`crate::planner::Plan::digest`]). Exchanged in the hello: a
+    /// peer with a different digest is refused with a typed
+    /// [`TransportError::PlanMismatch`] before any frame flows.
+    pub plan_digest: u64,
 }
 
 impl Rendezvous {
@@ -231,6 +242,7 @@ impl Rendezvous {
             tcp_base_port: 0,
             connect_timeout: Duration::from_secs(20),
             recv_timeout: Duration::from_secs(20),
+            plan_digest: 0,
         };
         match backend {
             Backend::Sim => {
@@ -324,18 +336,22 @@ impl Rendezvous {
 // handshake
 // ---------------------------------------------------------------------------
 
-fn hello_bytes(link: usize, stage: usize) -> [u8; HELLO_LEN] {
+fn hello_bytes(link: usize, stage: usize, plan_digest: u64) -> [u8; HELLO_LEN] {
     let mut b = [0u8; HELLO_LEN];
     b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
     b[4] = VERSION;
     b[5..9].copy_from_slice(&(link as u32).to_le_bytes());
     b[9..13].copy_from_slice(&(stage as u32).to_le_bytes());
+    b[13..21].copy_from_slice(&plan_digest.to_le_bytes());
     b
 }
 
-/// Read and validate the peer's hello; returns its stage.
-fn read_hello(sock: &mut Sock, link: usize) -> Result<usize, TransportError> {
-    let mut b = [0u8; HELLO_LEN];
+/// Read and validate the peer's hello; returns its (stage, plan digest).
+/// The version-independent 13-byte prefix is read and validated first,
+/// so an old v1 peer (which sends only 13 bytes) fails the version
+/// check immediately instead of stalling the read for the v2 digest.
+fn read_hello(sock: &mut Sock, link: usize) -> Result<(usize, u64), TransportError> {
+    let mut b = [0u8; 13];
     sock.read_exact(&mut b)
         .map_err(|e| TransportError::Io(format!("handshake read on link {link}: {e}")))?;
     let magic = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
@@ -349,27 +365,42 @@ fn read_hello(sock: &mut Sock, link: usize) -> Result<usize, TransportError> {
     if got_link != link {
         return Err(TransportError::Corrupt(format!("peer speaks link {got_link}, not {link}")));
     }
-    Ok(u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize)
+    let stage = u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize;
+    let mut d = [0u8; 8];
+    sock.read_exact(&mut d)
+        .map_err(|e| TransportError::Io(format!("handshake digest read on link {link}: {e}")))?;
+    Ok((stage, u64::from_le_bytes(d)))
 }
 
 /// Acceptor side (the lower stage): hear hello, say hello. The
 /// expected upper stage is `link + 1` on a chain, `(link + 1) mod
-/// num_stages` on a ring (the wrap link's upper end is stage 0).
+/// num_stages` on a ring (the wrap link's upper end is stage 0). The
+/// reply is always sent before validation so the peer can run its own
+/// digest check and surface the same typed error instead of a read
+/// failure; no frame flows past a failed handshake.
 fn handshake_accept(
     sock: &mut Sock,
     link: usize,
     stage: usize,
     expect_upper: usize,
+    plan_digest: u64,
 ) -> Result<(), TransportError> {
     sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-    let peer = read_hello(sock, link)?;
-    sock.write_all(&hello_bytes(link, stage))?;
+    let (peer, peer_digest) = read_hello(sock, link)?;
+    sock.write_all(&hello_bytes(link, stage, plan_digest))?;
     sock.flush()?;
     sock.set_read_timeout(None)?;
     if peer != expect_upper {
         return Err(TransportError::Corrupt(format!(
             "link {link}: expected upper stage {expect_upper}, peer is stage {peer}"
         )));
+    }
+    if peer_digest != plan_digest {
+        return Err(TransportError::PlanMismatch {
+            link,
+            ours: plan_digest,
+            theirs: peer_digest,
+        });
     }
     Ok(())
 }
@@ -569,10 +600,11 @@ impl RealTransport {
                 }
             };
             let mut lower = listener.accept_by(deadline)?;
-            upper.write_all(&hello_bytes(link, link + 1))?;
+            // loopback owns both ends, so its plan digests trivially agree
+            upper.write_all(&hello_bytes(link, link + 1, 0))?;
             upper.flush()?;
-            handshake_accept(&mut lower, link, link, link + 1)?;
-            handshake_connect_finish(&mut upper, link)?;
+            handshake_accept(&mut lower, link, link, link + 1, 0)?;
+            handshake_connect_finish(&mut upper, link, 0)?;
             if let Some(p) = uds_path {
                 t.owned_paths.push(p);
             }
@@ -627,7 +659,7 @@ impl RealTransport {
             Some(link) => {
                 let mut sock = rv.connect(link, deadline)?;
                 sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-                sock.write_all(&hello_bytes(link, stage))?;
+                sock.write_all(&hello_bytes(link, stage, rv.plan_digest))?;
                 sock.flush()?;
                 Some((link, sock))
             }
@@ -636,7 +668,7 @@ impl RealTransport {
         if let Some(l) = listener {
             let link = stage;
             let mut sock = l.accept_by(deadline)?;
-            handshake_accept(&mut sock, link, stage, (link + 1) % rv.num_stages)?;
+            handshake_accept(&mut sock, link, stage, (link + 1) % rv.num_stages, rv.plan_digest)?;
             t.writers[slot_index(link, Dir::Fwd)] = Some(sock.try_clone()?);
             t.spawn_reader(sock, link);
             if rv.backend == Backend::Uds {
@@ -644,7 +676,7 @@ impl RealTransport {
             }
         }
         if let Some((link, mut sock)) = upstream {
-            handshake_connect_finish(&mut sock, link)?;
+            handshake_connect_finish(&mut sock, link, rv.plan_digest)?;
             t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
             t.spawn_reader(sock, link);
         }
@@ -677,15 +709,28 @@ impl RealTransport {
 }
 
 /// The tail of the connector handshake when the hello was already sent
-/// (single-thread loopback interleaves the two sides by hand).
-fn handshake_connect_finish(sock: &mut Sock, link: usize) -> Result<(), TransportError> {
+/// (single-thread loopback interleaves the two sides by hand). Verifies
+/// the lower stage's identity and that its negotiated plan digest
+/// matches ours.
+fn handshake_connect_finish(
+    sock: &mut Sock,
+    link: usize,
+    plan_digest: u64,
+) -> Result<(), TransportError> {
     sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-    let peer = read_hello(sock, link)?;
+    let (peer, peer_digest) = read_hello(sock, link)?;
     sock.set_read_timeout(None)?;
     if peer != link {
         return Err(TransportError::Corrupt(format!(
             "link {link}: expected lower stage {link}, peer is stage {peer}"
         )));
+    }
+    if peer_digest != plan_digest {
+        return Err(TransportError::PlanMismatch {
+            link,
+            ours: plan_digest,
+            theirs: peer_digest,
+        });
     }
     Ok(())
 }

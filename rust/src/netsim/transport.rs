@@ -96,6 +96,18 @@ pub enum TransportError {
         /// Direction with no peer.
         dir: Dir,
     },
+    /// The rendezvous handshake found the peer running a different
+    /// compression plan: the two ranks would encode/decode boundary
+    /// messages with mismatched specs, so the connection is refused
+    /// before any frame (or feedback-state mutation) happens.
+    PlanMismatch {
+        /// Link whose handshake failed.
+        link: usize,
+        /// This endpoint's plan digest.
+        ours: u64,
+        /// The peer's plan digest.
+        theirs: u64,
+    },
     /// Malformed frame or handshake on the wire.
     Corrupt(String),
     /// Underlying socket error.
@@ -117,6 +129,11 @@ impl fmt::Display for TransportError {
             TransportError::NoPeer { stage, dir } => {
                 write!(f, "transport: stage {stage} has no {dir} peer")
             }
+            TransportError::PlanMismatch { link, ours, theirs } => write!(
+                f,
+                "transport: link {link} peer negotiated plan digest {theirs:016x}, \
+                 ours is {ours:016x} — ranks must load identical compression plans"
+            ),
             TransportError::Corrupt(msg) => write!(f, "transport: corrupt frame: {msg}"),
             TransportError::Io(msg) => write!(f, "transport: io: {msg}"),
         }
@@ -270,6 +287,9 @@ mod tests {
     fn errors_display_and_convert() {
         let e = TransportError::Timeout { link: 1, dir: Dir::Fwd, key: 7 };
         assert!(e.to_string().contains("link 1"));
+        let e = TransportError::PlanMismatch { link: 2, ours: 0xab, theirs: 0xcd };
+        let s = e.to_string();
+        assert!(s.contains("link 2") && s.contains("ab") && s.contains("cd"), "{s}");
         let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
         assert!(matches!(TransportError::from(io), TransportError::Io(_)));
         // anyhow interop: `?` on a TransportError works in anyhow fns

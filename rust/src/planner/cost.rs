@@ -1,0 +1,361 @@
+//! The planner's cost model: candidate spec lattices with accuracy-risk
+//! scores, bytes-on-wire from the real wire codecs, the monotone
+//! dominance prune, and the analytic per-boundary makespan predictor.
+//!
+//! **Bytes** come from [`crate::coordinator::simexec::spec_wire_bytes`]
+//! — the same codec-exact sizing the links charge, never an estimate of
+//! an estimate. **Risk** is an ordinal score of accuracy damage,
+//! calibrated against the paper's tables: quantization needs >= 6
+//! gradient bits (Table 1), plain TopK degrades slowly to ~Top10%
+//! (Table 2), and EF21 at the same K closes most of the inference gap
+//! (Table 3), so an EF21 spec ranks *milder* than plain TopK at equal
+//! K. Gradients tolerate less compression than activations, so the
+//! backward lattice scores the same operator strictly riskier than the
+//! forward lattice does — which is what makes the search prefer milder
+//! specs on gradient channels when slack is shared.
+//!
+//! The **dominance rule**: candidate A dominates B when A costs no more
+//! bytes *and* no more risk, strictly less in one. Pruning to the
+//! non-dominated frontier leaves a list where risk ascends exactly as
+//! bytes descend — so the per-channel search is a monotone first-fit
+//! scan instead of a lattice walk.
+
+use anyhow::{bail, Result};
+
+use crate::compression::Spec;
+use crate::config::Schedule;
+use crate::coordinator::pipeline::{self, Op};
+use crate::coordinator::simexec::{self, SimSpec};
+use crate::netsim::{Dir, WireModel};
+
+/// One lattice entry: a spec plus its ordinal accuracy-risk score for
+/// the direction the lattice belongs to.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// The compression spec (only its direction-relevant half applies).
+    pub spec: Spec,
+    /// Ordinal accuracy risk; 0 = uncompressed. Only the order matters.
+    pub risk: u32,
+}
+
+fn cand(s: &str, risk: u32) -> Candidate {
+    Candidate { spec: Spec::parse(s).expect("lattice spec parses"), risk }
+}
+
+/// Activation-channel candidates (forward direction). The paper's CNN
+/// tables show activations tolerate 4-bit quantization and ~Top10%
+/// sparsity; EF21 keeps Top5% viable.
+pub fn fwd_lattice() -> Vec<Candidate> {
+    vec![
+        cand("none", 0),
+        cand("quant:fw8-bw8", 10),
+        cand("quant:fw4-bw8", 20),
+        cand("topk:30", 30),
+        cand("ef21+topk:10", 40),
+        cand("topk:10", 45),
+        cand("ef21+topk:5", 55),
+        cand("topk:5", 60),
+    ]
+}
+
+/// Gradient-channel candidates (backward direction). Gradients need
+/// milder compression (Table 1: >= 6 bits; Table 2: sparsity hurts
+/// gradients first), so the same operator scores strictly riskier than
+/// in [`fwd_lattice`] and the 4-bit quant option disappears.
+pub fn bwd_lattice() -> Vec<Candidate> {
+    vec![
+        cand("none", 0),
+        cand("quant:fw8-bw8", 12),
+        cand("quant:fw8-bw6", 25),
+        cand("topk:30", 35),
+        cand("ef21+topk:10", 50),
+        cand("topk:10", 55),
+        cand("ef21+topk:5", 65),
+        cand("topk:5", 70),
+    ]
+}
+
+/// Wire bytes of one `spec` message on an `n`-element channel in
+/// direction `dir` (codec-exact, via `simexec::spec_wire_bytes`).
+pub fn dir_bytes(spec: &Spec, n: usize, dir: Dir) -> usize {
+    let (f, b) = simexec::spec_wire_bytes(spec, n);
+    match dir {
+        Dir::Fwd => f,
+        Dir::Bwd => b,
+    }
+}
+
+/// Prune a lattice to its non-dominated frontier for an `n`-element
+/// channel, sorted by ascending risk. The dominance rule is monotone:
+/// on the returned frontier, risk strictly ascends while bytes strictly
+/// descend — the property the first-fit search relies on.
+pub fn frontier(lattice: &[Candidate], n: usize, dir: Dir) -> Vec<Candidate> {
+    let sized: Vec<(Candidate, usize)> =
+        lattice.iter().map(|c| (*c, dir_bytes(&c.spec, n, dir))).collect();
+    let mut keep: Vec<(Candidate, usize)> = sized
+        .iter()
+        .filter(|(c, by)| {
+            !sized.iter().any(|(c2, by2)| {
+                c2.risk <= c.risk && *by2 <= *by && (c2.risk < c.risk || *by2 < *by)
+            })
+        })
+        .copied()
+        .collect();
+    keep.sort_by_key(|(c, _)| c.risk);
+    keep.into_iter().map(|(c, _)| c).collect()
+}
+
+/// Everything the planner needs to know about one run's shape and wire.
+#[derive(Clone, Debug)]
+pub struct PlannerInputs {
+    /// Worker (rank) count.
+    pub n_ranks: usize,
+    /// Pipeline schedule (its `chunks()` sets the virtual-stage count).
+    pub schedule: Schedule,
+    /// Microbatches per optimizer step.
+    pub n_mb: usize,
+    /// Compute cost of one forward **chunk** op (already divided by v).
+    pub fwd_op_s: f64,
+    /// Compute cost of one backward chunk op.
+    pub bwd_op_s: f64,
+    /// Extra recomputation charged per backward op (GPipe).
+    pub recompute_s: f64,
+    /// Elements crossing each stage boundary
+    /// (`pipeline::num_boundaries` entries).
+    pub elems: Vec<usize>,
+    /// Bandwidth/latency model of every link.
+    pub model: WireModel,
+    /// Bounded in-flight window per link direction.
+    pub capacity: usize,
+}
+
+impl PlannerInputs {
+    /// Virtual stages per rank.
+    pub fn v(&self) -> usize {
+        self.schedule.chunks()
+    }
+
+    /// Stage boundaries of this shape.
+    pub fn num_boundaries(&self) -> usize {
+        pipeline::num_boundaries(self.n_ranks, self.v())
+    }
+
+    /// The schedule's op sequence.
+    pub fn ops(&self) -> Result<Vec<Op>> {
+        pipeline::ops_for(self.schedule, self.n_ranks, self.n_mb)
+    }
+
+    /// Check the shape is plannable (>= 2 ranks, elems per boundary).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_ranks < 2 {
+            bail!("planner wants >= 2 ranks (single-rank pipelines have no wire)");
+        }
+        if self.elems.len() != self.num_boundaries() {
+            bail!(
+                "planner wants {} per-boundary element counts, got {}",
+                self.num_boundaries(),
+                self.elems.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// The event-driven simulation spec for one per-channel assignment
+    /// (`fwd[b]` / `bwd[b]` are the directed specs of boundary `b`).
+    pub fn sim_spec(&self, fwd: &[Spec], bwd: &[Spec]) -> SimSpec {
+        use crate::compression::wire;
+        let nb = self.num_boundaries();
+        SimSpec {
+            n_stages: self.n_ranks,
+            v: self.v(),
+            n_mb: self.n_mb,
+            fwd_op_s: self.fwd_op_s,
+            bwd_op_s: self.bwd_op_s,
+            recompute_s: self.recompute_s,
+            fwd_bytes: (0..nb).map(|b| dir_bytes(&fwd[b], self.elems[b], Dir::Fwd)).collect(),
+            bwd_bytes: (0..nb).map(|b| dir_bytes(&bwd[b], self.elems[b], Dir::Bwd)).collect(),
+            raw_bytes: self.elems.iter().map(|&n| wire::raw_wire_bytes(n)).collect(),
+            model: self.model,
+            capacity: self.capacity,
+        }
+    }
+}
+
+/// Analytic per-boundary makespan: `pipeline::makespan` generalized to
+/// one hop time per directed boundary (`fwd_hop[b]` / `bwd_hop[b]` =
+/// latency + serialization of that channel's messages). Contention-
+/// and queueing-blind, like the original — the planner's closed-form
+/// *prediction*, reported next to the event-driven simulation so the
+/// predicted-vs-simulated delta is visible (bench-smoke tracks it).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_makespan(
+    ops: &[Op],
+    n_ranks: usize,
+    v: usize,
+    n_mb: usize,
+    fwd_op_s: f64,
+    bwd_op_s: f64,
+    recompute_s: f64,
+    fwd_hop: &[f64],
+    bwd_hop: &[f64],
+) -> f64 {
+    let n_ms = n_ranks * v;
+    let mut rank_clock = vec![0.0f64; n_ranks];
+    let mut fwd_out = vec![vec![0.0f64; n_mb]; n_ms];
+    let mut bwd_out = vec![vec![0.0f64; n_mb]; n_ms];
+    for op in ops {
+        let (rank, mb) = (op.rank(), op.mb());
+        let ms = op.model_stage(n_ranks);
+        let (ready, op_s) = match op {
+            Op::Fwd { .. } => {
+                let ready = if ms == 0 {
+                    0.0
+                } else if n_ranks == 1 {
+                    fwd_out[ms - 1][mb]
+                } else {
+                    fwd_out[ms - 1][mb] + fwd_hop[ms - 1]
+                };
+                (ready, fwd_op_s)
+            }
+            Op::Bwd { .. } => {
+                let ready = if ms + 1 == n_ms {
+                    fwd_out[ms][mb]
+                } else if n_ranks == 1 {
+                    bwd_out[ms + 1][mb]
+                } else {
+                    bwd_out[ms + 1][mb] + bwd_hop[ms]
+                };
+                (ready, bwd_op_s + recompute_s)
+            }
+        };
+        let start = rank_clock[rank].max(ready);
+        let end = start + op_s;
+        rank_clock[rank] = end;
+        match op {
+            Op::Fwd { .. } => fwd_out[ms][mb] = end,
+            Op::Bwd { .. } => bwd_out[ms][mb] = end,
+        }
+    }
+    rank_clock.iter().cloned().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{gpipe, makespan, one_f_one_b};
+
+    #[test]
+    fn frontier_is_strictly_monotone() {
+        for (lattice, dir) in [(fwd_lattice(), Dir::Fwd), (bwd_lattice(), Dir::Bwd)] {
+            for n in [2048usize, 16_384, 100_000] {
+                let f = frontier(&lattice, n, dir);
+                assert!(f.len() >= 3, "{dir}: frontier collapsed to {}", f.len());
+                assert!(f[0].spec.is_none(), "{dir}: mildest entry must be uncompressed");
+                for w in f.windows(2) {
+                    let (a, b) = (&w[0], &w[1]);
+                    assert!(a.risk < b.risk, "{dir} n={n}: risk not ascending");
+                    assert!(
+                        dir_bytes(&a.spec, n, dir) > dir_bytes(&b.spec, n, dir),
+                        "{dir} n={n}: bytes not strictly descending — dominance broken"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dominance_prunes_plain_topk_behind_ef21() {
+        // EF21 at the same K ships fewer bytes at lower risk, so plain
+        // topk:10 / topk:5 never survive the prune at LM link size
+        let f = frontier(&fwd_lattice(), 16_384, Dir::Fwd);
+        let labels: Vec<String> = f.iter().map(|c| c.spec.canon()).collect();
+        assert!(!labels.iter().any(|l| l == "topk:10" || l == "topk:5"), "{labels:?}");
+        assert!(labels.iter().any(|l| l.starts_with("ef21+")), "{labels:?}");
+    }
+
+    #[test]
+    fn bwd_lattice_scores_same_operator_riskier() {
+        let f: std::collections::HashMap<String, u32> =
+            fwd_lattice().iter().map(|c| (c.spec.canon(), c.risk)).collect();
+        for c in bwd_lattice() {
+            let name = c.spec.canon();
+            if let Some(&fr) = f.get(&name) {
+                if !c.spec.is_none() {
+                    assert!(c.risk > fr, "{name}: bwd risk {} !> fwd {fr}", c.risk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_per_boundary_reduces_to_uniform_makespan() {
+        // with one shared hop time the per-boundary model is exactly
+        // pipeline::makespan (same op cost both directions, no recompute)
+        for (s, m) in [(2usize, 3usize), (4, 8)] {
+            for ops in [gpipe(s, m), one_f_one_b(s, m)] {
+                let hop = 0.25;
+                let want = makespan(&ops, s, 1, m, 1.0, hop);
+                let hops = vec![hop; s - 1];
+                let got = analytic_makespan(&ops, s, 1, m, 1.0, 1.0, 0.0, &hops, &hops);
+                assert_eq!(got, want, "s={s} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_heterogeneous_hops_move_the_makespan() {
+        let (s, m) = (4, 8);
+        let ops = one_f_one_b(s, m);
+        let cheap = vec![0.1; s - 1];
+        let base = analytic_makespan(&ops, s, 1, m, 1.0, 1.0, 0.0, &cheap, &cheap);
+        let mut heavy = cheap.clone();
+        heavy[1] = 5.0; // one slow boundary
+        let slow = analytic_makespan(&ops, s, 1, m, 1.0, 1.0, 0.0, &heavy, &cheap);
+        assert!(slow > base);
+    }
+
+    #[test]
+    fn planner_inputs_validate_shape() {
+        let mut inp = PlannerInputs {
+            n_ranks: 4,
+            schedule: Schedule::Interleaved { v: 2 },
+            n_mb: 16,
+            fwd_op_s: 0.01,
+            bwd_op_s: 0.02,
+            recompute_s: 0.0,
+            elems: vec![16_384; 7],
+            model: WireModel::wan(),
+            capacity: 4,
+        };
+        inp.validate().unwrap();
+        assert_eq!(inp.v(), 2);
+        assert_eq!(inp.num_boundaries(), 7);
+        assert_eq!(inp.ops().unwrap().len(), 2 * 4 * 2 * 16);
+        inp.elems.pop();
+        assert!(inp.validate().is_err());
+        inp.n_ranks = 1;
+        assert!(inp.validate().is_err());
+    }
+
+    #[test]
+    fn sim_spec_uses_per_boundary_codec_bytes() {
+        use crate::compression::wire;
+        let inp = PlannerInputs {
+            n_ranks: 2,
+            schedule: Schedule::OneFOneB,
+            n_mb: 4,
+            fwd_op_s: 0.01,
+            bwd_op_s: 0.02,
+            recompute_s: 0.0,
+            elems: vec![1000],
+            model: WireModel::wan(),
+            capacity: 4,
+        };
+        let fwd = vec![Spec::parse("quant:fw4-bw8").unwrap()];
+        let bwd = vec![Spec::none()];
+        let spec = inp.sim_spec(&fwd, &bwd);
+        assert_eq!(spec.fwd_bytes, vec![wire::quant_wire_bytes(1000, 4)]);
+        assert_eq!(spec.bwd_bytes, vec![wire::raw_wire_bytes(1000)]);
+        assert_eq!(spec.raw_bytes, vec![wire::raw_wire_bytes(1000)]);
+    }
+}

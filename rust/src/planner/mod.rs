@@ -1,0 +1,36 @@
+//! Overlap-aware compression planner (L5): picks a per-boundary,
+//! per-direction [`crate::compression::Spec`] map — a [`Plan`] — so that each
+//! link's transmission time stays hidden under the overlapped compute,
+//! at the mildest accuracy risk that achieves it.
+//!
+//! This is the layer between the sweep tables and the executors the
+//! ROADMAP asked for ("turn the `exp schedule` table into an
+//! optimizer"). The paper's observation that the viable compression
+//! level depends on *where* a tensor crosses the pipeline — and that
+//! gradients tolerate less than activations — becomes machinery here:
+//!
+//! * [`cost`] — candidate lattices with per-direction accuracy-risk
+//!   scores, codec-exact bytes-on-wire, the monotone dominance prune,
+//!   and the analytic per-boundary makespan predictor.
+//! * [`search`] — the min-bytes anchor + threshold + first-fit
+//!   relaxation, every candidate evaluated through the event-driven
+//!   simulator (`simexec` over `SimNet`: bandwidth, latency, bounded
+//!   in-flight window), emitting a [`PlanReport`].
+//! * [`plan`] — the [`Plan`] artifact itself: JSON files, the FNV-1a
+//!   negotiation digest the rendezvous handshake exchanges, and typed
+//!   [`PlanError`] validation.
+//!
+//! Consumers: `TrainConfig` grows `plan = global | auto | file:<path>`;
+//! the trainer, `simexec`, and `mpcomp worker` key their channel specs
+//! by `(boundary, direction)` through a [`Plan`]; `mpcomp plan` and
+//! `exp plan` print the chosen plan against the global-spec baselines.
+
+#![warn(missing_docs)]
+
+pub mod cost;
+pub mod plan;
+pub mod search;
+
+pub use cost::{bwd_lattice, frontier, fwd_lattice, Candidate, PlannerInputs};
+pub use plan::{BoundaryPlan, Plan, PlanError, PlanMode};
+pub use search::{search, BaselineRow, ChannelChoice, PlanReport};

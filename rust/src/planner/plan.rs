@@ -1,0 +1,593 @@
+//! The [`Plan`] artifact: a per-boundary map of compression [`Spec`]s
+//! (one per direction), with canonical serialization, a negotiation
+//! digest, and typed validation errors.
+//!
+//! A plan is keyed by **stage boundary** (edge between adjacent model
+//! stages; `pipeline::num_boundaries` of them). Each boundary carries
+//! one spec per direction — activations forward, gradients backward —
+//! so two boundaries sharing a physical ring link (interleaved
+//! schedules) can still run different compression. The legacy single
+//! global spec is just [`Plan::uniform`].
+//!
+//! Plans travel as JSON files (`mpcomp plan --out`, `--set
+//! plan=file:…`, `mpcomp worker --plan`) and as an 8-byte FNV-1a
+//! [`Plan::digest`] inside the rendezvous handshake: ranks that loaded
+//! different plans fail with a typed
+//! [`crate::netsim::TransportError::PlanMismatch`] instead of silently
+//! decoding frames with the wrong spec.
+
+use std::fmt;
+
+use anyhow::{Context, Result};
+
+use crate::compression::{Method, Spec};
+use crate::coordinator::pipeline;
+use crate::netsim::Dir;
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Plan-file format version (bumped on incompatible layout changes).
+pub const PLAN_FORMAT: usize = 1;
+
+/// How a run obtains its per-boundary compression specs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Legacy behavior: the single `compression` spec on every boundary.
+    Global,
+    /// Run the overlap-aware planner search at startup.
+    Auto,
+    /// Load a plan file written by `mpcomp plan --out`.
+    File(String),
+}
+
+impl PlanMode {
+    /// Parse the config value: `global` (default), `auto`, `file:<path>`.
+    pub fn parse(s: &str) -> Result<PlanMode> {
+        match s {
+            "global" => Ok(PlanMode::Global),
+            "auto" => Ok(PlanMode::Auto),
+            _ => {
+                if let Some(path) = s.strip_prefix("file:") {
+                    if path.is_empty() {
+                        anyhow::bail!("plan=file: wants a path, e.g. plan=file:plan.json");
+                    }
+                    return Ok(PlanMode::File(path.to_string()));
+                }
+                anyhow::bail!("plan must be 'global', 'auto', or 'file:<path>', got '{s}'")
+            }
+        }
+    }
+
+    /// The canonical config string (`parse(name())` roundtrips).
+    pub fn name(&self) -> String {
+        match self {
+            PlanMode::Global => "global".into(),
+            PlanMode::Auto => "auto".into(),
+            PlanMode::File(p) => format!("file:{p}"),
+        }
+    }
+}
+
+/// The two directed specs of one stage boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoundaryPlan {
+    /// Activation (forward) spec. Only its forward-relevant parameters
+    /// apply (e.g. `fw_bits` of a quant spec).
+    pub fwd: Spec,
+    /// Gradient (backward) spec; backward-relevant parameters apply.
+    pub bwd: Spec,
+}
+
+/// A full per-boundary compression plan for one pipeline shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    /// Worker (rank) count the plan was built for.
+    pub n_ranks: usize,
+    /// Virtual stages per rank the plan was built for.
+    pub v: usize,
+    /// In-flight window the plan's predictions assumed. Running under a
+    /// *smaller* window than planned invalidates the predictions
+    /// (queueing the search never saw), which [`Plan::validate_for`]
+    /// turns into a typed error.
+    pub queue_cap: usize,
+    /// One [`BoundaryPlan`] per stage boundary, indexed by boundary.
+    pub boundaries: Vec<BoundaryPlan>,
+}
+
+/// Typed plan-validation failures. These all fire before any link or
+/// feedback state is created, so a rejected plan leaves no half-updated
+/// protocol state behind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The plan's pipeline shape does not match the run's.
+    Shape {
+        /// Ranks the plan was built for.
+        plan_ranks: usize,
+        /// Virtual stages the plan was built for.
+        plan_v: usize,
+        /// Ranks the run actually has.
+        run_ranks: usize,
+        /// Virtual stages the run actually has.
+        run_v: usize,
+    },
+    /// A plan entry names a boundary outside the pipeline.
+    UnknownBoundary {
+        /// The out-of-range boundary index.
+        boundary: usize,
+        /// Boundaries the shape actually has.
+        have: usize,
+    },
+    /// No entry covers this boundary.
+    MissingBoundary {
+        /// The uncovered boundary index.
+        boundary: usize,
+    },
+    /// Two entries name the same boundary.
+    DuplicateBoundary {
+        /// The doubly-assigned boundary index.
+        boundary: usize,
+    },
+    /// The run's bounded in-flight window is smaller than the plan
+    /// assumed, so its tx-time predictions are invalid.
+    QueueCap {
+        /// Window the plan was searched under.
+        plan: usize,
+        /// Window the run is configured with.
+        run: usize,
+    },
+    /// A spec that cannot be planned per channel (shared-index TopK
+    /// couples the two directions of a boundary).
+    UnsupportedSpec {
+        /// Boundary whose entry is unsupported.
+        boundary: usize,
+        /// The offending spec string.
+        spec: String,
+    },
+    /// Structurally invalid plan file.
+    Malformed(String),
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Shape { plan_ranks, plan_v, run_ranks, run_v } => write!(
+                f,
+                "plan: built for {plan_ranks} ranks x v={plan_v}, run has {run_ranks} \
+                 ranks x v={run_v}"
+            ),
+            PlanError::UnknownBoundary { boundary, have } => write!(
+                f,
+                "plan: entry names boundary {boundary}, pipeline has boundaries 0..{have}"
+            ),
+            PlanError::MissingBoundary { boundary } => {
+                write!(f, "plan: no entry covers boundary {boundary}")
+            }
+            PlanError::DuplicateBoundary { boundary } => {
+                write!(f, "plan: boundary {boundary} assigned twice")
+            }
+            PlanError::QueueCap { plan, run } => write!(
+                f,
+                "plan: searched under sim_queue_cap={plan} but the run allows only {run} \
+                 in-flight messages — its tx predictions are invalid; re-plan or raise \
+                 sim_queue_cap"
+            ),
+            PlanError::UnsupportedSpec { boundary, spec } => write!(
+                f,
+                "plan: boundary {boundary} spec '{spec}' cannot be planned per channel \
+                 (shared-index TopK couples the two directions)"
+            ),
+            PlanError::Malformed(m) => write!(f, "plan: malformed file: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+fn spec_plannable(spec: &Spec) -> bool {
+    !matches!(spec.method, Method::TopK { shared_idx: true, .. })
+}
+
+impl Plan {
+    /// The legacy single-spec behavior as a plan: `spec` on both
+    /// directions of every boundary (any spec is allowed here, including
+    /// shared-index TopK — this is the `plan=global` compatibility path).
+    pub fn uniform(spec: Spec, n_ranks: usize, v: usize, queue_cap: usize) -> Plan {
+        let nb = pipeline::num_boundaries(n_ranks, v);
+        Plan {
+            n_ranks,
+            v,
+            queue_cap,
+            boundaries: vec![BoundaryPlan { fwd: spec, bwd: spec }; nb],
+        }
+    }
+
+    /// Stage boundaries this plan covers.
+    pub fn num_boundaries(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// The spec governing one directed boundary channel.
+    pub fn spec_for(&self, boundary: usize, dir: Dir) -> &Spec {
+        let b = &self.boundaries[boundary];
+        match dir {
+            Dir::Fwd => &b.fwd,
+            Dir::Bwd => &b.bwd,
+        }
+    }
+
+    /// Is every channel uncompressed?
+    pub fn is_none(&self) -> bool {
+        self.boundaries.iter().all(|b| b.fwd.is_none() && b.bwd.is_none())
+    }
+
+    /// Warm-up epochs before compression activates: the maximum over
+    /// every channel (the paper's warm-start protocol trains
+    /// uncompressed until the latest warmup in the plan has passed).
+    pub fn warmup_epochs(&self) -> usize {
+        self.boundaries
+            .iter()
+            .flat_map(|b| [b.fwd.warmup_epochs, b.bwd.warmup_epochs])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// If every channel runs the same spec, that spec.
+    pub fn as_uniform(&self) -> Option<Spec> {
+        let first = self.boundaries.first()?;
+        if first.fwd == first.bwd
+            && self.boundaries.iter().all(|b| b.fwd == first.fwd && b.bwd == first.fwd)
+        {
+            Some(first.fwd)
+        } else {
+            None
+        }
+    }
+
+    /// Display label: the spec label for uniform plans, a digest-tagged
+    /// summary for heterogeneous ones.
+    pub fn label(&self) -> String {
+        match self.as_uniform() {
+            Some(spec) => spec.label(),
+            None => {
+                format!("plan {:08x} ({} boundaries)", self.digest() as u32, self.num_boundaries())
+            }
+        }
+    }
+
+    /// The canonical text form the digest hashes: stable across
+    /// serialization roundtrips because it is built from [`Spec::canon`]
+    /// strings, which reparse to identical specs.
+    pub fn canonical_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "mpcomp-plan-v{PLAN_FORMAT};ranks={};v={};cap={}",
+            self.n_ranks, self.v, self.queue_cap
+        );
+        for (b, entry) in self.boundaries.iter().enumerate() {
+            let _ = write!(s, ";b{b}:fwd={},bwd={}", entry.fwd.canon(), entry.bwd.canon());
+        }
+        s
+    }
+
+    /// FNV-1a digest of [`Plan::canonical_string`] — the 8 bytes the
+    /// rendezvous handshake negotiates.
+    pub fn digest(&self) -> u64 {
+        fnv1a(self.canonical_string().as_bytes())
+    }
+
+    /// Validate this plan against a run's shape and queue window. Every
+    /// failure is a typed [`PlanError`]; nothing about the run is
+    /// mutated on rejection.
+    pub fn validate_for(
+        &self,
+        n_ranks: usize,
+        v: usize,
+        queue_cap: usize,
+    ) -> Result<(), PlanError> {
+        if self.n_ranks != n_ranks || self.v != v {
+            return Err(PlanError::Shape {
+                plan_ranks: self.n_ranks,
+                plan_v: self.v,
+                run_ranks: n_ranks,
+                run_v: v,
+            });
+        }
+        let nb = pipeline::num_boundaries(n_ranks, v);
+        if self.boundaries.len() < nb {
+            return Err(PlanError::MissingBoundary { boundary: self.boundaries.len() });
+        }
+        if self.boundaries.len() > nb {
+            // entries are positional: the surplus ones name boundaries
+            // past the pipeline's last edge
+            return Err(PlanError::UnknownBoundary { boundary: nb, have: nb });
+        }
+        if queue_cap < self.queue_cap {
+            return Err(PlanError::QueueCap { plan: self.queue_cap, run: queue_cap });
+        }
+        for (b, entry) in self.boundaries.iter().enumerate() {
+            for spec in [&entry.fwd, &entry.bwd] {
+                if !spec_plannable(spec) {
+                    return Err(PlanError::UnsupportedSpec { boundary: b, spec: spec.canon() });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    /// JSON form (the `mpcomp plan --out` / `--plan` file format).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("format", Json::Num(PLAN_FORMAT as f64));
+        o.set("ranks", Json::Num(self.n_ranks as f64));
+        o.set("virtual_stages", Json::Num(self.v as f64));
+        o.set("queue_cap", Json::Num(self.queue_cap as f64));
+        o.set("digest", Json::Str(format!("{:016x}", self.digest())));
+        let entries: Vec<Json> = self
+            .boundaries
+            .iter()
+            .enumerate()
+            .map(|(b, entry)| {
+                let mut jb = Json::object();
+                jb.set("boundary", Json::Num(b as f64));
+                jb.set("fwd", Json::Str(entry.fwd.canon()));
+                jb.set("bwd", Json::Str(entry.bwd.canon()));
+                jb
+            })
+            .collect();
+        o.set("boundaries", Json::Arr(entries));
+        o
+    }
+
+    /// Inverse of [`Plan::to_json`]. Structural problems (bad specs,
+    /// out-of-range / duplicate / missing boundaries, shared-index
+    /// specs) surface as typed [`PlanError`]s.
+    pub fn from_json(j: &Json) -> Result<Plan, PlanError> {
+        let field = |key: &str| -> Result<usize, PlanError> {
+            j.get(key)
+                .and_then(|v| v.usize())
+                .map_err(|e| PlanError::Malformed(format!("{key}: {e}")))
+        };
+        let format = field("format")?;
+        if format != PLAN_FORMAT {
+            return Err(PlanError::Malformed(format!(
+                "format {format} unsupported (this build reads format {PLAN_FORMAT})"
+            )));
+        }
+        let n_ranks = field("ranks")?;
+        let v = field("virtual_stages")?;
+        let queue_cap = field("queue_cap")?;
+        if n_ranks < 2 || v == 0 || queue_cap == 0 {
+            return Err(PlanError::Malformed(format!(
+                "ranks={n_ranks} v={v} queue_cap={queue_cap} out of range"
+            )));
+        }
+        let nb = pipeline::num_boundaries(n_ranks, v);
+        let entries = j
+            .get("boundaries")
+            .and_then(|b| b.arr().map(|a| a.to_vec()))
+            .map_err(|e| PlanError::Malformed(format!("boundaries: {e}")))?;
+        let mut boundaries: Vec<Option<BoundaryPlan>> = vec![None; nb];
+        for jb in &entries {
+            let b = jb
+                .get("boundary")
+                .and_then(|v| v.usize())
+                .map_err(|e| PlanError::Malformed(format!("boundary index: {e}")))?;
+            if b >= nb {
+                return Err(PlanError::UnknownBoundary { boundary: b, have: nb });
+            }
+            if boundaries[b].is_some() {
+                return Err(PlanError::DuplicateBoundary { boundary: b });
+            }
+            let parse_spec = |key: &str| -> Result<Spec, PlanError> {
+                let s = jb
+                    .get(key)
+                    .and_then(|v| v.str().map(str::to_string))
+                    .map_err(|e| PlanError::Malformed(format!("boundary {b} {key}: {e}")))?;
+                let spec = Spec::parse(&s)
+                    .map_err(|e| PlanError::Malformed(format!("boundary {b} {key}: {e}")))?;
+                if !spec_plannable(&spec) {
+                    return Err(PlanError::UnsupportedSpec { boundary: b, spec: s });
+                }
+                Ok(spec)
+            };
+            boundaries[b] = Some(BoundaryPlan { fwd: parse_spec("fwd")?, bwd: parse_spec("bwd")? });
+        }
+        let mut out = Vec::with_capacity(nb);
+        for (b, entry) in boundaries.into_iter().enumerate() {
+            out.push(entry.ok_or(PlanError::MissingBoundary { boundary: b })?);
+        }
+        Ok(Plan { n_ranks, v, queue_cap, boundaries: out })
+    }
+
+    /// Write the JSON plan file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing plan {path}"))
+    }
+
+    /// Read a plan file written by [`Plan::save`] / `mpcomp plan --out`.
+    pub fn load(path: &str) -> Result<Plan> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading plan {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing plan {path}"))?;
+        let plan = Plan::from_json(&j).with_context(|| format!("validating plan {path}"))?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn het_plan() -> Plan {
+        Plan {
+            n_ranks: 2,
+            v: 2,
+            queue_cap: 4,
+            boundaries: vec![
+                BoundaryPlan {
+                    fwd: Spec::parse("topk:10").unwrap(),
+                    bwd: Spec::parse("quant:fw8-bw8").unwrap(),
+                },
+                BoundaryPlan {
+                    fwd: Spec::parse("ef21+topk:10").unwrap(),
+                    bwd: Spec::parse("topk:30").unwrap(),
+                },
+                BoundaryPlan {
+                    fwd: Spec::parse("quant:fw4-bw8").unwrap(),
+                    bwd: Spec::none(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_mode_parses_and_roundtrips() {
+        for s in ["global", "auto", "file:results/plan.json"] {
+            assert_eq!(PlanMode::parse(s).unwrap().name(), s);
+        }
+        assert!(PlanMode::parse("bogus").is_err());
+        assert!(PlanMode::parse("file:").is_err());
+    }
+
+    #[test]
+    fn uniform_plan_matches_legacy_semantics() {
+        let spec = Spec::parse("topk:10").unwrap();
+        let p = Plan::uniform(spec, 4, 2, 4);
+        assert_eq!(p.num_boundaries(), 7);
+        assert_eq!(p.as_uniform(), Some(spec));
+        assert_eq!(p.label(), "Top 10%");
+        for b in 0..7 {
+            assert_eq!(*p.spec_for(b, Dir::Fwd), spec);
+            assert_eq!(*p.spec_for(b, Dir::Bwd), spec);
+        }
+        assert!(!p.is_none());
+        assert!(Plan::uniform(Spec::none(), 4, 1, 4).is_none());
+        p.validate_for(4, 2, 4).unwrap();
+    }
+
+    #[test]
+    fn warmup_is_the_plan_maximum() {
+        let mut p = Plan::uniform(Spec::parse("topk:10").unwrap(), 2, 1, 4);
+        assert_eq!(p.warmup_epochs(), 0);
+        p.boundaries[0].bwd = Spec::parse("ef+topk:10+warmup20").unwrap();
+        assert_eq!(p.warmup_epochs(), 20);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_digest() {
+        let p = het_plan();
+        assert!(p.as_uniform().is_none());
+        assert!(p.label().starts_with("plan "));
+        let j = p.to_json().to_string();
+        let back = Plan::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.digest(), p.digest());
+        assert_eq!(back.canonical_string(), p.canonical_string());
+    }
+
+    #[test]
+    fn digest_distinguishes_plans() {
+        let a = het_plan();
+        let mut b = het_plan();
+        b.boundaries[2].bwd = Spec::parse("topk:50").unwrap();
+        assert_ne!(a.digest(), b.digest());
+        let mut c = het_plan();
+        c.queue_cap = 2;
+        assert_ne!(a.digest(), c.digest(), "assumptions are part of the digest");
+        // uniform plans with different global specs differ too
+        let u1 = Plan::uniform(Spec::parse("topk:10").unwrap(), 2, 1, 4);
+        let u2 = Plan::uniform(Spec::parse("topk:30").unwrap(), 2, 1, 4);
+        assert_ne!(u1.digest(), u2.digest());
+    }
+
+    #[test]
+    fn validate_rejects_shape_and_queue_violations() {
+        let p = het_plan();
+        p.validate_for(2, 2, 4).unwrap();
+        p.validate_for(2, 2, 8).unwrap(); // larger window only helps
+        assert_eq!(
+            p.validate_for(4, 2, 4),
+            Err(PlanError::Shape { plan_ranks: 2, plan_v: 2, run_ranks: 4, run_v: 2 })
+        );
+        // the sim_queue_cap violation: run window below the planned one
+        assert_eq!(p.validate_for(2, 2, 2), Err(PlanError::QueueCap { plan: 4, run: 2 }));
+        // entry-count mismatches name the right failure each way
+        let mut short = het_plan();
+        short.boundaries.pop();
+        assert_eq!(
+            short.validate_for(2, 2, 4),
+            Err(PlanError::MissingBoundary { boundary: 2 })
+        );
+        let mut long = het_plan();
+        let first = long.boundaries[0];
+        long.boundaries.push(first);
+        assert_eq!(
+            long.validate_for(2, 2, 4),
+            Err(PlanError::UnknownBoundary { boundary: 3, have: 3 })
+        );
+        // shared-index specs cannot be planned per channel
+        let mut shared = het_plan();
+        shared.boundaries[1].fwd = Spec::parse("topk:10:shared").unwrap();
+        assert!(matches!(
+            shared.validate_for(2, 2, 4),
+            Err(PlanError::UnsupportedSpec { boundary: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_boundaries() {
+        let base = het_plan().to_json().to_string();
+        // nonexistent boundary index
+        let bad = base.replace("\"boundary\":2", "\"boundary\":9");
+        let err = Plan::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert_eq!(err, PlanError::UnknownBoundary { boundary: 9, have: 3 });
+        assert!(err.to_string().contains("boundary 9"), "{err}");
+        // duplicate
+        let dup = base.replace("\"boundary\":2", "\"boundary\":1");
+        assert_eq!(
+            Plan::from_json(&Json::parse(&dup).unwrap()).unwrap_err(),
+            PlanError::DuplicateBoundary { boundary: 1 }
+        );
+        // missing: drop one entry by shrinking ranks' boundary coverage
+        let mut missing = het_plan();
+        missing.boundaries.pop();
+        let j = missing.to_json().to_string();
+        assert_eq!(
+            Plan::from_json(&Json::parse(&j).unwrap()).unwrap_err(),
+            PlanError::MissingBoundary { boundary: 2 }
+        );
+        // unparseable spec string
+        let bogus = base.replace("topk:1", "bogus:1");
+        let err = Plan::from_json(&Json::parse(&bogus).unwrap()).unwrap_err();
+        assert!(matches!(err, PlanError::Malformed(_)), "{err:?}");
+        // shared-index spec in a plan file
+        let mut shared = het_plan();
+        shared.boundaries[1].bwd = Spec::parse("topk:30:shared").unwrap();
+        let j = shared.to_json().to_string();
+        assert!(matches!(
+            Plan::from_json(&Json::parse(&j).unwrap()).unwrap_err(),
+            PlanError::UnsupportedSpec { boundary: 1, .. }
+        ));
+        // wrong format version
+        let oldfmt = base.replace("\"format\":1", "\"format\":7");
+        assert!(matches!(
+            Plan::from_json(&Json::parse(&oldfmt).unwrap()).unwrap_err(),
+            PlanError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = het_plan();
+        let path = std::env::temp_dir().join(format!("mpcomp-plan-{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        p.save(&path).unwrap();
+        let back = Plan::load(&path).unwrap();
+        assert_eq!(back, p);
+        let _ = std::fs::remove_file(&path);
+        assert!(Plan::load("/nonexistent/plan.json").is_err());
+    }
+}

@@ -23,6 +23,7 @@ fn worker_opts(mode: &str, link_elems: usize, steps: usize) -> WorkerOpts {
         link_elems,
         schedule: Schedule::GPipe,
         spec: Spec::parse(mode).unwrap(),
+        plan: None,
         seed: 5,
         wire: WireModel::datacenter(),
         recv_timeout_s: 10.0,

@@ -130,6 +130,7 @@ fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u6
         link_elems,
         schedule: Schedule::GPipe,
         spec: Spec::parse(mode).unwrap(),
+        plan: None,
         seed,
         wire: WireModel::datacenter(),
         recv_timeout_s: 10.0,
@@ -237,6 +238,94 @@ fn interleaved_endpoint_rendezvous_two_threads_uds() {
     // rank 0 consumes the wrap fwd (4) + both bwd boundaries (8)
     assert_eq!(s0.received(), 12);
     assert_eq!(s1.received(), 12);
+    let reference = worker::run_reference(&opts).unwrap();
+    worker::check(&reference, &[s0, s1]).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance pin (plan negotiation): two ranks whose hellos carry
+/// different plan digests must fail with the typed
+/// `TransportError::PlanMismatch` on BOTH real backends — both sides of
+/// the link see the typed error (the acceptor replies before checking,
+/// so the connector gets a digest too, not a dead socket), and since the
+/// handshake precedes every frame, no feedback mirror is ever touched.
+fn digest_mismatch_is_typed(backend: Backend, addr: &str) {
+    // rank 0 ships topk:10, rank 1 believes the run is ef21+topk:10:
+    // their uniform-plan digests differ
+    let o0 = worker_opts(2, 2, 64, "topk:10", 1);
+    let o1 = worker_opts(2, 2, 64, "ef21+topk:10", 1);
+    let a0 = addr.to_string();
+    let a1 = addr.to_string();
+    let h0 = std::thread::spawn(move || worker::run_rank(&o0, 0, backend, &a0));
+    let h1 = std::thread::spawn(move || worker::run_rank(&o1, 1, backend, &a1));
+    let r0 = h0.join().unwrap();
+    let r1 = h1.join().unwrap();
+    for (rank, r) in [(0, r0), (1, r1)] {
+        let err = r.expect_err("mismatched digests must fail the handshake");
+        let te = err
+            .downcast_ref::<TransportError>()
+            .unwrap_or_else(|| panic!("rank {rank}: untyped error {err:#}"));
+        assert!(
+            matches!(te, TransportError::PlanMismatch { link: 0, ours, theirs } if ours != theirs),
+            "rank {rank}: {te:?}"
+        );
+    }
+}
+
+#[test]
+fn plan_digest_mismatch_typed_error_uds() {
+    let dir = std::env::temp_dir().join(format!("mpcomp-rv-dig-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    digest_mismatch_is_typed(Backend::Uds, dir.to_str().unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_digest_mismatch_typed_error_tcp() {
+    digest_mismatch_is_typed(Backend::Tcp, "127.0.0.1:47641");
+}
+
+/// Matching plans rendezvous fine — including a *heterogeneous* plan
+/// file loaded by both ranks (the CI loopback lane's shape), whose
+/// per-channel frames still match the single-process SimNet reference.
+#[test]
+fn negotiated_heterogeneous_plan_two_threads_uds() {
+    use mpcomp::planner::{BoundaryPlan, Plan};
+    let mut opts = worker_opts(2, 4, 256, "none", 17);
+    opts.schedule = Schedule::Interleaved { v: 2 };
+    opts.steps = 2;
+    let plan = Plan {
+        n_ranks: 2,
+        v: 2,
+        queue_cap: 4,
+        boundaries: vec![
+            BoundaryPlan {
+                fwd: Spec::parse("topk:10").unwrap(),
+                bwd: Spec::parse("quant:fw8-bw8").unwrap(),
+            },
+            BoundaryPlan {
+                fwd: Spec::parse("ef21+topk:10").unwrap(),
+                bwd: Spec::parse("topk:30").unwrap(),
+            },
+            BoundaryPlan {
+                fwd: Spec::parse("quant:fw4-bw8").unwrap(),
+                bwd: Spec::none(),
+            },
+        ],
+    };
+    opts.plan = Some(plan);
+    let dir = std::env::temp_dir().join(format!("mpcomp-rv-plan-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let addr = dir.to_str().unwrap().to_string();
+    let o0 = opts.clone();
+    let a0 = addr.clone();
+    let h0 = std::thread::spawn(move || worker::run_rank(&o0, 0, Backend::Uds, &a0));
+    let o1 = opts.clone();
+    let h1 = std::thread::spawn(move || worker::run_rank(&o1, 1, Backend::Uds, &addr));
+    let s0 = h0.join().unwrap().unwrap();
+    let s1 = h1.join().unwrap().unwrap();
     let reference = worker::run_reference(&opts).unwrap();
     worker::check(&reference, &[s0, s1]).unwrap();
     let _ = std::fs::remove_dir_all(&dir);
