@@ -2,7 +2,8 @@
 """Drift check between docs/WIRE.md and the wire-format golden vectors.
 
 Rebuilds the golden frames of `rust/src/compression/wire.rs`'s
-golden-vector tests from the byte-layout rules WIRE.md specifies, then
+golden-vector tests (and the UDP datagrams of `rust/src/netsim/udp.rs`'s
+`golden_datagrams`) from the byte-layout rules WIRE.md specifies, then
 asserts each frame's hex appears (contiguously) in WIRE.md's code
 blocks. If the codec changes, the rust golden tests fail; if WIRE.md's
 examples drift from the format, this fails — the spec and the tests
@@ -51,7 +52,54 @@ delta = (
     + f32(5.0)
 )
 
-FRAMES = {"raw": raw, "quant": quant, "sparse": sparse, "bitmap": bitmap, "delta": delta}
+UDP_MAGIC = u32(0x5543504D)  # "MPCU"
+
+def u24(x):
+    return struct.pack("<I", x)[:3]
+
+def u16(x):
+    return struct.pack("<H", x)
+
+# golden_datagrams: DATA fwd, seq 5, frag 0/1, key 2, raw 8,
+# frame_len 3, chunk aa bb cc
+udp_data = (
+    UDP_MAGIC
+    + bytes([0, 0])  # type=DATA, dir=fwd
+    + u24(5)
+    + u16(0)
+    + u16(1)
+    + u64(2)
+    + u32(8)
+    + u32(3)
+    + bytes([0xAA, 0xBB, 0xCC])
+)
+
+# golden_datagrams: ACK fwd {2, 4..=7} -> single 2, range 4-7
+udp_ack = (
+    UDP_MAGIC
+    + bytes([1, 0])  # type=ACK, dir=fwd
+    + u16(2)
+    + bytes([0]) + u24(2)
+    + bytes([1]) + u24(4) + u24(7)
+)
+
+# golden_datagrams: NACK bwd {9}
+udp_nack = UDP_MAGIC + bytes([2, 1]) + u16(1) + bytes([0]) + u24(9)
+
+# golden_datagrams: BYE fwd
+udp_bye = UDP_MAGIC + bytes([4, 0])
+
+FRAMES = {
+    "raw": raw,
+    "quant": quant,
+    "sparse": sparse,
+    "bitmap": bitmap,
+    "delta": delta,
+    "udp data": udp_data,
+    "udp ack": udp_ack,
+    "udp nack": udp_nack,
+    "udp bye": udp_bye,
+}
 
 def main():
     text = open("docs/WIRE.md").read()

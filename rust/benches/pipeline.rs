@@ -25,6 +25,7 @@ fn spec(v: usize, model: WireModel, recompute_s: f64) -> SimSpec {
         raw_bytes: vec![65_541; boundaries],
         model,
         capacity: 4,
+        faults: None,
     }
 }
 

@@ -1,0 +1,53 @@
+//! UDP reliability-layer benchmarks: goodput and retransmit overhead
+//! through real loopback sockets as the injected datagram loss rate
+//! rises. Run with `cargo bench --bench udp`. Loss is injected by the
+//! transport's deterministic fault hook (the same knob the CI lossy
+//! lane sets via `MPCOMP_UDP_DROP_P`), so runs are comparable across
+//! commits.
+
+use std::time::{Duration, Instant};
+
+use mpcomp::netsim::{Dir, Payload, Transport, UdpFaults, UdpTransport, WireModel};
+use mpcomp::util::bench::{header, Suite};
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+
+    // quick mode (the CI smoke lane) ships less data but keeps every
+    // loss rate, so the overhead trend is still visible
+    let (frames, frame_bytes) = if suite.quick() { (16, 16 * 1024) } else { (64, 64 * 1024) };
+    let payload: Vec<u8> = (0..frame_bytes).map(|i| (i * 131 % 251) as u8).collect();
+
+    for (label, drop_p) in [("drop_0", 0.0), ("drop_1pct", 0.01), ("drop_5pct", 0.05)] {
+        let faults = UdpFaults { drop_p, seed: 0x1dcb, ..UdpFaults::default() };
+        let mut net =
+            UdpTransport::loopback(1, WireModel::datacenter(), Duration::from_secs(20), &faults)
+                .expect("udp loopback");
+        let t = Instant::now();
+        for k in 0..frames as u64 {
+            net.send(0, Dir::Fwd, k, Payload::Bytes(&payload), payload.len(), 0.0)
+                .expect("send");
+        }
+        for k in 0..frames as u64 {
+            let f = net.recv(0, Dir::Fwd, k).expect("recv");
+            assert_eq!(f.bytes, frame_bytes, "frame {k} must arrive intact");
+        }
+        let dur = t.elapsed();
+        net.shutdown().expect("shutdown");
+        let (fresh, retransmits) = net.datagram_stats();
+
+        suite.record(&format!("udp_transfer/{label}"), dur);
+        let mb = (frames * frame_bytes) as f64 / 1e6;
+        let overhead = retransmits as f64 / fresh as f64 * 100.0;
+        println!(
+            "  {label}: {:.1} MB in {:.1} ms -> {:.1} MB/s goodput, \
+             {fresh} datagrams + {retransmits} retransmits ({overhead:.1}% overhead)",
+            mb,
+            dur.as_secs_f64() * 1e3,
+            mb / dur.as_secs_f64(),
+        );
+    }
+
+    suite.finish();
+}

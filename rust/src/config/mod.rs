@@ -158,6 +158,22 @@ pub struct TrainConfig {
     pub sim_op_time: Option<f64>,
     /// Bounded in-flight message window per link direction.
     pub sim_queue_cap: usize,
+    /// Per-datagram loss probability injected on simulated links, and
+    /// priced into `plan = auto` searches (expected retransmit cost).
+    pub sim_drop_p: f64,
+    /// Duplicate probability on simulated links.
+    pub sim_dup_p: f64,
+    /// Resequencing window depth on simulated links (0 = off).
+    pub sim_reorder_window: usize,
+    /// Uniform arrival jitter bound (seconds) on simulated links.
+    pub sim_jitter_s: f64,
+    /// Ranks whose simulated sends serialize `sim_straggler_factor`
+    /// times slower (config value: comma-separated list, e.g. "1,3").
+    pub sim_stragglers: Vec<usize>,
+    /// Send slowdown for straggler ranks (>= 1).
+    pub sim_straggler_factor: f64,
+    /// PRNG seed of the simulated fault draws.
+    pub sim_fault_seed: u64,
 }
 
 impl TrainConfig {
@@ -188,6 +204,13 @@ impl TrainConfig {
             recv_timeout_s: 10.0,
             sim_op_time: None,
             sim_queue_cap: crate::netsim::DEFAULT_QUEUE_CAPACITY,
+            sim_drop_p: 0.0,
+            sim_dup_p: 0.0,
+            sim_reorder_window: 0,
+            sim_jitter_s: 0.0,
+            sim_stragglers: Vec::new(),
+            sim_straggler_factor: 1.0,
+            sim_fault_seed: crate::netsim::FaultModel::default().seed,
         }
     }
 
@@ -239,6 +262,18 @@ impl TrainConfig {
         if let Some(v) = doc.get(s, "sim_op_time") {
             self.sim_op_time = Some(v.as_f64()?);
         }
+        self.sim_drop_p = doc.f64_or(s, "sim_drop_p", self.sim_drop_p)?;
+        self.sim_dup_p = doc.f64_or(s, "sim_dup_p", self.sim_dup_p)?;
+        self.sim_reorder_window =
+            doc.usize_or(s, "sim_reorder_window", self.sim_reorder_window)?;
+        self.sim_jitter_s = doc.f64_or(s, "sim_jitter_s", self.sim_jitter_s)?;
+        if let Some(v) = doc.get(s, "sim_stragglers") {
+            self.sim_stragglers = parse_rank_list(v.as_str()?)?;
+        }
+        self.sim_straggler_factor =
+            doc.f64_or(s, "sim_straggler_factor", self.sim_straggler_factor)?;
+        self.sim_fault_seed =
+            doc.usize_or(s, "sim_fault_seed", self.sim_fault_seed as usize)? as u64;
         Ok(())
     }
 
@@ -267,6 +302,13 @@ impl TrainConfig {
             "recv_timeout_s" => self.recv_timeout_s = value.parse()?,
             "sim_op_time" => self.sim_op_time = Some(value.parse()?),
             "sim_queue_cap" => self.sim_queue_cap = value.parse()?,
+            "sim_drop_p" => self.sim_drop_p = value.parse()?,
+            "sim_dup_p" => self.sim_dup_p = value.parse()?,
+            "sim_reorder_window" => self.sim_reorder_window = value.parse()?,
+            "sim_jitter_s" => self.sim_jitter_s = value.parse()?,
+            "sim_stragglers" => self.sim_stragglers = parse_rank_list(value)?,
+            "sim_straggler_factor" => self.sim_straggler_factor = value.parse()?,
+            "sim_fault_seed" => self.sim_fault_seed = value.parse()?,
             "init_checkpoint" => self.init_checkpoint = Some(value.into()),
             "save_checkpoint" => self.save_checkpoint = Some(value.into()),
             "snapshot_epoch" => self.snapshot_epoch = Some(value.parse()?),
@@ -280,11 +322,36 @@ impl TrainConfig {
         "none".to_string()
     }
 
+    /// The simulated-wire fault model assembled from the `sim_*` fault
+    /// knobs, or `None` when every knob sits at its clean default —
+    /// the clean path draws no random numbers and stays bit-identical.
+    pub fn fault_model(&self) -> Option<crate::netsim::FaultModel> {
+        let fm = crate::netsim::FaultModel {
+            drop_p: self.sim_drop_p,
+            dup_p: self.sim_dup_p,
+            reorder_window: self.sim_reorder_window,
+            jitter_s: self.sim_jitter_s,
+            straggler_ranks: self.sim_stragglers.clone(),
+            straggler_factor: self.sim_straggler_factor,
+            seed: self.sim_fault_seed,
+        };
+        (!fm.is_zero()).then_some(fm)
+    }
+
     /// Cosine-annealed learning rate at `epoch` (paper's scheduler).
     pub fn lr_at(&self, epoch: usize) -> f64 {
         let t = epoch.min(self.cosine_tmax) as f64;
         self.lr0 * 0.5 * (1.0 + (std::f64::consts::PI * t / self.cosine_tmax as f64).cos())
     }
+}
+
+/// Parse a comma-separated rank list ("1,3"; empty string = none).
+fn parse_rank_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<usize>().map_err(|e| anyhow::anyhow!("bad rank '{p}': {e}")))
+        .collect()
 }
 
 #[cfg(test)]
@@ -338,6 +405,40 @@ mod tests {
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.wire, "datacenter");
         assert_eq!(c.sim_op_time, Some(0.5));
+    }
+
+    #[test]
+    fn fault_knobs_assemble_a_model() {
+        let mut c = TrainConfig::defaults("cnn16");
+        assert!(c.fault_model().is_none(), "clean defaults inject nothing");
+        c.set("sim_drop_p", "0.05").unwrap();
+        c.set("sim_jitter_s", "0.002").unwrap();
+        c.set("sim_stragglers", "1,3").unwrap();
+        c.set("sim_straggler_factor", "2.5").unwrap();
+        c.set("sim_fault_seed", "7").unwrap();
+        let fm = c.fault_model().expect("lossy knobs build a model");
+        assert_eq!(fm.drop_p, 0.05);
+        assert_eq!(fm.jitter_s, 0.002);
+        assert_eq!(fm.straggler_ranks, vec![1, 3]);
+        assert_eq!(fm.straggler_factor, 2.5);
+        assert_eq!(fm.seed, 7);
+        assert!(c.set("sim_stragglers", "1,x").is_err());
+        // stragglers without a slowdown are still a clean wire
+        let mut c = TrainConfig::defaults("cnn16");
+        c.set("sim_stragglers", "2").unwrap();
+        assert!(c.fault_model().is_none());
+        // TOML path
+        let doc = toml::Doc::parse(
+            "[run]\nsim_drop_p = 0.01\nsim_reorder_window = 8\nsim_stragglers = \"0\"\n\
+             sim_straggler_factor = 3.0\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        let fm = c.fault_model().unwrap();
+        assert_eq!(fm.drop_p, 0.01);
+        assert_eq!(fm.reorder_window, 8);
+        assert_eq!(fm.straggler_ranks, vec![0]);
     }
 
     #[test]

@@ -27,7 +27,8 @@ use std::time::Duration;
 
 use crate::coordinator::pipeline::{self, Op};
 use crate::netsim::{
-    Backend, Dir, Payload, RealTransport, SimNet, Transport, TransportError, WireModel,
+    Backend, Dir, FaultModel, Payload, RealTransport, SimNet, Transport, TransportError,
+    WireModel,
 };
 
 /// Static description of one simulated pipeline run.
@@ -62,6 +63,9 @@ pub struct SimSpec {
     pub model: WireModel,
     /// Bounded in-flight window per link direction.
     pub capacity: usize,
+    /// Per-link fault model (drops/dups/reorder/jitter/stragglers);
+    /// `None` runs the exact lossless simulator.
+    pub faults: Option<FaultModel>,
 }
 
 impl SimSpec {
@@ -100,22 +104,30 @@ pub struct SimReport {
 /// Run `ops` through a fresh `SimNet` described by `spec`.
 pub fn simulate(ops: &[Op], spec: &SimSpec) -> SimReport {
     let mut net = SimNet::with_capacity(spec.wire_links(), spec.model, spec.capacity);
+    if let Some(fm) = &spec.faults {
+        net.set_faults(fm.clone());
+    }
     simulate_transport(ops, spec, &mut net).expect("SimNet delivers every scheduled message")
 }
 
-/// Run `ops` over a real loopback transport (tcp/uds): frames of the
-/// scheduled sizes actually cross kernel sockets.
+/// Run `ops` over a real loopback transport (tcp/uds/udp): frames of
+/// the scheduled sizes actually cross kernel sockets. The udp backend
+/// reads its fault-injection knobs from the `MPCOMP_UDP_*` environment.
 pub fn simulate_real(
     ops: &[Op],
     spec: &SimSpec,
     backend: Backend,
 ) -> Result<SimReport, TransportError> {
-    let mut net = RealTransport::loopback(
-        spec.wire_links(),
-        backend,
-        spec.model,
-        Duration::from_secs(20),
-    )?;
+    let timeout = Duration::from_secs(20);
+    if backend == Backend::Udp {
+        let faults = crate::netsim::UdpFaults::from_env();
+        let mut net =
+            crate::netsim::UdpTransport::loopback(spec.wire_links(), spec.model, timeout, &faults)?;
+        let report = simulate_transport(ops, spec, &mut net)?;
+        net.shutdown()?;
+        return Ok(report);
+    }
+    let mut net = RealTransport::loopback(spec.wire_links(), backend, spec.model, timeout)?;
     let report = simulate_transport(ops, spec, &mut net)?;
     net.shutdown()?;
     Ok(report)
@@ -265,6 +277,7 @@ mod tests {
             raw_bytes: vec![bytes; boundaries],
             model: WireModel { bandwidth_bytes_per_s: 1.0, latency_s: 0.0 },
             capacity,
+            faults: None,
         }
     }
 

@@ -171,13 +171,28 @@ impl Trainer {
                     elems: model.links.clone(),
                     model: wire,
                     capacity: cfg.sim_queue_cap,
+                    // auto plans price the configured fault knobs as
+                    // expected retransmit cost (FaultModel::derate)
+                    faults: cfg.fault_model(),
                 };
                 planner::search(&inputs)?.plan
             }
         };
         let wire_links = pipeline::num_wire_links(n_ranks, v);
         let net: Box<dyn Transport> = match backend {
-            Backend::Sim => Box::new(SimNet::with_capacity(wire_links, wire, cfg.sim_queue_cap)),
+            Backend::Sim => {
+                let mut sim = SimNet::with_capacity(wire_links, wire, cfg.sim_queue_cap);
+                if let Some(fm) = cfg.fault_model() {
+                    sim.set_faults(fm);
+                }
+                Box::new(sim)
+            }
+            Backend::Udp => Box::new(crate::netsim::UdpTransport::loopback(
+                wire_links,
+                wire,
+                Duration::from_secs_f64(cfg.recv_timeout_s),
+                &crate::netsim::UdpFaults::from_env(),
+            )?),
             _ => Box::new(RealTransport::loopback(
                 wire_links,
                 backend,

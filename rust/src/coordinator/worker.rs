@@ -46,7 +46,8 @@ use crate::config::Schedule;
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
 use crate::coordinator::pipeline;
 use crate::netsim::{
-    Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, WireModel,
+    Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, UdpFaults,
+    UdpTransport, WireModel,
 };
 use crate::planner::Plan;
 use crate::util::json::Json;
@@ -355,10 +356,22 @@ pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary
     let plan = opts.effective_plan()?;
     let links = opts.wire_links();
     let timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
-    let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
-    let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
-    let elapsed = net.wire_elapsed_s();
-    net.shutdown()?;
+    // udp runs through its reliability layer; its fault-injection knobs
+    // come from the MPCOMP_UDP_* environment so WorkerOpts stays stable
+    let (boxes, elapsed) = if backend == Backend::Udp {
+        let faults = UdpFaults::from_env();
+        let mut net = UdpTransport::loopback(links, opts.wire, timeout, &faults)?;
+        let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    } else {
+        let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
+        let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    };
     Ok(WorkerSummary {
         backend: backend.name().into(),
         rank: None,
@@ -389,10 +402,19 @@ pub fn run_rank(
     // and the digest comes from the same resolved plan the stage loop
     // encodes with
     rv.plan_digest = plan.digest();
-    let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
-    let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
-    let elapsed = net.wire_elapsed_s();
-    net.shutdown()?;
+    let (boxes, elapsed) = if backend == Backend::Udp {
+        let mut net = UdpTransport::endpoint(&rv, rank, opts.wire, &UdpFaults::from_env())?;
+        let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    } else {
+        let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
+        let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    };
     Ok(WorkerSummary {
         backend: backend.name().into(),
         rank: Some(rank),

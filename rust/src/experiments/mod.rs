@@ -46,6 +46,10 @@ pub struct SchedParams {
     /// simulator (default) or real loopback sockets (`--backend
     /// tcp|uds`), where the table reports measured wall-clock wire time.
     pub backend: Backend,
+    /// Wire fault model for simulator rows (`--drop-p` etc.): sampled
+    /// fault injection in the schedule table, expected-cost derating in
+    /// the planner table. `None` = clean wire.
+    pub faults: Option<crate::netsim::FaultModel>,
 }
 
 impl Default for SchedParams {
@@ -59,6 +63,7 @@ impl Default for SchedParams {
             capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
             recompute: true,
             backend: Backend::Sim,
+            faults: None,
         }
     }
 }

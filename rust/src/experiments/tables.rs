@@ -299,6 +299,9 @@ pub fn schedule_table(p: &SchedParams) -> Result<Vec<SchedRow>> {
                     raw_bytes: vec![wire::raw_wire_bytes(p.link_elems); boundaries],
                     model,
                     capacity: p.capacity,
+                    // sampled fault injection on simulator rows; real
+                    // backends inject via the UDP env knobs instead
+                    faults: p.faults.clone(),
                 };
                 let sim = match p.backend {
                     Backend::Sim => simexec::simulate(&ops, &spec_run),
@@ -471,6 +474,7 @@ pub fn plan_inputs(p: &SchedParams, sched: Schedule, model: WireModel) -> Planne
         elems: vec![p.link_elems; pipeline::num_boundaries(p.stages, v)],
         model,
         capacity: p.capacity,
+        faults: p.faults.clone(),
     }
 }
 

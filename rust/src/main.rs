@@ -9,10 +9,13 @@
 //!            [--full] [--seeds N] [--curves] [--impl kernel|native]
 //! mpcomp exp schedule [--stages N] [--mb N] [--link-elems N]
 //!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
-//!            [--backend sim|tcp|uds]
+//!            [--backend sim|tcp|uds|udp]
+//!            [--drop-p P] [--dup-p P] [--reorder-window N] [--jitter-ms F]
+//!            [--stragglers R,R] [--straggler-factor F] [--fault-seed N]
 //! mpcomp plan [--stages N] [--mb N] [--link-elems N] [--wire wan|datacenter]
 //!             [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
 //!             [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N]
+//!             [--drop-p P] [--dup-p P] [--jitter-ms F]  # lossy-wire pricing
 //!             [--out plan.json]              # overlap-aware per-link spec search
 //! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
 //!               [--mb N] [--link-elems N] [--compression M] [--plan plan.json]
@@ -30,7 +33,7 @@ use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
 use mpcomp::coordinator::{pipeline, worker, Trainer, WorkerOpts, WorkerSummary};
 use mpcomp::experiments::{tables, ExpOpts};
 use mpcomp::metrics::append_jsonl;
-use mpcomp::netsim::{Backend, WireModel};
+use mpcomp::netsim::{Backend, FaultModel, WireModel};
 use mpcomp::planner::{self, Plan, PlannerInputs};
 use mpcomp::runtime::Runtime;
 
@@ -41,6 +44,9 @@ const VALUE_FLAGS: &[&str] = &[
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
     "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan",
+    // wire fault knobs (exp schedule sweeps, plan pricing)
+    "drop-p", "dup-p", "reorder-window", "jitter-ms", "stragglers",
+    "straggler-factor", "fault-seed",
 ];
 
 fn main() -> Result<()> {
@@ -223,7 +229,41 @@ fn exp(args: &Args) -> Result<()> {
     if let Some(b) = args.get("backend") {
         opts.sched.backend = Backend::parse(b)?;
     }
+    opts.sched.faults = faults_from_flags(args)?;
     tables::run(name, &opts)
+}
+
+/// Wire fault knobs shared by `exp schedule` (sampled injection) and
+/// `plan` (expected-cost pricing). `None` when every knob is clean.
+fn faults_from_flags(args: &Args) -> Result<Option<FaultModel>> {
+    let mut fm = FaultModel::default();
+    if let Some(v) = args.get("drop-p") {
+        fm.drop_p = v.parse().context("--drop-p wants a probability")?;
+    }
+    if let Some(v) = args.get("dup-p") {
+        fm.dup_p = v.parse().context("--dup-p wants a probability")?;
+    }
+    if let Some(v) = args.usize("reorder-window")? {
+        fm.reorder_window = v;
+    }
+    if let Some(v) = args.get("jitter-ms") {
+        fm.jitter_s = v.parse::<f64>().context("--jitter-ms wants milliseconds")? / 1e3;
+    }
+    if let Some(v) = args.get("stragglers") {
+        fm.straggler_ranks = v
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse().with_context(|| format!("--stragglers: bad rank '{p}'")))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = args.get("straggler-factor") {
+        fm.straggler_factor = v.parse().context("--straggler-factor wants a number")?;
+    }
+    if let Some(v) = args.usize("fault-seed")? {
+        fm.seed = v as u64;
+    }
+    Ok((!fm.is_zero()).then_some(fm))
 }
 
 /// `--virtual-stages V` is shorthand for `--schedule interleaved:V`
@@ -272,6 +312,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
         elems: vec![link_elems; pipeline::num_boundaries(stages, v)],
         model: WireModel::parse(wire_name)?,
         capacity: args.usize("capacity")?.unwrap_or(mpcomp::netsim::DEFAULT_QUEUE_CAPACITY),
+        faults: faults_from_flags(args)?,
     };
     let report = planner::search(&inputs)?;
     report.print(&format!(

@@ -33,10 +33,12 @@
 pub mod real;
 pub mod sim;
 pub mod transport;
+pub mod udp;
 
 pub use real::{RealTransport, Rendezvous};
-pub use sim::{Message, SimNet, SimSocket, DEFAULT_QUEUE_CAPACITY};
+pub use sim::{FaultModel, Message, SimNet, SimSocket, DEFAULT_QUEUE_CAPACITY};
 pub use transport::{Backend, Frame, Payload, Transport, TransportError};
+pub use udp::{UdpFaults, UdpTransport};
 
 use anyhow::{bail, Result};
 

@@ -52,13 +52,18 @@ const DIR_FWD: u8 = 0;
 const DIR_BWD: u8 = 1;
 const DIR_SHUTDOWN: u8 = 0xff;
 const FRAME_HEADER: usize = 21;
-const HELLO_LEN: usize = 21;
+pub(super) const HELLO_LEN: usize = 21;
 /// Sanity bound on a single frame (1 GiB).
 const MAX_FRAME: usize = 1 << 30;
-/// Handshake read window. Must exceed the rendezvous connect window: a
-/// middle rank legitimately delays its hello reply while it waits (up
-/// to `connect_timeout`) for its *other* neighbor to appear.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Loopback handshakes happen in-process against an already-connected
+/// peer, so they get a short fixed window (matching the loopback accept
+/// deadline) instead of the rendezvous-derived one.
+const LOOPBACK_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Headroom added on top of `connect_timeout` for the handshake read
+/// window: a middle rank legitimately delays its hello reply while it
+/// waits (up to `connect_timeout`) for its *other* neighbor to appear,
+/// plus scheduling slack for the reply itself.
+const HANDSHAKE_GRACE: Duration = Duration::from_secs(10);
 
 fn dir_byte(dir: Dir) -> u8 {
     match dir {
@@ -164,29 +169,32 @@ impl Listener {
     }
 
     /// Accept with a deadline (listener goes non-blocking + polls).
+    /// Blocking mode is restored on *every* exit path — a caller
+    /// retrying a plain `accept` after a timeout must not inherit a
+    /// non-blocking listener that spins on `WouldBlock`.
     fn accept_by(&self, deadline: Instant) -> Result<Sock, TransportError> {
         self.set_nonblocking(true)?;
-        loop {
+        let res = loop {
             match self.accept() {
-                Ok(s) => {
-                    self.set_nonblocking(false)?;
-                    // the accepted stream may inherit non-blocking mode
-                    match &s {
-                        Sock::Tcp(t) => t.set_nonblocking(false)?,
-                        #[cfg(unix)]
-                        Sock::Uds(u) => u.set_nonblocking(false)?,
-                    }
-                    return Ok(s);
-                }
+                Ok(s) => break Ok(s),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
-                        return Err(TransportError::Io("accept timed out".into()));
+                        break Err(TransportError::Io("accept timed out".into()));
                     }
                     std::thread::sleep(Duration::from_millis(10));
                 }
-                Err(e) => return Err(e.into()),
+                Err(e) => break Err(e.into()),
             }
+        };
+        self.set_nonblocking(false)?;
+        let s = res?;
+        // the accepted stream may inherit non-blocking mode
+        match &s {
+            Sock::Tcp(t) => t.set_nonblocking(false)?,
+            #[cfg(unix)]
+            Sock::Uds(u) => u.set_nonblocking(false)?,
         }
+        Ok(s)
     }
 }
 
@@ -249,7 +257,8 @@ impl Rendezvous {
                 return Err(TransportError::Io("rendezvous wants a real backend".into()))
             }
             Backend::Uds => rv.uds_dir = PathBuf::from(addr),
-            Backend::Tcp => {
+            // udp shares tcp's host:base_port per-link addressing
+            Backend::Tcp | Backend::Udp => {
                 let (host, port) = addr.split_once(':').ok_or_else(|| {
                     TransportError::Io(format!("tcp rendezvous wants host:port, got '{addr}'"))
                 })?;
@@ -262,7 +271,7 @@ impl Rendezvous {
         Ok(rv)
     }
 
-    fn tcp_addr(&self, link: usize) -> Result<String, TransportError> {
+    pub(super) fn tcp_addr(&self, link: usize) -> Result<String, TransportError> {
         let port = self.tcp_base_port as u32 + link as u32;
         if port > u16::MAX as u32 {
             return Err(TransportError::Io(format!(
@@ -275,6 +284,14 @@ impl Rendezvous {
 
     fn uds_path(&self, link: usize) -> PathBuf {
         self.uds_dir.join(format!("link{link}.sock"))
+    }
+
+    /// Handshake read window, derived from the connect window so the
+    /// documented "handshake window must exceed connect window"
+    /// invariant holds for *any* configured `connect_timeout` (a
+    /// hard-coded window silently broke it past 30 s).
+    pub fn handshake_timeout(&self) -> Duration {
+        self.connect_timeout + HANDSHAKE_GRACE
     }
 
     fn listen(&self, link: usize) -> Result<Listener, TransportError> {
@@ -292,6 +309,9 @@ impl Rendezvous {
             #[cfg(not(unix))]
             Backend::Uds => Err(TransportError::Io("uds unavailable on this platform".into())),
             Backend::Sim => Err(TransportError::Io("sim backend has no listeners".into())),
+            Backend::Udp => Err(TransportError::Io(
+                "udp rendezvous is datagram-based (crate::netsim::udp)".into(),
+            )),
         }
     }
 
@@ -316,6 +336,11 @@ impl Rendezvous {
                 Backend::Sim => {
                     return Err(TransportError::Io("sim backend has no sockets".into()))
                 }
+                Backend::Udp => {
+                    return Err(TransportError::Io(
+                        "udp rendezvous is datagram-based (crate::netsim::udp)".into(),
+                    ))
+                }
             };
             match attempt {
                 Ok(s) => return Ok(s),
@@ -336,7 +361,7 @@ impl Rendezvous {
 // handshake
 // ---------------------------------------------------------------------------
 
-fn hello_bytes(link: usize, stage: usize, plan_digest: u64) -> [u8; HELLO_LEN] {
+pub(super) fn hello_bytes(link: usize, stage: usize, plan_digest: u64) -> [u8; HELLO_LEN] {
     let mut b = [0u8; HELLO_LEN];
     b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
     b[4] = VERSION;
@@ -346,14 +371,12 @@ fn hello_bytes(link: usize, stage: usize, plan_digest: u64) -> [u8; HELLO_LEN] {
     b
 }
 
-/// Read and validate the peer's hello; returns its (stage, plan digest).
-/// The version-independent 13-byte prefix is read and validated first,
-/// so an old v1 peer (which sends only 13 bytes) fails the version
-/// check immediately instead of stalling the read for the v2 digest.
-fn read_hello(sock: &mut Sock, link: usize) -> Result<(usize, u64), TransportError> {
-    let mut b = [0u8; 13];
-    sock.read_exact(&mut b)
-        .map_err(|e| TransportError::Io(format!("handshake read on link {link}: {e}")))?;
+/// Validate a complete 21-byte hello (datagram transports receive it in
+/// one piece); returns the peer's (stage, plan digest).
+pub(super) fn parse_hello(b: &[u8], link: usize) -> Result<(usize, u64), TransportError> {
+    if b.len() < HELLO_LEN {
+        return Err(TransportError::Corrupt(format!("short hello ({} bytes)", b.len())));
+    }
     let magic = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
     if magic != MAGIC {
         return Err(TransportError::Corrupt(format!("bad handshake magic {magic:#x}")));
@@ -366,10 +389,28 @@ fn read_hello(sock: &mut Sock, link: usize) -> Result<(usize, u64), TransportErr
         return Err(TransportError::Corrupt(format!("peer speaks link {got_link}, not {link}")));
     }
     let stage = u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize;
-    let mut d = [0u8; 8];
-    sock.read_exact(&mut d)
+    let digest = u64::from_le_bytes([b[13], b[14], b[15], b[16], b[17], b[18], b[19], b[20]]);
+    Ok((stage, digest))
+}
+
+/// Read and validate the peer's hello; returns its (stage, plan digest).
+/// The version-independent 13-byte prefix is read and validated first,
+/// so an old v1 peer (which sends only 13 bytes) fails the version
+/// check immediately instead of stalling the read for the v2 digest.
+fn read_hello(sock: &mut Sock, link: usize) -> Result<(usize, u64), TransportError> {
+    let mut b = [0u8; HELLO_LEN];
+    sock.read_exact(&mut b[..13])
+        .map_err(|e| TransportError::Io(format!("handshake read on link {link}: {e}")))?;
+    let magic = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    if magic != MAGIC {
+        return Err(TransportError::Corrupt(format!("bad handshake magic {magic:#x}")));
+    }
+    if b[4] != VERSION {
+        return Err(TransportError::Corrupt(format!("protocol version {} != {VERSION}", b[4])));
+    }
+    sock.read_exact(&mut b[13..])
         .map_err(|e| TransportError::Io(format!("handshake digest read on link {link}: {e}")))?;
-    Ok((stage, u64::from_le_bytes(d)))
+    parse_hello(&b, link)
 }
 
 /// Acceptor side (the lower stage): hear hello, say hello. The
@@ -384,8 +425,9 @@ fn handshake_accept(
     stage: usize,
     expect_upper: usize,
     plan_digest: u64,
+    window: Duration,
 ) -> Result<(), TransportError> {
-    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    sock.set_read_timeout(Some(window))?;
     let (peer, peer_digest) = read_hello(sock, link)?;
     sock.write_all(&hello_bytes(link, stage, plan_digest))?;
     sock.flush()?;
@@ -409,40 +451,136 @@ fn handshake_accept(
 // mailboxes + reader threads
 // ---------------------------------------------------------------------------
 
-struct Slot {
-    frames: VecDeque<Frame>,
-    closed: bool,
+pub(super) struct Slot {
+    pub(super) frames: VecDeque<Frame>,
+    pub(super) closed: bool,
 }
 
-struct Boxes {
+pub(super) struct Boxes {
     /// One slot per `(link, dir)`: index `link * 2 + dir`.
-    slots: Vec<Slot>,
-    /// Wall time of the latest send/arrival (the measured makespan).
-    last_event_s: f64,
+    pub(super) slots: Vec<Slot>,
+    /// Wall time of the latest send/arrival (the measured makespan),
+    /// relative to the current epoch.
+    pub(super) last_event_s: f64,
+    /// Seconds of `t0` wall time consumed by *earlier* runs: `reset()`
+    /// rebases the clock here so a second run's arrivals and makespan
+    /// start from zero instead of inheriting pre-reset seconds.
+    pub(super) epoch_s: f64,
 }
 
-struct Shared {
-    boxes: Mutex<Boxes>,
-    cv: Condvar,
-    t0: Instant,
+pub(super) struct Shared {
+    pub(super) boxes: Mutex<Boxes>,
+    pub(super) cv: Condvar,
+    pub(super) t0: Instant,
 }
 
 impl Shared {
-    fn bump(&self, t: f64) {
+    pub(super) fn new(num_links: usize) -> Arc<Shared> {
+        let slots = (0..num_links * 2)
+            .map(|_| Slot { frames: VecDeque::new(), closed: false })
+            .collect();
+        Arc::new(Shared {
+            boxes: Mutex::new(Boxes { slots, last_event_s: 0.0, epoch_s: 0.0 }),
+            cv: Condvar::new(),
+            t0: Instant::now(),
+        })
+    }
+
+    /// Current transport time (seconds since the last `reset`, or since
+    /// construction), and the makespan bump in one critical section.
+    pub(super) fn stamp(&self) -> f64 {
         let mut b = self.boxes.lock().unwrap();
+        let t = self.t0.elapsed().as_secs_f64() - b.epoch_s;
         if t > b.last_event_s {
             b.last_event_s = t;
+        }
+        t
+    }
+
+    /// Current transport time without bumping the makespan.
+    pub(super) fn now(&self) -> f64 {
+        let b = self.boxes.lock().unwrap();
+        self.t0.elapsed().as_secs_f64() - b.epoch_s
+    }
+
+    /// Clear mailboxes and rebase the wall-clock epoch (the shared half
+    /// of a transport `reset`).
+    pub(super) fn reset(&self) {
+        let mut b = self.boxes.lock().unwrap();
+        for s in &mut b.slots {
+            s.frames.clear();
+        }
+        b.last_event_s = 0.0;
+        b.epoch_s = self.t0.elapsed().as_secs_f64();
+    }
+
+    /// Deliver one frame into `(link, dir)` at the current transport
+    /// time and wake any blocked `recv`.
+    pub(super) fn deliver(&self, link: usize, dir: Dir, key: u64, payload: Vec<u8>) {
+        let mut b = self.boxes.lock().unwrap();
+        let arrival = self.t0.elapsed().as_secs_f64() - b.epoch_s;
+        if arrival > b.last_event_s {
+            b.last_event_s = arrival;
+        }
+        b.slots[slot_index(link, dir)].frames.push_back(Frame {
+            key,
+            bytes: payload.len(),
+            arrival,
+            payload: Some(payload),
+        });
+        drop(b);
+        self.cv.notify_all();
+    }
+
+    /// Mark one `(link, dir)` channel closed and wake blocked `recv`s.
+    pub(super) fn close_slot(&self, link: usize, dir: Dir) {
+        let mut b = self.boxes.lock().unwrap();
+        b.slots[slot_index(link, dir)].closed = true;
+        drop(b);
+        self.cv.notify_all();
+    }
+
+    /// Blocking keyed receive shared by the socket transports.
+    pub(super) fn recv_keyed(
+        &self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        window: Duration,
+    ) -> Result<Frame, TransportError> {
+        let idx = slot_index(link, dir);
+        let deadline = Instant::now() + window;
+        let mut boxes = self.boxes.lock().unwrap();
+        loop {
+            let slot = &mut boxes.slots[idx];
+            if let Some(at) = slot.frames.iter().position(|f| f.key == key) {
+                return Ok(slot.frames.remove(at).expect("position is in range"));
+            }
+            if slot.closed {
+                return Err(TransportError::Disconnected { link, dir });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout { link, dir, key });
+            }
+            let (guard, _) = self.cv.wait_timeout(boxes, deadline - now).unwrap();
+            boxes = guard;
         }
     }
 }
 
-fn slot_index(link: usize, dir: Dir) -> usize {
+pub(super) fn slot_index(link: usize, dir: Dir) -> usize {
     link * 2 + dir.index()
 }
 
 /// Drain one stream into the mailboxes until EOF, an error, or an
-/// explicit shutdown frame; then mark the link's slots closed.
-fn reader_loop(mut sock: Sock, link: usize, shared: Arc<Shared>) {
+/// explicit shutdown frame; then mark closed *only* the direction this
+/// stream feeds. Every stream carries exactly one direction (loopback
+/// splits each link into a fwd and a bwd stream; an endpoint reads one
+/// direction per duplex link stream), so closing both slots here would
+/// falsely surface `Disconnected` on the still-live opposite channel
+/// when one side finishes first.
+fn reader_loop(mut sock: Sock, link: usize, feeds: Dir, shared: Arc<Shared>) {
     loop {
         let mut head = [0u8; FRAME_HEADER];
         if sock.read_exact(&mut head).is_err() {
@@ -468,25 +606,9 @@ fn reader_loop(mut sock: Sock, link: usize, shared: Arc<Shared>) {
         if sock.read_exact(&mut payload).is_err() {
             break;
         }
-        let arrival = shared.t0.elapsed().as_secs_f64();
-        let mut b = shared.boxes.lock().unwrap();
-        if arrival > b.last_event_s {
-            b.last_event_s = arrival;
-        }
-        b.slots[slot_index(link, dir)].frames.push_back(Frame {
-            key,
-            bytes: len,
-            arrival,
-            payload: Some(payload),
-        });
-        drop(b);
-        shared.cv.notify_all();
+        shared.deliver(link, dir, key, payload);
     }
-    let mut b = shared.boxes.lock().unwrap();
-    b.slots[slot_index(link, Dir::Fwd)].closed = true;
-    b.slots[slot_index(link, Dir::Bwd)].closed = true;
-    drop(b);
-    shared.cv.notify_all();
+    shared.close_slot(link, feeds);
 }
 
 // ---------------------------------------------------------------------------
@@ -519,17 +641,10 @@ impl RealTransport {
         model: WireModel,
         recv_timeout: Duration,
     ) -> RealTransport {
-        let slots = (0..num_links * 2)
-            .map(|_| Slot { frames: VecDeque::new(), closed: false })
-            .collect();
         RealTransport {
             backend,
             writers: (0..num_links * 2).map(|_| None).collect(),
-            shared: Arc::new(Shared {
-                boxes: Mutex::new(Boxes { slots, last_event_s: 0.0 }),
-                cv: Condvar::new(),
-                t0: Instant::now(),
-            }),
+            shared: Shared::new(num_links),
             readers: Vec::new(),
             ledger: NetSim::new(num_links, model),
             busy_s: 0.0,
@@ -538,9 +653,9 @@ impl RealTransport {
         }
     }
 
-    fn spawn_reader(&mut self, sock: Sock, link: usize) {
+    fn spawn_reader(&mut self, sock: Sock, link: usize, feeds: Dir) {
         let shared = Arc::clone(&self.shared);
-        self.readers.push(std::thread::spawn(move || reader_loop(sock, link, shared)));
+        self.readers.push(std::thread::spawn(move || reader_loop(sock, link, feeds, shared)));
     }
 
     /// Single-process loopback: both ends of every link live in this
@@ -553,8 +668,10 @@ impl RealTransport {
         model: WireModel,
         recv_timeout: Duration,
     ) -> Result<RealTransport, TransportError> {
-        if !backend.is_real() {
-            return Err(TransportError::Io("loopback wants a real backend (tcp/uds)".into()));
+        if !matches!(backend, Backend::Tcp | Backend::Uds) {
+            return Err(TransportError::Io(
+                "stream loopback wants tcp/uds (udp: UdpTransport::loopback)".into(),
+            ));
         }
         let mut t = RealTransport::empty(backend, num_links, model, recv_timeout);
         let seq = LOOPBACK_SEQ.fetch_add(1, Ordering::Relaxed);
@@ -583,7 +700,7 @@ impl RealTransport {
                         ));
                     }
                 }
-                Backend::Sim => unreachable!(),
+                Backend::Sim | Backend::Udp => unreachable!(),
             };
             // connect (pends in the backlog), then accept, then handshake —
             // the hellos are tiny, so a single thread cannot deadlock here
@@ -603,17 +720,17 @@ impl RealTransport {
             // loopback owns both ends, so its plan digests trivially agree
             upper.write_all(&hello_bytes(link, link + 1, 0))?;
             upper.flush()?;
-            handshake_accept(&mut lower, link, link, link + 1, 0)?;
-            handshake_connect_finish(&mut upper, link, 0)?;
+            handshake_accept(&mut lower, link, link, link + 1, 0, LOOPBACK_HANDSHAKE_TIMEOUT)?;
+            handshake_connect_finish(&mut upper, link, 0, LOOPBACK_HANDSHAKE_TIMEOUT)?;
             if let Some(p) = uds_path {
                 t.owned_paths.push(p);
             }
             // fwd frames: written into the lower end, read from the upper
             t.writers[slot_index(link, Dir::Fwd)] = Some(lower.try_clone()?);
-            t.spawn_reader(upper.try_clone()?, link);
+            t.spawn_reader(upper.try_clone()?, link, Dir::Fwd);
             // bwd frames: written into the upper end, read from the lower
             t.writers[slot_index(link, Dir::Bwd)] = Some(upper);
-            t.spawn_reader(lower, link);
+            t.spawn_reader(lower, link, Dir::Bwd);
         }
         Ok(t)
     }
@@ -658,7 +775,7 @@ impl RealTransport {
         let upstream = match connect_link {
             Some(link) => {
                 let mut sock = rv.connect(link, deadline)?;
-                sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+                sock.set_read_timeout(Some(rv.handshake_timeout()))?;
                 sock.write_all(&hello_bytes(link, stage, rv.plan_digest))?;
                 sock.flush()?;
                 Some((link, sock))
@@ -668,17 +785,24 @@ impl RealTransport {
         if let Some(l) = listener {
             let link = stage;
             let mut sock = l.accept_by(deadline)?;
-            handshake_accept(&mut sock, link, stage, (link + 1) % rv.num_stages, rv.plan_digest)?;
+            handshake_accept(
+                &mut sock,
+                link,
+                stage,
+                (link + 1) % rv.num_stages,
+                rv.plan_digest,
+                rv.handshake_timeout(),
+            )?;
             t.writers[slot_index(link, Dir::Fwd)] = Some(sock.try_clone()?);
-            t.spawn_reader(sock, link);
+            t.spawn_reader(sock, link, Dir::Bwd);
             if rv.backend == Backend::Uds {
                 t.owned_paths.push(rv.uds_path(link));
             }
         }
         if let Some((link, mut sock)) = upstream {
-            handshake_connect_finish(&mut sock, link, rv.plan_digest)?;
+            handshake_connect_finish(&mut sock, link, rv.plan_digest, rv.handshake_timeout())?;
             t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
-            t.spawn_reader(sock, link);
+            t.spawn_reader(sock, link, Dir::Fwd);
         }
         Ok(t)
     }
@@ -716,8 +840,9 @@ fn handshake_connect_finish(
     sock: &mut Sock,
     link: usize,
     plan_digest: u64,
+    window: Duration,
 ) -> Result<(), TransportError> {
-    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    sock.set_read_timeout(Some(window))?;
     let (peer, peer_digest) = read_hello(sock, link)?;
     sock.set_read_timeout(None)?;
     if peer != link {
@@ -791,43 +916,24 @@ impl Transport for RealTransport {
         sock.flush()?;
         self.busy_s += t.elapsed().as_secs_f64();
         self.ledger.transfer(link, dir, len, raw_bytes);
-        let sent = self.shared.t0.elapsed().as_secs_f64();
-        self.shared.bump(sent);
-        Ok(sent)
+        Ok(self.shared.stamp())
     }
 
     fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
         if link >= self.num_links() {
             return Err(TransportError::NoSuchLink { link });
         }
-        let idx = slot_index(link, dir);
-        let deadline = Instant::now() + self.recv_timeout;
-        let mut boxes = self.shared.boxes.lock().unwrap();
-        loop {
-            let slot = &mut boxes.slots[idx];
-            if let Some(at) = slot.frames.iter().position(|f| f.key == key) {
-                return Ok(slot.frames.remove(at).expect("position is in range"));
-            }
-            if slot.closed {
-                return Err(TransportError::Disconnected { link, dir });
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return Err(TransportError::Timeout { link, dir, key });
-            }
-            let (guard, _) = self.shared.cv.wait_timeout(boxes, deadline - now).unwrap();
-            boxes = guard;
-        }
+        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
     }
 
     fn clock(&self, _stage: usize) -> f64 {
-        self.shared.t0.elapsed().as_secs_f64()
+        self.shared.now()
     }
 
     fn advance(&mut self, _stage: usize, _to: f64) {}
 
     fn barrier(&mut self) -> f64 {
-        self.shared.t0.elapsed().as_secs_f64()
+        self.shared.now()
     }
 
     fn makespan(&self) -> f64 {
@@ -849,15 +955,98 @@ impl Transport for RealTransport {
     fn reset(&mut self) {
         self.ledger.reset();
         self.busy_s = 0.0;
-        let mut b = self.shared.boxes.lock().unwrap();
-        for s in &mut b.slots {
-            s.frames.clear();
-        }
-        b.last_event_s = 0.0;
+        // clears mailboxes and rebases the wall-clock epoch: the next
+        // run's arrivals and makespan count from this instant
+        self.shared.reset();
     }
 
     fn shutdown(&mut self) -> Result<(), TransportError> {
         self.close_streams();
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback_uds(recv_timeout: Duration) -> RealTransport {
+        RealTransport::loopback(1, Backend::Uds, WireModel::datacenter(), recv_timeout)
+            .expect("loopback")
+    }
+
+    /// Regression: one stream hitting EOF must close only the direction
+    /// it feeds — the opposite, still-live channel keeps delivering.
+    #[test]
+    fn reader_eof_closes_only_its_direction() {
+        let mut t = loopback_uds(Duration::from_secs(2));
+        t.send(0, Dir::Fwd, 1, Payload::Bytes(&[1, 2, 3]), 3, 0.0).unwrap();
+        // kill only the bwd stream (upper end's write half): the lower
+        // reader EOFs and must mark *only* the bwd slot closed
+        let bwd = t.writers[slot_index(0, Dir::Bwd)].take().expect("bwd writer");
+        bwd.shutdown_write();
+        match t.recv(0, Dir::Bwd, 9) {
+            Err(TransportError::Disconnected { link: 0, dir: Dir::Bwd }) => {}
+            other => panic!("want bwd Disconnected, got {other:?}"),
+        }
+        // fwd stays live: the already-sent frame and a fresh one both land
+        assert_eq!(t.recv(0, Dir::Fwd, 1).unwrap().bytes, 3);
+        t.send(0, Dir::Fwd, 2, Payload::Bytes(&[9; 4]), 4, 0.0).unwrap();
+        assert_eq!(t.recv(0, Dir::Fwd, 2).unwrap().bytes, 4);
+        t.shutdown().unwrap();
+    }
+
+    /// Regression: `reset()` rebases the wall-clock epoch, so a second
+    /// run's arrivals and makespan do not inherit pre-reset seconds.
+    #[test]
+    fn reset_rebases_wall_clock_epoch() {
+        let mut t = loopback_uds(Duration::from_secs(2));
+        t.send(0, Dir::Fwd, 1, Payload::Bytes(&[1]), 1, 0.0).unwrap();
+        t.recv(0, Dir::Fwd, 1).unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(t.clock(0) >= 0.15, "first run accumulated wall time");
+        t.reset();
+        // back-to-back second run: its times start from (near) zero
+        t.send(0, Dir::Fwd, 2, Payload::Bytes(&[2]), 1, 0.0).unwrap();
+        let f = t.recv(0, Dir::Fwd, 2).unwrap();
+        assert!(f.arrival < 0.1, "arrival {} includes pre-reset seconds", f.arrival);
+        assert!(t.makespan() < 0.1, "makespan {} includes pre-reset seconds", t.makespan());
+        assert!(t.clock(0) < 0.1 && t.barrier() < 0.1);
+        t.shutdown().unwrap();
+    }
+
+    /// Regression: the handshake window is derived from the configured
+    /// connect window (a fixed 30 s silently broke the "handshake window
+    /// must exceed connect window" invariant past 30 s).
+    #[test]
+    fn handshake_window_exceeds_any_connect_window() {
+        let mut rv = Rendezvous::parse(Backend::Tcp, 2, "127.0.0.1:39000").unwrap();
+        for secs in [1u64, 20, 45, 120] {
+            rv.connect_timeout = Duration::from_secs(secs);
+            assert!(rv.handshake_timeout() > rv.connect_timeout);
+            assert_eq!(rv.handshake_timeout(), Duration::from_secs(secs) + HANDSHAKE_GRACE);
+        }
+    }
+
+    /// Regression: `accept_by` restores blocking mode on its timeout
+    /// path — a later plain `accept` must block and succeed instead of
+    /// spinning on `WouldBlock`.
+    #[test]
+    fn accept_by_timeout_leaves_listener_blocking() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let l = Listener::Tcp(l);
+        match l.accept_by(Instant::now()) {
+            Err(TransportError::Io(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+            other => panic!("want accept timeout, got {:?}", other.is_ok()),
+        }
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            TcpStream::connect(addr).unwrap()
+        });
+        // blocks until the delayed peer connects; a non-blocking
+        // listener would fail immediately with WouldBlock here
+        l.accept().expect("listener must be blocking again");
+        let _ = h.join();
     }
 }

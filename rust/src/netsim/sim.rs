@@ -22,10 +22,138 @@
 use std::collections::VecDeque;
 
 use super::transport::{Backend, Frame, Payload, Transport, TransportError};
+use super::udp::UDP_MTU;
 use super::{Dir, NetSim, WireModel};
+use crate::util::rng::Rng;
 
 /// Default bound on in-flight messages per link direction.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 4;
+
+/// Cap on simulated transmission attempts per datagram fragment (a
+/// `drop_p` close to 1 must not spin the geometric draw forever).
+const MAX_ATTEMPTS: u32 = 64;
+
+/// Per-link fault model: the simulator mirror of the UDP reliability
+/// layer ([`crate::netsim::udp`]). A lost datagram costs a detection
+/// round-trip plus a full retransmission, a duplicate burns bandwidth, a
+/// reordered one waits in the receiver's resequencing window, and
+/// straggler ranks serialize their sends more slowly — so `simexec` and
+/// `exp schedule` can sweep loss rates and the planner can price bytes
+/// on a lossy wire. The default model is fault-free and draws **no**
+/// random numbers: schedules replayed without faults are bit-identical
+/// to the pre-fault simulator.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    /// Per-datagram transmission loss probability (attempts are drawn
+    /// geometrically: expected wire bytes scale by `1 / (1 - drop_p)`).
+    pub drop_p: f64,
+    /// Probability a message is duplicated on the wire (the copy burns
+    /// bandwidth-occupancy but is discarded by the receiver).
+    pub dup_p: f64,
+    /// Resequencing window depth: an out-of-order arrival waits up to
+    /// `reorder_window` later-message serialization times before
+    /// delivery. `0` disables reorder holds.
+    pub reorder_window: usize,
+    /// Uniform extra arrival jitter in `[0, jitter_s)` seconds.
+    pub jitter_s: f64,
+    /// Ranks whose *sends* serialize `straggler_factor` times slower
+    /// (fwd sends of link `i` leave rank `i`, bwd sends rank `i + 1`).
+    pub straggler_ranks: Vec<usize>,
+    /// Send-bandwidth slowdown for straggler ranks (≥ 1).
+    pub straggler_factor: f64,
+    /// PRNG seed. Every message draws from its own sub-stream keyed by
+    /// `(channel, per-channel message count)`, so one channel's faults
+    /// never perturb another's, and shrinking a message's payload never
+    /// reshuffles the fault outcomes of any other message — the fault
+    /// draws of a smaller message are a prefix of the larger one's.
+    pub seed: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            drop_p: 0.0,
+            dup_p: 0.0,
+            reorder_window: 0,
+            jitter_s: 0.0,
+            straggler_ranks: Vec::new(),
+            straggler_factor: 1.0,
+            seed: 0x1dcb,
+        }
+    }
+}
+
+impl FaultModel {
+    /// True when the model injects nothing (the fault path is skipped
+    /// and zero random numbers are drawn).
+    pub fn is_zero(&self) -> bool {
+        self.drop_p == 0.0
+            && self.dup_p == 0.0
+            && self.reorder_window == 0
+            && self.jitter_s == 0.0
+            && (self.straggler_ranks.is_empty() || self.straggler_factor == 1.0)
+    }
+
+    /// Expected wire-byte multiplier under this loss rate
+    /// (`1 / (1 - drop_p)`): every datagram is transmitted until it
+    /// gets through.
+    pub fn retransmit_factor(&self) -> f64 {
+        if self.drop_p <= 0.0 {
+            1.0
+        } else {
+            1.0 / (1.0 - self.drop_p.min(0.99))
+        }
+    }
+
+    /// Price this fault model into an *expected-cost* wire model, for
+    /// deterministic planning ([`crate::planner`]). Per byte shipped,
+    /// the lossy wire charges the retransmitted serialization
+    /// (`retransmit_factor × (1 + dup_p)` of the clean cost) plus one
+    /// one-way detection latency per expected lost datagram — the nack
+    /// travels back one-way while the retransmission pipelines with the
+    /// rest of the stream — which is `(r - 1) × latency / UDP_MTU` per
+    /// byte. That per-datagram term is what makes big frames worse than
+    /// their byte count alone: as loss rises, the planner's frontier
+    /// tilts toward sparser specs. Jitter adds its mean (`jitter_s/2`)
+    /// to propagation latency. Reorder holds and stragglers are
+    /// sampled-replay effects and are deliberately *not* priced here.
+    pub fn derate(&self, model: WireModel) -> WireModel {
+        if self.is_zero() {
+            return model;
+        }
+        let r = self.retransmit_factor();
+        let per_byte_s = r * (1.0 + self.dup_p) / model.bandwidth_bytes_per_s
+            + (r - 1.0) * model.latency_s / UDP_MTU as f64;
+        WireModel {
+            bandwidth_bytes_per_s: 1.0 / per_byte_s,
+            latency_s: model.latency_s + 0.5 * self.jitter_s,
+        }
+    }
+}
+
+/// Live fault-injection state: the config plus a per-channel count of
+/// messages sent, which keys each message's private PRNG sub-stream.
+#[derive(Clone, Debug)]
+struct FaultState {
+    cfg: FaultModel,
+    sent: Vec<u64>,
+}
+
+impl FaultState {
+    fn new(cfg: FaultModel, num_links: usize) -> FaultState {
+        FaultState { cfg, sent: vec![0; num_links * 2] }
+    }
+
+    /// The PRNG for the next message on `channel` (= `link * 2 + dir`).
+    /// Keying by `(channel, count)` pins every message's fault draws to
+    /// its position alone: replaying the same schedule with different
+    /// payload sizes faces pointwise-comparable faults.
+    fn msg_rng(&mut self, channel: usize) -> Rng {
+        let n = self.sent[channel];
+        self.sent[channel] += 1;
+        Rng::with_stream(self.cfg.seed, ((channel as u64) << 32) | n)
+    }
+}
 
 /// A delivered message, as seen by the receiver.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -105,6 +233,8 @@ pub struct SimNet {
     /// Per-stage virtual clocks (`num_links + 1` workers).
     clocks: Vec<f64>,
     ledger: NetSim,
+    /// Fault injection; `None` is the exact pre-fault simulator.
+    faults: Option<FaultState>,
 }
 
 impl SimNet {
@@ -122,7 +252,28 @@ impl SimNet {
             bwd_ch: (0..num_links).map(|_| Channel::new(capacity)).collect(),
             clocks: vec![0.0; num_links + 1],
             ledger: NetSim::new(num_links, model),
+            faults: None,
         }
+    }
+
+    /// Install (or clear, with a zero model) per-link fault injection.
+    /// Replaces any previous model and zeroes the per-channel message
+    /// counters that key the fault sub-streams.
+    pub fn set_faults(&mut self, faults: FaultModel) {
+        let n = self.num_links();
+        self.faults =
+            if faults.is_zero() { None } else { Some(FaultState::new(faults, n)) };
+    }
+
+    /// Builder form of [`SimNet::set_faults`].
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.set_faults(faults);
+        self
+    }
+
+    /// The installed fault model, if any.
+    pub fn faults(&self) -> Option<&FaultModel> {
+        self.faults.as_ref().map(|f| &f.cfg)
     }
 
     /// Physical links this simulator models.
@@ -166,7 +317,54 @@ impl SimNet {
         raw_bytes: usize,
         now: f64,
     ) -> f64 {
-        let (tx, lat) = (self.model.tx_time(bytes), self.model.latency_s);
+        let (mut tx, mut lat) = (self.model.tx_time(bytes), self.model.latency_s);
+        if let Some(f) = &mut self.faults {
+            let mut rng = f.msg_rng(link * 2 + dir.index());
+            // straggler sender: fwd sends of link i leave rank i, bwd
+            // sends leave rank i + 1 (no draw — deterministic slowdown)
+            let sender = if dir == Dir::Fwd { link } else { link + 1 };
+            if f.cfg.straggler_ranks.contains(&sender) {
+                tx *= f.cfg.straggler_factor.max(1.0);
+            }
+            // Fixed-position draws come first so the variable-length
+            // per-fragment loop below cannot shift them: a duplicate
+            // burns one extra serialization on the channel, ...
+            if f.cfg.dup_p > 0.0 && (rng.uniform() as f64) < f.cfg.dup_p {
+                tx += self.model.tx_time(bytes);
+            }
+            // ... jitter adds [0, jitter_s) arrival delay, ...
+            if f.cfg.jitter_s > 0.0 {
+                lat += (rng.uniform() as f64) * f.cfg.jitter_s;
+            }
+            // ... and a resequencing hold waits for up to
+            // `reorder_window` later messages' serialization.
+            if f.cfg.reorder_window > 0 {
+                lat += (rng.uniform() as f64)
+                    * f.cfg.reorder_window as f64
+                    * self.model.tx_time(bytes);
+            }
+            // Per-fragment geometric loss, mirroring the UDP layer's
+            // MTU cut: each lost datagram is retransmitted (burning its
+            // serialization again), and each retransmission *round*
+            // costs a detection round-trip of extra arrival latency.
+            if f.cfg.drop_p > 0.0 {
+                let frags = bytes.div_ceil(UDP_MTU).max(1);
+                let frag_tx = tx / frags as f64;
+                let (mut lost, mut rounds) = (0u32, 1u32);
+                for _ in 0..frags {
+                    let mut attempts = 1u32;
+                    while attempts < MAX_ATTEMPTS && (rng.uniform() as f64) < f.cfg.drop_p {
+                        attempts += 1;
+                    }
+                    lost += attempts - 1;
+                    rounds = rounds.max(attempts);
+                }
+                if lost > 0 {
+                    tx += lost as f64 * frag_tx;
+                    lat += (rounds - 1) as f64 * 2.0 * self.model.latency_s;
+                }
+            }
+        }
         let ch = self.channel(link, dir);
         let arrival = ch.send(tx, lat, now);
         ch.mailbox.push_back(Message { key, bytes, arrival });
@@ -261,6 +459,11 @@ impl SimNet {
             *c = 0.0;
         }
         self.ledger.reset();
+        // zero the fault counters so a replayed run draws the exact
+        // same fault sequence as the first one
+        if let Some(f) = &mut self.faults {
+            *f = FaultState::new(f.cfg.clone(), self.fwd_ch.len());
+        }
     }
 }
 
@@ -546,6 +749,156 @@ mod tests {
         for s in 0..4 {
             assert_eq!(n.clock(s), 5.0);
         }
+    }
+
+    #[test]
+    fn zero_fault_model_is_bit_identical() {
+        let m = model(1000.0, 0.5);
+        let mut plain = SimNet::with_capacity(2, m, 4);
+        let mut faulted = SimNet::with_capacity(2, m, 4).with_faults(FaultModel::default());
+        assert!(faulted.faults().is_none(), "zero model installs nothing");
+        for k in 0..8 {
+            let a = plain.send_to(0, Dir::Fwd, k, 700, 700, 0.1 * k as f64);
+            let b = faulted.send_to(0, Dir::Fwd, k, 700, 700, 0.1 * k as f64);
+            assert_eq!(a.to_bits(), b.to_bits(), "message {k}");
+        }
+    }
+
+    #[test]
+    fn drops_delay_arrivals_deterministically() {
+        let m = model(1000.0, 0.5);
+        let fm = FaultModel { drop_p: 0.4, seed: 9, ..FaultModel::default() };
+        let mut clean = SimNet::with_capacity(1, m, 64);
+        let mut lossy = SimNet::with_capacity(1, m, 64).with_faults(fm.clone());
+        let mut lossy2 = SimNet::with_capacity(1, m, 64).with_faults(fm);
+        let mut delayed = 0;
+        for k in 0..32 {
+            let a = clean.send_to(0, Dir::Fwd, k, 1000, 1000, k as f64 * 10.0);
+            let b = lossy.send_to(0, Dir::Fwd, k, 1000, 1000, k as f64 * 10.0);
+            let c = lossy2.send_to(0, Dir::Fwd, k, 1000, 1000, k as f64 * 10.0);
+            assert!(b >= a, "faults never make a message faster");
+            assert_eq!(b.to_bits(), c.to_bits(), "same seed, same arrivals");
+            if b > a {
+                delayed += 1;
+            }
+        }
+        assert!(delayed >= 8, "40% drop left only {delayed}/32 delayed");
+        // retransmissions burn real bandwidth-occupancy
+        assert!(lossy.busy_time() > clean.busy_time() * 1.2);
+        // ledger still counts goodput bytes, not wire retries
+        assert_eq!(lossy.total_bytes(), clean.total_bytes());
+    }
+
+    #[test]
+    fn fault_channels_draw_independent_streams() {
+        // faults on the bwd channel must not perturb fwd arrivals
+        let m = model(1000.0, 0.5);
+        let fm = FaultModel { drop_p: 0.5, seed: 4, ..FaultModel::default() };
+        let mut a = SimNet::with_capacity(1, m, 8).with_faults(fm.clone());
+        let mut b = SimNet::with_capacity(1, m, 8).with_faults(fm);
+        for k in 0..8 {
+            b.send_to(0, Dir::Bwd, k, 500, 500, k as f64);
+        }
+        for k in 0..8 {
+            let x = a.send_to(0, Dir::Fwd, k, 500, 500, k as f64);
+            let y = b.send_to(0, Dir::Fwd, k, 500, 500, k as f64);
+            assert_eq!(x.to_bits(), y.to_bits(), "message {k}");
+        }
+    }
+
+    #[test]
+    fn jitter_reorder_and_stragglers_shape_arrivals() {
+        let m = model(1000.0, 0.0);
+        let jfm = FaultModel { jitter_s: 0.25, seed: 2, ..FaultModel::default() };
+        let mut jittered = SimNet::with_capacity(1, m, 8).with_faults(jfm);
+        let a = jittered.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        assert!(a >= 1.0 && a < 1.25, "jitter adds [0, 0.25): {a}");
+        let rfm = FaultModel { reorder_window: 4, seed: 2, ..FaultModel::default() };
+        let mut reordered = SimNet::with_capacity(1, m, 8).with_faults(rfm);
+        let a = reordered.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        assert!(a >= 1.0 && a < 5.0, "reorder holds < window x tx: {a}");
+        let sfm = FaultModel {
+            straggler_ranks: vec![1],
+            straggler_factor: 3.0,
+            ..FaultModel::default()
+        };
+        let mut strag = SimNet::with_capacity(2, m, 8).with_faults(sfm);
+        // rank 1 sends: fwd on link 1 and bwd on link 0 — both 3x slower
+        assert!((strag.send_to(1, Dir::Fwd, 1, 1000, 1000, 0.0) - 3.0).abs() < 1e-9);
+        assert!((strag.send_to(0, Dir::Bwd, 1, 1000, 1000, 0.0) - 3.0).abs() < 1e-9);
+        // rank 0 and rank 2 sends are untouched
+        assert!((strag.send_to(0, Dir::Fwd, 2, 1000, 1000, 0.0) - 1.0).abs() < 1e-9);
+        assert!((strag.send_to(1, Dir::Bwd, 2, 1000, 1000, 0.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_reset_replays_the_same_sequence() {
+        let m = model(1000.0, 0.5);
+        let fm = FaultModel { drop_p: 0.3, dup_p: 0.2, jitter_s: 0.1, ..FaultModel::default() };
+        let mut n = SimNet::with_capacity(1, m, 8).with_faults(fm);
+        let first: Vec<u64> =
+            (0..16).map(|k| n.send_to(0, Dir::Fwd, k, 800, 800, k as f64).to_bits()).collect();
+        n.reset();
+        let second: Vec<u64> =
+            (0..16).map(|k| n.send_to(0, Dir::Fwd, k, 800, 800, k as f64).to_bits()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn retransmit_factor_prices_loss() {
+        assert_eq!(FaultModel::default().retransmit_factor(), 1.0);
+        let fm = FaultModel { drop_p: 0.05, ..FaultModel::default() };
+        assert!((fm.retransmit_factor() - 1.0 / 0.95).abs() < 1e-12);
+        let silly = FaultModel { drop_p: 1.0, ..FaultModel::default() };
+        assert!(silly.retransmit_factor().is_finite());
+    }
+
+    #[test]
+    fn multi_fragment_messages_lose_per_datagram() {
+        // model(1000 B/s, 0.5 s), drop 0.3, seed 4, first message on the
+        // fwd channel of link 0. A 5000 B message cuts into 5 MTU
+        // fragments and (at this seed) loses 2 of them over 3 rounds:
+        //   tx  = 5.0 + 2 × 1.0 = 7.0
+        //   lat = 0.5 + (3 − 1) × 2 × 0.5 = 2.5   → arrival 9.5
+        // A 1000 B message is a single fragment whose one loss draw is a
+        // *prefix* of the 5-fragment sequence — it survives: arrival 1.5.
+        let m = model(1000.0, 0.5);
+        let fm = FaultModel { drop_p: 0.3, seed: 4, ..FaultModel::default() };
+        let mut big = SimNet::with_capacity(1, m, 8).with_faults(fm.clone());
+        let a = big.send_to(0, Dir::Fwd, 1, 5000, 5000, 0.0);
+        assert!((a - 9.5).abs() < 1e-9, "5-fragment arrival: {a}");
+        let mut small = SimNet::with_capacity(1, m, 8).with_faults(fm);
+        let a = small.send_to(0, Dir::Fwd, 1, 1000, 1000, 0.0);
+        assert!((a - 1.5).abs() < 1e-9, "1-fragment arrival: {a}");
+    }
+
+    #[test]
+    fn derate_prices_expected_loss_into_the_wire_model() {
+        let m = model(12.5e6, 0.010);
+        // a zero model derates to the identical wire
+        let zero = FaultModel::default();
+        let d = zero.derate(m);
+        assert_eq!(d.bandwidth_bytes_per_s.to_bits(), m.bandwidth_bytes_per_s.to_bits());
+        assert_eq!(d.latency_s.to_bits(), m.latency_s.to_bits());
+        // 5% loss: each byte pays r× serialization plus one one-way
+        // detection latency per expected lost MTU datagram
+        let fm = FaultModel { drop_p: 0.05, ..FaultModel::default() };
+        let d = fm.derate(m);
+        let r = 1.0 / 0.95;
+        let per_byte = r / 12.5e6 + (r - 1.0) * 0.010 / UDP_MTU as f64;
+        assert!((d.bandwidth_bytes_per_s - 1.0 / per_byte).abs() < 1e-6);
+        assert!(d.bandwidth_bytes_per_s < m.bandwidth_bytes_per_s);
+        assert_eq!(d.latency_s, m.latency_s, "loss alone leaves latency");
+        // duplicates scale serialization; jitter adds its mean to latency
+        let fm = FaultModel { dup_p: 0.5, jitter_s: 0.020, ..FaultModel::default() };
+        let d = fm.derate(m);
+        assert!((d.bandwidth_bytes_per_s - 12.5e6 / 1.5).abs() < 1e-6);
+        assert!((d.latency_s - 0.020).abs() < 1e-12);
+        // derating a lossier wire yields a strictly slower model
+        let worse = FaultModel { drop_p: 0.10, ..FaultModel::default() }.derate(m);
+        let better = FaultModel { drop_p: 0.05, ..FaultModel::default() }.derate(m);
+        assert!(worse.transfer_time(65541) > better.transfer_time(65541));
+        assert!(better.transfer_time(65541) > m.transfer_time(65541));
     }
 
     #[test]

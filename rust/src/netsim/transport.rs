@@ -29,16 +29,21 @@ pub enum Backend {
     Tcp,
     /// Real Unix-domain sockets (same-host multi-process runs).
     Uds,
+    /// Real UDP datagrams with the reliability layer
+    /// ([`crate::netsim::udp`]): sequencing, ack/nack retransmission,
+    /// reordering, and MTU fragmentation on a lossy wire.
+    Udp,
 }
 
 impl Backend {
-    /// Parse a backend name (`sim`, `tcp`, `uds`/`unix`).
+    /// Parse a backend name (`sim`, `tcp`, `uds`/`unix`, `udp`).
     pub fn parse(s: &str) -> anyhow::Result<Backend> {
         match s {
             "sim" => Ok(Backend::Sim),
             "tcp" => Ok(Backend::Tcp),
             "uds" | "unix" => Ok(Backend::Uds),
-            _ => anyhow::bail!("unknown transport backend '{s}' (try sim, tcp, uds)"),
+            "udp" => Ok(Backend::Udp),
+            _ => anyhow::bail!("unknown transport backend '{s}' (try sim, tcp, uds, udp)"),
         }
     }
 
@@ -48,6 +53,7 @@ impl Backend {
             Backend::Sim => "sim",
             Backend::Tcp => "tcp",
             Backend::Uds => "uds",
+            Backend::Udp => "udp",
         }
     }
 
@@ -277,10 +283,12 @@ mod tests {
         assert_eq!(Backend::parse("tcp").unwrap(), Backend::Tcp);
         assert_eq!(Backend::parse("uds").unwrap(), Backend::Uds);
         assert_eq!(Backend::parse("unix").unwrap(), Backend::Uds);
+        assert_eq!(Backend::parse("udp").unwrap(), Backend::Udp);
         assert!(Backend::parse("carrier-pigeon").is_err());
         assert!(!Backend::Sim.is_real());
-        assert!(Backend::Tcp.is_real() && Backend::Uds.is_real());
+        assert!(Backend::Tcp.is_real() && Backend::Uds.is_real() && Backend::Udp.is_real());
         assert_eq!(Backend::Uds.to_string(), "uds");
+        assert_eq!(Backend::Udp.to_string(), "udp");
     }
 
     #[test]

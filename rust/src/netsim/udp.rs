@@ -1,0 +1,1270 @@
+//! UDP transport with a reliability layer: the lossy-wire backend
+//! (`backend = udp`) behind the same [`Transport`] API as the stream
+//! sockets and the simulator.
+//!
+//! Stream frames are cut into datagrams of at most [`UDP_MTU`] payload
+//! bytes. Every datagram on a `(link, dir)` channel carries a u24
+//! sequence number; the receiver acknowledges received sequences with
+//! ack record sets (single/range records, RakNet-style), nacks the
+//! holes it can see behind the newest arrival, and reassembles frames
+//! strictly in sequence order through a bounded reorder window — so
+//! DELTA frames replay against feedback mirrors in exactly the
+//! generation order they were sent, and duplicates are discarded before
+//! they can double-apply. The sender retransmits on nack immediately and
+//! on timeout with exponential backoff until acked.
+//!
+//! ```text
+//! DATA  [magic u32][0][dir u8][seq u24][frag_index u16][frag_count u16]
+//!       [key u64][raw u32][frame_len u32][chunk bytes]
+//! ACK   [magic u32][1][dir u8][count u16] then per record:
+//!       [0][seq u24]  or  [1][start u24][end u24]
+//! NACK  [magic u32][2][dir u8][count u16] + the same record sets
+//! HELLO [magic u32][3][v2 stream hello (21 bytes)]
+//! BYE   [magic u32][4][dir u8]
+//! ```
+//!
+//! The rendezvous reuses the v2 plan-digest handshake over the same
+//! per-link `host:(base_port + link)` addressing as TCP: the hello rides
+//! in a `HELLO` datagram (retried until answered — the handshake is its
+//! own tiny reliability layer), the acceptor replies before validating
+//! so both sides surface the same typed
+//! [`TransportError::PlanMismatch`], and no data datagram flows past a
+//! failed handshake.
+//!
+//! Fault injection for tests and CI ([`UdpFaults`], env hook
+//! `MPCOMP_UDP_DROP_P` / `MPCOMP_UDP_DUP_P` / `MPCOMP_UDP_REORDER_P` /
+//! `MPCOMP_UDP_FAULT_SEED`) deterministically drops, duplicates, or
+//! reorders *outbound data* datagrams — control traffic is spared so the
+//! layer always converges — and the delivered frames must still be
+//! bit-identical to the lossless run.
+
+use std::collections::BTreeMap;
+use std::net::UdpSocket;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::real::{hello_bytes, parse_hello, slot_index, Rendezvous, Shared, HELLO_LEN};
+use super::transport::{Backend, Frame, Payload, Transport, TransportError};
+use super::{Dir, NetSim, WireModel};
+use crate::util::rng::Rng;
+
+/// Datagram magic, "MPCU" on the wire (little-endian).
+const UDP_MAGIC: u32 = 0x5543_504d;
+const T_DATA: u8 = 0;
+const T_ACK: u8 = 1;
+const T_NACK: u8 = 2;
+const T_HELLO: u8 = 3;
+const T_BYE: u8 = 4;
+/// Payload bytes per DATA datagram; frames above this fragment.
+pub const UDP_MTU: usize = 1200;
+/// DATA datagram header size (see the module docs for the layout).
+const DATA_HEADER: usize = 29;
+/// Sequence numbers are 24-bit on the wire.
+const SEQ_MOD: u32 = 1 << 24;
+const SEQ_MASK: u32 = SEQ_MOD - 1;
+/// Base retransmit timeout; doubles per attempt up to `RTO_BACKOFF_CAP`.
+const RTO: Duration = Duration::from_millis(25);
+const RTO_BACKOFF_CAP: u32 = 6;
+/// How long a hole may age before the receiver nacks it (gives plain
+/// reordering a chance to fill in without a retransmit).
+const NACK_DELAY: Duration = Duration::from_millis(5);
+/// Minimum spacing between nack record sets for the same channel.
+const NACK_INTERVAL: Duration = Duration::from_millis(10);
+/// Bounded reorder window: once this many datagrams are buffered past a
+/// hole, the hole is nacked immediately (no aging, no pacing).
+const REORDER_WINDOW: usize = 64;
+/// Reader thread poll quantum (also paces acks and resend checks).
+const POLL: Duration = Duration::from_millis(3);
+/// Records per ack/nack datagram (7 bytes each worst-case keeps the
+/// datagram far under the MTU).
+const MAX_RECORDS: usize = 128;
+/// How long `shutdown` waits for outstanding datagrams to be acked
+/// before declaring the run over.
+const LINGER: Duration = Duration::from_secs(5);
+
+fn rto_for(attempts: u32) -> Duration {
+    RTO * (1u32 << attempts.min(RTO_BACKOFF_CAP))
+}
+
+/// Widen a 24-bit wire sequence to the full counter closest to `near`.
+fn widen(seq24: u32, near: u32) -> u32 {
+    let base = (near as i64) & !(SEQ_MASK as i64);
+    let mut cand = base | seq24 as i64;
+    let half = (SEQ_MOD as i64) / 2;
+    if cand - (near as i64) > half {
+        cand -= SEQ_MOD as i64;
+    } else if (near as i64) - cand > half {
+        cand += SEQ_MOD as i64;
+    }
+    cand.max(0) as u32
+}
+
+// ---------------------------------------------------------------------------
+// datagram codecs
+// ---------------------------------------------------------------------------
+
+fn dir_byte(dir: Dir) -> u8 {
+    dir.index() as u8
+}
+
+fn parse_dir(b: u8) -> Option<Dir> {
+    match b {
+        0 => Some(Dir::Fwd),
+        1 => Some(Dir::Bwd),
+        _ => None,
+    }
+}
+
+fn data_datagram(
+    dir: Dir,
+    seq: u32,
+    frag: (u16, u16),
+    key: u64,
+    raw: u32,
+    frame_len: u32,
+    chunk: &[u8],
+) -> Vec<u8> {
+    let (frag_index, frag_count) = frag;
+    let mut b = Vec::with_capacity(DATA_HEADER + chunk.len());
+    b.extend_from_slice(&UDP_MAGIC.to_le_bytes());
+    b.push(T_DATA);
+    b.push(dir_byte(dir));
+    b.extend_from_slice(&seq.to_le_bytes()[..3]);
+    b.extend_from_slice(&frag_index.to_le_bytes());
+    b.extend_from_slice(&frag_count.to_le_bytes());
+    b.extend_from_slice(&key.to_le_bytes());
+    b.extend_from_slice(&raw.to_le_bytes());
+    b.extend_from_slice(&frame_len.to_le_bytes());
+    b.extend_from_slice(chunk);
+    b
+}
+
+struct DataGram {
+    dir: Dir,
+    seq24: u32,
+    frag_index: u16,
+    frag_count: u16,
+    key: u64,
+    frame_len: u32,
+    chunk: Vec<u8>,
+}
+
+fn parse_data(b: &[u8]) -> Option<DataGram> {
+    if b.len() < DATA_HEADER {
+        return None;
+    }
+    let dir = parse_dir(b[5])?;
+    let seq24 = u32::from_le_bytes([b[6], b[7], b[8], 0]);
+    let frag_index = u16::from_le_bytes([b[9], b[10]]);
+    let frag_count = u16::from_le_bytes([b[11], b[12]]);
+    let key = u64::from_le_bytes([b[13], b[14], b[15], b[16], b[17], b[18], b[19], b[20]]);
+    let frame_len = u32::from_le_bytes([b[25], b[26], b[27], b[28]]);
+    if frag_count == 0 {
+        return None;
+    }
+    Some(DataGram { dir, seq24, frag_index, frag_count, key, frame_len, chunk: b[DATA_HEADER..].to_vec() })
+}
+
+/// Coalesce sorted, deduped, *widened* sequences into inclusive ranges.
+fn coalesce(seqs: &[u32]) -> Vec<(u32, u32)> {
+    let mut out: Vec<(u32, u32)> = Vec::new();
+    for &s in seqs {
+        match out.last_mut() {
+            Some((_, e)) if *e + 1 == s => *e = s,
+            _ => out.push((s, s)),
+        }
+    }
+    out
+}
+
+/// Build ack/nack record-set datagrams (24-bit values on the wire;
+/// ranges that would cross the 24-bit boundary are split so a record's
+/// start never exceeds its end).
+fn record_datagrams(t: u8, dir: Dir, seqs: &[u32]) -> Vec<Vec<u8>> {
+    let mut recs: Vec<(u32, u32)> = Vec::new();
+    for (s, e) in coalesce(seqs) {
+        let (s24, e24) = (s & SEQ_MASK, e & SEQ_MASK);
+        if s24 <= e24 {
+            recs.push((s24, e24));
+        } else {
+            recs.push((s24, SEQ_MASK));
+            recs.push((0, e24));
+        }
+    }
+    recs.chunks(MAX_RECORDS)
+        .map(|chunk| {
+            let mut b = Vec::with_capacity(8 + chunk.len() * 7);
+            b.extend_from_slice(&UDP_MAGIC.to_le_bytes());
+            b.push(t);
+            b.push(dir_byte(dir));
+            b.extend_from_slice(&(chunk.len() as u16).to_le_bytes());
+            for &(s, e) in chunk {
+                if s == e {
+                    b.push(0);
+                    b.extend_from_slice(&s.to_le_bytes()[..3]);
+                } else {
+                    b.push(1);
+                    b.extend_from_slice(&s.to_le_bytes()[..3]);
+                    b.extend_from_slice(&e.to_le_bytes()[..3]);
+                }
+            }
+            b
+        })
+        .collect()
+}
+
+/// Parse an ack/nack record set into inclusive 24-bit ranges.
+fn parse_record_set(b: &[u8]) -> Option<(Dir, Vec<(u32, u32)>)> {
+    if b.len() < 8 {
+        return None;
+    }
+    let dir = parse_dir(b[5])?;
+    let count = u16::from_le_bytes([b[6], b[7]]) as usize;
+    let mut ranges = Vec::with_capacity(count);
+    let mut at = 8;
+    for _ in 0..count {
+        let kind = *b.get(at)?;
+        at += 1;
+        let mut next3 = |at: &mut usize| -> Option<u32> {
+            let v = u32::from_le_bytes([*b.get(*at)?, *b.get(*at + 1)?, *b.get(*at + 2)?, 0]);
+            *at += 3;
+            Some(v)
+        };
+        match kind {
+            0 => {
+                let s = next3(&mut at)?;
+                ranges.push((s, s));
+            }
+            1 => {
+                let s = next3(&mut at)?;
+                let e = next3(&mut at)?;
+                ranges.push((s, e));
+            }
+            _ => return None,
+        }
+    }
+    Some((dir, ranges))
+}
+
+fn hello_datagram(link: usize, stage: usize, plan_digest: u64) -> Vec<u8> {
+    let mut b = Vec::with_capacity(5 + HELLO_LEN);
+    b.extend_from_slice(&UDP_MAGIC.to_le_bytes());
+    b.push(T_HELLO);
+    b.extend_from_slice(&hello_bytes(link, stage, plan_digest));
+    b
+}
+
+fn bye_datagram(dir: Dir) -> Vec<u8> {
+    let mut b = Vec::with_capacity(6);
+    b.extend_from_slice(&UDP_MAGIC.to_le_bytes());
+    b.push(T_BYE);
+    b.push(dir_byte(dir));
+    b
+}
+
+// ---------------------------------------------------------------------------
+// fault injection (test hook)
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault injection on outbound DATA datagrams (the test
+/// hook behind the CI lossy lane and the fault-injection suite).
+/// Control traffic — hellos, acks, nacks, byes — is never faulted, so
+/// the reliability layer always converges; data faults exercise
+/// retransmission, dedup, and the reorder window.
+#[derive(Clone, Debug, Default)]
+pub struct UdpFaults {
+    /// Probability a data datagram transmission (fresh or resend) is
+    /// dropped before it reaches the wire.
+    pub drop_p: f64,
+    /// Probability a data datagram is sent twice back to back.
+    pub dup_p: f64,
+    /// Probability a data datagram is held back and sent after the next
+    /// one (a one-slot reorder).
+    pub reorder_p: f64,
+    /// PRNG seed; per-channel streams are derived from it.
+    pub seed: u64,
+}
+
+impl UdpFaults {
+    /// True when no fault is configured (the injection path is skipped
+    /// entirely).
+    pub fn is_zero(&self) -> bool {
+        self.drop_p == 0.0 && self.dup_p == 0.0 && self.reorder_p == 0.0
+    }
+
+    /// Read the env test hook: `MPCOMP_UDP_DROP_P`, `MPCOMP_UDP_DUP_P`,
+    /// `MPCOMP_UDP_REORDER_P` (probabilities), `MPCOMP_UDP_FAULT_SEED`.
+    pub fn from_env() -> UdpFaults {
+        fn p(key: &str) -> f64 {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(0.0)
+        }
+        UdpFaults {
+            drop_p: p("MPCOMP_UDP_DROP_P"),
+            dup_p: p("MPCOMP_UDP_DUP_P"),
+            reorder_p: p("MPCOMP_UDP_REORDER_P"),
+            seed: std::env::var("MPCOMP_UDP_FAULT_SEED")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0x1dcb),
+        }
+    }
+}
+
+struct FaultState {
+    cfg: UdpFaults,
+    rng: Rng,
+}
+
+// ---------------------------------------------------------------------------
+// per-lane reliability state
+// ---------------------------------------------------------------------------
+
+struct Pending {
+    datagram: Vec<u8>,
+    last_sent: Instant,
+    attempts: u32,
+}
+
+#[derive(Default)]
+struct ChannelOut {
+    /// Monotone datagram counter; the wire carries its low 24 bits.
+    next_seq: u32,
+    /// Sent but not yet acked, keyed by widened sequence.
+    unacked: BTreeMap<u32, Pending>,
+    fresh: u64,
+    retransmits: u64,
+}
+
+#[derive(Default)]
+struct ChannelIn {
+    /// Next (widened) sequence to consume; delivery is strictly in
+    /// order, so duplicates and stale retransmits are discarded here.
+    next_seq: u32,
+    /// Out-of-order arrivals waiting for the hole to fill.
+    buffer: BTreeMap<u32, DataGram>,
+    gap_since: Option<Instant>,
+    last_nack: Option<Instant>,
+}
+
+struct LaneState {
+    out: ChannelOut,
+    inc: ChannelIn,
+    /// Received sequences to acknowledge on the next tick.
+    ack_queue: Vec<u32>,
+    faults: Option<FaultState>,
+    /// Reorder-injection hold slot (flushed after the next send/tick).
+    hold: Option<Vec<u8>>,
+}
+
+/// One socket of one link: this endpoint transmits `send_dir` data on
+/// it and receives `recv_dir` data (plus the control traffic for both).
+struct Lane {
+    sock: UdpSocket,
+    link: usize,
+    send_dir: Dir,
+    recv_dir: Dir,
+    /// `Some` on lanes that played the handshake acceptor: the reply to
+    /// re-send when the peer retries its hello (our first reply was
+    /// lost). Connector lanes ignore stray hellos — if both sides
+    /// answered them, one redundant re-reply would echo back and forth
+    /// forever.
+    hello_reply: Option<Vec<u8>>,
+    state: Mutex<LaneState>,
+}
+
+/// Transmit one data datagram through the fault hook.
+fn xmit_data(lane: &Lane, st: &mut LaneState, dgram: &[u8]) {
+    let (drop, hold, dup) = match &mut st.faults {
+        Some(f) => {
+            let drop = (f.rng.uniform() as f64) < f.cfg.drop_p;
+            let hold = !drop && (f.rng.uniform() as f64) < f.cfg.reorder_p;
+            let dup = !drop && !hold && (f.rng.uniform() as f64) < f.cfg.dup_p;
+            (drop, hold, dup)
+        }
+        None => (false, false, false),
+    };
+    if drop {
+        return; // lost on the (virtual) wire; timeout/nack recovers it
+    }
+    if hold && st.hold.is_none() {
+        st.hold = Some(dgram.to_vec());
+        return;
+    }
+    let _ = lane.sock.send(dgram);
+    if dup {
+        let _ = lane.sock.send(dgram);
+    }
+    if let Some(h) = st.hold.take() {
+        let _ = lane.sock.send(&h);
+    }
+}
+
+/// Deliver every frame whose datagrams are all present, strictly in
+/// sequence order. Caller holds the lane lock.
+fn deliver_ready(lane: &Lane, shared: &Shared, st: &mut LaneState) {
+    loop {
+        let Some(head) = st.inc.buffer.get(&st.inc.next_seq) else {
+            return;
+        };
+        let count = head.frag_count as u32;
+        let have_all =
+            (st.inc.next_seq..st.inc.next_seq + count).all(|s| st.inc.buffer.contains_key(&s));
+        if !have_all {
+            return;
+        }
+        let key = head.key;
+        let frame_len = head.frame_len as usize;
+        let mut payload = Vec::with_capacity(frame_len);
+        let start = st.inc.next_seq;
+        for s in start..start + count {
+            let frag = st.inc.buffer.remove(&s).expect("checked above");
+            debug_assert_eq!(frag.frag_index as u32, s - start, "fragment order");
+            payload.extend_from_slice(&frag.chunk);
+        }
+        st.inc.next_seq += count;
+        st.inc.gap_since = None;
+        debug_assert_eq!(payload.len(), frame_len, "fragment reassembly length");
+        shared.deliver(lane.link, lane.recv_dir, key, payload);
+    }
+}
+
+fn handle_datagram(lane: &Lane, shared: &Shared, b: &[u8]) {
+    if b.len() < 6 || u32::from_le_bytes([b[0], b[1], b[2], b[3]]) != UDP_MAGIC {
+        return;
+    }
+    match b[4] {
+        T_DATA => {
+            let Some(d) = parse_data(b) else { return };
+            if d.dir != lane.recv_dir {
+                return;
+            }
+            let mut st = lane.state.lock().unwrap();
+            let seq = widen(d.seq24, st.inc.next_seq);
+            // always (re-)ack: the sender may have lost our earlier ack
+            st.ack_queue.push(seq);
+            if seq < st.inc.next_seq || st.inc.buffer.contains_key(&seq) {
+                return; // duplicate of a consumed or buffered datagram
+            }
+            if seq > st.inc.next_seq && st.inc.gap_since.is_none() {
+                st.inc.gap_since = Some(Instant::now());
+            }
+            st.inc.buffer.insert(seq, d);
+            deliver_ready(lane, shared, &mut st);
+        }
+        T_ACK => {
+            let Some((dir, ranges)) = parse_record_set(b) else { return };
+            if dir != lane.send_dir {
+                return;
+            }
+            let mut st = lane.state.lock().unwrap();
+            st.out
+                .unacked
+                .retain(|&s, _| !ranges.iter().any(|&(a, z)| (a..=z).contains(&(s & SEQ_MASK))));
+        }
+        T_NACK => {
+            let Some((dir, ranges)) = parse_record_set(b) else { return };
+            if dir != lane.send_dir {
+                return;
+            }
+            let mut st = lane.state.lock().unwrap();
+            let missing: Vec<u32> = st
+                .out
+                .unacked
+                .keys()
+                .copied()
+                .filter(|&s| ranges.iter().any(|&(a, z)| (a..=z).contains(&(s & SEQ_MASK))))
+                .collect();
+            let now = Instant::now();
+            for s in missing {
+                let dg = st.out.unacked[&s].datagram.clone();
+                xmit_data(lane, &mut st, &dg);
+                let p = st.out.unacked.get_mut(&s).expect("still unacked");
+                p.last_sent = now;
+                p.attempts += 1;
+                st.out.retransmits += 1;
+            }
+        }
+        T_HELLO => {
+            // a retried handshake hello: our reply was lost — re-reply
+            // (acceptor lanes only, see `Lane::hello_reply`)
+            if let Some(reply) = &lane.hello_reply {
+                let _ = lane.sock.send(reply);
+            }
+        }
+        T_BYE => {
+            if b[5] == dir_byte(lane.recv_dir) {
+                shared.close_slot(lane.link, lane.recv_dir);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Periodic work: flush held/ack/nack control traffic and run the
+/// timeout-resend scan. Runs every reader-poll quantum.
+fn tick(lane: &Lane, _shared: &Shared) {
+    let now = Instant::now();
+    let mut st = lane.state.lock().unwrap();
+    if let Some(h) = st.hold.take() {
+        let _ = lane.sock.send(&h);
+    }
+    if !st.ack_queue.is_empty() {
+        let mut seqs = std::mem::take(&mut st.ack_queue);
+        seqs.sort_unstable();
+        seqs.dedup();
+        for dg in record_datagrams(T_ACK, lane.recv_dir, &seqs) {
+            let _ = lane.sock.send(&dg);
+        }
+    }
+    // nack the holes behind the newest buffered datagram
+    if let Some(&newest) = st.inc.buffer.keys().next_back() {
+        let over_window = st.inc.buffer.len() > REORDER_WINDOW;
+        let aged = matches!(st.inc.gap_since, Some(g) if now.duration_since(g) >= NACK_DELAY);
+        let paced = match st.inc.last_nack {
+            Some(t) => now.duration_since(t) >= NACK_INTERVAL,
+            None => true,
+        };
+        if (aged && paced) || over_window {
+            let missing: Vec<u32> = (st.inc.next_seq..newest)
+                .filter(|s| !st.inc.buffer.contains_key(s))
+                .take(4 * MAX_RECORDS)
+                .collect();
+            if !missing.is_empty() {
+                for dg in record_datagrams(T_NACK, lane.recv_dir, &missing) {
+                    let _ = lane.sock.send(&dg);
+                }
+                st.inc.last_nack = Some(now);
+            }
+        }
+    }
+    // timeout resends with exponential backoff
+    let due: Vec<u32> = st
+        .out
+        .unacked
+        .iter()
+        .filter(|(_, p)| now.duration_since(p.last_sent) >= rto_for(p.attempts))
+        .map(|(&s, _)| s)
+        .collect();
+    for s in due {
+        let dg = st.out.unacked[&s].datagram.clone();
+        xmit_data(lane, &mut st, &dg);
+        let p = st.out.unacked.get_mut(&s).expect("still unacked");
+        p.last_sent = now;
+        p.attempts += 1;
+        st.out.retransmits += 1;
+    }
+}
+
+fn lane_loop(lane: Arc<Lane>, shared: Arc<Shared>, stop: Arc<AtomicBool>, backlog: Vec<Vec<u8>>) {
+    let _ = lane.sock.set_read_timeout(Some(POLL));
+    for b in &backlog {
+        handle_datagram(&lane, &shared, b);
+    }
+    let mut buf = vec![0u8; DATA_HEADER + UDP_MTU + 64];
+    loop {
+        match lane.sock.recv(&mut buf) {
+            Ok(n) => handle_datagram(&lane, &shared, &buf[..n]),
+            // timeouts pace the tick; connection-refused (peer not up
+            // yet / already gone) and the like are transient here
+            Err(_) => {}
+        }
+        tick(&lane, &shared);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the transport
+// ---------------------------------------------------------------------------
+
+/// Reliable-UDP [`Transport`]: per-link datagram sockets with
+/// sequencing, ack/nack retransmission, a bounded reorder window, and
+/// MTU fragmentation. Construct with [`UdpTransport::loopback`] (both
+/// ends of every link in one process) or [`UdpTransport::endpoint`]
+/// (one rank of a multi-process run).
+pub struct UdpTransport {
+    lanes: Vec<Arc<Lane>>,
+    /// `slot_index(link, dir)` → lane transmitting that channel.
+    lane_for_send: Vec<Option<usize>>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    readers: Vec<JoinHandle<()>>,
+    ledger: NetSim,
+    busy_s: f64,
+    recv_timeout: Duration,
+    num_links: usize,
+}
+
+impl UdpTransport {
+    fn empty(num_links: usize, model: WireModel, recv_timeout: Duration) -> UdpTransport {
+        UdpTransport {
+            lanes: Vec::new(),
+            lane_for_send: vec![None; num_links * 2],
+            shared: Shared::new(num_links),
+            stop: Arc::new(AtomicBool::new(false)),
+            readers: Vec::new(),
+            ledger: NetSim::new(num_links, model),
+            busy_s: 0.0,
+            recv_timeout,
+            num_links,
+        }
+    }
+
+    fn add_lane(
+        &mut self,
+        sock: UdpSocket,
+        link: usize,
+        send_dir: Dir,
+        faults: &UdpFaults,
+        hello_reply: Option<Vec<u8>>,
+        backlog: Vec<Vec<u8>>,
+    ) -> Result<(), TransportError> {
+        let recv_dir = match send_dir {
+            Dir::Fwd => Dir::Bwd,
+            Dir::Bwd => Dir::Fwd,
+        };
+        let fault_state = if faults.is_zero() {
+            None
+        } else {
+            // independent per-channel fault streams
+            let stream = (link * 2 + send_dir.index()) as u64;
+            Some(FaultState { cfg: faults.clone(), rng: Rng::with_stream(faults.seed, stream) })
+        };
+        let lane = Arc::new(Lane {
+            sock,
+            link,
+            send_dir,
+            recv_dir,
+            hello_reply,
+            state: Mutex::new(LaneState {
+                out: ChannelOut::default(),
+                inc: ChannelIn::default(),
+                ack_queue: Vec::new(),
+                faults: fault_state,
+                hold: None,
+            }),
+        });
+        self.lane_for_send[slot_index(link, send_dir)] = Some(self.lanes.len());
+        let shared = Arc::clone(&self.shared);
+        let stop = Arc::clone(&self.stop);
+        let l = Arc::clone(&lane);
+        self.readers.push(std::thread::spawn(move || lane_loop(l, shared, stop, backlog)));
+        self.lanes.push(lane);
+        Ok(())
+    }
+
+    /// Single-process loopback: both ends of every link in this
+    /// transport, over real kernel UDP sockets on 127.0.0.1 — the udp
+    /// analogue of [`super::RealTransport::loopback`], plus fault
+    /// injection.
+    pub fn loopback(
+        num_links: usize,
+        model: WireModel,
+        recv_timeout: Duration,
+        faults: &UdpFaults,
+    ) -> Result<UdpTransport, TransportError> {
+        let mut t = UdpTransport::empty(num_links, model, recv_timeout);
+        for link in 0..num_links {
+            let lower = UdpSocket::bind("127.0.0.1:0")?;
+            let upper = UdpSocket::bind("127.0.0.1:0")?;
+            lower.connect(upper.local_addr()?)?;
+            upper.connect(lower.local_addr()?)?;
+            // in-process handshake (retried: even loopback UDP is
+            // allowed to drop); both ends share the trivial digest 0
+            lower.set_read_timeout(Some(Duration::from_millis(50)))?;
+            upper.set_read_timeout(Some(Duration::from_millis(50)))?;
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let mut buf = [0u8; 64];
+            loop {
+                upper.send(&hello_datagram(link, link + 1, 0))?;
+                if let Ok(n) = lower.recv(&mut buf) {
+                    if n >= 5 + HELLO_LEN && buf[4] == T_HELLO {
+                        let (stage, _) = parse_hello(&buf[5..n], link)?;
+                        if stage == link + 1 {
+                            break;
+                        }
+                    }
+                }
+                if Instant::now() >= deadline {
+                    return Err(TransportError::Io(format!("udp loopback handshake link {link}")));
+                }
+            }
+            let reply = hello_datagram(link, link, 0);
+            loop {
+                lower.send(&reply)?;
+                if let Ok(n) = upper.recv(&mut buf) {
+                    if n >= 5 + HELLO_LEN && buf[4] == T_HELLO {
+                        let (stage, _) = parse_hello(&buf[5..n], link)?;
+                        if stage == link {
+                            break;
+                        }
+                    }
+                }
+                if Instant::now() >= deadline {
+                    return Err(TransportError::Io(format!("udp loopback handshake link {link}")));
+                }
+            }
+            // lower transmits fwd data, upper transmits bwd data; the
+            // lower end accepted the handshake, so it answers retries
+            t.add_lane(lower, link, Dir::Fwd, faults, Some(reply), Vec::new())?;
+            t.add_lane(upper, link, Dir::Bwd, faults, None, Vec::new())?;
+        }
+        Ok(t)
+    }
+
+    /// One rank of a multi-process run: the same chain/ring rendezvous
+    /// as [`super::RealTransport::endpoint`] (lower stage of link
+    /// `stage` binds the link's UDP port, the upper stage sends hellos
+    /// until answered), with the v2 plan-digest validation — a peer
+    /// running a different plan is refused with a typed
+    /// [`TransportError::PlanMismatch`] before any data datagram flows.
+    pub fn endpoint(
+        rv: &Rendezvous,
+        stage: usize,
+        model: WireModel,
+        faults: &UdpFaults,
+    ) -> Result<UdpTransport, TransportError> {
+        if rv.backend != Backend::Udp {
+            return Err(TransportError::Io("udp endpoint wants backend=udp".into()));
+        }
+        if stage >= rv.num_stages {
+            return Err(TransportError::Io(format!(
+                "stage {stage} out of range for {} stages",
+                rv.num_stages
+            )));
+        }
+        let ring = rv.ring && rv.num_stages > 1;
+        let num_links = if ring { rv.num_stages } else { rv.num_stages.saturating_sub(1) };
+        let mut t = UdpTransport::empty(num_links, model, rv.recv_timeout);
+        let deadline = Instant::now() + rv.handshake_timeout();
+        let listens = ring || stage + 1 < rv.num_stages;
+        let connect_link = if ring {
+            Some((stage + rv.num_stages - 1) % rv.num_stages)
+        } else {
+            stage.checked_sub(1)
+        };
+
+        // the acceptor socket binds the link's port; the connector binds
+        // an ephemeral port and knocks with hellos until answered — both
+        // progress in one interleaved loop, exactly because two
+        // mutually-connecting ring ranks must not wait on each other
+        let acceptor = if listens {
+            let sock = UdpSocket::bind(rv.tcp_addr(stage)?)?;
+            sock.set_read_timeout(Some(Duration::from_millis(25)))?;
+            Some(sock)
+        } else {
+            None
+        };
+        let connector = match connect_link {
+            Some(link) => {
+                let sock = UdpSocket::bind("0.0.0.0:0")?;
+                sock.connect(rv.tcp_addr(link)?)?;
+                sock.set_read_timeout(Some(Duration::from_millis(25)))?;
+                Some((link, sock))
+            }
+            None => None,
+        };
+
+        let my_reply = hello_datagram(stage, stage, rv.plan_digest);
+        let mut accept_done: Option<(usize, u64)> = None; // peer (stage, digest)
+        let mut accept_backlog: Vec<Vec<u8>> = Vec::new();
+        let mut connect_done: Option<(usize, u64)> = None;
+        let mut connect_backlog: Vec<Vec<u8>> = Vec::new();
+        let mut buf = vec![0u8; DATA_HEADER + UDP_MTU + 64];
+        while (listens && accept_done.is_none())
+            || (connector.is_some() && connect_done.is_none())
+        {
+            if Instant::now() >= deadline {
+                return Err(TransportError::Io(format!(
+                    "udp rendezvous timed out at stage {stage} (peer never appeared)"
+                )));
+            }
+            if let Some(sock) = &acceptor {
+                if accept_done.is_none() {
+                    if let Ok((n, peer)) = sock.recv_from(&mut buf) {
+                        if n >= 5 + HELLO_LEN
+                            && buf[..4] == UDP_MAGIC.to_le_bytes()
+                            && buf[4] == T_HELLO
+                        {
+                            let hello = parse_hello(&buf[5..n], stage)?;
+                            sock.connect(peer)?;
+                            // reply before validating, so the peer sees
+                            // the same typed mismatch instead of silence
+                            let _ = sock.send(&my_reply);
+                            accept_done = Some(hello);
+                        }
+                    }
+                }
+            }
+            if let Some((link, sock)) = &connector {
+                if connect_done.is_none() {
+                    let _ = sock.send(&hello_datagram(*link, stage, rv.plan_digest));
+                    if let Ok(n) = sock.recv(&mut buf) {
+                        if n >= 6 && buf[..4] == UDP_MAGIC.to_le_bytes() {
+                            if buf[4] == T_HELLO {
+                                connect_done = Some(parse_hello(&buf[5..n], *link)?);
+                            } else {
+                                // the peer finished its handshake and is
+                                // already talking: keep for the reader
+                                connect_backlog.push(buf[..n].to_vec());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // drain anything that raced onto the acceptor after its reply
+        if let Some(sock) = &acceptor {
+            while let Ok(n) = sock.recv(&mut buf) {
+                if n >= 6 && buf[..4] == UDP_MAGIC.to_le_bytes() && buf[4] != T_HELLO {
+                    accept_backlog.push(buf[..n].to_vec());
+                } else {
+                    break;
+                }
+            }
+        }
+        if let Some((peer, digest)) = accept_done {
+            let expect = (stage + 1) % rv.num_stages;
+            if peer != expect {
+                return Err(TransportError::Corrupt(format!(
+                    "link {stage}: expected upper stage {expect}, peer is stage {peer}"
+                )));
+            }
+            if digest != rv.plan_digest {
+                return Err(TransportError::PlanMismatch {
+                    link: stage,
+                    ours: rv.plan_digest,
+                    theirs: digest,
+                });
+            }
+        }
+        if let (Some((link, _)), Some((peer, digest))) = (&connector, connect_done) {
+            if peer != *link {
+                return Err(TransportError::Corrupt(format!(
+                    "link {link}: expected lower stage {link}, peer is stage {peer}"
+                )));
+            }
+            if digest != rv.plan_digest {
+                return Err(TransportError::PlanMismatch {
+                    link: *link,
+                    ours: rv.plan_digest,
+                    theirs: digest,
+                });
+            }
+        }
+        if let Some(sock) = acceptor {
+            t.add_lane(sock, stage, Dir::Fwd, faults, Some(my_reply.clone()), accept_backlog)?;
+        }
+        if let Some((link, sock)) = connector {
+            t.add_lane(sock, link, Dir::Bwd, faults, None, connect_backlog)?;
+        }
+        Ok(t)
+    }
+
+    /// Wire-level datagram counters across all channels: `(fresh,
+    /// retransmitted)` — the retransmit-overhead metric the udp bench
+    /// reports per loss rate.
+    pub fn datagram_stats(&self) -> (u64, u64) {
+        let mut fresh = 0;
+        let mut re = 0;
+        for lane in &self.lanes {
+            let st = lane.state.lock().unwrap();
+            fresh += st.out.fresh;
+            re += st.out.retransmits;
+        }
+        (fresh, re)
+    }
+
+    /// Drain outstanding datagrams (the reader threads keep resending
+    /// while we linger), announce end-of-stream, stop the readers, and
+    /// close every channel.
+    fn close(&mut self) {
+        if self.readers.is_empty() {
+            return;
+        }
+        let deadline = Instant::now() + LINGER;
+        loop {
+            let pending: usize =
+                self.lanes.iter().map(|l| l.state.lock().unwrap().out.unacked.len()).sum();
+            if pending == 0 || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(POLL);
+        }
+        for lane in &self.lanes {
+            let bye = bye_datagram(lane.send_dir);
+            for _ in 0..3 {
+                let _ = lane.sock.send(&bye);
+            }
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        // we are done receiving: local recv after shutdown is a typed
+        // disconnect, same as the stream transports
+        for link in 0..self.num_links {
+            self.shared.close_slot(link, Dir::Fwd);
+            self.shared.close_slot(link, Dir::Bwd);
+        }
+    }
+}
+
+impl Drop for UdpTransport {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl Transport for UdpTransport {
+    fn backend(&self) -> Backend {
+        Backend::Udp
+    }
+
+    fn num_links(&self) -> usize {
+        self.num_links
+    }
+
+    fn send(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        payload: Payload<'_>,
+        raw_bytes: usize,
+        _now: f64,
+    ) -> Result<f64, TransportError> {
+        if link >= self.num_links {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        let lane_idx = self.lane_for_send[slot_index(link, dir)].ok_or_else(|| {
+            TransportError::Io(format!("link {link} {dir} is not writable from this endpoint"))
+        })?;
+        let lane = Arc::clone(&self.lanes[lane_idx]);
+        let zeros;
+        let bytes: &[u8] = match payload {
+            Payload::Bytes(b) => b,
+            Payload::Size(n) => {
+                // synthetic runs ship zero-filled frames of the right size
+                zeros = vec![0u8; n];
+                &zeros
+            }
+        };
+        let frag_count = bytes.len().div_ceil(UDP_MTU).max(1);
+        if frag_count > u16::MAX as usize {
+            return Err(TransportError::Io(format!(
+                "frame of {} bytes exceeds udp fragmentation range",
+                bytes.len()
+            )));
+        }
+        let t = Instant::now();
+        {
+            let mut st = lane.state.lock().unwrap();
+            for i in 0..frag_count {
+                let chunk = &bytes[i * UDP_MTU..bytes.len().min((i + 1) * UDP_MTU)];
+                let seq = st.out.next_seq;
+                st.out.next_seq += 1;
+                let dg = data_datagram(
+                    dir,
+                    seq & SEQ_MASK,
+                    (i as u16, frag_count as u16),
+                    key,
+                    raw_bytes as u32,
+                    bytes.len() as u32,
+                    chunk,
+                );
+                xmit_data(&lane, &mut st, &dg);
+                st.out
+                    .unacked
+                    .insert(seq, Pending { datagram: dg, last_sent: Instant::now(), attempts: 0 });
+                st.out.fresh += 1;
+            }
+        }
+        self.busy_s += t.elapsed().as_secs_f64();
+        self.ledger.transfer(link, dir, bytes.len(), raw_bytes);
+        Ok(self.shared.stamp())
+    }
+
+    fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
+        if link >= self.num_links {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
+    }
+
+    fn clock(&self, _stage: usize) -> f64 {
+        self.shared.now()
+    }
+
+    fn advance(&mut self, _stage: usize, _to: f64) {}
+
+    fn barrier(&mut self) -> f64 {
+        self.shared.now()
+    }
+
+    fn makespan(&self) -> f64 {
+        self.shared.boxes.lock().unwrap().last_event_s
+    }
+
+    fn ledger(&self) -> &NetSim {
+        &self.ledger
+    }
+
+    fn busy_time(&self) -> f64 {
+        self.busy_s
+    }
+
+    fn wire_elapsed_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    fn reset(&mut self) {
+        self.ledger.reset();
+        self.busy_s = 0.0;
+        self.shared.reset();
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        self.close();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback(links: usize, faults: &UdpFaults) -> UdpTransport {
+        UdpTransport::loopback(links, WireModel::datacenter(), Duration::from_secs(10), faults)
+            .expect("udp loopback")
+    }
+
+    #[test]
+    fn widen_tracks_nearest_representative() {
+        assert_eq!(widen(5, 0), 5);
+        assert_eq!(widen(5, 3), 5);
+        // just past a 24-bit wrap: low seqs widen into the next epoch
+        assert_eq!(widen(2, SEQ_MOD - 3), SEQ_MOD + 2);
+        // stale seq from just before the wrap stays in the old epoch
+        assert_eq!(widen(SEQ_MASK, SEQ_MOD + 1), SEQ_MASK);
+        assert_eq!(widen(7, 3 * SEQ_MOD - 1), 3 * SEQ_MOD + 7);
+    }
+
+    #[test]
+    fn record_set_roundtrip_and_coalescing() {
+        let seqs = vec![2, 4, 5, 6, 7, 9];
+        let dgs = record_datagrams(T_ACK, Dir::Fwd, &seqs);
+        assert_eq!(dgs.len(), 1);
+        let (dir, ranges) = parse_record_set(&dgs[0]).unwrap();
+        assert_eq!(dir, Dir::Fwd);
+        assert_eq!(ranges, vec![(2, 2), (4, 7), (9, 9)]);
+        // a run crossing the 24-bit boundary splits into two records
+        let wrap = vec![SEQ_MOD - 2, SEQ_MOD - 1, SEQ_MOD, SEQ_MOD + 1];
+        let dgs = record_datagrams(T_NACK, Dir::Bwd, &wrap);
+        let (_, ranges) = parse_record_set(&dgs[0]).unwrap();
+        assert_eq!(ranges, vec![(SEQ_MOD - 2, SEQ_MASK), (0, 1)]);
+    }
+
+    /// Golden wire bytes, mirrored in docs/WIRE.md (and rebuilt by
+    /// docs/check_wire_golden.py).
+    #[test]
+    fn golden_datagrams() {
+        let data = data_datagram(Dir::Fwd, 5, (0, 1), 2, 8, 3, &[0xaa, 0xbb, 0xcc]);
+        assert_eq!(
+            data,
+            [
+                0x4d, 0x50, 0x43, 0x55, 0x00, 0x00, 0x05, 0x00, 0x00, 0x00, 0x00, 0x01, 0x00,
+                0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08, 0x00, 0x00, 0x00, 0x03,
+                0x00, 0x00, 0x00, 0xaa, 0xbb, 0xcc
+            ]
+        );
+        let ack = record_datagrams(T_ACK, Dir::Fwd, &[2, 4, 5, 6, 7]);
+        assert_eq!(
+            ack[0],
+            [
+                0x4d, 0x50, 0x43, 0x55, 0x01, 0x00, 0x02, 0x00, 0x00, 0x02, 0x00, 0x00, 0x01,
+                0x04, 0x00, 0x00, 0x07, 0x00, 0x00
+            ]
+        );
+        let nack = record_datagrams(T_NACK, Dir::Bwd, &[9]);
+        assert_eq!(
+            nack[0],
+            [0x4d, 0x50, 0x43, 0x55, 0x02, 0x01, 0x01, 0x00, 0x00, 0x09, 0x00, 0x00]
+        );
+        let bye = bye_datagram(Dir::Fwd);
+        assert_eq!(bye, [0x4d, 0x50, 0x43, 0x55, 0x04, 0x00]);
+    }
+
+    #[test]
+    fn loopback_roundtrip_no_faults() {
+        let mut net = loopback(2, &UdpFaults::default());
+        assert_eq!(net.backend(), Backend::Udp);
+        assert!(net.wants_payload());
+        let msg = vec![1u8, 2, 3, 4, 5];
+        net.send(0, Dir::Fwd, 7, Payload::Bytes(&msg), 100, 0.0).unwrap();
+        net.send(1, Dir::Bwd, 9, Payload::Size(8), 64, 0.0).unwrap();
+        let f = net.recv(0, Dir::Fwd, 7).unwrap();
+        assert_eq!((f.key, f.bytes), (7, 5));
+        assert_eq!(f.payload.as_deref(), Some(&msg[..]));
+        let g = net.recv(1, Dir::Bwd, 9).unwrap();
+        assert_eq!(g.payload.as_deref(), Some(&[0u8; 8][..]));
+        assert_eq!(net.ledger().total_bytes(), 13);
+        assert!(net.makespan() > 0.0);
+        net.shutdown().unwrap();
+        match net.recv(0, Dir::Fwd, 1) {
+            Err(TransportError::Disconnected { link: 0, .. }) => {}
+            other => panic!("want typed disconnect, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_frames_fragment_and_reassemble() {
+        let mut net = loopback(1, &UdpFaults::default());
+        // 3.5 MTUs -> 4 fragments
+        let big: Vec<u8> = (0..(UDP_MTU * 7 / 2)).map(|i| (i * 31 % 251) as u8).collect();
+        net.send(0, Dir::Fwd, 1, Payload::Bytes(&big), big.len(), 0.0).unwrap();
+        let f = net.recv(0, Dir::Fwd, 1).unwrap();
+        assert_eq!(f.payload.as_deref(), Some(&big[..]));
+        let (fresh, _) = net.datagram_stats();
+        assert_eq!(fresh, 4);
+        net.shutdown().unwrap();
+    }
+
+    fn lossy_exchange(faults: UdpFaults, frames: usize) {
+        let mut net = loopback(1, &faults);
+        let payloads: Vec<Vec<u8>> =
+            (0..frames).map(|k| (0..64 + k).map(|i| (i * 7 + k) as u8).collect()).collect();
+        for (k, p) in payloads.iter().enumerate() {
+            net.send(0, Dir::Fwd, k as u64, Payload::Bytes(p), p.len(), 0.0).unwrap();
+            net.send(0, Dir::Bwd, k as u64, Payload::Bytes(p), p.len(), 0.0).unwrap();
+        }
+        for (k, p) in payloads.iter().enumerate() {
+            let f = net.recv(0, Dir::Fwd, k as u64).unwrap();
+            assert_eq!(f.payload.as_deref(), Some(&p[..]), "fwd frame {k}");
+            let g = net.recv(0, Dir::Bwd, k as u64).unwrap();
+            assert_eq!(g.payload.as_deref(), Some(&p[..]), "bwd frame {k}");
+        }
+        net.shutdown().unwrap();
+    }
+
+    #[test]
+    fn heavy_drop_recovers_every_frame() {
+        let faults = UdpFaults { drop_p: 0.3, seed: 7, ..UdpFaults::default() };
+        lossy_exchange(faults, 24);
+    }
+
+    #[test]
+    fn duplicates_are_discarded_exactly_once_delivery() {
+        let faults = UdpFaults { dup_p: 0.5, seed: 11, ..UdpFaults::default() };
+        lossy_exchange(faults, 24);
+    }
+
+    #[test]
+    fn reordering_is_resequenced() {
+        let faults = UdpFaults { reorder_p: 0.5, seed: 13, ..UdpFaults::default() };
+        lossy_exchange(faults, 24);
+    }
+
+    #[test]
+    fn combined_faults_still_converge() {
+        let faults = UdpFaults { drop_p: 0.1, dup_p: 0.1, reorder_p: 0.2, seed: 17 };
+        lossy_exchange(faults, 16);
+    }
+
+    #[test]
+    fn drops_cost_retransmits_lossless_costs_none() {
+        let faults = UdpFaults { drop_p: 0.25, seed: 5, ..UdpFaults::default() };
+        let mut lossy = loopback(1, &faults);
+        let mut clean = loopback(1, &UdpFaults::default());
+        for k in 0..16u64 {
+            for net in [&mut lossy, &mut clean] {
+                net.send(0, Dir::Fwd, k, Payload::Bytes(&[k as u8; 128]), 128, 0.0).unwrap();
+            }
+        }
+        for k in 0..16u64 {
+            lossy.recv(0, Dir::Fwd, k).unwrap();
+            clean.recv(0, Dir::Fwd, k).unwrap();
+        }
+        lossy.shutdown().unwrap();
+        clean.shutdown().unwrap();
+        let (_, re_lossy) = lossy.datagram_stats();
+        let (_, re_clean) = clean.datagram_stats();
+        assert!(re_lossy > 0, "25% drop must force retransmits");
+        assert_eq!(re_clean, 0, "lossless wire must not retransmit");
+    }
+
+    #[test]
+    fn reset_rebases_epoch_and_keeps_channels_up() {
+        let mut net = loopback(1, &UdpFaults::default());
+        net.send(0, Dir::Fwd, 1, Payload::Bytes(&[1]), 1, 0.0).unwrap();
+        net.recv(0, Dir::Fwd, 1).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        net.reset();
+        net.send(0, Dir::Fwd, 2, Payload::Bytes(&[2]), 1, 0.0).unwrap();
+        let f = net.recv(0, Dir::Fwd, 2).unwrap();
+        assert!(f.arrival < 0.1, "arrival {} includes pre-reset seconds", f.arrival);
+        assert!(net.makespan() < 0.1);
+        net.shutdown().unwrap();
+    }
+
+    #[test]
+    fn endpoint_rendezvous_two_threads_with_loss() {
+        let mut rv = Rendezvous::parse(Backend::Udp, 2, "127.0.0.1:39310").unwrap();
+        rv.plan_digest = 42;
+        let rv0 = rv.clone();
+        let faults = UdpFaults { drop_p: 0.2, seed: 3, ..UdpFaults::default() };
+        let f0 = faults.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut t = UdpTransport::endpoint(&rv0, 0, WireModel::datacenter(), &f0).unwrap();
+            for k in 0..8u64 {
+                t.send(0, Dir::Fwd, k, Payload::Bytes(&[k as u8; 300]), 300, 0.0).unwrap();
+            }
+            let mut got = Vec::new();
+            for k in 0..8u64 {
+                got.push(t.recv(0, Dir::Bwd, k).unwrap().bytes);
+            }
+            t.shutdown().unwrap();
+            got
+        });
+        let h1 = std::thread::spawn(move || {
+            let mut t = UdpTransport::endpoint(&rv, 1, WireModel::datacenter(), &faults).unwrap();
+            let mut got = Vec::new();
+            for k in 0..8u64 {
+                got.push(t.recv(0, Dir::Fwd, k).unwrap().bytes);
+                t.send(0, Dir::Bwd, k, Payload::Bytes(&[k as u8; 200]), 200, 0.0).unwrap();
+            }
+            t.shutdown().unwrap();
+            got
+        });
+        assert_eq!(h0.join().unwrap(), vec![200; 8]);
+        assert_eq!(h1.join().unwrap(), vec![300; 8]);
+    }
+
+    #[test]
+    fn endpoint_plan_mismatch_is_typed_on_both_sides() {
+        let mut rv0 = Rendezvous::parse(Backend::Udp, 2, "127.0.0.1:39320").unwrap();
+        rv0.plan_digest = 0xaa;
+        let mut rv1 = rv0.clone();
+        rv1.plan_digest = 0xbb;
+        let zero = UdpFaults::default();
+        let z0 = zero.clone();
+        let h0 = std::thread::spawn(move || {
+            UdpTransport::endpoint(&rv0, 0, WireModel::datacenter(), &z0).err()
+        });
+        let h1 = std::thread::spawn(move || {
+            UdpTransport::endpoint(&rv1, 1, WireModel::datacenter(), &zero).err()
+        });
+        for e in [h0.join().unwrap(), h1.join().unwrap()] {
+            match e {
+                Some(TransportError::PlanMismatch { link: 0, ours, theirs }) => {
+                    assert_ne!(ours, theirs)
+                }
+                other => panic!("want typed PlanMismatch, got {other:?}"),
+            }
+        }
+    }
+}

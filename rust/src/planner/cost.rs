@@ -26,7 +26,7 @@ use crate::compression::Spec;
 use crate::config::Schedule;
 use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::simexec::{self, SimSpec};
-use crate::netsim::{Dir, WireModel};
+use crate::netsim::{Dir, FaultModel, WireModel};
 
 /// One lattice entry: a spec plus its ordinal accuracy-risk score for
 /// the direction the lattice belongs to.
@@ -127,6 +127,12 @@ pub struct PlannerInputs {
     pub model: WireModel,
     /// Bounded in-flight window per link direction.
     pub capacity: usize,
+    /// Fault model of the wire, if it is lossy. The planner prices it
+    /// *deterministically* — [`FaultModel::derate`] folds the expected
+    /// retransmission cost into the wire model the search evaluates
+    /// against — rather than sampling faults inside the search, which
+    /// would make plan selection depend on one fault-draw realization.
+    pub faults: Option<FaultModel>,
 }
 
 impl PlannerInputs {
@@ -160,8 +166,23 @@ impl PlannerInputs {
         Ok(())
     }
 
+    /// The wire model the planner evaluates against: the raw link
+    /// derated by the expected cost of the fault model, when one is set.
+    pub fn effective_model(&self) -> WireModel {
+        match &self.faults {
+            Some(f) => f.derate(self.model),
+            None => self.model,
+        }
+    }
+
     /// The event-driven simulation spec for one per-channel assignment
     /// (`fwd[b]` / `bwd[b]` are the directed specs of boundary `b`).
+    ///
+    /// Loss is priced through [`PlannerInputs::effective_model`], not by
+    /// sampling: the spec carries the derated wire and `faults: None`,
+    /// so every candidate the search simulates faces the same expected
+    /// retransmission cost. Callers who want a *sampled* lossy replay
+    /// of the chosen plan set `faults` on the returned spec themselves.
     pub fn sim_spec(&self, fwd: &[Spec], bwd: &[Spec]) -> SimSpec {
         use crate::compression::wire;
         let nb = self.num_boundaries();
@@ -175,8 +196,9 @@ impl PlannerInputs {
             fwd_bytes: (0..nb).map(|b| dir_bytes(&fwd[b], self.elems[b], Dir::Fwd)).collect(),
             bwd_bytes: (0..nb).map(|b| dir_bytes(&bwd[b], self.elems[b], Dir::Bwd)).collect(),
             raw_bytes: self.elems.iter().map(|&n| wire::raw_wire_bytes(n)).collect(),
-            model: self.model,
+            model: self.effective_model(),
             capacity: self.capacity,
+            faults: None,
         }
     }
 }
@@ -326,6 +348,7 @@ mod tests {
             elems: vec![16_384; 7],
             model: WireModel::wan(),
             capacity: 4,
+            faults: None,
         };
         inp.validate().unwrap();
         assert_eq!(inp.v(), 2);
@@ -350,6 +373,7 @@ mod tests {
             elems: vec![1000],
             model: WireModel::wan(),
             capacity: 4,
+            faults: None,
         };
         let fwd = vec![Spec::parse("quant:fw4-bw8").unwrap()];
         let bwd = vec![Spec::none()];

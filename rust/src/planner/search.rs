@@ -205,8 +205,10 @@ pub fn search(inputs: &PlannerInputs) -> Result<PlanReport> {
     let (sim_makespan, bytes_per_step) = simulate_assignment(inputs, &ops, &fwd, &bwd);
 
     // analytic prediction + per-channel report columns for the plan
+    // (priced on the fault-derated wire, like the search itself)
+    let wire = inputs.effective_model();
     let hop = |spec: &Spec, b: usize, dir: Dir| -> f64 {
-        inputs.model.transfer_time(cost::dir_bytes(spec, inputs.elems[b], dir))
+        wire.transfer_time(cost::dir_bytes(spec, inputs.elems[b], dir))
     };
     let fwd_hop: Vec<f64> = (0..nb).map(|b| hop(&fwd[b], b, Dir::Fwd)).collect();
     let bwd_hop: Vec<f64> = (0..nb).map(|b| hop(&bwd[b], b, Dir::Bwd)).collect();
@@ -345,6 +347,7 @@ mod tests {
             elems: vec![16_384; 7],
             model: WireModel::wan(),
             capacity: 4,
+            faults: None,
         }
     }
 
@@ -456,6 +459,7 @@ mod tests {
             elems: vec![16_384; 3],
             model: WireModel::wan(),
             capacity: 4,
+            faults: None,
         };
         let report = search(&inputs).unwrap();
         assert!(report.wire_bound, "1f1b on WAN must be wire-bound");
@@ -467,6 +471,73 @@ mod tests {
             assert_eq!(c.chunk, 0);
             assert!(c.bytes > 0 && c.tx_s > 0.0);
         }
+    }
+
+    /// THE lossy-wire pin: pricing a 5% datagram loss into the search
+    /// (via `FaultModel::derate`) tilts the WAN plan toward *sparser*
+    /// specs — every channel's choice ships no more bytes than the
+    /// clean-wire plan's, at least one strictly fewer, and the whole
+    /// step strictly fewer — and the lossy-wire plan replayed through
+    /// the *sampled* fault simulator on the lossy wire is strictly
+    /// faster than the clean-wire plan replayed the same way.
+    #[test]
+    fn lossy_wan_plan_is_sparser_and_faster_on_the_lossy_wire() {
+        use crate::netsim::FaultModel;
+        let clean_inputs = wan_4x16_v2();
+        let mut lossy_inputs = wan_4x16_v2();
+        let fm = FaultModel { drop_p: 0.05, ..FaultModel::default() };
+        lossy_inputs.faults = Some(fm.clone());
+
+        let clean = search(&clean_inputs).unwrap();
+        let lossy = search(&lossy_inputs).unwrap();
+        assert!(lossy.wire_bound, "5% loss on WAN must stay wire-bound");
+
+        // per-channel: the lossy plan never chooses a bigger message,
+        // and somewhere it chooses a strictly smaller one
+        let mut strictly_sparser = 0;
+        for (a, b) in lossy.channels.iter().zip(&clean.channels) {
+            assert_eq!((a.boundary, a.dir), (b.boundary, b.dir));
+            assert!(
+                a.bytes <= b.bytes,
+                "boundary {} {}: lossy {}B > clean {}B",
+                a.boundary,
+                a.dir,
+                a.bytes,
+                b.bytes
+            );
+            if a.bytes < b.bytes {
+                strictly_sparser += 1;
+            }
+        }
+        assert!(strictly_sparser >= 1, "loss changed no channel");
+        assert!(
+            lossy.bytes_per_step < clean.bytes_per_step,
+            "lossy step bytes {} !< clean {}",
+            lossy.bytes_per_step,
+            clean.bytes_per_step
+        );
+
+        // replay both plans through the *sampled* fault simulator on
+        // the same lossy wire: the loss-aware plan wins. (Both replays
+        // run on the clean-priced spec + sampled faults, so this is the
+        // wire the plans would actually face, not the derated model.)
+        let ops = clean_inputs.ops().unwrap();
+        let replay = |report: &PlanReport| -> f64 {
+            let fwd: Vec<Spec> = report.plan.boundaries.iter().map(|b| b.fwd).collect();
+            let bwd: Vec<Spec> = report.plan.boundaries.iter().map(|b| b.bwd).collect();
+            let mut spec = clean_inputs.sim_spec(&fwd, &bwd);
+            spec.faults = Some(fm.clone());
+            simexec::simulate(&ops, &spec).makespan_s
+        };
+        let lossy_replay = replay(&lossy);
+        let clean_replay = replay(&clean);
+        assert!(
+            lossy_replay < clean_replay,
+            "lossy plan {lossy_replay} !< clean plan {clean_replay} on the lossy wire"
+        );
+        // and the loss-aware search stays deterministic
+        let again = search(&lossy_inputs).unwrap();
+        assert_eq!(again.plan, lossy.plan);
     }
 
     /// Channel report columns are consistent with the wire model.

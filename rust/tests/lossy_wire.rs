@@ -1,0 +1,199 @@
+//! Lossy-wire fault-injection suite: the UDP reliability layer and the
+//! `SimNet` fault models must both deliver the *exact* bytes the
+//! protocol sent — loss, duplication, and reordering may cost time and
+//! retransmits, never content. The acceptance contract is `worker
+//! --check`-style parity against the clean `SimNet` reference while
+//! ~5% of data datagrams are dropped on the floor.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mpcomp::compression::{wire, Feedback, Spec};
+use mpcomp::config::Schedule;
+use mpcomp::coordinator::feedback::FeedbackState;
+use mpcomp::coordinator::worker::{self, WorkerOpts};
+use mpcomp::netsim::{
+    Backend, Dir, FaultModel, Payload, SimNet, Transport, UdpFaults, UdpTransport, WireModel,
+};
+use mpcomp::util::rng::Rng;
+
+/// `UdpFaults::from_env` knobs are process-global; tests that set them
+/// serialize here so a parallel test never reads a half-configured
+/// environment.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+struct EnvFaults;
+
+impl EnvFaults {
+    fn set(drop_p: f64, seed: u64) -> EnvFaults {
+        std::env::set_var("MPCOMP_UDP_DROP_P", drop_p.to_string());
+        std::env::set_var("MPCOMP_UDP_FAULT_SEED", seed.to_string());
+        EnvFaults
+    }
+}
+
+impl Drop for EnvFaults {
+    fn drop(&mut self) {
+        std::env::remove_var("MPCOMP_UDP_DROP_P");
+        std::env::remove_var("MPCOMP_UDP_FAULT_SEED");
+    }
+}
+
+fn worker_opts(mode: &str, link_elems: usize, steps: usize) -> WorkerOpts {
+    WorkerOpts {
+        stages: 2,
+        mb: 4,
+        link_elems,
+        schedule: Schedule::GPipe,
+        spec: Spec::parse(mode).unwrap(),
+        plan: None,
+        seed: 5,
+        wire: WireModel::datacenter(),
+        recv_timeout_s: 10.0,
+        steps,
+    }
+}
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// delta frames across the lossy reliability layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn delta_frames_survive_drop_dup_and_reorder_on_udp() {
+    // EF21 tag-4 frames carry a generation counter and a payload
+    // digest, so any reliability bug — a lost fragment, a double
+    // apply, an out-of-order delivery — turns into a typed
+    // `GenerationSkew`/`DigestMismatch` here. A run over an aggressive
+    // fault cocktail must replay cleanly.
+    let n = 3000; // multi-fragment frames: each crosses several MTUs
+    let gens = 8u64;
+    let faults = UdpFaults { drop_p: 0.2, dup_p: 0.15, reorder_p: 0.2, seed: 11 };
+    let mut net =
+        UdpTransport::loopback(1, WireModel::datacenter(), Duration::from_secs(10), &faults)
+            .unwrap();
+
+    let mut sender = FeedbackState::new();
+    let mut frames = Vec::new();
+    for g in 0..gens {
+        let (frame, _) = sender.sender_encode(Feedback::Ef21, g, &randvec(n, 100 + g), 0.1).unwrap();
+        net.send(0, Dir::Fwd, g, Payload::Bytes(&frame), wire::raw_wire_bytes(n), 0.0).unwrap();
+        frames.push(frame);
+    }
+
+    let mut mirror = FeedbackState::new();
+    for (g, sent) in frames.iter().enumerate() {
+        let f = net.recv(0, Dir::Fwd, g as u64).unwrap();
+        let payload = f.payload.as_deref().unwrap();
+        assert_eq!(payload, &sent[..], "gen {g}: bytes must survive the lossy wire");
+        let df = wire::decode_delta(payload).unwrap();
+        mirror
+            .apply_frame(Feedback::Ef21, &df, n)
+            .unwrap_or_else(|e| panic!("gen {g}: mirror replay failed: {e:?}"));
+    }
+    assert_eq!(mirror.gen(), gens, "every generation applied exactly once");
+
+    net.shutdown().unwrap();
+    let (fresh, retransmits) = net.datagram_stats();
+    assert!(fresh > gens, "multi-fragment frames must cost more datagrams than frames");
+    assert!(retransmits > 0, "20% drop must exercise the retransmit path");
+}
+
+// ---------------------------------------------------------------------------
+// SimNet fault models: timing-only, content-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simnet_faults_delay_but_never_corrupt_deliveries() {
+    // The simulator prices loss as retransmit rounds — it must never
+    // alter payload bytes, so a faulted run's delivery log stays
+    // bit-identical to the clean run while its arrivals only slip
+    // later.
+    let n = 1200;
+    let mut sender = FeedbackState::new();
+    let mut frames = Vec::new();
+    for g in 0..6u64 {
+        let (frame, _) = sender.sender_encode(Feedback::Ef21, g, &randvec(n, 40 + g), 0.1).unwrap();
+        frames.push(frame);
+    }
+
+    let mut clean = SimNet::new(1, WireModel::wan());
+    let mut lossy = SimNet::new(1, WireModel::wan()).with_faults(FaultModel {
+        drop_p: 0.3,
+        dup_p: 0.1,
+        reorder_window: 2,
+        jitter_s: 0.002,
+        seed: 23,
+        ..FaultModel::default()
+    });
+    for (g, frame) in frames.iter().enumerate() {
+        let key = g as u64;
+        clean.send(0, Dir::Fwd, key, Payload::Bytes(frame), frame.len(), 0.0).unwrap();
+        lossy.send(0, Dir::Fwd, key, Payload::Bytes(frame), frame.len(), 0.0).unwrap();
+    }
+    // the simulator keeps tensors in-process (payload is None); the
+    // frames the protocol would replay are the sender-side copies, so
+    // fault models can shift *when* a frame lands but never *what*
+    let mut mirror = FeedbackState::new();
+    let mut slipped = 0;
+    for (g, sent) in frames.iter().enumerate() {
+        let key = g as u64;
+        let c = clean.recv(0, Dir::Fwd, key).unwrap();
+        let l = lossy.recv(0, Dir::Fwd, key).unwrap();
+        assert_eq!((c.key, c.bytes), (l.key, l.bytes), "gen {g}: same delivery log entry");
+        assert!(l.payload.is_none(), "sim keeps tensors in-process even under faults");
+        assert!(l.arrival >= c.arrival, "gen {g}: faults can only delay arrivals");
+        if l.arrival > c.arrival {
+            slipped += 1;
+        }
+        let df = wire::decode_delta(sent).unwrap();
+        mirror.apply_frame(Feedback::Ef21, &df, n).unwrap();
+    }
+    assert!(slipped > 0, "30% drop + jitter must delay at least one arrival");
+    assert_eq!(mirror.gen(), frames.len() as u64);
+}
+
+// ---------------------------------------------------------------------------
+// worker --check parity under ~5% injected loss
+// ---------------------------------------------------------------------------
+
+#[test]
+fn udp_loopback_parity_under_five_percent_loss() {
+    // The CI lossy lane's contract in-process: a full EF21 pipeline
+    // schedule over lossy UDP loopback is bit-identical to the clean
+    // `SimNet` reference.
+    let _g = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _env = EnvFaults::set(0.05, 0x1dcb);
+    let opts = worker_opts("ef21+topk:10", 300, 3);
+    let reference = worker::run_reference(&opts).unwrap();
+    let real = worker::run_loopback(&opts, Backend::Udp).unwrap();
+    worker::check(&reference, std::slice::from_ref(&real)).unwrap();
+}
+
+#[test]
+fn endpoint_rendezvous_two_threads_udp_under_loss() {
+    // Two endpoint processes (threads here) rendezvous over real UDP
+    // sockets with 5% of data datagrams dropped; each rank's mailbox
+    // log must still match the reference bit for bit.
+    let _g = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _env = EnvFaults::set(0.05, 0x2d5f);
+    let opts = worker_opts("ef21+topk:10", 2048, 3);
+    let addr = "127.0.0.1:39410".to_string();
+
+    let o0 = opts.clone();
+    let a0 = addr.clone();
+    let h0 = std::thread::spawn(move || worker::run_rank(&o0, 0, Backend::Udp, &a0));
+    let o1 = opts.clone();
+    let h1 = std::thread::spawn(move || worker::run_rank(&o1, 1, Backend::Udp, &addr));
+    let s0 = h0.join().unwrap().unwrap();
+    let s1 = h1.join().unwrap().unwrap();
+
+    let reference = worker::run_reference(&opts).unwrap();
+    worker::check(&reference, &[s0, s1]).unwrap();
+}

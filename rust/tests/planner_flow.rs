@@ -20,6 +20,7 @@ fn small_inputs() -> PlannerInputs {
         elems: vec![4096; 3],
         model: WireModel::wan(),
         capacity: 4,
+        faults: None,
     }
 }
 
