@@ -1,0 +1,71 @@
+//! Serving-path benchmarks: wall time to push the open-loop admission
+//! schedule through the forward-only pipeline, on the simulator and
+//! over real loopback sockets, per compression spec. Run with
+//! `cargo bench --bench serve`. The simulated p50/p99 request
+//! latencies are recorded alongside the wall durations so the smoke
+//! lane's `BENCH_serve.json` tracks tail-latency regressions too.
+
+use std::time::{Duration, Instant};
+
+use mpcomp::compression::Spec;
+use mpcomp::config::{FaultOpts, Schedule, ServeKnobs, WireOpts};
+use mpcomp::coordinator::serve::ServeOpts;
+use mpcomp::netsim::Backend;
+use mpcomp::util::bench::{header, Suite};
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+
+    let requests = if suite.quick() { 32 } else { 128 };
+    let knobs = ServeKnobs { rate_rps: 400.0, requests, max_batch: 4, deadline_s: 0.01 };
+    let opts = |spec: &str, backend: Backend| ServeOpts {
+        stages: 4,
+        schedule: Schedule::GPipe,
+        link_elems: 16_384,
+        fwd_op_s: 0.0,
+        seed: 7,
+        knobs: knobs.clone(),
+        wire: WireOpts { profile: "datacenter".into(), backend, ..WireOpts::default() },
+        fault: FaultOpts::default(),
+        plan: None,
+        spec: Spec::parse(spec).expect("spec"),
+    };
+
+    // simulator: the planner's inner loop — wall time is the search cost
+    for spec in ["none", "topk:10", "ef21+topk:10"] {
+        let o = opts(spec, Backend::Sim);
+        let t = Instant::now();
+        let (report, _) = o.run().expect("serve sim");
+        let dur = t.elapsed();
+        let label = spec.replace(':', "_").replace('+', "_");
+        suite.record(&format!("serve_sim/{label}"), dur);
+        suite.record(&format!("serve_sim/{label}/p50"), Duration::from_secs_f64(report.p50_s));
+        suite.record(&format!("serve_sim/{label}/p99"), Duration::from_secs_f64(report.p99_s));
+        println!(
+            "  sim {spec}: {requests} req in {:.1} ms wall, p50 {:.2} ms / p99 {:.2} ms, \
+             sat {:.0} req/s",
+            dur.as_secs_f64() * 1e3,
+            report.p50_s * 1e3,
+            report.p99_s * 1e3,
+            report.saturation_rps,
+        );
+    }
+
+    // real sockets: both pipeline ends in-process over UDS loopback
+    for spec in ["topk:10", "ef21+topk:10"] {
+        let o = opts(spec, Backend::Uds);
+        let t = Instant::now();
+        let (report, _) = o.run().expect("serve uds");
+        let dur = t.elapsed();
+        let label = spec.replace(':', "_").replace('+', "_");
+        suite.record(&format!("serve_uds/{label}"), dur);
+        println!(
+            "  uds {spec}: {requests} req in {:.1} ms wall, {} B on the wire",
+            dur.as_secs_f64() * 1e3,
+            report.bytes,
+        );
+    }
+
+    suite.finish();
+}

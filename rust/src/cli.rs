@@ -58,6 +58,22 @@ impl Args {
             Some(v) => Ok(Some(v.parse()?)),
         }
     }
+
+    pub fn f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse()?)),
+        }
+    }
+
+    /// All `(flag, value)` pairs in flag-name order (boolean switches
+    /// yield an empty value; repeated flags yield one pair each). The
+    /// typed `RunSpec` surface walks this to map every flag onto a key.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags
+            .iter()
+            .flat_map(|(k, vs)| vs.iter().map(move |v| (k.as_str(), v.as_str())))
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +102,18 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&argv("x --seeds"), &["seeds"]).is_err());
+    }
+
+    #[test]
+    fn entries_walk_every_flag_occurrence() {
+        let a = Args::parse(&argv("serve --full --set a=1 --set b=2 --wire.backend=udp"), &["set"])
+            .unwrap();
+        let got: Vec<(String, String)> =
+            a.entries().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        assert!(got.contains(&("full".into(), "".into())));
+        assert!(got.contains(&("set".into(), "a=1".into())));
+        assert!(got.contains(&("set".into(), "b=2".into())));
+        assert!(got.contains(&("wire.backend".into(), "udp".into())));
+        assert_eq!(a.f64("missing").unwrap(), None);
     }
 }

@@ -1,7 +1,10 @@
 //! Experiment/run configuration: TOML files + CLI overrides, sharing the
 //! paper's vocabulary for compression modes (see `compression::spec`).
 
+pub mod opts;
 pub mod toml;
+
+pub use opts::{FaultOpts, RunSpec, ServeKnobs, Surface, WireOpts};
 
 use anyhow::{bail, Result};
 
@@ -177,6 +180,44 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
+    /// Every key [`TrainConfig::set`] accepts — the authoritative
+    /// catalog quoted by unknown-key errors (both here and on the typed
+    /// [`RunSpec`] surface, which adds its own namespaced keys on top).
+    pub const KEYS: &'static [&'static str] = &[
+        "model",
+        "artifacts_dir",
+        "results_dir",
+        "compression",
+        "plan",
+        "compress_impl",
+        "optimizer",
+        "schedule",
+        "epochs",
+        "batch_size",
+        "lr",
+        "cosine_tmax",
+        "seed",
+        "eval_every",
+        "train_size",
+        "test_size",
+        "noise",
+        "wire",
+        "backend",
+        "recv_timeout_s",
+        "sim_op_time",
+        "sim_queue_cap",
+        "sim_drop_p",
+        "sim_dup_p",
+        "sim_reorder_window",
+        "sim_jitter_s",
+        "sim_stragglers",
+        "sim_straggler_factor",
+        "sim_fault_seed",
+        "init_checkpoint",
+        "save_checkpoint",
+        "snapshot_epoch",
+    ];
+
     pub fn defaults(model: &str) -> TrainConfig {
         TrainConfig {
             model: model.to_string(),
@@ -312,7 +353,7 @@ impl TrainConfig {
             "init_checkpoint" => self.init_checkpoint = Some(value.into()),
             "save_checkpoint" => self.save_checkpoint = Some(value.into()),
             "snapshot_epoch" => self.snapshot_epoch = Some(value.parse()?),
-            _ => bail!("unknown config key '{key}'"),
+            _ => bail!("unknown config key '{key}'; valid keys: {}", Self::KEYS.join(", ")),
         }
         Ok(())
     }
@@ -322,20 +363,37 @@ impl TrainConfig {
         "none".to_string()
     }
 
-    /// The simulated-wire fault model assembled from the `sim_*` fault
-    /// knobs, or `None` when every knob sits at its clean default —
-    /// the clean path draws no random numbers and stays bit-identical.
-    pub fn fault_model(&self) -> Option<crate::netsim::FaultModel> {
-        let fm = crate::netsim::FaultModel {
+    /// The shared fault-option struct assembled from the `sim_*` knobs
+    /// (the one copy `exp`, `worker`, `serve`, and the planner all
+    /// derive their fault handling from).
+    pub fn fault_opts(&self) -> FaultOpts {
+        FaultOpts {
             drop_p: self.sim_drop_p,
             dup_p: self.sim_dup_p,
             reorder_window: self.sim_reorder_window,
             jitter_s: self.sim_jitter_s,
-            straggler_ranks: self.sim_stragglers.clone(),
+            stragglers: self.sim_stragglers.clone(),
             straggler_factor: self.sim_straggler_factor,
             seed: self.sim_fault_seed,
-        };
-        (!fm.is_zero()).then_some(fm)
+        }
+    }
+
+    /// The shared wire-option struct assembled from the wire/backend
+    /// knobs (fails on an unknown backend name).
+    pub fn wire_opts(&self) -> Result<WireOpts> {
+        Ok(WireOpts {
+            profile: self.wire.clone(),
+            backend: crate::netsim::Backend::parse(&self.backend)?,
+            capacity: self.sim_queue_cap,
+            recv_timeout_s: self.recv_timeout_s,
+        })
+    }
+
+    /// The simulated-wire fault model assembled from the `sim_*` fault
+    /// knobs, or `None` when every knob sits at its clean default —
+    /// the clean path draws no random numbers and stays bit-identical.
+    pub fn fault_model(&self) -> Option<crate::netsim::FaultModel> {
+        self.fault_opts().model()
     }
 
     /// Cosine-annealed learning rate at `epoch` (paper's scheduler).
@@ -439,6 +497,29 @@ mod tests {
         assert_eq!(fm.drop_p, 0.01);
         assert_eq!(fm.reorder_window, 8);
         assert_eq!(fm.straggler_ranks, vec![0]);
+    }
+
+    #[test]
+    fn keys_catalog_covers_every_set_arm() {
+        let mut c = TrainConfig::defaults("cnn16");
+        for key in TrainConfig::KEYS {
+            let val = match *key {
+                "compression" => "topk:10",
+                "plan" => "auto",
+                "compress_impl" => "native",
+                "optimizer" => "sgd",
+                "schedule" => "1f1b",
+                "model" | "artifacts_dir" | "results_dir" | "wire" | "backend"
+                | "init_checkpoint" | "save_checkpoint" => "x",
+                "sim_stragglers" => "1,2",
+                "lr" | "noise" | "recv_timeout_s" | "sim_op_time" | "sim_drop_p" | "sim_dup_p"
+                | "sim_jitter_s" | "sim_straggler_factor" => "0.5",
+                _ => "3",
+            };
+            c.set(key, val).unwrap_or_else(|e| panic!("key {key}: {e}"));
+        }
+        let err = c.set("bogus", "1").unwrap_err().to_string();
+        assert!(err.contains("valid keys:") && err.contains("sim_drop_p"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,612 @@
+//! The typed run-configuration surface: one [`RunSpec`] builder that
+//! `train`, `worker`, `plan`, `exp`, and `serve` all consume, plus the
+//! shared [`WireOpts`] / [`FaultOpts`] structs that replace the wire and
+//! fault field clusters previously duplicated across `ExpOpts`,
+//! `WorkerOpts`, and the ad-hoc planner flags.
+//!
+//! Every knob is a typed key — the training keys (`epochs`, `seed`,
+//! `compression`, ...) plus namespaced `wire.*`, `fault.*`, `serve.*`,
+//! and pipeline-shape keys — settable on any subcommand as
+//! `--key=value`. Unknown keys fail with the full key catalog. Old
+//! spellings (`--set key=val`, the scattered fault flags,
+//! `--virtual-stages`) keep working through a deprecation shim that
+//! warns once per spelling per process.
+
+use std::collections::BTreeSet;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::config::TrainConfig;
+use crate::netsim::{Backend, FaultModel, WireModel};
+
+/// Wire/transport options shared by every run mode — the single copy of
+/// the backend/capacity/timeout cluster that `ExpOpts` and `WorkerOpts`
+/// used to carry separately (and `serve` would have made a fourth).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireOpts {
+    /// Wire profile name (`wan`, `datacenter`/`dc`).
+    pub profile: String,
+    /// Transport backend carrying the run's messages.
+    pub backend: Backend,
+    /// Bounded in-flight message window per link direction.
+    pub capacity: usize,
+    /// Receive window (seconds) before a typed timeout error.
+    pub recv_timeout_s: f64,
+}
+
+impl Default for WireOpts {
+    fn default() -> Self {
+        WireOpts {
+            profile: "wan".into(),
+            backend: Backend::Sim,
+            capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
+            recv_timeout_s: 20.0,
+        }
+    }
+}
+
+impl WireOpts {
+    /// The parsed bandwidth/latency model of `profile`.
+    pub fn model(&self) -> Result<WireModel> {
+        WireModel::parse(&self.profile)
+    }
+}
+
+/// Simulated-wire fault knobs, shared by every run mode. `exp
+/// schedule`'s fault flags and the planner's lossy-wire pricing both
+/// derive from this one struct instead of re-parsing their own copies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultOpts {
+    /// Per-datagram loss probability on simulated links.
+    pub drop_p: f64,
+    /// Duplicate probability on simulated links.
+    pub dup_p: f64,
+    /// Resequencing window depth (0 = off).
+    pub reorder_window: usize,
+    /// Uniform arrival jitter bound (seconds).
+    pub jitter_s: f64,
+    /// Ranks whose sends serialize `straggler_factor` times slower.
+    pub stragglers: Vec<usize>,
+    /// Send slowdown for straggler ranks (>= 1).
+    pub straggler_factor: f64,
+    /// PRNG seed of the fault draws.
+    pub seed: u64,
+}
+
+impl Default for FaultOpts {
+    fn default() -> Self {
+        let fm = FaultModel::default();
+        FaultOpts {
+            drop_p: fm.drop_p,
+            dup_p: fm.dup_p,
+            reorder_window: fm.reorder_window,
+            jitter_s: fm.jitter_s,
+            stragglers: fm.straggler_ranks,
+            straggler_factor: fm.straggler_factor,
+            seed: fm.seed,
+        }
+    }
+}
+
+impl FaultOpts {
+    /// Assemble the [`FaultModel`], or `None` when every knob sits at
+    /// its clean default — the clean path draws no random numbers.
+    pub fn model(&self) -> Option<FaultModel> {
+        let fm = FaultModel {
+            drop_p: self.drop_p,
+            dup_p: self.dup_p,
+            reorder_window: self.reorder_window,
+            jitter_s: self.jitter_s,
+            straggler_ranks: self.stragglers.clone(),
+            straggler_factor: self.straggler_factor,
+            seed: self.seed,
+        };
+        (!fm.is_zero()).then_some(fm)
+    }
+}
+
+/// Admission-control knobs of the serving mode (L6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeKnobs {
+    /// Open-loop Poisson arrival rate (requests/second).
+    pub rate_rps: f64,
+    /// Total requests the generator emits.
+    pub requests: usize,
+    /// Admission dispatches a microbatch once it holds this many
+    /// requests...
+    pub max_batch: usize,
+    /// ...or once the oldest queued request has waited this long.
+    pub deadline_s: f64,
+}
+
+impl Default for ServeKnobs {
+    fn default() -> Self {
+        ServeKnobs { rate_rps: 200.0, requests: 64, max_batch: 8, deadline_s: 0.02 }
+    }
+}
+
+/// Which subcommand a [`RunSpec`] is being built for. Sets the
+/// per-surface shape defaults (worker's tiny 2x4 loopback default vs.
+/// the paper's 4x16 shape) and which control flags the driver owns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Surface {
+    /// `mpcomp train` / `mpcomp eval`.
+    Train,
+    /// `mpcomp worker` (multi-process parity harness).
+    Worker,
+    /// `mpcomp plan` (offline spec search).
+    Plan,
+    /// `mpcomp exp` (ablation tables).
+    Exp,
+    /// `mpcomp serve` (batched-inference serving).
+    Serve,
+}
+
+/// The unified typed run configuration every subcommand consumes.
+///
+/// The training keys live in the embedded [`TrainConfig`] (which also
+/// owns the wire/fault knobs — `wire.*` and `fault.*` keys write
+/// through to its `wire`/`backend`/`sim_*` fields, so TOML configs and
+/// the typed surface can never disagree). The pipeline-shape and serve
+/// knobs used by the synthetic modes live alongside it.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// The subcommand this spec was built for.
+    pub surface: Surface,
+    /// Training-run configuration (also holds the wire/fault knobs).
+    pub train: TrainConfig,
+    /// Pipeline ranks for the synthetic modes (worker/plan/exp/serve).
+    pub stages: usize,
+    /// Microbatches per step for the synthetic modes.
+    pub mb: usize,
+    /// Elements crossing each stage boundary in the synthetic modes.
+    pub link_elems: usize,
+    /// Modelled forward op cost (seconds, per chunk before /v scaling).
+    pub fwd_op_s: f64,
+    /// Modelled backward op cost (seconds).
+    pub bwd_op_s: f64,
+    /// Charge GPipe-style recomputation on backward ops (`exp` tables).
+    pub recompute: bool,
+    /// Steps the worker harness repeats.
+    pub steps: usize,
+    /// Serving-mode admission knobs.
+    pub serve: ServeKnobs,
+}
+
+/// Keys owned by [`RunSpec`] itself; everything else delegates to
+/// [`TrainConfig::KEYS`] (after the `wire.*`/`fault.*` renames).
+pub const RUN_KEYS: &[&str] = &[
+    "stages",
+    "mb",
+    "link_elems",
+    "fwd_op_s",
+    "bwd_op_s",
+    "recompute",
+    "steps",
+    "wire.profile",
+    "wire.backend",
+    "wire.capacity",
+    "wire.recv_timeout_s",
+    "fault.drop_p",
+    "fault.dup_p",
+    "fault.reorder_window",
+    "fault.jitter_s",
+    "fault.stragglers",
+    "fault.straggler_factor",
+    "fault.seed",
+    "serve.rate",
+    "serve.requests",
+    "serve.max_batch",
+    "serve.deadline_s",
+];
+
+/// Map a namespaced `wire.*`/`fault.*` key onto the [`TrainConfig`]
+/// field that stores it; other keys pass through unchanged.
+fn train_key(key: &str) -> &str {
+    match key {
+        "wire.profile" => "wire",
+        "wire.backend" => "backend",
+        "wire.capacity" => "sim_queue_cap",
+        "wire.recv_timeout_s" => "recv_timeout_s",
+        "fault.drop_p" => "sim_drop_p",
+        "fault.dup_p" => "sim_dup_p",
+        "fault.reorder_window" => "sim_reorder_window",
+        "fault.jitter_s" => "sim_jitter_s",
+        "fault.stragglers" => "sim_stragglers",
+        "fault.straggler_factor" => "sim_straggler_factor",
+        "fault.seed" => "sim_fault_seed",
+        other => other,
+    }
+}
+
+/// The full sorted key catalog quoted by unknown-key errors.
+pub fn key_catalog() -> Vec<&'static str> {
+    let mut keys: Vec<&'static str> =
+        RUN_KEYS.iter().chain(TrainConfig::KEYS.iter()).copied().collect();
+    keys.sort_unstable();
+    keys
+}
+
+fn parsed<T: std::str::FromStr>(key: &str, value: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| anyhow::anyhow!("bad value '{value}' for '{key}': {e}"))
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value {
+        "true" | "1" | "" => Ok(true),
+        "false" | "0" => Ok(false),
+        _ => bail!("bad value '{value}' for '{key}': want true/false"),
+    }
+}
+
+/// Print one deprecation warning per old spelling per process.
+fn warn_once(spelling: &str, instead: &str) {
+    static WARNED: OnceLock<Mutex<BTreeSet<String>>> = OnceLock::new();
+    let warned = WARNED.get_or_init(|| Mutex::new(BTreeSet::new()));
+    if warned.lock().unwrap().insert(spelling.to_string()) {
+        eprintln!("warning: {spelling} is deprecated; use {instead}");
+    }
+}
+
+impl RunSpec {
+    /// A spec at the `surface`'s defaults for `model`.
+    pub fn new(model: &str, surface: Surface) -> RunSpec {
+        let mut train = TrainConfig::defaults(model);
+        let (stages, mb, link_elems) = match surface {
+            Surface::Worker => (2, 4, 256),
+            _ => (4, 16, 16_384),
+        };
+        if matches!(surface, Surface::Worker | Surface::Serve) {
+            // the synthetic multi-process surfaces keep their wider
+            // legacy receive window
+            train.recv_timeout_s = 20.0;
+        }
+        RunSpec {
+            surface,
+            train,
+            stages,
+            mb,
+            link_elems,
+            fwd_op_s: 0.020,
+            bwd_op_s: 0.040,
+            recompute: true,
+            steps: 1,
+            serve: ServeKnobs::default(),
+        }
+    }
+
+    /// Apply one typed `key=value`. Hyphens and underscores are
+    /// interchangeable in `key`; unknown keys fail with the full
+    /// catalog.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let key = key.replace('-', "_");
+        match key.as_str() {
+            "stages" => self.stages = parsed(&key, value)?,
+            "mb" => self.mb = parsed(&key, value)?,
+            "link_elems" => self.link_elems = parsed(&key, value)?,
+            "fwd_op_s" => self.fwd_op_s = parsed(&key, value)?,
+            "bwd_op_s" => self.bwd_op_s = parsed(&key, value)?,
+            "recompute" => self.recompute = parse_bool(&key, value)?,
+            "steps" => self.steps = parsed(&key, value)?,
+            "serve.rate" => self.serve.rate_rps = parsed(&key, value)?,
+            "serve.requests" => self.serve.requests = parsed(&key, value)?,
+            "serve.max_batch" => self.serve.max_batch = parsed(&key, value)?,
+            "serve.deadline_s" => self.serve.deadline_s = parsed(&key, value)?,
+            // eager validation for the namespaced wire keys (the plain
+            // TrainConfig spellings stay lazily validated for TOML
+            // compatibility)
+            "wire.profile" => {
+                WireModel::parse(value)?;
+                self.train.wire = value.into();
+            }
+            "wire.backend" => {
+                Backend::parse(value)?;
+                self.train.backend = value.into();
+            }
+            other => {
+                let tk = train_key(other);
+                if !TrainConfig::KEYS.contains(&tk) {
+                    bail!(
+                        "unknown config key '{other}'; valid keys: {}",
+                        key_catalog().join(", ")
+                    );
+                }
+                self.train.set(tk, value)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI flag surface into a typed spec. Typed keys arrive
+    /// as `--key=value`; ergonomic shorthands (`--stages`, `--wire`,
+    /// `--backend`, ...) map onto the same keys; deprecated spellings
+    /// (`--set`, the scattered fault flags, `--virtual-stages`) go
+    /// through the warn-once shim. Explicit flags override `--set`
+    /// pairs, which override `--config` file values.
+    pub fn from_args(args: &Args, surface: Surface) -> Result<RunSpec> {
+        let model = args.get("model").unwrap_or("cnn16");
+        let mut spec = RunSpec::new(model, surface);
+        if let Some(path) = args.get("config") {
+            spec.train = TrainConfig::from_file(path, &[])?;
+        }
+        if args.has("virtual-stages") && args.has("schedule") {
+            bail!("--virtual-stages and --schedule are mutually exclusive");
+        }
+        // legacy --set pairs first: explicit flags override them
+        for kv in args.get_all("set") {
+            let (k, v) = kv.split_once('=').context("--set wants key=value")?;
+            warn_once("--set", "--<key>=<value>");
+            spec.set(k, v)?;
+        }
+        for (flag, value) in args.entries() {
+            match flag {
+                // control flags owned by the subcommand drivers
+                "config" | "set" | "out" | "rank" | "rendezvous" | "reference" | "check"
+                | "compare-bytes" | "full" | "curves" | "seeds" | "checkpoint" | "objective"
+                | "print-config" | "serve" => {}
+                "plan" if matches!(surface, Surface::Worker | Surface::Serve) => {}
+                // deprecated spellings -> typed keys (warn once each)
+                "drop-p" => {
+                    warn_once("--drop-p", "--fault.drop-p=<p>");
+                    spec.set("fault.drop_p", value)?;
+                }
+                "dup-p" => {
+                    warn_once("--dup-p", "--fault.dup-p=<p>");
+                    spec.set("fault.dup_p", value)?;
+                }
+                "reorder-window" => {
+                    warn_once("--reorder-window", "--fault.reorder-window=<n>");
+                    spec.set("fault.reorder_window", value)?;
+                }
+                "jitter-ms" => {
+                    warn_once("--jitter-ms", "--fault.jitter-s=<seconds>");
+                    let ms: f64 = parsed(flag, value)?;
+                    spec.set("fault.jitter_s", &format!("{}", ms / 1e3))?;
+                }
+                "stragglers" => {
+                    warn_once("--stragglers", "--fault.stragglers=<ranks>");
+                    spec.set("fault.stragglers", value)?;
+                }
+                "straggler-factor" => {
+                    warn_once("--straggler-factor", "--fault.straggler-factor=<x>");
+                    spec.set("fault.straggler_factor", value)?;
+                }
+                "fault-seed" => {
+                    warn_once("--fault-seed", "--fault.seed=<n>");
+                    spec.set("fault.seed", value)?;
+                }
+                "virtual-stages" => {
+                    warn_once("--virtual-stages", "--schedule=interleaved:<v>");
+                    let v: usize = parsed(flag, value)?;
+                    if v == 0 {
+                        bail!("--virtual-stages wants v >= 1");
+                    }
+                    spec.set("schedule", &format!("interleaved:{v}"))?;
+                }
+                // ergonomic shorthands for the typed keys
+                "compression" => spec.set("compression", value)?,
+                "impl" => spec.set("compress_impl", value)?,
+                "artifacts" => spec.set("artifacts_dir", value)?,
+                "results" => spec.set("results_dir", value)?,
+                "save-checkpoint" => spec.set("save_checkpoint", value)?,
+                "wire" => spec.set("wire.profile", value)?,
+                "backend" => spec.set("wire.backend", value)?,
+                "capacity" => spec.set("wire.capacity", value)?,
+                "recv-timeout" => spec.set("wire.recv_timeout_s", value)?,
+                "fwd-op-ms" => spec.fwd_op_s = parsed::<f64>(flag, value)? / 1e3,
+                "bwd-op-ms" => spec.bwd_op_s = parsed::<f64>(flag, value)? / 1e3,
+                "no-recompute" => spec.recompute = false,
+                "rate" => spec.set("serve.rate", value)?,
+                "requests" => spec.set("serve.requests", value)?,
+                "max-batch" => spec.set("serve.max_batch", value)?,
+                "deadline-ms" => spec.serve.deadline_s = parsed::<f64>(flag, value)? / 1e3,
+                // anything else must be a typed key (--key=value form)
+                other => spec.set(other, value)?,
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The shared wire options derived from the training keys.
+    pub fn wire_opts(&self) -> Result<WireOpts> {
+        self.train.wire_opts()
+    }
+
+    /// The shared fault options derived from the `sim_*` keys.
+    pub fn fault_opts(&self) -> FaultOpts {
+        self.train.fault_opts()
+    }
+
+    /// The resolved configuration as `key = value` lines (the
+    /// `mpcomp train --print-config` surface; stable order).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let t = &self.train;
+        let f = self.fault_opts();
+        let rows: Vec<(&str, String)> = vec![
+            ("model", t.model.clone()),
+            ("compression", t.spec.canon()),
+            ("plan", t.plan.name()),
+            ("schedule", t.schedule.name()),
+            ("epochs", t.epochs.to_string()),
+            ("seed", t.seed.to_string()),
+            ("stages", self.stages.to_string()),
+            ("mb", self.mb.to_string()),
+            ("link_elems", self.link_elems.to_string()),
+            ("fwd_op_s", self.fwd_op_s.to_string()),
+            ("bwd_op_s", self.bwd_op_s.to_string()),
+            ("recompute", self.recompute.to_string()),
+            ("steps", self.steps.to_string()),
+            ("wire.profile", t.wire.clone()),
+            ("wire.backend", t.backend.clone()),
+            ("wire.capacity", t.sim_queue_cap.to_string()),
+            ("wire.recv_timeout_s", t.recv_timeout_s.to_string()),
+            ("fault.drop_p", f.drop_p.to_string()),
+            ("fault.dup_p", f.dup_p.to_string()),
+            ("fault.reorder_window", f.reorder_window.to_string()),
+            ("fault.jitter_s", f.jitter_s.to_string()),
+            (
+                "fault.stragglers",
+                f.stragglers.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","),
+            ),
+            ("fault.straggler_factor", f.straggler_factor.to_string()),
+            ("fault.seed", f.seed.to_string()),
+            ("serve.rate", self.serve.rate_rps.to_string()),
+            ("serve.requests", self.serve.requests.to_string()),
+            ("serve.max_batch", self.serve.max_batch.to_string()),
+            ("serve.deadline_s", self.serve.deadline_s.to_string()),
+        ];
+        let mut s = String::new();
+        for (k, v) in rows {
+            let _ = writeln!(s, "{k} = {v}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn parse(s: &str, surface: Surface) -> Result<RunSpec> {
+        let value_flags = [
+            "set",
+            "model",
+            "compression",
+            "schedule",
+            "epochs",
+            "seed",
+            "stages",
+            "mb",
+            "drop-p",
+            "jitter-ms",
+            "virtual-stages",
+            "backend",
+            "wire",
+            "capacity",
+            "rate",
+            "max-batch",
+            "deadline-ms",
+            "fwd-op-ms",
+        ];
+        RunSpec::from_args(&Args::parse(&argv(s), &value_flags)?, surface)
+    }
+
+    #[test]
+    fn unknown_key_quotes_the_full_catalog() {
+        let mut spec = RunSpec::new("cnn16", Surface::Train);
+        let err = spec.set("bogus_knob", "1").unwrap_err().to_string();
+        assert!(err.contains("unknown config key 'bogus_knob'"), "{err}");
+        for k in ["serve.rate", "wire.backend", "fault.drop_p", "sim_drop_p", "epochs"] {
+            assert!(err.contains(k), "catalog missing {k}: {err}");
+        }
+        // typo'd flags hit the same catalog through from_args
+        let err = parse("serve --bogus-knob=1", Surface::Serve).unwrap_err().to_string();
+        assert!(err.contains("unknown config key 'bogus_knob'"), "{err}");
+    }
+
+    #[test]
+    fn namespaced_keys_write_through_to_train_config() {
+        let mut spec = RunSpec::new("cnn16", Surface::Serve);
+        spec.set("wire.backend", "udp").unwrap();
+        spec.set("wire.profile", "datacenter").unwrap();
+        spec.set("wire.capacity", "2").unwrap();
+        spec.set("fault.drop-p", "0.05").unwrap();
+        spec.set("serve.rate", "400").unwrap();
+        assert_eq!(spec.train.backend, "udp");
+        assert_eq!(spec.train.wire, "datacenter");
+        assert_eq!(spec.train.sim_queue_cap, 2);
+        assert_eq!(spec.train.sim_drop_p, 0.05);
+        assert_eq!(spec.serve.rate_rps, 400.0);
+        // namespaced wire keys validate eagerly
+        assert!(spec.set("wire.backend", "carrier-pigeon").is_err());
+        assert!(spec.set("wire.profile", "carrier-pigeon").is_err());
+        let w = spec.wire_opts().unwrap();
+        assert_eq!(w.backend, Backend::Udp);
+        assert_eq!(w.capacity, 2);
+        assert_eq!(spec.fault_opts().model().unwrap().drop_p, 0.05);
+    }
+
+    #[test]
+    fn legacy_spellings_map_through_the_shim() {
+        let spec =
+            parse("worker --drop-p 0.05 --virtual-stages 2 --set epochs=3", Surface::Worker)
+                .unwrap();
+        assert_eq!(spec.train.sim_drop_p, 0.05);
+        assert_eq!(spec.train.schedule.name(), "interleaved:2");
+        assert_eq!(spec.train.epochs, 3);
+        // worker surface keeps its legacy shape defaults
+        assert_eq!((spec.stages, spec.mb, spec.link_elems), (2, 4, 256));
+        assert_eq!(spec.train.recv_timeout_s, 20.0);
+    }
+
+    #[test]
+    fn explicit_flags_override_set_pairs() {
+        let spec = parse("train --set epochs=3 --epochs 5", Surface::Train).unwrap();
+        assert_eq!(spec.train.epochs, 5);
+        let spec = parse("train --set seed=9 --seed=11", Surface::Train).unwrap();
+        assert_eq!(spec.train.seed, 11);
+    }
+
+    #[test]
+    fn serve_knob_shorthands() {
+        let spec = parse(
+            "serve --rate 400 --max-batch 4 --deadline-ms 10 --serve.requests=128",
+            Surface::Serve,
+        )
+        .unwrap();
+        assert_eq!(spec.serve.rate_rps, 400.0);
+        assert_eq!(spec.serve.max_batch, 4);
+        assert!((spec.serve.deadline_s - 0.010).abs() < 1e-12);
+        assert_eq!(spec.serve.requests, 128);
+        assert_eq!((spec.stages, spec.mb), (4, 16));
+    }
+
+    #[test]
+    fn schedule_conflicts_are_rejected() {
+        assert!(parse("worker --virtual-stages 2 --schedule gpipe", Surface::Worker).is_err());
+        assert!(parse("worker --virtual-stages 0", Surface::Worker).is_err());
+    }
+
+    #[test]
+    fn jitter_shim_converts_ms_to_seconds() {
+        let spec = parse("exp --jitter-ms 2.5", Surface::Exp).unwrap();
+        assert!((spec.train.sim_jitter_s - 0.0025).abs() < 1e-12);
+        let fm = spec.fault_opts().model().unwrap();
+        assert!((fm.jitter_s - 0.0025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn describe_lists_the_resolved_keys() {
+        let spec = RunSpec::new("cnn16", Surface::Serve);
+        let d = spec.describe();
+        assert!(d.contains("model = cnn16"), "{d}");
+        assert!(d.contains("wire.backend = sim"), "{d}");
+        assert!(d.contains("serve.rate = 200"), "{d}");
+        assert!(d.contains("stages = 4"), "{d}");
+    }
+
+    #[test]
+    fn catalog_is_sorted_and_deduplicated() {
+        let cat = key_catalog();
+        for w in cat.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+        // every namespaced key resolves to a real TrainConfig key
+        for k in RUN_KEYS.iter().filter(|k| k.contains('.')) {
+            let tk = train_key(k);
+            if tk != *k {
+                assert!(TrainConfig::KEYS.contains(&tk), "{k} -> {tk} missing");
+            }
+        }
+    }
+}

@@ -10,6 +10,9 @@
 //! * [`trainer`] — the end-to-end training loop + dual evaluation
 //! * [`worker`] — one stage per OS process over the real-socket
 //!   transport (`mpcomp worker`), with the sim/real parity checker
+//! * [`serve`] — pipelined batched-inference serving over the same
+//!   compressed links (L6, `mpcomp serve`): open-loop arrivals,
+//!   deadline/batch-bound admission, tail-latency accounting
 //!
 //! Trainer execution is deterministic and single-threaded: the xla
 //! wrappers are not `Send`, and the testbed has one core. Every
@@ -24,12 +27,14 @@
 pub mod feedback;
 pub mod link;
 pub mod pipeline;
+pub mod serve;
 pub mod simexec;
 pub mod stage;
 pub mod trainer;
 pub mod worker;
 
 pub use link::CompressedLink;
+pub use serve::{ServeOpts, ServeReport};
 pub use simexec::{simulate, SimReport, SimSpec};
 pub use stage::{StageInput, StageRunner};
 pub use trainer::Trainer;

@@ -365,6 +365,10 @@ impl Trainer {
         m.feedback_memory_bytes = self.feedback_memory_bytes() as u64;
         m.peak_stash_bytes =
             pipeline::peak_stash_bytes(&self.schedule()?, self.n_ranks, &self.act_bytes) as u64;
+        if let Some((fresh, retx)) = self.net.datagram_stats() {
+            m.datagrams_fresh = fresh;
+            m.datagrams_retransmit = retx;
+        }
         Ok(m)
     }
 

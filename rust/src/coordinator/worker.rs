@@ -42,12 +42,13 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::compression::{ops, wire, Feedback, Method, Spec};
-use crate::config::Schedule;
+use crate::config::{Schedule, ServeKnobs, WireOpts};
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
 use crate::coordinator::pipeline;
+use crate::coordinator::serve;
 use crate::netsim::{
-    Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, UdpFaults,
-    UdpTransport, WireModel,
+    arrivals, Backend, Dir, Payload, RealTransport, Rendezvous, SimNet, Transport, UdpFaults,
+    UdpTransport,
 };
 use crate::planner::Plan;
 use crate::util::json::Json;
@@ -78,10 +79,12 @@ pub struct WorkerOpts {
     pub plan: Option<Plan>,
     /// Seed for the deterministic synthetic message tensors.
     pub seed: u64,
-    /// Wire model used by the `SimNet` reference replay.
-    pub wire: WireModel,
-    /// Receive window (seconds) before a typed timeout error.
-    pub recv_timeout_s: f64,
+    /// Shared wire options: `profile` is the model the `SimNet`
+    /// reference replay simulates, `recv_timeout_s` bounds every real
+    /// mailbox wait. The backend is a harness *argument* (reference vs.
+    /// loopback vs. rank entry points), so `wire.backend` is unused
+    /// here.
+    pub wire: WireOpts,
     /// Schedule repetitions: microbatch ids repeat across steps, so
     /// AQ-SGD bootstraps once and then ships deltas.
     pub steps: usize,
@@ -230,22 +233,39 @@ fn channel_feedback(fb: Feedback, dir: Dir) -> Feedback {
     }
 }
 
-/// Walk the schedule (repeated `steps` times), executing send/recv for
-/// every rank `mine` accepts, and log what each mailbox saw. With
-/// `mine = |_| true` and a `SimNet` (or loopback real transport) this
-/// is the single-process replay; with `mine = |r| r == rank` over an
-/// endpoint transport it is one rank of a multi-process run.
+/// Walk the training schedule (repeated `steps` times): the ops come
+/// from [`pipeline::ops_for`] and the microbatch count from `opts.mb`.
+fn run_stages(
+    opts: &WorkerOpts,
+    plan: &Plan,
+    net: &mut dyn Transport,
+    mine: &dyn Fn(usize) -> bool,
+) -> Result<Vec<MailboxLog>> {
+    let ops = pipeline::ops_for(opts.schedule, opts.stages, opts.mb)?;
+    run_ops(opts, plan, net, mine, &ops, opts.mb)
+}
+
+/// Walk an explicit op list (repeated `steps` times), executing
+/// send/recv for every rank `mine` accepts, and log what each mailbox
+/// saw. With `mine = |_| true` and a `SimNet` (or loopback real
+/// transport) this is the single-process replay; with
+/// `mine = |r| r == rank` over an endpoint transport it is one rank of
+/// a multi-process run. `mb_count` is the number of distinct microbatch
+/// ids the ops use (`opts.mb` for training schedules, the admitted
+/// batch count for serving) — it scales the per-channel transport keys.
 ///
 /// Protocol state (feedback sender halves + receiver mirrors) is kept
 /// **per channel**: one slot per `(link, dir, chunk)`, where `chunk`
 /// is the boundary's index among the boundaries sharing that physical
 /// link (`boundary / stages`) — always 0 on a chain, so flat runs are
 /// byte-identical to the pre-interleaving protocol.
-fn run_stages(
+fn run_ops(
     opts: &WorkerOpts,
     plan: &Plan,
     net: &mut dyn Transport,
     mine: &dyn Fn(usize) -> bool,
+    ops: &[pipeline::Op],
+    mb_count: usize,
 ) -> Result<Vec<MailboxLog>> {
     let stages = opts.stages;
     let v = opts.chunks();
@@ -272,7 +292,6 @@ fn run_stages(
     let mut sent_frames: Vec<HashMap<u64, Vec<u8>>> =
         (0..links * 2).map(|_| Default::default()).collect();
 
-    let ops = pipeline::ops_for(opts.schedule, stages, opts.mb)?;
     // one boundary -> one channel: its physical link, its chunk index
     // among the boundaries sharing that link, its unique transport key
     // (stable AQ-SGD sample keys ride *inside* the delta frames), the
@@ -282,12 +301,12 @@ fn run_stages(
         let link = pipeline::boundary_link(boundary, stages)
             .expect("multi-rank runs have wire links");
         let chunk = boundary / stages;
-        let key = ((step * v + chunk) * opts.mb + mb) as u64;
+        let key = ((step * v + chunk) * mb_count + mb) as u64;
         let mbx = link * 2 + dir.index();
         (link, chunk, key, mbx, mbx * v + chunk)
     };
     for step in 0..opts.steps.max(1) {
-        for op in &ops {
+        for op in ops {
             let (rank, mb) = (op.rank(), op.mb());
             let dir = if op.is_fwd() { Dir::Fwd } else { Dir::Bwd };
             if !mine(rank) {
@@ -344,7 +363,7 @@ fn run_stages(
 /// Single-process reference: the whole schedule over `SimNet`.
 pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
     let plan = opts.effective_plan()?;
-    let mut net = SimNet::new(opts.wire_links(), opts.wire);
+    let mut net = SimNet::new(opts.wire_links(), opts.wire.model()?);
     let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
     Ok(WorkerSummary { backend: "sim".into(), rank: None, boxes, wire_elapsed_s: 0.0 })
 }
@@ -355,18 +374,19 @@ pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
 pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
     let plan = opts.effective_plan()?;
     let links = opts.wire_links();
-    let timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
+    let model = opts.wire.model()?;
+    let timeout = std::time::Duration::from_secs_f64(opts.wire.recv_timeout_s);
     // udp runs through its reliability layer; its fault-injection knobs
     // come from the MPCOMP_UDP_* environment so WorkerOpts stays stable
     let (boxes, elapsed) = if backend == Backend::Udp {
         let faults = UdpFaults::from_env();
-        let mut net = UdpTransport::loopback(links, opts.wire, timeout, &faults)?;
+        let mut net = UdpTransport::loopback(links, model, timeout, &faults)?;
         let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
         let elapsed = net.wire_elapsed_s();
         net.shutdown()?;
         (boxes, elapsed)
     } else {
-        let mut net = RealTransport::loopback(links, backend, opts.wire, timeout)?;
+        let mut net = RealTransport::loopback(links, backend, model, timeout)?;
         let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
         let elapsed = net.wire_elapsed_s();
         net.shutdown()?;
@@ -393,8 +413,9 @@ pub fn run_rank(
         bail!("rank {rank} out of range for {} stages", opts.stages);
     }
     let plan = opts.effective_plan()?;
+    let model = opts.wire.model()?;
     let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
-    rv.recv_timeout = std::time::Duration::from_secs_f64(opts.recv_timeout_s);
+    rv.recv_timeout = std::time::Duration::from_secs_f64(opts.wire.recv_timeout_s);
     rv.ring = opts.chunks() > 1 && opts.stages > 1;
     // the handshake negotiates the plan digest: a peer that loaded a
     // different plan (or a different --compression) is refused with a
@@ -403,14 +424,112 @@ pub fn run_rank(
     // encodes with
     rv.plan_digest = plan.digest();
     let (boxes, elapsed) = if backend == Backend::Udp {
-        let mut net = UdpTransport::endpoint(&rv, rank, opts.wire, &UdpFaults::from_env())?;
+        let mut net = UdpTransport::endpoint(&rv, rank, model, &UdpFaults::from_env())?;
         let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
         let elapsed = net.wire_elapsed_s();
         net.shutdown()?;
         (boxes, elapsed)
     } else {
-        let mut net = RealTransport::endpoint(&rv, rank, opts.wire)?;
+        let mut net = RealTransport::endpoint(&rv, rank, model)?;
         let boxes = run_stages(opts, &plan, &mut net, &|s| s == rank)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    };
+    Ok(WorkerSummary {
+        backend: backend.name().into(),
+        rank: Some(rank),
+        boxes,
+        wire_elapsed_s: elapsed,
+    })
+}
+
+/// The forward-only op list of a serve-mode parity run: the open-loop
+/// arrival stream and the admission layer are both deterministic
+/// functions of `(seed, knobs)`, so every process derives the identical
+/// microbatch composition locally — no admission traffic crosses the
+/// wire, and the transport keys (scaled by the admitted batch count)
+/// agree across ranks by construction.
+fn serve_schedule(opts: &WorkerOpts, knobs: &ServeKnobs) -> (Vec<pipeline::Op>, usize) {
+    let arr = arrivals::poisson(opts.seed, knobs.rate_rps, knobs.requests);
+    let batches = serve::admit(&arr, knobs.max_batch, knobs.deadline_s);
+    (serve::serve_ops(opts.stages, opts.chunks(), batches.len()), batches.len())
+}
+
+/// Serve-mode analogue of [`run_reference`]: the whole forward-only
+/// admission schedule replayed over `SimNet` in one process.
+pub fn run_serve_reference(opts: &WorkerOpts, knobs: &ServeKnobs) -> Result<WorkerSummary> {
+    let plan = opts.effective_plan()?;
+    let (ops, nb) = serve_schedule(opts, knobs);
+    let mut net = SimNet::new(opts.wire_links(), opts.wire.model()?);
+    let boxes = run_ops(opts, &plan, &mut net, &|_| true, &ops, nb)?;
+    Ok(WorkerSummary { backend: "sim".into(), rank: None, boxes, wire_elapsed_s: 0.0 })
+}
+
+/// Serve-mode analogue of [`run_loopback`]: both ends of every link in
+/// this process over a real socket transport.
+pub fn run_serve_loopback(
+    opts: &WorkerOpts,
+    knobs: &ServeKnobs,
+    backend: Backend,
+) -> Result<WorkerSummary> {
+    let plan = opts.effective_plan()?;
+    let (ops, nb) = serve_schedule(opts, knobs);
+    let links = opts.wire_links();
+    let model = opts.wire.model()?;
+    let timeout = std::time::Duration::from_secs_f64(opts.wire.recv_timeout_s);
+    let (boxes, elapsed) = if backend == Backend::Udp {
+        let faults = UdpFaults::from_env();
+        let mut net = UdpTransport::loopback(links, model, timeout, &faults)?;
+        let boxes = run_ops(opts, &plan, &mut net, &|_| true, &ops, nb)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    } else {
+        let mut net = RealTransport::loopback(links, backend, model, timeout)?;
+        let boxes = run_ops(opts, &plan, &mut net, &|_| true, &ops, nb)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    };
+    Ok(WorkerSummary {
+        backend: backend.name().into(),
+        rank: None,
+        boxes,
+        wire_elapsed_s: elapsed,
+    })
+}
+
+/// Serve-mode analogue of [`run_rank`]: one rank of a multi-process
+/// serving run. Admission is recomputed locally (see
+/// [`serve_schedule`]) and the rendezvous handshake still negotiates
+/// the plan digest, so mismatched plans are refused before any frame.
+pub fn run_serve_rank(
+    opts: &WorkerOpts,
+    knobs: &ServeKnobs,
+    rank: usize,
+    backend: Backend,
+    rendezvous_addr: &str,
+) -> Result<WorkerSummary> {
+    if rank >= opts.stages {
+        bail!("rank {rank} out of range for {} stages", opts.stages);
+    }
+    let plan = opts.effective_plan()?;
+    let (ops, nb) = serve_schedule(opts, knobs);
+    let model = opts.wire.model()?;
+    let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
+    rv.recv_timeout = std::time::Duration::from_secs_f64(opts.wire.recv_timeout_s);
+    rv.ring = opts.chunks() > 1 && opts.stages > 1;
+    rv.plan_digest = plan.digest();
+    let (boxes, elapsed) = if backend == Backend::Udp {
+        let mut net = UdpTransport::endpoint(&rv, rank, model, &UdpFaults::from_env())?;
+        let boxes = run_ops(opts, &plan, &mut net, &|s| s == rank, &ops, nb)?;
+        let elapsed = net.wire_elapsed_s();
+        net.shutdown()?;
+        (boxes, elapsed)
+    } else {
+        let mut net = RealTransport::endpoint(&rv, rank, model)?;
+        let boxes = run_ops(opts, &plan, &mut net, &|s| s == rank, &ops, nb)?;
         let elapsed = net.wire_elapsed_s();
         net.shutdown()?;
         (boxes, elapsed)
@@ -629,8 +748,11 @@ mod tests {
             spec: Spec::parse(mode).unwrap(),
             plan: None,
             seed: 11,
-            wire: WireModel::datacenter(),
-            recv_timeout_s: 5.0,
+            wire: WireOpts {
+                profile: "datacenter".into(),
+                recv_timeout_s: 5.0,
+                ..WireOpts::default()
+            },
             steps: 1,
         }
     }
@@ -903,5 +1025,67 @@ mod tests {
         assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+
+    fn knobs(rate_rps: f64, requests: usize) -> ServeKnobs {
+        ServeKnobs { rate_rps, requests, max_batch: 4, deadline_s: 0.02 }
+    }
+
+    #[test]
+    fn serve_reference_is_deterministic_and_forward_only() {
+        let o = opts(3, 4, "topk:10");
+        let k = knobs(500.0, 12);
+        let a = run_serve_reference(&o, &k).unwrap();
+        let b = run_serve_reference(&o, &k).unwrap();
+        assert_eq!(a.boxes, b.boxes, "same seed+rate must replay bit-identically");
+        let (_, nb) = serve_schedule(&o, &k);
+        assert!(nb >= 3, "12 requests with max_batch 4 form at least 3 batches");
+        for mbx in &a.boxes {
+            match mbx.dir {
+                Dir::Fwd => {
+                    assert_eq!(mbx.recv.len(), nb, "one activation per admitted batch");
+                    assert_eq!(mbx.sent_msgs as usize, nb);
+                }
+                Dir::Bwd => {
+                    assert!(mbx.recv.is_empty(), "serving ships no gradients");
+                    assert_eq!(mbx.sent_msgs, 0);
+                }
+            }
+        }
+        // a different arrival seed changes the admitted composition
+        let mut o2 = o.clone();
+        o2.seed = 12;
+        let c = run_serve_reference(&o2, &k).unwrap();
+        assert_ne!(a.boxes, c.boxes);
+    }
+
+    #[test]
+    fn serve_parity_sim_vs_uds_loopback() {
+        // the serve half of the --reference/--check contract: identical
+        // microbatch composition and bit-identical mailbox logs across
+        // the simulator and a real-socket loopback run
+        for mode in ["topk:10", "ef21+topk:10"] {
+            let mut o = opts(2, 4, mode);
+            o.link_elems = 256;
+            let k = knobs(500.0, 8);
+            let reference = run_serve_reference(&o, &k).unwrap();
+            let loopback = run_serve_loopback(&o, &k, Backend::Uds).unwrap();
+            check(&reference, std::slice::from_ref(&loopback))
+                .unwrap_or_else(|e| panic!("{mode}: {e}"));
+            assert!(loopback.wire_elapsed_s > 0.0, "{mode}: real wire time measured");
+        }
+    }
+
+    #[test]
+    fn serve_interleaved_needs_no_mb_divisibility() {
+        // training interleaved:2 rejects mb=3; serving admits any count
+        let mut o = opts(2, 3, "topk:10");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        assert!(run_reference(&o).is_err(), "training path still validates");
+        let s = run_serve_reference(&o, &knobs(5000.0, 3)).unwrap();
+        let fwd_msgs: usize =
+            s.boxes.iter().filter(|b| b.dir == Dir::Fwd).map(|b| b.recv.len()).sum();
+        // 2 ranks x v=2 -> 3 wired boundaries per batch over the ring
+        assert!(fwd_msgs > 0 && fwd_msgs % 3 == 0, "{fwd_msgs}");
     }
 }

@@ -17,10 +17,9 @@ pub mod tables;
 use anyhow::Result;
 
 use crate::compression::Spec;
-use crate::config::{CompressImpl, TrainConfig};
+use crate::config::{CompressImpl, FaultOpts, ServeKnobs, TrainConfig, WireOpts};
 use crate::coordinator::Trainer;
 use crate::metrics::{append_jsonl, RunMetrics};
-use crate::netsim::Backend;
 use crate::runtime::Runtime;
 
 /// Parameters of the standalone schedule ablation (`mpcomp exp
@@ -36,20 +35,19 @@ pub struct SchedParams {
     pub link_elems: usize,
     pub fwd_op_s: f64,
     pub bwd_op_s: f64,
-    /// Bounded in-flight message window per link direction.
-    pub capacity: usize,
     /// Charge GPipe backward ops a forward recomputation (the GPipe
     /// paper's rematerialization — it cannot stash all `mb` activation
     /// sets; 1F1B's depth-bounded stash is exactly what avoids this).
     pub recompute: bool,
-    /// Transport carrying the schedule's messages: the event-driven
-    /// simulator (default) or real loopback sockets (`--backend
-    /// tcp|uds`), where the table reports measured wall-clock wire time.
-    pub backend: Backend,
-    /// Wire fault model for simulator rows (`--drop-p` etc.): sampled
-    /// fault injection in the schedule table, expected-cost derating in
-    /// the planner table. `None` = clean wire.
-    pub faults: Option<crate::netsim::FaultModel>,
+    /// Transport knobs shared with every other surface: the table reads
+    /// the backend (simulator rows by default, real loopback sockets
+    /// with `--backend tcp|uds` where wall-clock wire time is measured)
+    /// and the bounded in-flight window per link direction from here.
+    pub wire: WireOpts,
+    /// Simulated-wire fault knobs (`--drop-p` etc.): sampled fault
+    /// injection in the schedule table, expected-cost derating in the
+    /// planner table. All-default = clean wire.
+    pub fault: FaultOpts,
 }
 
 impl Default for SchedParams {
@@ -60,10 +58,9 @@ impl Default for SchedParams {
             link_elems: 16_384,
             fwd_op_s: 0.020,
             bwd_op_s: 0.040,
-            capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
             recompute: true,
-            backend: Backend::Sim,
-            faults: None,
+            wire: WireOpts::default(),
+            fault: FaultOpts::default(),
         }
     }
 }
@@ -85,6 +82,9 @@ pub struct ExpOpts {
     pub epochs: Option<usize>,
     /// Schedule-ablation simulator parameters.
     pub sched: SchedParams,
+    /// Admission knobs of the `exp serve` table (rate, request count,
+    /// batch bound, deadline).
+    pub serve: ServeKnobs,
 }
 
 impl Default for ExpOpts {
@@ -98,6 +98,7 @@ impl Default for ExpOpts {
             compress_impl: CompressImpl::Kernel,
             epochs: None,
             sched: SchedParams::default(),
+            serve: ServeKnobs::default(),
         }
     }
 }

@@ -1,50 +1,60 @@
-//! `mpcomp` CLI — train, evaluate, and regenerate the paper's tables.
+//! `mpcomp` CLI — train, evaluate, serve, and regenerate the paper's
+//! tables, all through one typed run configuration.
+//!
+//! Every subcommand reads the same key space: any `--key=value` pair
+//! from `mpcomp train --print-config` is accepted anywhere (unknown
+//! keys fail with the full catalog), and the ergonomic shorthands
+//! below map onto the same keys. Deprecated spellings (`--set k=v`,
+//! the scattered `--drop-p`-style fault flags, `--virtual-stages`)
+//! still work through a warn-once shim.
 //!
 //! ```text
 //! mpcomp info                              # manifest summary
-//! mpcomp train --model cnn16 --compression topk:10 [--set k=v ...]
-//! mpcomp train --config configs/table2_top10.toml
+//! mpcomp train --model cnn16 --compression topk:10 [--key=value ...]
+//! mpcomp train --config configs/table2_top10.toml [--print-config]
 //! mpcomp eval --model cnn16 --checkpoint results/x.ckpt [--compression topk:10]
-//! mpcomp exp table1..table5|comm|impl|schedule|aqsgd-mem|all
+//! mpcomp exp table1..table5|comm|impl|schedule|plan|serve|aqsgd-mem|all
 //!            [--full] [--seeds N] [--curves] [--impl kernel|native]
-//! mpcomp exp schedule [--stages N] [--mb N] [--link-elems N]
-//!            [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N] [--no-recompute]
-//!            [--backend sim|tcp|uds|udp]
-//!            [--drop-p P] [--dup-p P] [--reorder-window N] [--jitter-ms F]
-//!            [--stragglers R,R] [--straggler-factor F] [--fault-seed N]
+//!            [--stages N] [--mb N] [--link-elems N] [--backend sim|tcp|uds|udp]
+//!            [--fault.drop-p=P] [--fault.jitter-s=S] [...]
 //! mpcomp plan [--stages N] [--mb N] [--link-elems N] [--wire wan|datacenter]
-//!             [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
-//!             [--fwd-op-ms F] [--bwd-op-ms F] [--capacity N]
-//!             [--drop-p P] [--dup-p P] [--jitter-ms F]  # lossy-wire pricing
-//!             [--out plan.json]              # overlap-aware per-link spec search
-//! mpcomp worker --rank R --stages N --backend uds|tcp --rendezvous <dir|host:port>
+//!             [--schedule gpipe|1f1b|interleaved:v]
+//!             [--objective makespan|latency]    # latency searches tail p99
+//!             [--rate R] [--requests N] [--max-batch B] [--deadline-ms D]
+//!             [--out plan.json]                 # per-link spec search
+//! mpcomp serve [--stages N] [--link-elems N] [--compression M | --plan plan.json]
+//!              [--rate R] [--requests N] [--max-batch B] [--deadline-ms D]
+//!              [--wire wan|datacenter] [--backend sim|tcp|uds|udp] [--seed N]
+//! mpcomp worker --rank R --stages N --backend uds|tcp|udp --rendezvous <dir|addr>
+//!               [--serve]                       # forward-only serving schedule
 //!               [--mb N] [--link-elems N] [--compression M] [--plan plan.json]
-//!               [--schedule gpipe|1f1b|interleaved:v] [--virtual-stages V]
-//!               [--seed N] [--steps N] [--out summary.json]
-//! mpcomp worker --reference ... --out ref.json    # single-process SimNet replay
+//!               [--schedule gpipe|1f1b|interleaved:v] [--seed N] [--steps N]
+//!               [--out summary.json]
+//! mpcomp worker --reference [--serve] ... --out ref.json   # SimNet replay
 //! mpcomp worker --check ref.json rank0.json rank1.json
 //! mpcomp worker --compare-bytes baseline.json rank0.json rank1.json
 //! ```
 
 use anyhow::{bail, Context, Result};
 use mpcomp::cli::Args;
-use mpcomp::compression::Spec;
-use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
-use mpcomp::coordinator::{pipeline, worker, Trainer, WorkerOpts, WorkerSummary};
-use mpcomp::experiments::{tables, ExpOpts};
+use mpcomp::config::{RunSpec, Schedule, Surface};
+use mpcomp::coordinator::{pipeline, worker, ServeOpts, Trainer, WorkerOpts, WorkerSummary};
+use mpcomp::experiments::{tables, ExpOpts, SchedParams};
 use mpcomp::metrics::append_jsonl;
-use mpcomp::netsim::{Backend, FaultModel, WireModel};
-use mpcomp::planner::{self, Plan, PlannerInputs};
+use mpcomp::netsim::Backend;
+use mpcomp::planner::{self, Objective, Plan, PlannerInputs};
 use mpcomp::runtime::Runtime;
 
 const VALUE_FLAGS: &[&str] = &[
     "config", "set", "model", "compression", "checkpoint", "seeds", "impl",
     "artifacts", "results", "epochs", "save-checkpoint",
-    // exp schedule (transmission-simulator ablation) + worker + plan
+    // pipeline shape + worker + plan
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
     "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan",
-    // wire fault knobs (exp schedule sweeps, plan pricing)
+    // serve admission knobs + planner objective
+    "rate", "requests", "max-batch", "deadline-ms", "objective",
+    // deprecated wire fault spellings (use --fault.drop-p=… instead)
     "drop-p", "dup-p", "reorder-window", "jitter-ms", "stragglers",
     "straggler-factor", "fault-seed",
 ];
@@ -58,10 +68,11 @@ fn main() -> Result<()> {
         Some("eval") => eval(&args),
         Some("exp") => exp(&args),
         Some("plan") => plan_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         Some("worker") => worker_cmd(&args),
         _ => {
             eprintln!(
-                "usage: mpcomp <info|train|eval|exp|plan|worker> [...]\n\
+                "usage: mpcomp <info|train|eval|exp|plan|serve|worker> [...]\n\
                  see README.md for the full command reference"
             );
             std::process::exit(2);
@@ -71,6 +82,15 @@ fn main() -> Result<()> {
 
 fn artifacts_dir(args: &Args) -> String {
     args.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+/// `--print-config`: dump the resolved typed configuration and stop.
+fn print_config(args: &Args, run: &RunSpec) -> bool {
+    if args.has("print-config") {
+        print!("{}", run.describe());
+        return true;
+    }
+    false
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -100,49 +120,12 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_config(args: &Args) -> Result<TrainConfig> {
-    let overrides: Vec<(String, String)> = args
-        .get_all("set")
-        .iter()
-        .map(|kv| {
-            kv.split_once('=')
-                .map(|(k, v)| (k.to_string(), v.to_string()))
-                .with_context(|| format!("--set wants key=value, got '{kv}'"))
-        })
-        .collect::<Result<_>>()?;
-
-    let mut cfg = match args.get("config") {
-        Some(path) => TrainConfig::from_file(path, &overrides)?,
-        None => {
-            let model = args.get("model").unwrap_or("cnn16");
-            let mut cfg = TrainConfig::defaults(model);
-            for (k, v) in &overrides {
-                cfg.set(k, v)?;
-            }
-            cfg
-        }
-    };
-    if let Some(m) = args.get("model") {
-        cfg.model = m.to_string();
-    }
-    if let Some(c) = args.get("compression") {
-        cfg.spec = Spec::parse(c)?;
-    }
-    if let Some(e) = args.usize("epochs")? {
-        cfg.epochs = e;
-    }
-    if let Some(p) = args.get("save-checkpoint") {
-        cfg.save_checkpoint = Some(p.to_string());
-    }
-    cfg.artifacts_dir = artifacts_dir(args);
-    if let Some(r) = args.get("results") {
-        cfg.results_dir = r.to_string();
-    }
-    Ok(cfg)
-}
-
 fn train(args: &Args) -> Result<()> {
-    let cfg = build_config(args)?;
+    let run = RunSpec::from_args(args, Surface::Train)?;
+    if print_config(args, &run) {
+        return Ok(());
+    }
+    let cfg = run.train;
     let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
     let results_dir = cfg.results_dir.clone();
     let (model, epochs) = (cfg.model.clone(), cfg.epochs);
@@ -170,7 +153,11 @@ fn train(args: &Args) -> Result<()> {
 }
 
 fn eval(args: &Args) -> Result<()> {
-    let mut cfg = build_config(args)?;
+    let run = RunSpec::from_args(args, Surface::Train)?;
+    if print_config(args, &run) {
+        return Ok(());
+    }
+    let mut cfg = run.train;
     let Some(ckpt) = args.get("checkpoint") else {
         bail!("eval wants --checkpoint <path>");
     };
@@ -190,149 +177,140 @@ fn eval(args: &Args) -> Result<()> {
 
 fn exp(args: &Args) -> Result<()> {
     let Some(name) = args.positional.get(1) else {
-        bail!("exp wants a name: table1..table5, comm, impl, schedule, plan, aqsgd-mem, all");
+        bail!("exp wants a name: table1..table5, comm, impl, schedule, plan, serve, aqsgd-mem, all");
     };
-    let mut opts = ExpOpts {
+    let run = RunSpec::from_args(args, Surface::Exp)?;
+    if print_config(args, &run) {
+        return Ok(());
+    }
+    let opts = ExpOpts {
         full: args.has("full"),
         seeds: args.usize("seeds")?,
         curves: args.has("curves"),
-        artifacts_dir: artifacts_dir(args),
-        results_dir: args.get("results").unwrap_or("results").to_string(),
-        compress_impl: match args.get("impl") {
-            Some(s) => CompressImpl::parse(s)?,
-            None => CompressImpl::Kernel,
-        },
+        artifacts_dir: run.train.artifacts_dir.clone(),
+        results_dir: run.train.results_dir.clone(),
+        compress_impl: run.train.compress_impl,
         epochs: args.usize("epochs")?,
-        sched: Default::default(),
+        sched: SchedParams {
+            stages: run.stages,
+            mb: run.mb,
+            link_elems: run.link_elems,
+            fwd_op_s: run.fwd_op_s,
+            bwd_op_s: run.bwd_op_s,
+            recompute: run.recompute,
+            wire: run.wire_opts()?,
+            fault: run.fault_opts(),
+        },
+        serve: run.serve.clone(),
     };
-    if let Some(v) = args.usize("stages")? {
-        opts.sched.stages = v;
-    }
-    if let Some(v) = args.usize("mb")? {
-        opts.sched.mb = v;
-    }
-    if let Some(v) = args.usize("link-elems")? {
-        opts.sched.link_elems = v;
-    }
-    if let Some(v) = args.usize("capacity")? {
-        opts.sched.capacity = v;
-    }
-    if let Some(v) = args.get("fwd-op-ms") {
-        opts.sched.fwd_op_s = v.parse::<f64>()? / 1e3;
-    }
-    if let Some(v) = args.get("bwd-op-ms") {
-        opts.sched.bwd_op_s = v.parse::<f64>()? / 1e3;
-    }
-    if args.has("no-recompute") {
-        opts.sched.recompute = false;
-    }
-    if let Some(b) = args.get("backend") {
-        opts.sched.backend = Backend::parse(b)?;
-    }
-    opts.sched.faults = faults_from_flags(args)?;
     tables::run(name, &opts)
-}
-
-/// Wire fault knobs shared by `exp schedule` (sampled injection) and
-/// `plan` (expected-cost pricing). `None` when every knob is clean.
-fn faults_from_flags(args: &Args) -> Result<Option<FaultModel>> {
-    let mut fm = FaultModel::default();
-    if let Some(v) = args.get("drop-p") {
-        fm.drop_p = v.parse().context("--drop-p wants a probability")?;
-    }
-    if let Some(v) = args.get("dup-p") {
-        fm.dup_p = v.parse().context("--dup-p wants a probability")?;
-    }
-    if let Some(v) = args.usize("reorder-window")? {
-        fm.reorder_window = v;
-    }
-    if let Some(v) = args.get("jitter-ms") {
-        fm.jitter_s = v.parse::<f64>().context("--jitter-ms wants milliseconds")? / 1e3;
-    }
-    if let Some(v) = args.get("stragglers") {
-        fm.straggler_ranks = v
-            .split(',')
-            .map(str::trim)
-            .filter(|p| !p.is_empty())
-            .map(|p| p.parse().with_context(|| format!("--stragglers: bad rank '{p}'")))
-            .collect::<Result<_>>()?;
-    }
-    if let Some(v) = args.get("straggler-factor") {
-        fm.straggler_factor = v.parse().context("--straggler-factor wants a number")?;
-    }
-    if let Some(v) = args.usize("fault-seed")? {
-        fm.seed = v as u64;
-    }
-    Ok((!fm.is_zero()).then_some(fm))
-}
-
-/// `--virtual-stages V` is shorthand for `--schedule interleaved:V`
-/// (shared by `worker` and `plan`; V = 1 falls back to plain 1f1b
-/// semantics via `Interleaved{1}`).
-fn schedule_from_flags(args: &Args, default: &str) -> Result<Schedule> {
-    match args.usize("virtual-stages")? {
-        Some(0) => bail!("--virtual-stages wants V >= 1"),
-        Some(v) => {
-            if args.has("schedule") {
-                bail!("--virtual-stages and --schedule are mutually exclusive");
-            }
-            Ok(Schedule::Interleaved { v })
-        }
-        None => Schedule::parse(args.get("schedule").unwrap_or(default)),
-    }
 }
 
 /// `mpcomp plan`: run the overlap-aware planner search on a synthetic
 /// pipeline shape (no artifacts needed), print the chosen per-channel
 /// plan against the global-spec baselines, optionally write the plan
-/// file that `--set plan=file:…` and `mpcomp worker --plan` consume.
+/// file that `--set plan=file:…`, `mpcomp worker --plan`, and
+/// `mpcomp serve --plan` consume. `--objective latency` searches the
+/// same spec lattice against served tail latency instead of training
+/// makespan.
 fn plan_cmd(args: &Args) -> Result<()> {
-    let stages = args.usize("stages")?.unwrap_or(4);
-    let schedule = schedule_from_flags(args, "1f1b")?;
-    let v = schedule.chunks();
-    let mb = args.usize("mb")?.unwrap_or(16);
-    let link_elems = args.usize("link-elems")?.unwrap_or(16_384);
-    let wire_name = args.get("wire").unwrap_or("wan");
-    let fwd_op_s = match args.get("fwd-op-ms") {
-        Some(x) => x.parse::<f64>()? / 1e3,
-        None => 0.020,
-    };
-    let bwd_op_s = match args.get("bwd-op-ms") {
-        Some(x) => x.parse::<f64>()? / 1e3,
-        None => 0.040,
-    };
-    let inputs = PlannerInputs {
-        n_ranks: stages,
-        schedule,
-        n_mb: mb,
-        // chunk ops: per-rank compute splits across the v chunks
-        fwd_op_s: fwd_op_s / v as f64,
-        bwd_op_s: bwd_op_s / v as f64,
-        recompute_s: 0.0,
-        elems: vec![link_elems; pipeline::num_boundaries(stages, v)],
-        model: WireModel::parse(wire_name)?,
-        capacity: args.usize("capacity")?.unwrap_or(mpcomp::netsim::DEFAULT_QUEUE_CAPACITY),
-        faults: faults_from_flags(args)?,
-    };
-    let report = planner::search(&inputs)?;
-    report.print(&format!(
-        "Overlap-aware compression plan: {} x {} mb, {} ({} wire, {} elems/link)",
-        stages,
-        mb,
-        schedule.name(),
-        wire_name,
-        link_elems
-    ));
-    if let Some(out) = args.get("out") {
-        report.plan.save(out)?;
-        println!("(plan written to {out}; run it with --set plan=file:{out} or --plan {out})");
+    let run = RunSpec::from_args(args, Surface::Plan)?;
+    if print_config(args, &run) {
+        return Ok(());
     }
+    // the planner's legacy default shape is the paper's 1f1b pipeline;
+    // the typed schedule key keeps TrainConfig's gpipe default, so only
+    // an explicit schedule flag overrides 1f1b here
+    let schedule = if args.has("schedule") || args.has("virtual-stages") {
+        run.train.schedule
+    } else {
+        Schedule::OneFOneB
+    };
+    let v = schedule.chunks();
+    let wire = run.wire_opts()?;
+    let inputs = PlannerInputs {
+        n_ranks: run.stages,
+        schedule,
+        n_mb: run.mb,
+        // chunk ops: per-rank compute splits across the v chunks
+        fwd_op_s: run.fwd_op_s / v as f64,
+        bwd_op_s: run.bwd_op_s / v as f64,
+        recompute_s: 0.0,
+        elems: vec![run.link_elems; pipeline::num_boundaries(run.stages, v)],
+        model: wire.model()?,
+        capacity: wire.capacity,
+        faults: run.fault_opts().model(),
+    };
+    match Objective::parse(args.get("objective").unwrap_or("makespan"))? {
+        Objective::Makespan => {
+            let report = planner::search(&inputs)?;
+            report.print(&format!(
+                "Overlap-aware compression plan: {} x {} mb, {} ({} wire, {} elems/link)",
+                run.stages,
+                run.mb,
+                schedule.name(),
+                wire.profile,
+                run.link_elems
+            ));
+            if let Some(out) = args.get("out") {
+                report.plan.save(out)?;
+                println!("(plan written to {out}; run it with --set plan=file:{out} or --plan {out})");
+            }
+        }
+        Objective::Latency => {
+            let report = planner::search_latency(&inputs, &run.serve, run.train.seed)?;
+            report.print(&format!(
+                "Latency-objective serving plan: {} stages, {} ({} wire, {} elems/link, {:.0} rps)",
+                run.stages,
+                schedule.name(),
+                wire.profile,
+                run.link_elems,
+                run.serve.rate_rps
+            ));
+            if let Some(out) = args.get("out") {
+                report.plan.save(out)?;
+                println!("(plan written to {out}; serve it with mpcomp serve --plan {out})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `mpcomp serve`: pipelined batched inference over the compressed
+/// links — an open-loop Poisson request stream admitted into
+/// microbatches and pushed through the forward-only pipeline, with
+/// per-request latency accounting and the run's metrics appended to
+/// `results/serve.jsonl`.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let run = RunSpec::from_args(args, Surface::Serve)?;
+    if print_config(args, &run) {
+        return Ok(());
+    }
+    let opts = ServeOpts {
+        stages: run.stages,
+        schedule: run.train.schedule,
+        link_elems: run.link_elems,
+        fwd_op_s: run.fwd_op_s,
+        seed: run.train.seed,
+        knobs: run.serve.clone(),
+        wire: run.wire_opts()?,
+        fault: run.fault_opts(),
+        // every process serving the same plan negotiates its digest at
+        // rendezvous, exactly like the training-mode worker
+        plan: args.get("plan").map(Plan::load).transpose()?,
+        spec: run.train.spec,
+    };
+    let (report, m) = opts.run()?;
+    report.print();
+    append_jsonl(&run.train.results_dir, "serve", &m)?;
     Ok(())
 }
 
 /// `mpcomp worker`: one pipeline stage per OS process on a synthetic
 /// schedule over the real transport — plus the single-process reference
-/// run and the parity checker the CI `loopback` job drives.
+/// run and the parity checker the CI `loopback` job drives. `--serve`
+/// swaps in the forward-only admission schedule so the same parity
+/// harness covers serving mode.
 fn worker_cmd(args: &Args) -> Result<()> {
     if args.has("check") {
         let files = &args.positional[1..];
@@ -365,32 +343,43 @@ fn worker_cmd(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
-    let schedule = schedule_from_flags(args, "gpipe")?;
+    let run = RunSpec::from_args(args, Surface::Worker)?;
+    if print_config(args, &run) {
+        return Ok(());
+    }
     let opts = WorkerOpts {
-        stages: args.usize("stages")?.unwrap_or(2),
-        mb: args.usize("mb")?.unwrap_or(4),
-        link_elems: args.usize("link-elems")?.unwrap_or(256),
-        schedule,
-        spec: Spec::parse(args.get("compression").unwrap_or("none"))?,
+        stages: run.stages,
+        mb: run.mb,
+        link_elems: run.link_elems,
+        schedule: run.train.schedule,
+        spec: run.train.spec,
         // every rank must load the same plan file: its digest is what
         // the rendezvous handshake negotiates
         plan: args.get("plan").map(Plan::load).transpose()?,
-        seed: args.usize("seed")?.unwrap_or(0) as u64,
-        wire: WireModel::parse(args.get("wire").unwrap_or("wan"))?,
-        recv_timeout_s: match args.get("recv-timeout") {
-            Some(v) => v.parse().context("--recv-timeout wants seconds")?,
-            None => 20.0,
-        },
-        steps: args.usize("steps")?.unwrap_or(1),
+        seed: run.train.seed,
+        wire: run.wire_opts()?,
+        steps: run.steps,
     };
+    let serve_mode = args.has("serve");
+    let knobs = run.serve.clone();
     let summary = if args.has("reference") {
-        worker::run_reference(&opts)?
+        if serve_mode {
+            worker::run_serve_reference(&opts, &knobs)?
+        } else {
+            worker::run_reference(&opts)?
+        }
     } else if let Some(rank) = args.usize("rank")? {
-        let backend = Backend::parse(args.get("backend").unwrap_or("uds"))?;
+        // the rendezvous path keeps its legacy UDS default; the typed
+        // wire.backend key (default sim) only overrides when named
+        let backend = if args.has("backend") { opts.wire.backend } else { Backend::Uds };
         let rv = args
             .get("rendezvous")
             .context("worker wants --rendezvous <socket-dir | host:port>")?;
-        worker::run_rank(&opts, rank, backend, rv)?
+        if serve_mode {
+            worker::run_serve_rank(&opts, &knobs, rank, backend, rv)?
+        } else {
+            worker::run_rank(&opts, rank, backend, rv)?
+        }
     } else {
         bail!("worker wants --reference, --rank N, or --check");
     };

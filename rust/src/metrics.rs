@@ -49,6 +49,27 @@ pub struct RunMetrics {
     /// run's schedule (the memory axis GPipe/1F1B/interleaving trade:
     /// interleaved v=4 exceeds even GPipe's all-microbatch stash).
     pub peak_stash_bytes: u64,
+    /// Datagrams that were first sends on the UDP reliability layer
+    /// (0 on backends without a datagram layer).
+    pub datagrams_fresh: u64,
+    /// Datagrams that were retransmissions on the UDP reliability layer
+    /// — the overhead a lossy wire adds on top of `wire_elapsed_s`.
+    pub datagrams_retransmit: u64,
+    /// Requests served (0 outside `mpcomp serve` runs).
+    pub serve_requests: u64,
+    /// Median per-request latency of a serve run (seconds).
+    pub serve_p50_s: f64,
+    /// Tail (p99) per-request latency of a serve run (seconds).
+    pub serve_p99_s: f64,
+    /// Achieved request throughput of a serve run: requests over the
+    /// span from first arrival to last completion (requests/second).
+    pub serve_throughput_rps: f64,
+    /// Saturation throughput: the same pipeline with every request
+    /// available at t = 0 — the ceiling the arrival rate pushes toward.
+    pub serve_saturation_rps: f64,
+    /// Mean per-link wire occupancy over the serve makespan: modelled
+    /// serialization time of each link's bytes divided by the makespan.
+    pub wire_busy_frac: f64,
 }
 
 impl RunMetrics {
@@ -66,6 +87,14 @@ impl RunMetrics {
             wall_time_s: 0.0,
             feedback_memory_bytes: 0,
             peak_stash_bytes: 0,
+            datagrams_fresh: 0,
+            datagrams_retransmit: 0,
+            serve_requests: 0,
+            serve_p50_s: 0.0,
+            serve_p99_s: 0.0,
+            serve_throughput_rps: 0.0,
+            serve_saturation_rps: 0.0,
+            wire_busy_frac: 0.0,
         }
     }
 
@@ -135,6 +164,14 @@ impl RunMetrics {
             .set("wall_time_s", Json::Num(self.wall_time_s))
             .set("feedback_memory_bytes", Json::Num(self.feedback_memory_bytes as f64))
             .set("peak_stash_bytes", Json::Num(self.peak_stash_bytes as f64))
+            .set("datagrams_fresh", Json::Num(self.datagrams_fresh as f64))
+            .set("datagrams_retransmit", Json::Num(self.datagrams_retransmit as f64))
+            .set("serve_requests", Json::Num(self.serve_requests as f64))
+            .set("serve_p50_s", Json::Num(self.serve_p50_s))
+            .set("serve_p99_s", Json::Num(self.serve_p99_s))
+            .set("serve_throughput_rps", Json::Num(self.serve_throughput_rps))
+            .set("serve_saturation_rps", Json::Num(self.serve_saturation_rps))
+            .set("wire_busy_frac", Json::Num(self.wire_busy_frac))
             .set(
                 "train_loss",
                 Json::from_f64s(&self.points.iter().map(|p| p.train_loss).collect::<Vec<_>>()),
@@ -229,6 +266,9 @@ mod tests {
         assert!(parsed.get("wire_elapsed_s").is_ok());
         assert!(parsed.get("feedback_memory_bytes").is_ok());
         assert!(parsed.get("peak_stash_bytes").is_ok());
+        assert!(parsed.get("datagrams_retransmit").is_ok());
+        assert!(parsed.get("serve_p99_s").is_ok());
+        assert!(parsed.get("serve_saturation_rps").is_ok());
         assert_eq!(parsed.get("train_loss").unwrap().arr().unwrap().len(), 3);
     }
 

@@ -1,0 +1,75 @@
+//! Open-loop request arrival processes for the serving mode (L6).
+//!
+//! Serving measures *per-request latency under load*, so the load must
+//! be generated open-loop: request `k`'s arrival time does not depend on
+//! when request `k - 1` finished. (Closed-loop generators hide
+//! saturation — the coordinated-omission trap.) The canonical open-loop
+//! model is a Poisson process: i.i.d. exponential inter-arrival gaps at
+//! a target rate. Everything derives from an explicit seed through the
+//! same PCG32 substrate as the rest of the framework, so every rank of a
+//! multi-process serve run synthesizes the *identical* arrival stream —
+//! admission decisions never have to cross the wire.
+
+use crate::util::rng::Rng;
+
+/// RNG stream tag of the arrival process. Disjoint from the tensor
+/// streams (`worker::gen_tensor` keys on link/dir/chunk/mb tags), so
+/// request payloads and arrival times are independent draws.
+pub const ARRIVAL_STREAM: u64 = 0x6172_7269_7665; // "arrive"
+
+/// Deterministic Poisson arrival times: `n` arrivals at `rate_rps`
+/// requests/second, in seconds from the start of the run, non-
+/// decreasing. Gaps are `-ln(1 - u) / rate` with `u` uniform in
+/// `[0, 1)`, so every gap is finite and non-negative.
+pub fn poisson(seed: u64, rate_rps: f64, n: usize) -> Vec<f64> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive, got {rate_rps}");
+    let mut rng = Rng::with_stream(seed, ARRIVAL_STREAM);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.uniform() as f64;
+        t += -(1.0 - u).ln() / rate_rps;
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed_and_rate() {
+        assert_eq!(poisson(7, 100.0, 64), poisson(7, 100.0, 64));
+        assert_ne!(poisson(7, 100.0, 64), poisson(8, 100.0, 64));
+    }
+
+    #[test]
+    fn arrivals_are_non_decreasing_and_finite() {
+        let a = poisson(3, 250.0, 500);
+        assert_eq!(a.len(), 500);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(a.iter().all(|t| t.is_finite() && *t >= 0.0));
+    }
+
+    #[test]
+    fn mean_gap_matches_target_rate() {
+        let rate = 200.0;
+        let n = 20_000;
+        let a = poisson(11, rate, n);
+        let mean_gap = a.last().unwrap() / n as f64;
+        assert!((mean_gap * rate - 1.0).abs() < 0.05, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn rate_scales_the_stream() {
+        let slow = poisson(5, 10.0, 100);
+        let fast = poisson(5, 1000.0, 100);
+        // same seed: identical uniform draws, so times scale exactly
+        for (s, f) in slow.iter().zip(&fast) {
+            assert!((s / f - 100.0).abs() < 1e-6);
+        }
+    }
+}

@@ -30,6 +30,7 @@
 
 #![warn(missing_docs)]
 
+pub mod arrivals;
 pub mod real;
 pub mod sim;
 pub mod transport;

@@ -264,6 +264,15 @@ pub trait Transport {
         0.0
     }
 
+    /// Datagram-level delivery counters `(fresh, retransmits)` where the
+    /// backend tracks them — the UDP reliability layer reports how many
+    /// datagrams were first sends vs. retransmissions, which is the
+    /// overhead a lossy wire adds on top of `wire_elapsed_s`. Backends
+    /// without a datagram layer return `None`.
+    fn datagram_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
     /// Clear mailboxes, clocks, and accounting (connections stay up).
     fn reset(&mut self);
 

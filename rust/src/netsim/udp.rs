@@ -1022,6 +1022,10 @@ impl Transport for UdpTransport {
         self.busy_s
     }
 
+    fn datagram_stats(&self) -> Option<(u64, u64)> {
+        Some(UdpTransport::datagram_stats(self))
+    }
+
     fn reset(&mut self) {
         self.ledger.reset();
         self.busy_s = 0.0;

@@ -15,7 +15,10 @@
 //! * [`search`] — the min-bytes anchor + threshold + first-fit
 //!   relaxation, every candidate evaluated through the event-driven
 //!   simulator (`simexec` over `SimNet`: bandwidth, latency, bounded
-//!   in-flight window), emitting a [`PlanReport`].
+//!   in-flight window), emitting a [`PlanReport`]. The same skeleton
+//!   runs under the serving objective as [`search_latency`]
+//!   (`mpcomp plan --objective latency`): candidates scored by p99
+//!   request latency through the serve executor, forward channels only.
 //! * [`plan`] — the [`Plan`] artifact itself: JSON files, the FNV-1a
 //!   negotiation digest the rendezvous handshake exchanges, and typed
 //!   [`PlanError`] validation.
@@ -33,4 +36,7 @@ pub mod search;
 
 pub use cost::{bwd_lattice, frontier, fwd_lattice, Candidate, PlannerInputs};
 pub use plan::{BoundaryPlan, Plan, PlanError, PlanMode};
-pub use search::{search, BaselineRow, ChannelChoice, PlanReport};
+pub use search::{
+    search, search_latency, BaselineRow, ChannelChoice, LatencyReport, LatencyRow, Objective,
+    PlanReport,
+};

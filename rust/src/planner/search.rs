@@ -29,13 +29,22 @@
 //! The report carries the per-channel tx-vs-op-budget slack from the
 //! analytic per-boundary timings plus the predicted (analytic) and
 //! simulated makespans; bench-smoke uploads their delta.
+//!
+//! [`search_latency`] runs the same anchor/threshold/first-fit skeleton
+//! under the **serving** objective (`mpcomp plan --objective latency`):
+//! candidates are scored by the p99 request latency of an open-loop
+//! admission stream replayed through the serve executor, only the
+//! forward channels are searched (serving ships no gradients), and the
+//! emitted plan is clamped to never serve a worse tail than the
+//! makespan-objective plan would.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::compression::{wire, Spec};
+use crate::config::ServeKnobs;
 use crate::coordinator::pipeline::{self, Op};
-use crate::coordinator::simexec;
-use crate::netsim::Dir;
+use crate::coordinator::{serve, simexec};
+use crate::netsim::{arrivals, Dir};
 
 use super::cost::{self, Candidate, PlannerInputs};
 use super::plan::{BoundaryPlan, Plan};
@@ -328,6 +337,250 @@ impl PlanReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// latency objective (`mpcomp plan --objective latency`)
+// ---------------------------------------------------------------------------
+
+/// What the plan search optimizes for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Training-step makespan through the full fwd+bwd schedule.
+    Makespan,
+    /// Tail (p99) request latency of an open-loop serving stream.
+    Latency,
+}
+
+impl Objective {
+    /// Parse a CLI objective name (`makespan`, `latency`).
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "makespan" => Ok(Objective::Makespan),
+            "latency" => Ok(Objective::Latency),
+            _ => bail!("unknown plan objective '{s}' (try makespan, latency)"),
+        }
+    }
+
+    /// Stable lowercase name (inverse of [`Objective::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Makespan => "makespan",
+            Objective::Latency => "latency",
+        }
+    }
+}
+
+/// A global-spec baseline served under the latency objective.
+#[derive(Clone, Debug)]
+pub struct LatencyRow {
+    /// The paper-style label of the global spec.
+    pub label: String,
+    /// p99 request latency serving with this spec on every channel.
+    pub p99_s: f64,
+    /// Median request latency under the same spec.
+    pub p50_s: f64,
+    /// Compressed bytes the serve run ships.
+    pub bytes: u64,
+}
+
+/// Everything [`search_latency`] decides and measured on the way.
+#[derive(Clone, Debug)]
+pub struct LatencyReport {
+    /// The emitted plan: searched forward specs, uncompressed backward
+    /// channels (serving ships no gradients).
+    pub plan: Plan,
+    /// p99 request latency of the emitted plan's serve replay.
+    pub p99_s: f64,
+    /// Median request latency of the emitted plan's serve replay.
+    pub p50_s: f64,
+    /// Compressed bytes the plan's serve run ships.
+    pub bytes: u64,
+    /// `P*`: p99 of the min-bytes anchor assignment.
+    pub min_p99_s: f64,
+    /// The relaxation budget `T` the search ran under.
+    pub threshold_s: f64,
+    /// `true`: the wire gates the tail (compression pays for serving).
+    pub wire_bound: bool,
+    /// p99 of the makespan-objective plan's forward specs served on the
+    /// same stream — the clamp guarantees `p99_s <=` this.
+    pub makespan_plan_p99_s: f64,
+    /// Global single-spec serving baselines.
+    pub baselines: Vec<LatencyRow>,
+}
+
+/// p99/p50/bytes of one forward assignment serving the admission
+/// stream `(ops, batches, arrivals)` through the event-driven executor
+/// on the (fault-derated) planner wire.
+fn simulate_latency(
+    inputs: &PlannerInputs,
+    ops: &[Op],
+    batches: &[serve::Microbatch],
+    arrival_s: &[f64],
+    fwd: &[Spec],
+) -> (f64, f64, u64) {
+    let nb = inputs.num_boundaries();
+    let spec = simexec::SimSpec {
+        n_stages: inputs.n_ranks,
+        v: inputs.v(),
+        n_mb: batches.len(),
+        fwd_op_s: inputs.fwd_op_s,
+        bwd_op_s: 0.0,
+        recompute_s: 0.0,
+        fwd_bytes: (0..nb).map(|b| cost::dir_bytes(&fwd[b], inputs.elems[b], Dir::Fwd)).collect(),
+        bwd_bytes: vec![0; nb],
+        raw_bytes: inputs.elems.iter().map(|&n| wire::raw_wire_bytes(n)).collect(),
+        model: inputs.effective_model(),
+        capacity: inputs.capacity,
+        faults: None,
+    };
+    let run = serve::serve_sim(ops, batches, &spec);
+    let mut lat = serve::request_latencies(arrival_s, batches, &run.completion_s);
+    lat.sort_by(f64::total_cmp);
+    (serve::quantile(&lat, 0.99), serve::quantile(&lat, 0.50), run.bytes)
+}
+
+/// Search the per-channel spec lattice against **tail latency**: the
+/// same anchor/threshold/first-fit skeleton as [`search`], but
+/// candidates are scored by the p99 request latency of the
+/// deterministic `(seed, knobs)` admission stream replayed through the
+/// serve executor. Only forward channels are searched; backward
+/// channels are emitted uncompressed. The final plan is clamped against
+/// the makespan-objective plan's forward specs served on the same
+/// stream, so `p99_s <= makespan_plan_p99_s` holds by construction.
+pub fn search_latency(
+    inputs: &PlannerInputs,
+    knobs: &ServeKnobs,
+    seed: u64,
+) -> Result<LatencyReport> {
+    inputs.validate()?;
+    let nb = inputs.num_boundaries();
+    let v = inputs.v();
+    let arr = arrivals::poisson(seed, knobs.rate_rps, knobs.requests);
+    let batches = serve::admit(&arr, knobs.max_batch, knobs.deadline_s);
+    let ops = serve::serve_ops(inputs.n_ranks, v, batches.len());
+    let eval = |fwd: &[Spec]| simulate_latency(inputs, &ops, &batches, &arr, fwd);
+
+    let fronts: Vec<Vec<Candidate>> = (0..nb)
+        .map(|b| cost::frontier(&cost::fwd_lattice(), inputs.elems[b], Dir::Fwd))
+        .collect();
+    let mut fwd: Vec<Spec> =
+        fronts.iter().map(|f| f.last().expect("nonempty frontier").spec).collect();
+    let (min_p99, _, _) = eval(&fwd);
+
+    let mut baselines = Vec::new();
+    for s in BASELINE_SPECS {
+        let spec = Spec::parse(s)?;
+        let (p99, p50, bytes) = eval(&vec![spec; nb]);
+        baselines.push(LatencyRow { label: spec.label(), p99_s: p99, p50_s: p50, bytes });
+    }
+    let none_p99 = baselines
+        .iter()
+        .find(|b| b.label == Spec::none().label())
+        .expect("none baseline present")
+        .p99_s;
+    let best_baseline = baselines.iter().map(|b| b.p99_s).fold(f64::INFINITY, f64::min);
+
+    let wire_bound = none_p99 > min_p99 * (1.0 + OVERLAP_TOLERANCE);
+    let threshold = if wire_bound {
+        min_p99 + RELAX_BUDGET * (best_baseline - min_p99)
+    } else {
+        none_p99
+    };
+
+    // relax each forward channel mildest-first under the p99 budget
+    // (wire-free regime: `none` fits immediately, so everything relaxes)
+    for b in 0..nb {
+        for c in &fronts[b] {
+            let prev = std::mem::replace(&mut fwd[b], c.spec);
+            let (p99, _, _) = eval(&fwd);
+            if p99 <= threshold + 1e-12 {
+                break;
+            }
+            fwd[b] = prev;
+        }
+    }
+
+    // clamp: the latency plan must never serve a worse tail than the
+    // makespan-objective plan's forward specs on the same stream
+    let makespan_plan = search(inputs)?;
+    let mk_fwd: Vec<Spec> = makespan_plan.plan.boundaries.iter().map(|b| b.fwd).collect();
+    let (mk_p99, _, _) = eval(&mk_fwd);
+    let (our_p99, _, _) = eval(&fwd);
+    if mk_p99 < our_p99 {
+        fwd = mk_fwd;
+    }
+
+    let (p99, p50, bytes) = eval(&fwd);
+    let plan = Plan {
+        n_ranks: inputs.n_ranks,
+        v,
+        queue_cap: inputs.capacity,
+        boundaries: (0..nb)
+            .map(|b| BoundaryPlan { fwd: fwd[b], bwd: Spec::none() })
+            .collect(),
+    };
+    Ok(LatencyReport {
+        plan,
+        p99_s: p99,
+        p50_s: p50,
+        bytes,
+        min_p99_s: min_p99,
+        threshold_s: threshold,
+        wire_bound,
+        makespan_plan_p99_s: mk_p99,
+        baselines,
+    })
+}
+
+impl LatencyReport {
+    /// Print the human-readable latency-plan table.
+    pub fn print(&self, title: &str) {
+        println!("\n{title}");
+        println!("{}", "-".repeat(62));
+        println!("{:<9} {:<5} {:<6} {:<18}", "boundary", "link", "chunk", "fwd spec");
+        println!("{}", "-".repeat(62));
+        for (b, bp) in self.plan.boundaries.iter().enumerate() {
+            println!(
+                "{:<9} {:<5} {:<6} {:<18}",
+                b,
+                pipeline::boundary_link(b, self.plan.n_ranks).expect(">=2 ranks"),
+                b / self.plan.n_ranks,
+                bp.fwd.label(),
+            );
+        }
+        println!("{}", "-".repeat(62));
+        println!(
+            "plan: served p99 {:.2} ms (p50 {:.2} ms), {:.3} MB shipped, digest {:016x}",
+            self.p99_s * 1e3,
+            self.p50_s * 1e3,
+            self.bytes as f64 / 1e6,
+            self.plan.digest()
+        );
+        println!(
+            "search: anchor P* {:.2} ms, budget T = {:.2} ms ({}); makespan plan serves \
+             p99 {:.2} ms",
+            self.min_p99_s * 1e3,
+            self.threshold_s * 1e3,
+            if self.wire_bound {
+                "wire-bound: compression pays"
+            } else {
+                "wire-free: uncompressed within tolerance"
+            },
+            self.makespan_plan_p99_s * 1e3,
+        );
+        for b in &self.baselines {
+            let delta = 100.0 * (b.p99_s - self.p99_s) / b.p99_s;
+            println!(
+                "  vs global {:<18} p99 {:>8.2} ms  p50 {:>8.2} ms  plan tail is {:+.2}% {}",
+                b.label,
+                b.p99_s * 1e3,
+                b.p50_s * 1e3,
+                delta,
+                if delta > 0.0 { "shorter" } else { "longer/equal" }
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -560,5 +813,98 @@ mod tests {
             .sum();
         assert_eq!(report.bytes_per_step, want);
         assert!(report.raw_bytes_per_step(&inputs) > report.bytes_per_step);
+    }
+
+    fn serve_knobs() -> ServeKnobs {
+        ServeKnobs { rate_rps: 200.0, requests: 64, max_batch: 8, deadline_s: 0.02 }
+    }
+
+    /// THE latency-objective acceptance pin: on the WAN 4x16 shape the
+    /// `--objective latency` plan's p99 — replayed *independently*
+    /// through the serve executor, not via the search's own evaluator —
+    /// is no worse than the makespan-objective plan's p99 on the same
+    /// admission stream, and strictly better than serving uncompressed.
+    #[test]
+    fn latency_plan_tail_beats_makespan_plan_and_uncompressed_on_wan() {
+        let inputs = wan_4x16_v2();
+        let knobs = serve_knobs();
+        let report = search_latency(&inputs, &knobs, 0).unwrap();
+        assert!(report.wire_bound, "WAN serving must be wire-bound");
+
+        // independent replay of any fwd assignment on the same stream
+        let arr = arrivals::poisson(0, knobs.rate_rps, knobs.requests);
+        let batches = serve::admit(&arr, knobs.max_batch, knobs.deadline_s);
+        let ops = serve::serve_ops(inputs.n_ranks, inputs.v(), batches.len());
+        let replay = |fwd: &[Spec]| -> f64 {
+            let nb = inputs.num_boundaries();
+            let spec = simexec::SimSpec {
+                n_stages: inputs.n_ranks,
+                v: inputs.v(),
+                n_mb: batches.len(),
+                fwd_op_s: inputs.fwd_op_s,
+                bwd_op_s: 0.0,
+                recompute_s: 0.0,
+                fwd_bytes: (0..nb)
+                    .map(|b| cost::dir_bytes(&fwd[b], inputs.elems[b], Dir::Fwd))
+                    .collect(),
+                bwd_bytes: vec![0; nb],
+                raw_bytes: inputs.elems.iter().map(|&n| wire::raw_wire_bytes(n)).collect(),
+                model: inputs.effective_model(),
+                capacity: inputs.capacity,
+                faults: None,
+            };
+            let run = serve::serve_sim(&ops, &batches, &spec);
+            let mut lat = serve::request_latencies(&arr, &batches, &run.completion_s);
+            lat.sort_by(f64::total_cmp);
+            serve::quantile(&lat, 0.99)
+        };
+
+        let lat_fwd: Vec<Spec> = report.plan.boundaries.iter().map(|b| b.fwd).collect();
+        assert_eq!(replay(&lat_fwd), report.p99_s, "report must be the simulator's number");
+
+        let makespan_plan = search(&inputs).unwrap();
+        let mk_fwd: Vec<Spec> = makespan_plan.plan.boundaries.iter().map(|b| b.fwd).collect();
+        let mk_p99 = replay(&mk_fwd);
+        assert_eq!(mk_p99, report.makespan_plan_p99_s);
+        assert!(
+            report.p99_s <= mk_p99 + 1e-12,
+            "latency plan p99 {} > makespan plan p99 {mk_p99}",
+            report.p99_s
+        );
+        let none_p99 = replay(&vec![Spec::none(); inputs.num_boundaries()]);
+        assert!(
+            report.p99_s < none_p99,
+            "latency plan p99 {} !< uncompressed {none_p99}",
+            report.p99_s
+        );
+        assert!(report.p50_s <= report.p99_s);
+    }
+
+    /// The latency search is deterministic, its plan validates for the
+    /// serve shape, and backward channels come out uncompressed.
+    #[test]
+    fn latency_search_is_deterministic_and_forward_only() {
+        let inputs = wan_4x16_v2();
+        let a = search_latency(&inputs, &serve_knobs(), 7).unwrap();
+        let b = search_latency(&inputs, &serve_knobs(), 7).unwrap();
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.p99_s, b.p99_s);
+        a.plan.validate_for(4, 2, 4).unwrap();
+        assert!(a.plan.boundaries.iter().all(|bp| bp.bwd.is_none()));
+        // wire-bound: the plan actually compresses somewhere
+        assert!(a.plan.boundaries.iter().any(|bp| !bp.fwd.is_none()));
+        // baselines cover the sweep set, threshold sits between anchor
+        // and the best baseline
+        assert_eq!(a.baselines.len(), BASELINE_SPECS.len());
+        assert!(a.min_p99_s <= a.threshold_s + 1e-12);
+    }
+
+    #[test]
+    fn objective_parses_and_names() {
+        assert_eq!(Objective::parse("makespan").unwrap(), Objective::Makespan);
+        assert_eq!(Objective::parse("latency").unwrap(), Objective::Latency);
+        assert!(Objective::parse("throughput").is_err());
+        assert_eq!(Objective::Latency.name(), "latency");
+        assert_eq!(Objective::parse(Objective::Makespan.name()).unwrap(), Objective::Makespan);
     }
 }

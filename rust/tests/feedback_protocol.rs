@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use mpcomp::compression::{wire, Feedback, Spec};
-use mpcomp::config::Schedule;
+use mpcomp::config::{Schedule, WireOpts};
 use mpcomp::coordinator::feedback::{FeedbackError, FeedbackState};
 use mpcomp::coordinator::worker::{self, WorkerOpts};
 use mpcomp::netsim::{
@@ -25,8 +25,11 @@ fn worker_opts(mode: &str, link_elems: usize, steps: usize) -> WorkerOpts {
         spec: Spec::parse(mode).unwrap(),
         plan: None,
         seed: 5,
-        wire: WireModel::datacenter(),
-        recv_timeout_s: 10.0,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
         steps,
     }
 }

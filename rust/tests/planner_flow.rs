@@ -4,7 +4,7 @@
 //! SimNet reference — the artifact path CI's negotiated-plan lane runs
 //! across two OS processes.
 
-use mpcomp::config::Schedule;
+use mpcomp::config::{Schedule, WireOpts};
 use mpcomp::coordinator::worker::{self, WorkerOpts};
 use mpcomp::netsim::{Backend, WireModel};
 use mpcomp::planner::{search, Plan, PlannerInputs};
@@ -33,8 +33,11 @@ fn worker_opts_with(plan: Plan) -> WorkerOpts {
         spec: mpcomp::compression::Spec::none(),
         plan: Some(plan),
         seed: 23,
-        wire: WireModel::datacenter(),
-        recv_timeout_s: 10.0,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
         steps: 2,
     }
 }

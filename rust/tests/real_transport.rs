@@ -17,7 +17,7 @@
 use std::time::Duration;
 
 use mpcomp::compression::Spec;
-use mpcomp::config::{CompressImpl, Schedule, TrainConfig};
+use mpcomp::config::{CompressImpl, Schedule, TrainConfig, WireOpts};
 use mpcomp::coordinator::worker::{self, WorkerOpts};
 use mpcomp::coordinator::Trainer;
 use mpcomp::netsim::{
@@ -132,8 +132,11 @@ fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u6
         spec: Spec::parse(mode).unwrap(),
         plan: None,
         seed,
-        wire: WireModel::datacenter(),
-        recv_timeout_s: 10.0,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
         steps: 1,
     }
 }

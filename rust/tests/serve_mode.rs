@@ -1,0 +1,232 @@
+//! Serving-mode integration suite: the open-loop admission layer is a
+//! pure function of `(seed, knobs)`, the forward-only flow is
+//! bit-identical between the `SimNet` reference and real sockets (the
+//! CI serve-parity lane's contract in-process), the latency-objective
+//! planner never loses to the makespan plan on its own metric, and the
+//! paper's inference claim pins at the serving surface.
+
+use mpcomp::cli::Args;
+use mpcomp::compression::Spec;
+use mpcomp::config::{RunSpec, Schedule, ServeKnobs, Surface, WireOpts};
+use mpcomp::coordinator::serve::{self, ServeCompression, ServeOpts};
+use mpcomp::coordinator::worker::{self, WorkerOpts};
+use mpcomp::netsim::{arrivals, Backend, WireModel};
+use mpcomp::planner::{search, search_latency, PlannerInputs};
+
+fn serve_worker_opts(mode: &str) -> WorkerOpts {
+    WorkerOpts {
+        stages: 2,
+        mb: 4, // unused by serve mode: admission decides the batch count
+        link_elems: 300,
+        schedule: Schedule::GPipe,
+        spec: Spec::parse(mode).unwrap(),
+        plan: None,
+        seed: 7,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
+        steps: 1,
+    }
+}
+
+fn knobs() -> ServeKnobs {
+    ServeKnobs { rate_rps: 400.0, requests: 24, max_batch: 4, deadline_s: 0.01 }
+}
+
+// ---------------------------------------------------------------------------
+// admission: deterministic, batch-bounded, deadline-bounded
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poisson_arrivals_and_admission_are_deterministic() {
+    let a = arrivals::poisson(7, 500.0, 64);
+    let b = arrivals::poisson(7, 500.0, 64);
+    assert_eq!(a, b, "same seed and rate must replay the identical stream");
+    assert_eq!(a.len(), 64);
+    assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals are sorted");
+    assert_ne!(a, arrivals::poisson(8, 500.0, 64), "a new seed draws a new stream");
+
+    let (max_batch, deadline) = (4, 0.004);
+    let batches = serve::admit(&a, max_batch, deadline);
+    assert_eq!(batches, serve::admit(&a, max_batch, deadline));
+    let covered: usize = batches.iter().map(|b| b.len).sum();
+    assert_eq!(covered, a.len(), "admission covers every request exactly once");
+    let mut next = 0;
+    for b in &batches {
+        assert_eq!(b.first, next, "admission is FIFO and contiguous");
+        next = b.first + b.len;
+        assert!(b.len >= 1 && b.len <= max_batch);
+        // a full batch leaves with its last member; a deadline-cut
+        // batch waits out the window opened by its oldest request
+        if b.len == max_batch {
+            assert_eq!(b.dispatch_s, a[b.first + b.len - 1]);
+        } else {
+            assert!((b.dispatch_s - (a[b.first] + deadline)).abs() < 1e-12);
+        }
+        assert!(b.dispatch_s - a[b.first] <= deadline + 1e-12, "nobody waits past the deadline");
+    }
+}
+
+#[test]
+fn serve_run_on_the_simulator_is_deterministic() {
+    let opts = ServeOpts {
+        stages: 4,
+        schedule: Schedule::GPipe,
+        link_elems: 1024,
+        fwd_op_s: 0.002,
+        seed: 11,
+        knobs: knobs(),
+        wire: WireOpts::default(),
+        fault: Default::default(),
+        plan: None,
+        spec: Spec::parse("topk:10").unwrap(),
+    };
+    let (a, ma) = opts.run().unwrap();
+    let (b, mb) = opts.run().unwrap();
+    assert_eq!(a.requests, 24);
+    assert_eq!((a.batches, a.bytes, a.raw_bytes), (b.batches, b.bytes, b.raw_bytes));
+    assert_eq!((a.p50_s, a.p99_s, a.makespan_s), (b.p50_s, b.p99_s, b.makespan_s));
+    assert_eq!(ma.serve_p99_s, mb.serve_p99_s);
+    assert!(a.p50_s > 0.0 && a.p99_s >= a.p50_s);
+    assert!(a.saturation_rps > 0.0 && a.throughput_rps > 0.0);
+    assert!(a.wire_busy_frac > 0.0 && a.wire_busy_frac <= 1.0);
+    assert!(a.bytes < a.raw_bytes, "top-10% must shrink the served wire");
+}
+
+// ---------------------------------------------------------------------------
+// parity: serve-mode flow over real sockets matches the SimNet reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_parity_sim_vs_loopback_sockets() {
+    for mode in ["topk:10", "ef21+topk:10"] {
+        let opts = serve_worker_opts(mode);
+        let k = knobs();
+        let reference = worker::run_serve_reference(&opts, &k).unwrap();
+        let again = worker::run_serve_reference(&opts, &k).unwrap();
+        assert_eq!(reference.boxes, again.boxes, "{mode}: reference replay is deterministic");
+        for backend in [Backend::Uds, Backend::Tcp] {
+            let real = worker::run_serve_loopback(&opts, &k, backend).unwrap();
+            worker::check(&reference, std::slice::from_ref(&real))
+                .unwrap_or_else(|e| panic!("{mode} over {backend}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn serve_rendezvous_two_threads_uds_parity() {
+    // The CI serve-parity lane's shape: two endpoint processes (threads
+    // here) run the forward-only admission schedule across a real UDS
+    // socket; each rank recomputes the identical batching locally and
+    // the mailbox logs must match the reference bit for bit.
+    let opts = serve_worker_opts("ef21+topk:10");
+    let k = knobs();
+    let dir = std::env::temp_dir().join(format!("mpcomp-serve-rv-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let addr = dir.to_str().unwrap().to_string();
+
+    let (o0, k0, a0) = (opts.clone(), k.clone(), addr.clone());
+    let h0 = std::thread::spawn(move || worker::run_serve_rank(&o0, &k0, 0, Backend::Uds, &a0));
+    let (o1, k1) = (opts.clone(), k.clone());
+    let h1 = std::thread::spawn(move || worker::run_serve_rank(&o1, &k1, 1, Backend::Uds, &addr));
+    let s0 = h0.join().unwrap().unwrap();
+    let s1 = h1.join().unwrap().unwrap();
+
+    let reference = worker::run_serve_reference(&opts, &k).unwrap();
+    worker::check(&reference, &[s0, s1]).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// the latency objective and the paper's serving claim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn latency_plan_never_loses_to_the_makespan_plan_on_p99() {
+    let inputs = PlannerInputs {
+        n_ranks: 2,
+        schedule: Schedule::GPipe,
+        n_mb: 4,
+        fwd_op_s: 0.010,
+        bwd_op_s: 0.020,
+        recompute_s: 0.0,
+        elems: vec![4096; 1],
+        model: WireModel::wan(),
+        capacity: 4,
+        faults: None,
+    };
+    let k = knobs();
+    let report = search_latency(&inputs, &k, 7).unwrap();
+    assert!(
+        report.p99_s <= report.makespan_plan_p99_s + 1e-9,
+        "latency objective p99 {} !<= makespan plan p99 {}",
+        report.p99_s,
+        report.makespan_plan_p99_s
+    );
+    assert!(report.p50_s <= report.p99_s);
+    report.plan.validate_for(2, 1, 4).unwrap();
+    // both objectives search the same lattice; the makespan search must
+    // still succeed on the identical inputs
+    search(&inputs).unwrap();
+}
+
+#[test]
+fn served_fidelity_pins_the_inference_claim() {
+    let (elems, requests, seed) = (256, 16, 7);
+    let fid = |mode: &str, wire| {
+        serve::serve_fidelity(&Spec::parse(mode).unwrap(), wire, elems, requests, seed)
+    };
+    // a TopK-trained artifact served uncompressed is strictly worse
+    // than served under its training-time specs...
+    let topk_unc = fid("topk:10", ServeCompression::Uncompressed);
+    let topk_ts = fid("topk:10", ServeCompression::TrainingSpecs);
+    assert!(topk_unc + 0.05 < topk_ts, "topk uncompressed {topk_unc} !<< training {topk_ts}");
+    assert!(topk_ts > 0.99);
+    // ...while error-feedback artifacts serve uncompressed with
+    // near-zero drop (the unbiased-on-average wire view)
+    for mode in ["ef21+topk:10", "aqsgd+topk:10"] {
+        let unc = fid(mode, ServeCompression::Uncompressed);
+        let ts = fid(mode, ServeCompression::TrainingSpecs);
+        assert!((unc - ts).abs() <= 0.1, "{mode}: |{unc} - {ts}| > 0.1");
+        assert!(unc >= 0.9, "{mode}: uncompressed serving dropped to {unc}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the typed config surface
+// ---------------------------------------------------------------------------
+
+fn parse_spec(cmdline: &str, surface: Surface) -> anyhow::Result<RunSpec> {
+    let argv: Vec<String> = cmdline.split_whitespace().map(String::from).collect();
+    let args = Args::parse(&argv, &[]).unwrap();
+    RunSpec::from_args(&args, surface)
+}
+
+#[test]
+fn typed_config_rejects_unknown_keys_with_the_catalog() {
+    let err = parse_spec("serve --lnik-elems=4096", Surface::Serve).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unknown config key 'lnik_elems'"), "{msg}");
+    assert!(msg.contains("valid keys:"), "{msg}");
+    assert!(msg.contains("link_elems"), "the catalog must name the right spelling: {msg}");
+}
+
+#[test]
+fn legacy_spellings_shim_onto_the_typed_keys() {
+    let rs = parse_spec(
+        "worker --drop-p=0.05 --virtual-stages=2 --rate=100 --deadline-ms=5 --backend=udp",
+        Surface::Worker,
+    )
+    .unwrap();
+    assert_eq!(rs.fault_opts().drop_p, 0.05);
+    assert_eq!(rs.train.schedule, Schedule::Interleaved { v: 2 });
+    assert_eq!(rs.serve.rate_rps, 100.0);
+    assert!((rs.serve.deadline_s - 0.005).abs() < 1e-12);
+    assert_eq!(rs.wire_opts().unwrap().backend, Backend::Udp);
+    // worker-surface defaults carry the legacy CLI defaults
+    assert_eq!((rs.stages, rs.mb, rs.link_elems), (2, 4, 256));
+    assert_eq!(rs.wire_opts().unwrap().recv_timeout_s, 20.0);
+}
