@@ -1,0 +1,176 @@
+//! Mailbox wakeup benchmarks: the global-mutex + broadcast-condvar
+//! design `netsim::real` used to have, head-to-head against the
+//! per-`(link, dir)` slot mailboxes it has now. Run with
+//! `cargo bench --bench transport`.
+//!
+//! Both designs are replicated here in miniature (the real `Shared`
+//! state is private to `netsim::real`, and the point is to compare the
+//! synchronization shape, not the framing): producers append frames
+//! keyed by `(slot, seq)`, consumers block until their key arrives.
+//! The global design keys one map + one condvar and must `notify_all`
+//! on every insert — every parked consumer wakes, rescans the map, and
+//! parks again (the wakeup storm). The per-slot design gives each
+//! `(link, dir)` its own mutex + condvar, so an insert wakes only the
+//! one thread that can consume it.
+//!
+//! CI runs this with `--json BENCH_transport.json` and gates on the
+//! per-slot design beating the global baseline on messages/sec, so the
+//! mailbox redesign can't silently regress. Bench names are stable:
+//! `mailbox_global_mutex/...` and `mailbox_per_slot/...`.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::thread;
+
+use mpcomp::util::bench::{black_box, header, Suite};
+
+/// 4 links x 2 directions — the 4-stage chain trainer topology.
+const SLOTS: usize = 8;
+/// Frames per slot per drive: enough to keep every consumer parking
+/// and re-parking, which is the contended path being measured.
+const MSGS: u64 = 64;
+/// Small payload: the cost under test is the wakeup, not the memcpy.
+const PAYLOAD: usize = 64;
+
+trait Mailbox: Sync {
+    fn send(&self, slot: usize, seq: u64, frame: Vec<u8>);
+    fn recv(&self, slot: usize, seq: u64) -> Vec<u8>;
+}
+
+/// The old design: one map, one condvar, `notify_all` per insert.
+struct GlobalMailbox {
+    state: Mutex<HashMap<(usize, u64), Vec<u8>>>,
+    cv: Condvar,
+}
+
+impl GlobalMailbox {
+    fn new() -> GlobalMailbox {
+        GlobalMailbox { state: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+}
+
+impl Mailbox for GlobalMailbox {
+    fn send(&self, slot: usize, seq: u64, frame: Vec<u8>) {
+        self.state.lock().unwrap().insert((slot, seq), frame);
+        // any of the parked consumers might want this key: wake them all
+        self.cv.notify_all();
+    }
+
+    fn recv(&self, slot: usize, seq: u64) -> Vec<u8> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(f) = g.remove(&(slot, seq)) {
+                return f;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// The current design: one mutex + condvar per `(link, dir)` slot, one
+/// targeted `notify_one` per insert (mirrors `netsim::real::Slot`).
+struct SlotMailbox {
+    slots: Vec<(Mutex<HashMap<u64, Vec<u8>>>, Condvar)>,
+}
+
+impl SlotMailbox {
+    fn new() -> SlotMailbox {
+        SlotMailbox {
+            slots: (0..SLOTS).map(|_| (Mutex::new(HashMap::new()), Condvar::new())).collect(),
+        }
+    }
+}
+
+impl Mailbox for SlotMailbox {
+    fn send(&self, slot: usize, seq: u64, frame: Vec<u8>) {
+        let (state, cv) = &self.slots[slot];
+        state.lock().unwrap().insert(seq, frame);
+        cv.notify_one();
+    }
+
+    fn recv(&self, slot: usize, seq: u64) -> Vec<u8> {
+        let (state, cv) = &self.slots[slot];
+        let mut g = state.lock().unwrap();
+        loop {
+            if let Some(f) = g.remove(&seq) {
+                return f;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// One producer + one consumer thread per slot, `MSGS` frames each.
+fn drive(mbx: &dyn Mailbox) -> u64 {
+    thread::scope(|s| {
+        for slot in 0..SLOTS {
+            s.spawn(move || {
+                for seq in 0..MSGS {
+                    mbx.send(slot, seq, vec![slot as u8; PAYLOAD]);
+                }
+            });
+            s.spawn(move || {
+                for seq in 0..MSGS {
+                    black_box(mbx.recv(slot, seq));
+                }
+            });
+        }
+    });
+    SLOTS as u64 * MSGS
+}
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+    let label = format!("{SLOTS}x{MSGS}");
+    let total = (SLOTS as u64 * MSGS) as f64;
+
+    let global = GlobalMailbox::new();
+    suite
+        .bench(&format!("mailbox_global_mutex/{label}"), || {
+            black_box(drive(&global));
+        })
+        .report_throughput(total, "msg");
+
+    let per_slot = SlotMailbox::new();
+    suite
+        .bench(&format!("mailbox_per_slot/{label}"), || {
+            black_box(drive(&per_slot));
+        })
+        .report_throughput(total, "msg");
+
+    // uncontended single-pair handoff: the latency floor both designs
+    // share when there is no one to storm
+    let solo_global = GlobalMailbox::new();
+    suite
+        .bench("mailbox_global_mutex/solo", || {
+            thread::scope(|s| {
+                s.spawn(|| {
+                    for seq in 0..MSGS {
+                        solo_global.send(0, seq, vec![0; PAYLOAD]);
+                    }
+                });
+                for seq in 0..MSGS {
+                    black_box(solo_global.recv(0, seq));
+                }
+            });
+        })
+        .report_throughput(MSGS as f64, "msg");
+    let solo_slot = SlotMailbox::new();
+    suite
+        .bench("mailbox_per_slot/solo", || {
+            thread::scope(|s| {
+                s.spawn(|| {
+                    for seq in 0..MSGS {
+                        solo_slot.send(0, seq, vec![0; PAYLOAD]);
+                    }
+                });
+                for seq in 0..MSGS {
+                    black_box(solo_slot.recv(0, seq));
+                }
+            });
+        })
+        .report_throughput(MSGS as f64, "msg");
+
+    suite.finish();
+}

@@ -30,6 +30,36 @@ impl CompressImpl {
     }
 }
 
+/// How the trainer executes the schedule's ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Ordered single-threaded replay (default; works on any backend).
+    Sequential,
+    /// One OS thread per pipeline rank over a shared stream transport
+    /// (`backend = tcp | uds`), with inter-rank tensor handoff through
+    /// channels. Parameters and losses stay bit-identical to the
+    /// sequential replay (see `coordinator::threaded`).
+    Threaded,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sequential" | "seq" => Ok(ExecMode::Sequential),
+            "threaded" => Ok(ExecMode::Threaded),
+            _ => bail!("exec must be 'sequential' or 'threaded', got '{s}'"),
+        }
+    }
+
+    /// The canonical CLI/TOML name (`parse(name())` roundtrips).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Threaded => "threaded",
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Optimizer {
     /// SGD + momentum 0.9 + wd 5e-4 (paper's CNN recipe).
@@ -155,6 +185,9 @@ pub struct TrainConfig {
     /// Receive window (seconds) before the real transport surfaces a
     /// typed timeout error.
     pub recv_timeout_s: f64,
+    /// Schedule executor: `sequential` (ordered replay, any backend) or
+    /// `threaded` (one OS thread per rank; needs a stream backend).
+    pub exec: ExecMode,
     /// Fixed virtual compute cost per schedule op (seconds). `None`
     /// charges the measured wall time of each stage executable instead;
     /// tests and ablations pin it for deterministic makespans.
@@ -204,6 +237,7 @@ impl TrainConfig {
         "wire",
         "backend",
         "recv_timeout_s",
+        "exec",
         "sim_op_time",
         "sim_queue_cap",
         "sim_drop_p",
@@ -243,6 +277,7 @@ impl TrainConfig {
             wire: "wan".into(),
             backend: "sim".into(),
             recv_timeout_s: 10.0,
+            exec: ExecMode::Sequential,
             sim_op_time: None,
             sim_queue_cap: crate::netsim::DEFAULT_QUEUE_CAPACITY,
             sim_drop_p: 0.0,
@@ -299,6 +334,7 @@ impl TrainConfig {
         self.wire = doc.str_or(s, "wire", &self.wire)?;
         self.backend = doc.str_or(s, "backend", &self.backend)?;
         self.recv_timeout_s = doc.f64_or(s, "recv_timeout_s", self.recv_timeout_s)?;
+        self.exec = ExecMode::parse(&doc.str_or(s, "exec", self.exec.name())?)?;
         self.sim_queue_cap = doc.usize_or(s, "sim_queue_cap", self.sim_queue_cap)?;
         if let Some(v) = doc.get(s, "sim_op_time") {
             self.sim_op_time = Some(v.as_f64()?);
@@ -341,6 +377,7 @@ impl TrainConfig {
             "wire" => self.wire = value.into(),
             "backend" => self.backend = value.into(),
             "recv_timeout_s" => self.recv_timeout_s = value.parse()?,
+            "exec" => self.exec = ExecMode::parse(value)?,
             "sim_op_time" => self.sim_op_time = Some(value.parse()?),
             "sim_queue_cap" => self.sim_queue_cap = value.parse()?,
             "sim_drop_p" => self.sim_drop_p = value.parse()?,
@@ -509,6 +546,7 @@ mod tests {
                 "compress_impl" => "native",
                 "optimizer" => "sgd",
                 "schedule" => "1f1b",
+                "exec" => "threaded",
                 "model" | "artifacts_dir" | "results_dir" | "wire" | "backend"
                 | "init_checkpoint" | "save_checkpoint" => "x",
                 "sim_stragglers" => "1,2",
@@ -558,6 +596,24 @@ mod tests {
         let mut c = TrainConfig::defaults("cnn16");
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.schedule, Schedule::Interleaved { v: 4 });
+    }
+
+    #[test]
+    fn exec_mode_parses_and_roundtrips() {
+        for s in ["sequential", "threaded"] {
+            assert_eq!(ExecMode::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(ExecMode::parse("seq").unwrap(), ExecMode::Sequential);
+        assert!(ExecMode::parse("parallel").is_err());
+        let mut c = TrainConfig::defaults("cnn16");
+        assert_eq!(c.exec, ExecMode::Sequential);
+        c.set("exec", "threaded").unwrap();
+        assert_eq!(c.exec, ExecMode::Threaded);
+        assert!(c.set("exec", "bogus").is_err());
+        let doc = toml::Doc::parse("[run]\nexec = \"threaded\"\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.exec, ExecMode::Threaded);
     }
 
     #[test]

@@ -433,6 +433,7 @@ impl RunSpec {
             ("compression", t.spec.canon()),
             ("plan", t.plan.name()),
             ("schedule", t.schedule.name()),
+            ("exec", t.exec.name().to_string()),
             ("epochs", t.epochs.to_string()),
             ("seed", t.seed.to_string()),
             ("stages", self.stages.to_string()),

@@ -10,17 +10,25 @@
 //! * [`trainer`] — the end-to-end training loop + dual evaluation
 //! * [`worker`] — one stage per OS process over the real-socket
 //!   transport (`mpcomp worker`), with the sim/real parity checker
+//! * [`threaded`] — one stage per OS *thread* over a shared stream
+//!   transport (`exec = threaded`), for both the worker harness and
+//!   the trainer, bit-identical to the sequential executors
 //! * [`serve`] — pipelined batched-inference serving over the same
 //!   compressed links (L6, `mpcomp serve`): open-loop arrivals,
 //!   deadline/batch-bound admission, tail-latency accounting
 //!
-//! Trainer execution is deterministic and single-threaded: the xla
-//! wrappers are not `Send`, and the testbed has one core. Every
-//! inter-stage tensor is routed through the
-//! [`crate::netsim::Transport`] — the event-driven simulator by default
-//! (virtual clocks, simulated makespan), or real loopback sockets with
-//! `backend = tcp | uds` — while the tensor math stays bit-identical to
-//! a plain ordered replay (asserted by integration tests).
+//! Execution comes in two modes. The default (`exec = sequential`) is
+//! a deterministic ordered replay on one thread: every inter-stage
+//! tensor is routed through the [`crate::netsim::Transport`] — the
+//! event-driven simulator by default (virtual clocks, simulated
+//! makespan), or real loopback sockets with `backend = tcp | uds` —
+//! while the tensor math stays bit-identical to a plain ordered replay
+//! (asserted by integration tests). `exec = threaded` runs one OS
+//! thread per pipeline rank over ports of a shared stream transport
+//! (the runtime and xla wrappers are `Send + Sync` — asserted at
+//! compile time in `runtime`); parameters and losses stay bit-identical
+//! to the sequential replay because every piece of stateful executor
+//! state keeps a single, ordered writer (see [`threaded`]).
 
 #![warn(missing_docs)]
 
@@ -30,6 +38,7 @@ pub mod pipeline;
 pub mod serve;
 pub mod simexec;
 pub mod stage;
+pub mod threaded;
 pub mod trainer;
 pub mod worker;
 
@@ -37,5 +46,6 @@ pub use link::CompressedLink;
 pub use serve::{ServeOpts, ServeReport};
 pub use simexec::{simulate, SimReport, SimSpec};
 pub use stage::{StageInput, StageRunner};
+pub use threaded::run_threaded;
 pub use trainer::Trainer;
 pub use worker::{WorkerOpts, WorkerSummary};

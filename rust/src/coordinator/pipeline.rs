@@ -2,12 +2,15 @@
 //! (Megatron-style virtual stages) — plus their validation and the
 //! analytic makespan reference model.
 //!
-//! The coordinator executes these deterministically on one thread — the
-//! xla wrappers are not `Send`, and the testbed has one core, so the
-//! schedule's role here is (a) correctness of the dependency order,
-//! (b) the *simulated* multi-worker makespan (peak in-flight activations
-//! and bubble fraction differ between schedules — the ablation bench),
-//! and (c) the order feedback buffers observe microbatches in, which is
+//! The coordinator executes one schedule two ways: a deterministic
+//! ordered replay on one thread (`exec = sequential`, any backend), or
+//! one OS thread per rank walking its filtered slice of the same op
+//! list concurrently (`exec = threaded`, stream backends — see
+//! [`super::threaded`]). Either way the schedule's role is (a)
+//! correctness of the dependency order, (b) the multi-worker makespan
+//! (simulated or measured; peak in-flight activations and bubble
+//! fraction differ between schedules — the ablation bench), and (c)
+//! the order feedback buffers observe microbatches in, which is
 //! semantically visible (EF buffers are updated per message).
 //!
 //! # The (rank, chunk) op key

@@ -1,0 +1,563 @@
+//! Thread-per-rank schedule execution over the shared stream transport
+//! (`exec = threaded`).
+//!
+//! Both entry points spawn one OS thread per pipeline rank, each owning
+//! a [`ThreadedPort`] of the same [`RealTransport`] wire: shared
+//! sockets and per-`(link, dir)` slot mailboxes, private byte
+//! accounting merged back with [`Transport::absorb`] after the join.
+//! This is what the per-slot mailbox redesign in `netsim::real` exists
+//! for — receivers block on their own slot's condvar instead of a
+//! global mutex, so `n` rank threads never storm each other awake.
+//!
+//! * [`run_threaded`] — the worker harness's schedule replay
+//!   ([`worker::run_ops`]) with every rank on its own thread in one
+//!   process, merged into a reference-shaped [`WorkerSummary`] that
+//!   `mpcomp worker --check` diffs against the `SimNet` replay.
+//! * [`train_batch`] — one optimizer step of the real trainer: stages
+//!   and links are checked out of the [`Trainer`] into per-rank mutex
+//!   cells, inter-rank tensors hand off through bounded-wait channels,
+//!   and the optimizer update runs sequentially after the join.
+//!
+//! # Bit-parity contract
+//!
+//! Trained parameters and losses are bit-identical to the sequential
+//! executor because every stateful computation observes the exact same
+//! operand sequence:
+//!
+//! * each *stage* (params, optimizer and gradient accumulators, stash)
+//!   is touched by exactly one rank thread, in that rank's program
+//!   order — the sequential schedule filtered to its ops;
+//! * each *link direction*'s codec + feedback state is driven by
+//!   exactly one consumer thread (forward by the downstream rank,
+//!   backward by the upstream rank), again in program order, so
+//!   EF/EF21/AQ-SGD buffers see the same `(tensor, key)` sequence;
+//! * the loss sum is accumulated only on the last-stage rank, in its
+//!   program order — the same float addition order as sequential;
+//! * the optimizer step runs on the caller's thread, stage by stage.
+//!
+//! Only the *timing* metrics differ: the stream backends run on
+//! wall-clock time (`clock` reads the shared epoch, `advance` is a
+//! no-op), so `wire_elapsed_s`/makespan measure the actual concurrent
+//! run rather than replaying the virtual-time model. That holds for
+//! the sequential trainer on `backend = tcp|uds` too — it is a
+//! property of the real transports, not of this executor.
+
+use std::collections::HashMap;
+use std::mem;
+use std::sync::{mpsc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::CompressImpl;
+use crate::coordinator::link::CompressedLink;
+use crate::coordinator::pipeline::{self, Op};
+use crate::coordinator::stage::{StageInput, StageRunner};
+use crate::coordinator::trainer::{self, Trainer};
+use crate::coordinator::worker::{self, MailboxLog, WorkerOpts, WorkerSummary};
+use crate::netsim::{Backend, Dir, RealTransport, ThreadedPort, Transport};
+use crate::planner::Plan;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Empty per-`(link, dir)` mailbox logs in reference shape.
+fn empty_boxes(links: usize) -> Vec<MailboxLog> {
+    (0..links)
+        .flat_map(|link| {
+            [Dir::Fwd, Dir::Bwd].into_iter().map(move |dir| MailboxLog {
+                link,
+                dir,
+                recv: Vec::new(),
+                sent_msgs: 0,
+                sent_bytes: 0,
+            })
+        })
+        .collect()
+}
+
+/// Run the worker harness's schedule with one thread per rank over a
+/// shared loopback transport, and merge the per-rank mailbox logs into
+/// one reference-shaped summary (each mailbox has exactly one sender
+/// and one receiver rank, so the merge is exact, not approximate).
+/// `worker::check` against the `SimNet` reference is the executor's
+/// bit-parity gate in CI.
+pub fn run_threaded(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
+    if !matches!(backend, Backend::Tcp | Backend::Uds) {
+        bail!(
+            "exec=threaded needs a stream backend (tcp or uds), got '{}': the simulator's \
+             virtual clocks and the udp reliability layer are single-endpoint transports",
+            backend.name()
+        );
+    }
+    let plan = opts.effective_plan()?;
+    let links = opts.wire_links();
+    let model = opts.wire.model()?;
+    let timeout = Duration::from_secs_f64(opts.wire.recv_timeout_s);
+    let ops = pipeline::ops_for(opts.schedule, opts.stages, opts.mb)?;
+    let mut net = RealTransport::loopback(links, backend, model, timeout)?;
+    let ports: Vec<ThreadedPort> = (0..opts.stages)
+        .map(|_| net.port())
+        .collect::<Option<_>>()
+        .context("stream transport refused to mint thread ports")?;
+
+    let mut per_rank: Vec<Result<(Vec<MailboxLog>, ThreadedPort)>> =
+        Vec::with_capacity(opts.stages);
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.stages);
+        for (rank, mut port) in ports.into_iter().enumerate() {
+            let (plan, ops) = (&plan, &ops[..]);
+            handles.push(scope.spawn(move || {
+                let boxes = worker::run_ops(opts, plan, &mut port, &|r| r == rank, ops, opts.mb)
+                    .with_context(|| format!("rank {rank} thread"))?;
+                Ok((boxes, port))
+            }));
+        }
+        for h in handles {
+            per_rank.push(h.join().unwrap_or_else(|_| Err(anyhow!("rank thread panicked"))));
+        }
+    });
+
+    let mut merged = empty_boxes(links);
+    let mut first_err = None;
+    for r in per_rank {
+        match r {
+            Ok((boxes, port)) => {
+                net.absorb(port);
+                for (m, b) in merged.iter_mut().zip(boxes) {
+                    if !b.recv.is_empty() {
+                        if !m.recv.is_empty() {
+                            first_err.get_or_insert(anyhow!(
+                                "link {} {}: two rank threads consumed one mailbox",
+                                b.link,
+                                b.dir
+                            ));
+                        }
+                        m.recv = b.recv;
+                    }
+                    m.sent_msgs += b.sent_msgs;
+                    m.sent_bytes += b.sent_bytes;
+                }
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    let elapsed = net.wire_elapsed_s();
+    net.shutdown()?;
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(WorkerSummary {
+        backend: format!("{}+threaded", backend.name()),
+        rank: None,
+        boxes: merged,
+        wire_elapsed_s: elapsed,
+    })
+}
+
+/// One `(tensor, producer-finish-time)` handoff, tagged with its
+/// microbatch so a consumer whose schedule visits microbatches in a
+/// different order than the producer still picks up the right one.
+type Msg = (usize, Tensor, f64);
+
+/// Consumer end of one `(boundary, dir)` handoff channel: a bounded
+/// wait on the producer thread plus a stash for tensors that arrived
+/// ahead of this rank's schedule order.
+struct Handoff {
+    rx: mpsc::Receiver<Msg>,
+    pending: HashMap<usize, (Tensor, f64)>,
+}
+
+impl Handoff {
+    fn new(rx: mpsc::Receiver<Msg>) -> Handoff {
+        Handoff { rx, pending: HashMap::new() }
+    }
+
+    fn recv(&mut self, mb: usize, timeout: Duration, what: &str) -> Result<(Tensor, f64)> {
+        if let Some(v) = self.pending.remove(&mb) {
+            return Ok(v);
+        }
+        loop {
+            let (got, t, sent_at) = self
+                .rx
+                .recv_timeout(timeout)
+                .map_err(|e| anyhow!("waiting for {what} mb{mb}: {e}"))?;
+            if got == mb {
+                return Ok((t, sent_at));
+            }
+            self.pending.insert(got, (t, sent_at));
+        }
+    }
+}
+
+/// Everything one rank thread needs to execute its slice of the batch.
+struct RankCtx<'a> {
+    rank: usize,
+    n_ranks: usize,
+    ms_count: usize,
+    m_count: usize,
+    batch: usize,
+    compress: bool,
+    imp: CompressImpl,
+    sim_op_time: Option<f64>,
+    recv_timeout: Duration,
+    rt: &'a Runtime,
+    plan: &'a Plan,
+    loss_file: &'a str,
+    label_shape: &'a [usize],
+    ops: &'a [Op],
+    stage_cells: &'a [Mutex<StageRunner>],
+    link_cells: &'a [Mutex<CompressedLink>],
+    /// Microbatch inputs (populated only on the rank owning stage 0).
+    inputs: Vec<Option<StageInput>>,
+    /// Labels per microbatch (populated only on the last-stage rank).
+    labels: Vec<Vec<i32>>,
+    /// Sender end of fwd channel per boundary this rank produces into.
+    fwd_tx: Vec<Option<mpsc::Sender<Msg>>>,
+    /// Consumer end of fwd channel per boundary this rank reads from.
+    fwd_rx: Vec<Option<Handoff>>,
+    bwd_tx: Vec<Option<mpsc::Sender<Msg>>>,
+    bwd_rx: Vec<Option<Handoff>>,
+}
+
+/// Execute one rank's ops for one batch; returns this thread's loss
+/// contribution (non-zero only on the last-stage rank).
+fn run_rank(mut ctx: RankCtx<'_>, port: &mut ThreadedPort) -> Result<f64> {
+    let mut logits: Vec<Option<(Tensor, f64)>> = (0..ctx.m_count).map(|_| None).collect();
+    let mut loss_sum = 0.0f64;
+    // same channel keys as the sequential executor (trainer::train_batch)
+    let key_for = |boundary: usize, mb: usize| -> u64 {
+        ((boundary as u64) << 48) | (ctx.batch * ctx.m_count + mb) as u64
+    };
+    for op in ctx.ops {
+        if op.rank() != ctx.rank {
+            continue;
+        }
+        let mb = op.mb();
+        let ms = op.model_stage(ctx.n_ranks);
+        if op.is_fwd() {
+            let (input, ready) = if ms == 0 {
+                let inp = ctx.inputs[mb]
+                    .take()
+                    .with_context(|| format!("missing microbatch input mb{mb}"))?;
+                (inp, port.clock(ctx.rank))
+            } else {
+                let rx = ctx.fwd_rx[ms - 1]
+                    .as_mut()
+                    .with_context(|| format!("rank {}: no fwd channel s{}", ctx.rank, ms - 1))?;
+                let (prev, sent_at) =
+                    rx.recv(mb, ctx.recv_timeout, &format!("activation s{}", ms - 1))?;
+                let spec = trainer::channel_spec_in(ctx.plan, ms - 1, Dir::Fwd, ctx.compress);
+                let mut link = ctx.link_cells[ms - 1]
+                    .lock()
+                    .map_err(|_| anyhow!("link {} mutex poisoned", ms - 1))?;
+                let (compressed, arrival) = link.forward(
+                    ctx.rt,
+                    &spec,
+                    ctx.imp,
+                    &prev,
+                    key_for(ms - 1, mb),
+                    true,
+                    &mut *port,
+                    sent_at,
+                )?;
+                (StageInput::F32(compressed), arrival)
+            };
+            let mut stage = ctx.stage_cells[ms]
+                .lock()
+                .map_err(|_| anyhow!("stage {ms} mutex poisoned"))?;
+            let y = stage.forward(ctx.rt, mb as u64, input, true)?;
+            let start = port.clock(ctx.rank).max(ready);
+            let end = start + ctx.sim_op_time.unwrap_or_else(|| stage.last_op_wall_s());
+            drop(stage);
+            port.advance(ctx.rank, end);
+            if ms == ctx.ms_count - 1 {
+                logits[mb] = Some((y, end));
+            } else {
+                ctx.fwd_tx[ms]
+                    .as_ref()
+                    .with_context(|| format!("rank {}: no fwd channel s{ms}", ctx.rank))?
+                    .send((mb, y, end))
+                    .map_err(|_| anyhow!("downstream rank for s{ms} hung up"))?;
+            }
+        } else {
+            let (g_in, ready) = if ms == ctx.ms_count - 1 {
+                let (lg, fwd_end) = logits[mb]
+                    .take()
+                    .with_context(|| format!("missing logits mb{mb}"))?;
+                let (loss, g) = trainer::loss_and_grad_in(
+                    ctx.rt,
+                    ctx.loss_file,
+                    ctx.label_shape,
+                    &lg,
+                    &ctx.labels[mb],
+                )?;
+                loss_sum += loss as f64;
+                (g, fwd_end)
+            } else {
+                let rx = ctx.bwd_rx[ms]
+                    .as_mut()
+                    .with_context(|| format!("rank {}: no bwd channel s{ms}", ctx.rank))?;
+                let (g, sent_at) =
+                    rx.recv(mb, ctx.recv_timeout, &format!("gradient s{}", ms + 1))?;
+                let spec = trainer::channel_spec_in(ctx.plan, ms, Dir::Bwd, ctx.compress);
+                let mut link = ctx.link_cells[ms]
+                    .lock()
+                    .map_err(|_| anyhow!("link {ms} mutex poisoned"))?;
+                link.backward(
+                    ctx.rt,
+                    &spec,
+                    ctx.imp,
+                    &g,
+                    key_for(ms, mb),
+                    true,
+                    &mut *port,
+                    sent_at,
+                )?
+            };
+            let mut stage = ctx.stage_cells[ms]
+                .lock()
+                .map_err(|_| anyhow!("stage {ms} mutex poisoned"))?;
+            let gx = stage.backward(ctx.rt, mb as u64, &g_in)?;
+            let start = port.clock(ctx.rank).max(ready);
+            let end = start + ctx.sim_op_time.unwrap_or_else(|| stage.last_op_wall_s());
+            drop(stage);
+            port.advance(ctx.rank, end);
+            if let Some(gx) = gx {
+                if ms > 0 {
+                    ctx.bwd_tx[ms - 1]
+                        .as_ref()
+                        .with_context(|| format!("rank {}: no bwd channel s{}", ctx.rank, ms - 1))?
+                        .send((mb, gx, end))
+                        .map_err(|_| anyhow!("upstream rank for s{ms} hung up"))?;
+                }
+            }
+        }
+    }
+    Ok(loss_sum)
+}
+
+/// One optimizer step of the trainer with one thread per rank (the
+/// `exec = threaded` path of [`Trainer::train_epoch`]). Stages and
+/// links are checked out into mutex cells for the duration of the
+/// batch and restored afterwards; the optimizer update and barrier run
+/// sequentially on the caller's thread. See the module docs for the
+/// bit-parity argument.
+pub(crate) fn train_batch(
+    tr: &mut Trainer,
+    batch: usize,
+    compress: bool,
+    lr: f32,
+) -> Result<f64> {
+    let ms_count = tr.stages.len();
+    let n_ranks = tr.n_ranks;
+    let m_count = tr.n_microbatches;
+    let ops = tr.schedule()?;
+    let recv_timeout = Duration::from_secs_f64(tr.cfg.recv_timeout_s);
+
+    // one wire port per rank thread (Trainer::new already rejected
+    // non-stream backends, so a refusal here is a transport bug)
+    let ports: Vec<ThreadedPort> = (0..n_ranks)
+        .map(|_| tr.net.port())
+        .collect::<Option<_>>()
+        .with_context(|| {
+            format!("backend '{}' refused to mint thread ports", tr.cfg.backend)
+        })?;
+
+    // microbatch inputs and labels come off the dataset up front, on
+    // this thread — rank 0 consumes the inputs, the last rank the labels
+    let mut inputs: Vec<Option<StageInput>> = Vec::with_capacity(m_count);
+    let mut labels: Vec<Vec<i32>> = Vec::with_capacity(m_count);
+    for mb in 0..m_count {
+        let (inp, lab) = tr.train_microbatch(batch, mb);
+        inputs.push(Some(inp));
+        labels.push(lab);
+    }
+
+    // inter-rank handoff channels, one per (boundary, dir): boundary b
+    // joins stage b (rank b % n) to stage b + 1 (rank (b+1) % n) —
+    // always cross-rank under the round-robin chunk layout
+    let n_bound = ms_count.saturating_sub(1);
+    let mut fwd_tx: Vec<Vec<Option<mpsc::Sender<Msg>>>> =
+        (0..n_ranks).map(|_| (0..n_bound).map(|_| None).collect()).collect();
+    let mut fwd_rx: Vec<Vec<Option<Handoff>>> =
+        (0..n_ranks).map(|_| (0..n_bound).map(|_| None).collect()).collect();
+    let mut bwd_tx: Vec<Vec<Option<mpsc::Sender<Msg>>>> =
+        (0..n_ranks).map(|_| (0..n_bound).map(|_| None).collect()).collect();
+    let mut bwd_rx: Vec<Vec<Option<Handoff>>> =
+        (0..n_ranks).map(|_| (0..n_bound).map(|_| None).collect()).collect();
+    for b in 0..n_bound {
+        let (tx, rx) = mpsc::channel();
+        fwd_tx[b % n_ranks][b] = Some(tx);
+        fwd_rx[(b + 1) % n_ranks][b] = Some(Handoff::new(rx));
+        let (tx, rx) = mpsc::channel();
+        bwd_tx[(b + 1) % n_ranks][b] = Some(tx);
+        bwd_rx[b % n_ranks][b] = Some(Handoff::new(rx));
+    }
+
+    // check stages and links out of the trainer into per-rank cells;
+    // each cell is touched by a known thread set (stages: one rank;
+    // links: downstream rank fwd, upstream rank bwd — disjoint halves)
+    let stage_cells: Vec<Mutex<StageRunner>> =
+        mem::take(&mut tr.stages).into_iter().map(Mutex::new).collect();
+    let link_cells: Vec<Mutex<CompressedLink>> =
+        mem::take(&mut tr.links).into_iter().map(Mutex::new).collect();
+
+    let mut results: Vec<Result<(f64, ThreadedPort)>> = Vec::with_capacity(n_ranks);
+    {
+        // Sync field borrows the threads share (the whole Trainer is
+        // not Sync — its boxed transport isn't — but these fields are)
+        let rt = &tr.rt;
+        let plan = &tr.plan;
+        let loss_file = tr.loss_file.as_str();
+        let label_shape = tr.label_shape.as_slice();
+        let imp = tr.cfg.compress_impl;
+        let sim_op_time = tr.cfg.sim_op_time;
+        let (ops, stage_cells, link_cells) = (&ops[..], &stage_cells[..], &link_cells[..]);
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_ranks);
+            for (rank, mut port) in ports.into_iter().enumerate() {
+                let ctx = RankCtx {
+                    rank,
+                    n_ranks,
+                    ms_count,
+                    m_count,
+                    batch,
+                    compress,
+                    imp,
+                    sim_op_time,
+                    recv_timeout,
+                    rt,
+                    plan,
+                    loss_file,
+                    label_shape,
+                    ops,
+                    stage_cells,
+                    link_cells,
+                    inputs: if rank == 0 { mem::take(&mut inputs) } else { Vec::new() },
+                    labels: if rank == n_ranks - 1 { mem::take(&mut labels) } else { Vec::new() },
+                    fwd_tx: mem::take(&mut fwd_tx[rank]),
+                    fwd_rx: mem::take(&mut fwd_rx[rank]),
+                    bwd_tx: mem::take(&mut bwd_tx[rank]),
+                    bwd_rx: mem::take(&mut bwd_rx[rank]),
+                };
+                handles.push(scope.spawn(move || {
+                    let loss = run_rank(ctx, &mut port)
+                        .with_context(|| format!("rank {rank} thread"))?;
+                    Ok((loss, port))
+                }));
+            }
+            for h in handles {
+                results
+                    .push(h.join().unwrap_or_else(|_| Err(anyhow!("rank thread panicked"))));
+            }
+        });
+    }
+
+    // restore the checked-out state before error propagation so a
+    // failed batch leaves the trainer structurally intact
+    tr.stages = stage_cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect();
+    tr.links = link_cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect();
+    let mut loss_sum = 0.0f64;
+    let mut first_err = None;
+    for r in results {
+        match r {
+            Ok((loss, port)) => {
+                loss_sum += loss;
+                tr.net.absorb(port);
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    for s in &mut tr.stages {
+        s.update(&tr.rt, lr)?;
+    }
+    // optimizer step = synchronization point across workers
+    tr.net.barrier();
+    Ok(loss_sum / m_count as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Spec;
+    use crate::config::{Schedule, WireOpts};
+
+    fn opts(stages: usize, mb: usize, mode: &str, schedule: Schedule) -> WorkerOpts {
+        WorkerOpts {
+            stages,
+            mb,
+            link_elems: 128,
+            schedule,
+            spec: Spec::parse(mode).unwrap(),
+            plan: None,
+            seed: 17,
+            wire: WireOpts {
+                profile: "datacenter".into(),
+                recv_timeout_s: 10.0,
+                ..WireOpts::default()
+            },
+            steps: 2,
+        }
+    }
+
+    #[test]
+    fn threaded_rejects_non_stream_backends() {
+        let o = opts(2, 2, "none", Schedule::GPipe);
+        for backend in [Backend::Sim, Backend::Udp] {
+            let err = run_threaded(&o, backend).unwrap_err().to_string();
+            assert!(err.contains("stream backend"), "{backend:?}: {err}");
+        }
+    }
+
+    /// The executor's core contract: every schedule's threaded run is
+    /// bit-identical to the single-process SimNet reference — same
+    /// per-mailbox delivery order, bytes, and payload digests.
+    #[test]
+    fn threaded_run_matches_reference_on_every_schedule() {
+        for (schedule, mb) in [
+            (Schedule::GPipe, 4),
+            (Schedule::OneFOneB, 4),
+            (Schedule::Interleaved { v: 2 }, 4),
+        ] {
+            for mode in ["topk:10", "ef21+topk:10"] {
+                let o = opts(2, mb, mode, schedule);
+                let reference = worker::run_reference(&o).unwrap();
+                let threaded = run_threaded(&o, Backend::Uds)
+                    .unwrap_or_else(|e| panic!("{} {mode}: {e}", schedule.name()));
+                worker::check(&reference, std::slice::from_ref(&threaded))
+                    .unwrap_or_else(|e| panic!("{} {mode}: {e}", schedule.name()));
+                assert_eq!(threaded.backend, "uds+threaded");
+                assert!(threaded.wire_elapsed_s > 0.0, "measured wall-clock tx time");
+                // merged summary is reference-shaped: full coverage, so
+                // the --check cross-coverage clause is exercised too
+                assert_eq!(threaded.received(), reference.received());
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_three_rank_chain_covers_every_mailbox() {
+        let o = opts(3, 6, "quant:fw8-bw8", Schedule::OneFOneB);
+        let reference = worker::run_reference(&o).unwrap();
+        let threaded = run_threaded(&o, Backend::Uds).unwrap();
+        worker::check(&reference, std::slice::from_ref(&threaded)).unwrap();
+        for b in &threaded.boxes {
+            assert!(!b.recv.is_empty(), "link {} {} merged empty", b.link, b.dir);
+            assert!(b.sent_msgs > 0);
+        }
+    }
+}

@@ -24,7 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint;
 use crate::compression::Spec;
-use crate::config::TrainConfig;
+use crate::config::{ExecMode, TrainConfig};
 use crate::coordinator::link::CompressedLink;
 use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::stage::{StageInput, StageRunner};
@@ -56,8 +56,11 @@ pub struct Trainer {
     /// uniform from `cfg.spec` under `plan = global`, loaded from a
     /// plan file, or emitted by the overlap-aware search (`auto`).
     pub plan: Plan,
-    stages: Vec<StageRunner>,
-    links: Vec<CompressedLink>,
+    /// Per-model-stage executors. `pub(super)` so the threaded executor
+    /// can check them out into per-rank mutex cells for one batch.
+    pub(super) stages: Vec<StageRunner>,
+    /// Per-boundary compressed links (same checkout contract).
+    pub(super) links: Vec<CompressedLink>,
     /// The inter-stage transport: `SimNet` (virtual time, the default)
     /// or `RealTransport` (loopback tcp/uds sockets, wall-clock time)
     /// per `cfg.backend`.
@@ -66,12 +69,12 @@ pub struct Trainer {
     /// Workers executing the pipeline: `model stages / v`. With an
     /// interleaved schedule each rank hosts `v` chunks and the wire is
     /// a ring; flat schedules keep one stage per rank on a chain.
-    n_ranks: usize,
+    pub(super) n_ranks: usize,
     data: TaskData,
     microbatch: usize,
-    n_microbatches: usize,
-    loss_file: String,
-    label_shape: Vec<usize>,
+    pub(super) n_microbatches: usize,
+    pub(super) loss_file: String,
+    pub(super) label_shape: Vec<usize>,
     model_name: String,
     /// Bytes of one stashed activation per model stage (out shape x 4).
     act_bytes: Vec<usize>,
@@ -148,6 +151,15 @@ impl Trainer {
         }
         let wire = WireModel::parse(&cfg.wire)?;
         let backend = Backend::parse(&cfg.backend)?;
+        // the threaded executor hands each rank thread a port of the
+        // shared wire; only the stream transports can mint those
+        if cfg.exec == ExecMode::Threaded && !matches!(backend, Backend::Tcp | Backend::Uds) {
+            bail!(
+                "exec=threaded needs a stream backend (tcp or uds), got '{}': the simulator's \
+                 virtual clocks and the udp reliability layer are single-endpoint transports",
+                cfg.backend
+            );
+        }
 
         // resolve the per-boundary compression plan before any link or
         // feedback state exists: a rejected plan (typed PlanError)
@@ -290,7 +302,7 @@ impl Trainer {
         self.links.iter().map(|l| l.feedback_memory_bytes()).sum()
     }
 
-    fn schedule(&self) -> Result<Vec<Op>> {
+    pub(super) fn schedule(&self) -> Result<Vec<Op>> {
         pipeline::ops_for(self.cfg.schedule, self.n_ranks, self.n_microbatches)
     }
 
@@ -313,11 +325,7 @@ impl Trainer {
     /// The spec governing one directed boundary channel this epoch
     /// (uncompressed while compression is inactive).
     fn channel_spec(&self, boundary: usize, dir: Dir, compress: bool) -> Spec {
-        if compress {
-            *self.plan.spec_for(boundary, dir)
-        } else {
-            Spec::none()
-        }
+        channel_spec_in(&self.plan, boundary, dir, compress)
     }
 
     /// Train for `cfg.epochs`; returns the run metrics.
@@ -379,7 +387,10 @@ impl Trainer {
         let n_batches = self.num_train_batches();
         let mut loss_sum = 0.0f64;
         for b in 0..n_batches {
-            loss_sum += self.train_batch(epoch, b, compress, lr)?;
+            loss_sum += match self.cfg.exec {
+                ExecMode::Sequential => self.train_batch(epoch, b, compress, lr)?,
+                ExecMode::Threaded => super::threaded::train_batch(self, b, compress, lr)?,
+            };
             self.steps_done += 1;
         }
         Ok(loss_sum / n_batches.max(1) as f64)
@@ -393,7 +404,7 @@ impl Trainer {
     }
 
     /// Microbatch input + labels for (batch, mb) of the training set.
-    fn train_microbatch(&self, batch: usize, mb: usize) -> (StageInput, Vec<i32>) {
+    pub(super) fn train_microbatch(&self, batch: usize, mb: usize) -> (StageInput, Vec<i32>) {
         let start = batch * self.cfg.batch_size + mb * self.microbatch;
         self.example_range(start, true)
     }
@@ -455,11 +466,7 @@ impl Trainer {
 
     /// Loss executable: (logits, labels) -> (loss, g_logits).
     fn loss_and_grad(&self, logits: &Tensor, labels: &[i32]) -> Result<(f32, Tensor)> {
-        let labels_lit = lit_i32(&self.label_shape, labels)?;
-        let out = self.rt.call(&self.loss_file, &[lit_f32(logits)?, labels_lit])?;
-        let loss = scalar_from(&out[0])?;
-        let g = tensor_from(&out[1], logits.shape())?;
-        Ok((loss, g))
+        loss_and_grad_in(&self.rt, &self.loss_file, &self.label_shape, logits, labels)
     }
 
     /// Execute one optimizer step (one batch through the pipeline).
@@ -655,4 +662,38 @@ impl Trainer {
         }
         self.net.reset();
     }
+}
+
+// ---------------------------------------------------------------------------
+// free-function forms of the per-op helpers, shared with the threaded
+// executor: its rank threads hold the trainer's stages/links checked out
+// into mutex cells, so they cannot borrow `&Trainer` (the boxed
+// transport is not `Sync`) — they borrow the individual Sync fields and
+// call these instead, keeping exactly one copy of the math.
+// ---------------------------------------------------------------------------
+
+/// The spec governing one directed boundary channel (uncompressed while
+/// compression is inactive) — see [`Trainer::channel_spec`].
+pub(super) fn channel_spec_in(plan: &Plan, boundary: usize, dir: Dir, compress: bool) -> Spec {
+    if compress {
+        *plan.spec_for(boundary, dir)
+    } else {
+        Spec::none()
+    }
+}
+
+/// Loss executable: (logits, labels) -> (loss, g_logits) — see
+/// [`Trainer::loss_and_grad`].
+pub(super) fn loss_and_grad_in(
+    rt: &Runtime,
+    loss_file: &str,
+    label_shape: &[usize],
+    logits: &Tensor,
+    labels: &[i32],
+) -> Result<(f32, Tensor)> {
+    let labels_lit = lit_i32(label_shape, labels)?;
+    let out = rt.call(loss_file, &[lit_f32(logits)?, labels_lit])?;
+    let loss = scalar_from(&out[0])?;
+    let g = tensor_from(&out[1], logits.shape())?;
+    Ok((loss, g))
 }

@@ -259,7 +259,7 @@ fn run_stages(
 /// is the boundary's index among the boundaries sharing that physical
 /// link (`boundary / stages`) — always 0 on a chain, so flat runs are
 /// byte-identical to the pre-interleaving protocol.
-fn run_ops(
+pub(crate) fn run_ops(
     opts: &WorkerOpts,
     plan: &Plan,
     net: &mut dyn Transport,

@@ -30,6 +30,8 @@
 //!               [--mb N] [--link-elems N] [--compression M] [--plan plan.json]
 //!               [--schedule gpipe|1f1b|interleaved:v] [--seed N] [--steps N]
 //!               [--out summary.json]
+//! mpcomp worker --exec=threaded [--backend uds|tcp] ... --out thr.json
+//!                                                # one process, one thread per rank
 //! mpcomp worker --reference [--serve] ... --out ref.json   # SimNet replay
 //! mpcomp worker --check ref.json rank0.json rank1.json
 //! mpcomp worker --compare-bytes baseline.json rank0.json rank1.json
@@ -37,8 +39,10 @@
 
 use anyhow::{bail, Context, Result};
 use mpcomp::cli::Args;
-use mpcomp::config::{RunSpec, Schedule, Surface};
-use mpcomp::coordinator::{pipeline, worker, ServeOpts, Trainer, WorkerOpts, WorkerSummary};
+use mpcomp::config::{ExecMode, RunSpec, Schedule, Surface};
+use mpcomp::coordinator::{
+    pipeline, run_threaded, worker, ServeOpts, Trainer, WorkerOpts, WorkerSummary,
+};
 use mpcomp::experiments::{tables, ExpOpts, SchedParams};
 use mpcomp::metrics::append_jsonl;
 use mpcomp::netsim::Backend;
@@ -51,7 +55,7 @@ const VALUE_FLAGS: &[&str] = &[
     // pipeline shape + worker + plan
     "stages", "mb", "link-elems", "fwd-op-ms", "bwd-op-ms", "capacity",
     "backend", "rank", "rendezvous", "schedule", "seed", "wire", "out",
-    "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan",
+    "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan", "exec",
     // serve admission knobs + planner objective
     "rate", "requests", "max-batch", "deadline-ms", "objective",
     // deprecated wire fault spellings (use --fault.drop-p=… instead)
@@ -368,6 +372,19 @@ fn worker_cmd(args: &Args) -> Result<()> {
         } else {
             worker::run_reference(&opts)?
         }
+    } else if run.train.exec == ExecMode::Threaded {
+        if serve_mode {
+            bail!("exec=threaded runs the training schedule; --serve parity uses per-process ranks");
+        }
+        if args.has("rank") {
+            bail!(
+                "--rank spawns one process per rank; drop it for --exec=threaded \
+                 (one process, one thread per rank)"
+            );
+        }
+        // same legacy default as the rendezvous path: uds unless named
+        let backend = if args.has("backend") { opts.wire.backend } else { Backend::Uds };
+        run_threaded(&opts, backend)?
     } else if let Some(rank) = args.usize("rank")? {
         // the rendezvous path keeps its legacy UDS default; the typed
         // wire.backend key (default sim) only overrides when named
@@ -383,7 +400,16 @@ fn worker_cmd(args: &Args) -> Result<()> {
     } else {
         bail!("worker wants --reference, --rank N, or --check");
     };
-    let rank_label = summary.rank.map_or("reference".to_string(), |r| format!("rank {r}"));
+    let rank_label = summary.rank.map_or_else(
+        || {
+            if summary.backend.ends_with("+threaded") {
+                "all ranks".to_string()
+            } else {
+                "reference".to_string()
+            }
+        },
+        |r| format!("rank {r}"),
+    );
     println!(
         "worker {} ({}): {} messages received, wire tx {:.4}s",
         rank_label,

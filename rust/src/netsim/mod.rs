@@ -36,7 +36,7 @@ pub mod sim;
 pub mod transport;
 pub mod udp;
 
-pub use real::{RealTransport, Rendezvous};
+pub use real::{RealTransport, Rendezvous, ThreadedPort};
 pub use sim::{FaultModel, Message, SimNet, SimSocket, DEFAULT_QUEUE_CAPACITY};
 pub use transport::{Backend, Frame, Payload, Transport, TransportError};
 pub use udp::{UdpFaults, UdpTransport};
@@ -213,6 +213,23 @@ impl NetSim {
             *s = DirStats::default();
         }
     }
+
+    /// Fold another ledger's counters into this one, per link and
+    /// direction (merging per-thread [`ThreadedPort`] accounting after
+    /// the rank threads join). Link counts must match.
+    pub fn absorb(&mut self, other: &NetSim) {
+        assert_eq!(self.fwd.len(), other.fwd.len(), "absorbing a ledger with a different size");
+        let fold = |mine: &mut Vec<DirStats>, theirs: &[DirStats]| {
+            for (a, b) in mine.iter_mut().zip(theirs) {
+                a.messages += b.messages;
+                a.payload_bytes += b.payload_bytes;
+                a.uncompressed_bytes += b.uncompressed_bytes;
+                a.sim_time_s += b.sim_time_s;
+            }
+        };
+        fold(&mut self.fwd, &other.fwd);
+        fold(&mut self.bwd, &other.bwd);
+    }
 }
 
 #[cfg(test)]
@@ -251,6 +268,25 @@ mod tests {
         assert_eq!(n.total_bytes(), 250);
         assert_eq!(n.total_uncompressed_bytes(), 1200);
         assert!((n.compression_ratio() - 4.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_merges_per_thread_ledgers() {
+        let m = WireModel { bandwidth_bytes_per_s: 1e6, latency_s: 0.0 };
+        let mut parent = NetSim::new(2, m);
+        let mut a = NetSim::new(2, m);
+        let mut b = NetSim::new(2, m);
+        a.transfer(0, Dir::Fwd, 100, 400);
+        a.transfer(1, Dir::Bwd, 10, 40);
+        b.transfer(0, Dir::Fwd, 100, 400);
+        parent.absorb(&a);
+        parent.absorb(&b);
+        assert_eq!(parent.fwd[0].messages, 2);
+        assert_eq!(parent.fwd[0].payload_bytes, 200);
+        assert_eq!(parent.bwd[1].payload_bytes, 10);
+        assert_eq!(parent.total_uncompressed_bytes(), 840);
+        let expect = a.total_sim_time() + b.total_sim_time();
+        assert!((parent.total_sim_time() - expect).abs() < 1e-12);
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! bandwidth-occupancy `busy_time`); graceful [`Transport::shutdown`]
 //! sends an explicit end-of-stream frame before closing the write half.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 #[cfg(unix)]
@@ -451,96 +451,140 @@ fn handshake_accept(
 // mailboxes + reader threads
 // ---------------------------------------------------------------------------
 
-pub(super) struct Slot {
-    pub(super) frames: VecDeque<Frame>,
-    pub(super) closed: bool,
+/// Mutable half of one `(link, dir)` mailbox, behind that slot's own
+/// lock.
+struct SlotState {
+    /// Frames keyed by mailbox key. Receives are always exact-key
+    /// ([`Shared::recv_keyed`]), so an O(1) map lookup replaces the old
+    /// whole-queue rescan on every wakeup; multiple frames under one
+    /// key (a duplicate-key race) queue in arrival order.
+    frames: HashMap<u64, VecDeque<Frame>>,
+    closed: bool,
 }
 
-pub(super) struct Boxes {
-    /// One slot per `(link, dir)`: index `link * 2 + dir`.
-    pub(super) slots: Vec<Slot>,
-    /// Wall time of the latest send/arrival (the measured makespan),
-    /// relative to the current epoch.
-    pub(super) last_event_s: f64,
-    /// Seconds of `t0` wall time consumed by *earlier* runs: `reset()`
-    /// rebases the clock here so a second run's arrivals and makespan
-    /// start from zero instead of inheriting pre-reset seconds.
-    pub(super) epoch_s: f64,
+/// One `(link, dir)` mailbox slot with its own mutex and condvar.
+///
+/// The old design was a single `Mutex<Boxes>` + one global `Condvar`
+/// where every `deliver` did `notify_all`: N blocked receivers all
+/// woke, serialized on the global mutex, and rescanned their queues on
+/// every frame of every link — a thundering herd that scaled wakeups as
+/// receivers × frames. Per-slot condvars wake only the slot that got
+/// the frame.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
 }
 
+/// Mailboxes + clock shared between a transport, its reader threads,
+/// and any [`ThreadedPort`]s cloned off it.
+///
+/// Memory ordering: the clock atomics (`epoch_ns`, `last_event_ns`,
+/// `wakeups`) are standalone monotone counters, not guards for other
+/// data, so `Relaxed` is sufficient everywhere — the frame handoff
+/// itself synchronizes through each slot's mutex (lock/unlock gives the
+/// receiver a happens-before edge covering the payload bytes).
 pub(super) struct Shared {
-    pub(super) boxes: Mutex<Boxes>,
-    pub(super) cv: Condvar,
-    pub(super) t0: Instant,
+    /// One slot per `(link, dir)`: index [`slot_index`].
+    slots: Vec<Slot>,
+    /// Nanoseconds of `t0` wall time consumed by *earlier* runs:
+    /// `reset()` rebases the clock here so a second run's arrivals and
+    /// makespan start from zero instead of inheriting pre-reset time.
+    epoch_ns: AtomicU64,
+    /// Wall time of the latest send/arrival (the measured makespan) in
+    /// nanoseconds since the current epoch; monotone via `fetch_max`.
+    last_event_ns: AtomicU64,
+    /// Condvar-wait returns across all `recv_keyed` calls — the
+    /// wakeup-storm regression counter.
+    wakeups: AtomicU64,
+    t0: Instant,
 }
 
 impl Shared {
     pub(super) fn new(num_links: usize) -> Arc<Shared> {
         let slots = (0..num_links * 2)
-            .map(|_| Slot { frames: VecDeque::new(), closed: false })
+            .map(|_| Slot {
+                state: Mutex::new(SlotState { frames: HashMap::new(), closed: false }),
+                cv: Condvar::new(),
+            })
             .collect();
         Arc::new(Shared {
-            boxes: Mutex::new(Boxes { slots, last_event_s: 0.0, epoch_s: 0.0 }),
-            cv: Condvar::new(),
+            slots,
+            epoch_ns: AtomicU64::new(0),
+            last_event_ns: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
             t0: Instant::now(),
         })
     }
 
+    /// Nanoseconds since the current epoch. Purely atomic: the send
+    /// path's timestamping never touches a mailbox lock, so sends on one
+    /// channel cannot contend with receivers blocked on another.
+    fn epoch_elapsed_ns(&self) -> u64 {
+        let raw = self.t0.elapsed().as_nanos() as u64;
+        raw.saturating_sub(self.epoch_ns.load(Ordering::Relaxed))
+    }
+
     /// Current transport time (seconds since the last `reset`, or since
-    /// construction), and the makespan bump in one critical section.
+    /// construction), bumping the makespan — lock-free.
     pub(super) fn stamp(&self) -> f64 {
-        let mut b = self.boxes.lock().unwrap();
-        let t = self.t0.elapsed().as_secs_f64() - b.epoch_s;
-        if t > b.last_event_s {
-            b.last_event_s = t;
-        }
-        t
+        let t_ns = self.epoch_elapsed_ns();
+        self.last_event_ns.fetch_max(t_ns, Ordering::Relaxed);
+        t_ns as f64 * 1e-9
     }
 
     /// Current transport time without bumping the makespan.
     pub(super) fn now(&self) -> f64 {
-        let b = self.boxes.lock().unwrap();
-        self.t0.elapsed().as_secs_f64() - b.epoch_s
+        self.epoch_elapsed_ns() as f64 * 1e-9
+    }
+
+    /// Latest send/arrival time — the measured makespan.
+    pub(super) fn last_event_s(&self) -> f64 {
+        self.last_event_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Total condvar wakeups observed by blocked receivers since
+    /// construction (the regression hook for the per-slot redesign: N
+    /// idle receivers must stay asleep while another link streams).
+    pub(super) fn wakeup_count(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
     }
 
     /// Clear mailboxes and rebase the wall-clock epoch (the shared half
     /// of a transport `reset`).
     pub(super) fn reset(&self) {
-        let mut b = self.boxes.lock().unwrap();
-        for s in &mut b.slots {
-            s.frames.clear();
+        for slot in &self.slots {
+            slot.state.lock().unwrap().frames.clear();
         }
-        b.last_event_s = 0.0;
-        b.epoch_s = self.t0.elapsed().as_secs_f64();
+        self.epoch_ns.store(self.t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.last_event_ns.store(0, Ordering::Relaxed);
     }
 
     /// Deliver one frame into `(link, dir)` at the current transport
-    /// time and wake any blocked `recv`.
+    /// time, waking only that slot's blocked receivers.
     pub(super) fn deliver(&self, link: usize, dir: Dir, key: u64, payload: Vec<u8>) {
-        let mut b = self.boxes.lock().unwrap();
-        let arrival = self.t0.elapsed().as_secs_f64() - b.epoch_s;
-        if arrival > b.last_event_s {
-            b.last_event_s = arrival;
-        }
-        b.slots[slot_index(link, dir)].frames.push_back(Frame {
+        let t_ns = self.epoch_elapsed_ns();
+        self.last_event_ns.fetch_max(t_ns, Ordering::Relaxed);
+        let slot = &self.slots[slot_index(link, dir)];
+        let mut st = slot.state.lock().unwrap();
+        st.frames.entry(key).or_default().push_back(Frame {
             key,
             bytes: payload.len(),
-            arrival,
+            arrival: t_ns as f64 * 1e-9,
             payload: Some(payload),
         });
-        drop(b);
-        self.cv.notify_all();
+        drop(st);
+        slot.cv.notify_all();
     }
 
-    /// Mark one `(link, dir)` channel closed and wake blocked `recv`s.
+    /// Mark one `(link, dir)` channel closed and wake its receivers.
     pub(super) fn close_slot(&self, link: usize, dir: Dir) {
-        let mut b = self.boxes.lock().unwrap();
-        b.slots[slot_index(link, dir)].closed = true;
-        drop(b);
-        self.cv.notify_all();
+        let slot = &self.slots[slot_index(link, dir)];
+        slot.state.lock().unwrap().closed = true;
+        slot.cv.notify_all();
     }
 
-    /// Blocking keyed receive shared by the socket transports.
+    /// Blocking keyed receive shared by the socket transports: an O(1)
+    /// map lookup per wakeup, on the slot's own condvar.
     pub(super) fn recv_keyed(
         &self,
         link: usize,
@@ -548,23 +592,27 @@ impl Shared {
         key: u64,
         window: Duration,
     ) -> Result<Frame, TransportError> {
-        let idx = slot_index(link, dir);
+        let slot = &self.slots[slot_index(link, dir)];
         let deadline = Instant::now() + window;
-        let mut boxes = self.boxes.lock().unwrap();
+        let mut st = slot.state.lock().unwrap();
         loop {
-            let slot = &mut boxes.slots[idx];
-            if let Some(at) = slot.frames.iter().position(|f| f.key == key) {
-                return Ok(slot.frames.remove(at).expect("position is in range"));
+            if let Some(q) = st.frames.get_mut(&key) {
+                let f = q.pop_front().expect("empty key queues are removed eagerly");
+                if q.is_empty() {
+                    st.frames.remove(&key);
+                }
+                return Ok(f);
             }
-            if slot.closed {
+            if st.closed {
                 return Err(TransportError::Disconnected { link, dir });
             }
             let now = Instant::now();
             if now >= deadline {
                 return Err(TransportError::Timeout { link, dir, key });
             }
-            let (guard, _) = self.cv.wait_timeout(boxes, deadline - now).unwrap();
-            boxes = guard;
+            let (guard, _) = slot.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -623,8 +671,11 @@ static LOOPBACK_SEQ: AtomicU64 = AtomicU64::new(0);
 /// or [`RealTransport::endpoint`] (one stage of a multi-process run).
 pub struct RealTransport {
     backend: Backend,
-    /// Writer for each `(link, dir)` this endpoint can send on.
-    writers: Vec<Option<Sock>>,
+    /// Writer for each `(link, dir)` this endpoint can send on. Each
+    /// slot has its own lock (shared with [`ThreadedPort`] clones): the
+    /// lock scope covers a whole frame write, so two threads racing on
+    /// one channel cannot interleave header and payload bytes.
+    writers: Arc<Vec<Mutex<Option<Sock>>>>,
     shared: Arc<Shared>,
     readers: Vec<JoinHandle<()>>,
     ledger: NetSim,
@@ -643,7 +694,7 @@ impl RealTransport {
     ) -> RealTransport {
         RealTransport {
             backend,
-            writers: (0..num_links * 2).map(|_| None).collect(),
+            writers: Arc::new((0..num_links * 2).map(|_| Mutex::new(None)).collect()),
             shared: Shared::new(num_links),
             readers: Vec::new(),
             ledger: NetSim::new(num_links, model),
@@ -726,10 +777,10 @@ impl RealTransport {
                 t.owned_paths.push(p);
             }
             // fwd frames: written into the lower end, read from the upper
-            t.writers[slot_index(link, Dir::Fwd)] = Some(lower.try_clone()?);
+            *t.writers[slot_index(link, Dir::Fwd)].lock().unwrap() = Some(lower.try_clone()?);
             t.spawn_reader(upper.try_clone()?, link, Dir::Fwd);
             // bwd frames: written into the upper end, read from the lower
-            t.writers[slot_index(link, Dir::Bwd)] = Some(upper);
+            *t.writers[slot_index(link, Dir::Bwd)].lock().unwrap() = Some(upper);
             t.spawn_reader(lower, link, Dir::Bwd);
         }
         Ok(t)
@@ -793,7 +844,7 @@ impl RealTransport {
                 rv.plan_digest,
                 rv.handshake_timeout(),
             )?;
-            t.writers[slot_index(link, Dir::Fwd)] = Some(sock.try_clone()?);
+            *t.writers[slot_index(link, Dir::Fwd)].lock().unwrap() = Some(sock.try_clone()?);
             t.spawn_reader(sock, link, Dir::Bwd);
             if rv.backend == Backend::Uds {
                 t.owned_paths.push(rv.uds_path(link));
@@ -801,7 +852,7 @@ impl RealTransport {
         }
         if let Some((link, mut sock)) = upstream {
             handshake_connect_finish(&mut sock, link, rv.plan_digest, rv.handshake_timeout())?;
-            t.writers[slot_index(link, Dir::Bwd)] = Some(sock.try_clone()?);
+            *t.writers[slot_index(link, Dir::Bwd)].lock().unwrap() = Some(sock.try_clone()?);
             t.spawn_reader(sock, link, Dir::Fwd);
         }
         Ok(t)
@@ -810,8 +861,8 @@ impl RealTransport {
     /// Send shutdown frames, close write halves, and join the readers.
     /// Idempotent; also run by `Drop`.
     fn close_streams(&mut self) {
-        for w in self.writers.iter_mut() {
-            if let Some(mut sock) = w.take() {
+        for w in self.writers.iter() {
+            if let Some(mut sock) = w.lock().unwrap().take() {
                 let mut head = [0u8; FRAME_HEADER];
                 head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
                 head[4] = DIR_SHUTDOWN;
@@ -866,6 +917,57 @@ impl Drop for RealTransport {
     }
 }
 
+/// Frame a message and write it to the `(link, dir)` socket, charging
+/// `ledger`/`busy_s`. Shared by [`RealTransport`] and [`ThreadedPort`]:
+/// the per-slot writer lock is held for the whole frame so concurrent
+/// senders on one channel cannot interleave header and payload bytes.
+#[allow(clippy::too_many_arguments)]
+fn send_frame(
+    writers: &[Mutex<Option<Sock>>],
+    shared: &Shared,
+    ledger: &mut NetSim,
+    busy_s: &mut f64,
+    link: usize,
+    dir: Dir,
+    key: u64,
+    payload: Payload<'_>,
+    raw_bytes: usize,
+) -> Result<f64, TransportError> {
+    if link >= writers.len() / 2 {
+        return Err(TransportError::NoSuchLink { link });
+    }
+    let len = payload.len();
+    let mut guard = writers[slot_index(link, dir)].lock().unwrap();
+    let sock = guard.as_mut().ok_or_else(|| {
+        TransportError::Io(format!("link {link} {dir} is not writable from this endpoint"))
+    })?;
+    let mut head = [0u8; FRAME_HEADER];
+    head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    head[4] = dir_byte(dir);
+    head[5..13].copy_from_slice(&key.to_le_bytes());
+    head[13..17].copy_from_slice(&(raw_bytes as u32).to_le_bytes());
+    head[17..21].copy_from_slice(&(len as u32).to_le_bytes());
+    let t = Instant::now();
+    sock.write_all(&head)?;
+    match payload {
+        Payload::Bytes(b) => sock.write_all(b)?,
+        Payload::Size(mut n) => {
+            // synthetic runs ship zero-filled frames of the right size
+            let zeros = [0u8; 4096];
+            while n > 0 {
+                let chunk = n.min(zeros.len());
+                sock.write_all(&zeros[..chunk])?;
+                n -= chunk;
+            }
+        }
+    }
+    sock.flush()?;
+    drop(guard);
+    *busy_s += t.elapsed().as_secs_f64();
+    ledger.transfer(link, dir, len, raw_bytes);
+    Ok(shared.stamp())
+}
+
 impl Transport for RealTransport {
     fn backend(&self) -> Backend {
         self.backend
@@ -884,39 +986,17 @@ impl Transport for RealTransport {
         raw_bytes: usize,
         _now: f64,
     ) -> Result<f64, TransportError> {
-        if link >= self.num_links() {
-            return Err(TransportError::NoSuchLink { link });
-        }
-        let len = payload.len();
-        let sock = self.writers[slot_index(link, dir)]
-            .as_mut()
-            .ok_or_else(|| TransportError::Io(format!(
-                "link {link} {dir} is not writable from this endpoint"
-            )))?;
-        let mut head = [0u8; FRAME_HEADER];
-        head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
-        head[4] = dir_byte(dir);
-        head[5..13].copy_from_slice(&key.to_le_bytes());
-        head[13..17].copy_from_slice(&(raw_bytes as u32).to_le_bytes());
-        head[17..21].copy_from_slice(&(len as u32).to_le_bytes());
-        let t = Instant::now();
-        sock.write_all(&head)?;
-        match payload {
-            Payload::Bytes(b) => sock.write_all(b)?,
-            Payload::Size(mut n) => {
-                // synthetic runs ship zero-filled frames of the right size
-                let zeros = [0u8; 4096];
-                while n > 0 {
-                    let chunk = n.min(zeros.len());
-                    sock.write_all(&zeros[..chunk])?;
-                    n -= chunk;
-                }
-            }
-        }
-        sock.flush()?;
-        self.busy_s += t.elapsed().as_secs_f64();
-        self.ledger.transfer(link, dir, len, raw_bytes);
-        Ok(self.shared.stamp())
+        send_frame(
+            &self.writers,
+            &self.shared,
+            &mut self.ledger,
+            &mut self.busy_s,
+            link,
+            dir,
+            key,
+            payload,
+            raw_bytes,
+        )
     }
 
     fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
@@ -937,7 +1017,7 @@ impl Transport for RealTransport {
     }
 
     fn makespan(&self) -> f64 {
-        self.shared.boxes.lock().unwrap().last_event_s
+        self.shared.last_event_s()
     }
 
     fn ledger(&self) -> &NetSim {
@@ -964,6 +1044,123 @@ impl Transport for RealTransport {
         self.close_streams();
         Ok(())
     }
+
+    fn port(&self) -> Option<ThreadedPort> {
+        let mut ledger = self.ledger.clone();
+        ledger.reset();
+        Some(ThreadedPort {
+            backend: self.backend,
+            writers: Arc::clone(&self.writers),
+            shared: Arc::clone(&self.shared),
+            ledger,
+            busy_s: 0.0,
+            recv_timeout: self.recv_timeout,
+        })
+    }
+
+    fn absorb(&mut self, port: ThreadedPort) {
+        self.ledger.absorb(&port.ledger);
+        self.busy_s += port.busy_s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-thread ports
+// ---------------------------------------------------------------------------
+
+/// A per-thread send/recv handle onto a [`RealTransport`]'s sockets and
+/// mailboxes, for the thread-per-rank executor
+/// (`coordinator::threaded`).
+///
+/// `Transport::send` and `recv` take `&mut self`, so N rank threads
+/// cannot share one `&mut RealTransport`. A port clones the `Arc`'d
+/// writer table and mailbox state (sockets, per-slot locks, the atomic
+/// clock — all genuinely shared) and carries its *own* byte ledger and
+/// busy-time counter, so the wire-accounting hot path is uncontended
+/// across threads. After the rank threads join, hand each port back via
+/// [`Transport::absorb`] to merge its counters into the parent's
+/// ledger. Ports do not own the reader threads or the streams:
+/// lifecycle (`shutdown`, stream close, UDS cleanup) stays with the
+/// parent transport.
+pub struct ThreadedPort {
+    backend: Backend,
+    writers: Arc<Vec<Mutex<Option<Sock>>>>,
+    shared: Arc<Shared>,
+    ledger: NetSim,
+    busy_s: f64,
+    recv_timeout: Duration,
+}
+
+impl Transport for ThreadedPort {
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn num_links(&self) -> usize {
+        self.writers.len() / 2
+    }
+
+    fn send(
+        &mut self,
+        link: usize,
+        dir: Dir,
+        key: u64,
+        payload: Payload<'_>,
+        raw_bytes: usize,
+        _now: f64,
+    ) -> Result<f64, TransportError> {
+        send_frame(
+            &self.writers,
+            &self.shared,
+            &mut self.ledger,
+            &mut self.busy_s,
+            link,
+            dir,
+            key,
+            payload,
+            raw_bytes,
+        )
+    }
+
+    fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
+        if link >= self.num_links() {
+            return Err(TransportError::NoSuchLink { link });
+        }
+        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
+    }
+
+    fn clock(&self, _stage: usize) -> f64 {
+        self.shared.now()
+    }
+
+    fn advance(&mut self, _stage: usize, _to: f64) {}
+
+    fn barrier(&mut self) -> f64 {
+        self.shared.now()
+    }
+
+    fn makespan(&self) -> f64 {
+        self.shared.last_event_s()
+    }
+
+    fn ledger(&self) -> &NetSim {
+        &self.ledger
+    }
+
+    fn busy_time(&self) -> f64 {
+        self.busy_s
+    }
+
+    fn wire_elapsed_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// Clears only this port's private counters. The shared epoch and
+    /// mailboxes belong to the parent transport — rebase them there.
+    fn reset(&mut self) {
+        self.ledger.reset();
+        self.busy_s = 0.0;
+    }
 }
 
 #[cfg(test)]
@@ -983,7 +1180,7 @@ mod tests {
         t.send(0, Dir::Fwd, 1, Payload::Bytes(&[1, 2, 3]), 3, 0.0).unwrap();
         // kill only the bwd stream (upper end's write half): the lower
         // reader EOFs and must mark *only* the bwd slot closed
-        let bwd = t.writers[slot_index(0, Dir::Bwd)].take().expect("bwd writer");
+        let bwd = t.writers[slot_index(0, Dir::Bwd)].lock().unwrap().take().expect("bwd writer");
         bwd.shutdown_write();
         match t.recv(0, Dir::Bwd, 9) {
             Err(TransportError::Disconnected { link: 0, dir: Dir::Bwd }) => {}
@@ -1012,6 +1209,202 @@ mod tests {
         assert!(f.arrival < 0.1, "arrival {} includes pre-reset seconds", f.arrival);
         assert!(t.makespan() < 0.1, "makespan {} includes pre-reset seconds", t.makespan());
         assert!(t.clock(0) < 0.1 && t.barrier() < 0.1);
+        t.shutdown().unwrap();
+    }
+
+    /// Regression (wakeup storm): with the old single global condvar,
+    /// every frame's `notify_all` woke every blocked receiver in the
+    /// process — N idle receivers × K frames wakeups. Per-slot condvars
+    /// must keep idle receivers asleep while one link streams.
+    #[test]
+    fn idle_receivers_sleep_through_another_links_stream() {
+        let n_idle: usize = 8;
+        let k: u64 = 200;
+        let shared = Shared::new(n_idle + 1);
+        let mut handles = Vec::new();
+        // idle receivers: each parked on its own link, waiting for a key
+        // that arrives only as the final release frame
+        for i in 0..n_idle {
+            let s = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                s.recv_keyed(1 + i, Dir::Fwd, 0, Duration::from_secs(20)).expect("release frame")
+            }));
+        }
+        // busy receiver drains link 0 while the stream is in flight
+        let busy = {
+            let s = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                for key in 0..k {
+                    s.recv_keyed(0, Dir::Fwd, key, Duration::from_secs(20)).expect("streamed");
+                }
+            })
+        };
+        for key in 0..k {
+            shared.deliver(0, Dir::Fwd, key, vec![0u8; 16]);
+        }
+        busy.join().unwrap();
+        let storm = shared.wakeup_count();
+        // release the idle receivers and bound the total
+        for i in 0..n_idle {
+            shared.deliver(1 + i, Dir::Fwd, 0, vec![1]);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // busy receiver: at most one wakeup per frame. idle receivers:
+        // one each at release, plus slack for spurious wakeups. The old
+        // global-condvar design produced ~n_idle * k (=1600) here.
+        let bound = k + 4 * n_idle as u64 + 32;
+        assert!(storm <= bound, "wakeup storm: {storm} wakeups for {k} frames (bound {bound})");
+    }
+
+    /// Regression (lock-free send clock): `stamp`/`now`/`deliver` on one
+    /// channel must not block on another slot's mailbox lock — the old
+    /// `stamp()` took the whole-mailbox mutex on every send.
+    #[test]
+    fn stamp_does_not_touch_mailbox_locks() {
+        let shared = Shared::new(2);
+        // wedge slot (0, fwd) by holding its state lock
+        let wedge = shared.slots[slot_index(0, Dir::Fwd)].state.lock().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let a = s.stamp();
+            let b = s.now();
+            s.deliver(1, Dir::Bwd, 7, vec![1, 2, 3]); // a different slot
+            let _ = s.stamp();
+            tx.send((a, b)).unwrap();
+        });
+        let (a, b) = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("send-path clock blocked on a held mailbox lock");
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(shared.last_event_s() >= a);
+        drop(wedge);
+        let f = shared.recv_keyed(1, Dir::Bwd, 7, Duration::from_secs(1)).unwrap();
+        assert_eq!(f.bytes, 3);
+    }
+
+    /// Stress: concurrent producers and consumers across slots, with
+    /// per-key queues — every frame delivered exactly once, payloads
+    /// intact. (The races here were serialized away by the old global
+    /// lock; the per-slot design must survive them on its own.)
+    #[test]
+    fn mailbox_stress_multi_producer_consumer() {
+        let links = 4;
+        let per_producer: u64 = 100;
+        let shared = Shared::new(links);
+        let mut producers = Vec::new();
+        for link in 0..links {
+            for dir in [Dir::Fwd, Dir::Bwd] {
+                let s = Arc::clone(&shared);
+                producers.push(std::thread::spawn(move || {
+                    for key in 0..per_producer {
+                        let payload = vec![(key % 251) as u8; 8 + (key as usize % 9)];
+                        s.deliver(link, dir, key, payload);
+                    }
+                }));
+            }
+        }
+        let mut consumers = Vec::new();
+        for link in 0..links {
+            for dir in [Dir::Fwd, Dir::Bwd] {
+                let s = Arc::clone(&shared);
+                consumers.push(std::thread::spawn(move || {
+                    // consume in a scrambled key order to exercise the
+                    // keyed map (no head-of-line assumption)
+                    for i in 0..per_producer {
+                        let key = (i * 37) % per_producer;
+                        let f = s
+                            .recv_keyed(link, dir, key, Duration::from_secs(20))
+                            .expect("delivered");
+                        assert_eq!(f.key, key);
+                        assert_eq!(f.payload.as_deref(), Some(&vec![(key % 251) as u8; f.bytes][..]));
+                    }
+                }));
+            }
+        }
+        for h in producers.into_iter().chain(consumers) {
+            h.join().unwrap();
+        }
+    }
+
+    /// Stress: closing a slot while a receiver is blocked on it must
+    /// surface a typed disconnect, not a hang or a panic.
+    #[test]
+    fn close_during_blocked_recv_is_typed_disconnect() {
+        let shared = Shared::new(1);
+        let s = Arc::clone(&shared);
+        let h = std::thread::spawn(move || s.recv_keyed(0, Dir::Fwd, 42, Duration::from_secs(20)));
+        std::thread::sleep(Duration::from_millis(50));
+        shared.close_slot(0, Dir::Fwd);
+        match h.join().unwrap() {
+            Err(TransportError::Disconnected { link: 0, dir: Dir::Fwd }) => {}
+            other => panic!("want Disconnected, got {other:?}"),
+        }
+    }
+
+    /// Stress: `reset()` racing a blocked receiver must neither wedge the
+    /// receiver nor leak pre-reset frames into the post-reset epoch.
+    #[test]
+    fn reset_during_blocked_recv_keeps_slot_usable() {
+        let shared = Shared::new(1);
+        shared.deliver(0, Dir::Fwd, 1, vec![9]); // pre-reset frame to be cleared
+        let s = Arc::clone(&shared);
+        let h = std::thread::spawn(move || s.recv_keyed(0, Dir::Fwd, 2, Duration::from_secs(20)));
+        std::thread::sleep(Duration::from_millis(50));
+        shared.reset();
+        shared.deliver(0, Dir::Fwd, 2, vec![4, 5]);
+        let f = h.join().unwrap().expect("post-reset delivery reaches the blocked receiver");
+        assert_eq!((f.key, f.bytes), (2, 2));
+        assert!(f.arrival < 1.0, "arrival {} not rebased", f.arrival);
+        // the pre-reset frame is gone
+        match shared.recv_keyed(0, Dir::Fwd, 1, Duration::from_millis(50)) {
+            Err(TransportError::Timeout { .. }) => {}
+            other => panic!("pre-reset frame survived reset: {other:?}"),
+        }
+    }
+
+    /// Threaded ports: two threads drive both ends of a loopback through
+    /// `ThreadedPort`s; the parent's ledger sees the merged totals after
+    /// `absorb`.
+    #[test]
+    fn threaded_ports_share_wire_and_merge_ledgers() {
+        let mut t = RealTransport::loopback(
+            1,
+            Backend::Uds,
+            WireModel::datacenter(),
+            Duration::from_secs(5),
+        )
+        .expect("loopback");
+        let mut a = t.port().expect("real transport hands out ports");
+        let mut b = t.port().expect("second port");
+        let ha = std::thread::spawn(move || {
+            for k in 0..8u64 {
+                a.send(0, Dir::Fwd, k, Payload::Bytes(&[k as u8; 100]), 400, 0.0).unwrap();
+                let f = a.recv(0, Dir::Bwd, k).unwrap();
+                assert_eq!(f.bytes, 50);
+            }
+            a
+        });
+        let hb = std::thread::spawn(move || {
+            for k in 0..8u64 {
+                let f = b.recv(0, Dir::Fwd, k).unwrap();
+                assert_eq!(f.payload.as_deref(), Some(&[k as u8; 100][..]));
+                b.send(0, Dir::Bwd, k, Payload::Bytes(&[1u8; 50]), 200, 0.0).unwrap();
+            }
+            b
+        });
+        let a = ha.join().unwrap();
+        let b = hb.join().unwrap();
+        assert_eq!(t.ledger().total_bytes(), 0, "parent unaware before absorb");
+        t.absorb(a);
+        t.absorb(b);
+        assert_eq!(t.ledger().total_bytes(), 8 * 100 + 8 * 50);
+        assert_eq!(t.ledger().total_uncompressed_bytes(), 8 * 400 + 8 * 200);
+        assert_eq!(t.ledger().fwd[0].messages, 8);
+        assert_eq!(t.ledger().bwd[0].messages, 8);
+        assert!(t.makespan() > 0.0);
         t.shutdown().unwrap();
     }
 

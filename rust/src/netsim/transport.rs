@@ -18,6 +18,7 @@
 
 use std::fmt;
 
+use super::real::ThreadedPort;
 use super::{Dir, NetSim};
 
 /// Which transport implementation carries inter-stage messages.
@@ -280,6 +281,21 @@ pub trait Transport {
     fn shutdown(&mut self) -> Result<(), TransportError> {
         Ok(())
     }
+
+    // ---- thread-per-rank fan-out ------------------------------------------
+
+    /// Clone a per-thread send/recv handle for the threaded executor:
+    /// shared sockets/mailboxes, private byte accounting (merged back
+    /// with [`Transport::absorb`] after the thread joins). `None` on
+    /// backends whose mailboxes are not shareable across threads (the
+    /// simulator's virtual clocks are inherently single-threaded).
+    fn port(&self) -> Option<ThreadedPort> {
+        None
+    }
+
+    /// Merge a joined thread's port accounting back into this
+    /// transport's ledger. No-op on backends that hand out no ports.
+    fn absorb(&mut self, _port: ThreadedPort) {}
 }
 
 #[cfg(test)]

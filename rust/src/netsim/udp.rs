@@ -1007,7 +1007,7 @@ impl Transport for UdpTransport {
     }
 
     fn makespan(&self) -> f64 {
-        self.shared.boxes.lock().unwrap().last_event_s
+        self.shared.last_event_s()
     }
 
     fn ledger(&self) -> &NetSim {
@@ -1056,6 +1056,90 @@ mod tests {
         // stale seq from just before the wrap stays in the old epoch
         assert_eq!(widen(SEQ_MASK, SEQ_MOD + 1), SEQ_MASK);
         assert_eq!(widen(7, 3 * SEQ_MOD - 1), 3 * SEQ_MOD + 7);
+    }
+
+    /// Property: for any true (widened) counter within half a sequence
+    /// window of the receiver's expectation, `widen` recovers it exactly
+    /// from its 24 wire bits — including across `SEQ_MOD` wrap
+    /// boundaries in both directions.
+    #[test]
+    fn widen_recovers_any_counter_within_half_window() {
+        let mut rng = Rng::with_stream(0x7e57, 1);
+        let half = (SEQ_MOD / 2) as i64;
+        let mut checked = 0u32;
+        for _ in 0..20_000 {
+            let near = rng.next_u32() & 0x0fff_ffff; // spans many 24-bit epochs
+            let span = (rng.next_u32() % (SEQ_MOD - 2)) as i64 - (half - 1);
+            let truth = (near as i64 + span).max(0) as u32;
+            if (truth as i64 - near as i64).abs() >= half {
+                continue; // the clamp at 0 pushed it outside the window
+            }
+            assert_eq!(widen(truth & SEQ_MASK, near), truth, "near={near} truth={truth}");
+            checked += 1;
+        }
+        assert!(checked > 10_000, "property loop degenerated ({checked} cases)");
+        // pin the exact wrap edges on top of the random sweep
+        for epoch in 1..4u32 {
+            let m = epoch * SEQ_MOD;
+            assert_eq!(widen(0, m - 1), m);
+            assert_eq!(widen(SEQ_MASK, m), m - 1);
+            assert_eq!(widen(1, m - 2), m + 1);
+        }
+    }
+
+    /// Property: `coalesce` is lossless (ranges expand back to exactly
+    /// the input) and maximal (no two adjacent ranges could merge), for
+    /// arbitrary sorted deduped runs straddling the wrap boundary.
+    #[test]
+    fn coalesce_is_lossless_and_maximal() {
+        let mut rng = Rng::with_stream(0xc0a1, 2);
+        for case in 0..200u32 {
+            let mut seqs: Vec<u32> = Vec::new();
+            let mut s = case * 1000 + SEQ_MOD - 100; // straddles the wrap
+            for _ in 0..50 {
+                s += 1 + (rng.next_u32() % 3); // mix of runs and gaps
+                seqs.push(s);
+            }
+            let ranges = coalesce(&seqs);
+            for w in ranges.windows(2) {
+                assert!(w[0].1 + 1 < w[1].0, "adjacent ranges must have merged: {w:?}");
+            }
+            let mut expanded = Vec::new();
+            for &(a, z) in &ranges {
+                assert!(a <= z);
+                expanded.extend(a..=z);
+            }
+            assert_eq!(expanded, seqs, "coalesce must be lossless");
+        }
+    }
+
+    /// Property: ack/nack record sets survive the wire for arbitrary
+    /// wrap-straddling sequence sets — every record keeps start <= end
+    /// (ranges split at the 24-bit boundary), and the parsed union is
+    /// exactly the input's 24-bit image.
+    #[test]
+    fn record_sets_roundtrip_arbitrary_wrap_straddling_sets() {
+        use std::collections::BTreeSet;
+        let mut rng = Rng::with_stream(0xacc5, 3);
+        for _ in 0..100 {
+            let mut s = SEQ_MOD * (1 + rng.next_u32() % 3) - (rng.next_u32() % 64);
+            let mut seqs = Vec::new();
+            for _ in 0..(1 + rng.next_u32() % 300) {
+                s += 1 + (rng.next_u32() % 2);
+                seqs.push(s);
+            }
+            let want: BTreeSet<u32> = seqs.iter().map(|&x| x & SEQ_MASK).collect();
+            let mut got = BTreeSet::new();
+            for dg in record_datagrams(T_ACK, Dir::Fwd, &seqs) {
+                let (dir, ranges) = parse_record_set(&dg).expect("well-formed record set");
+                assert_eq!(dir, Dir::Fwd);
+                for (a, z) in ranges {
+                    assert!(a <= z, "wire record start {a} exceeds end {z}");
+                    got.extend(a..=z);
+                }
+            }
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

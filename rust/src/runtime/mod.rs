@@ -9,11 +9,10 @@
 
 pub mod artifacts;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 pub use artifacts::{DType, Manifest, ModelSpec, StageSpec};
 
@@ -21,17 +20,30 @@ use crate::tensor::Tensor;
 
 /// Shared handle to the PJRT client + executable cache.
 ///
-/// Not `Send`: the xla wrappers hold raw pointers. The coordinator is a
-/// deterministic single-threaded schedule executor (see
-/// `coordinator::pipeline`), which is also the right shape for the
-/// 1-core testbed, so this is not a limitation in practice.
+/// `Send + Sync`: the threaded executor (`coordinator::threaded`) shares
+/// one `Runtime` across one OS thread per rank, so the executable cache
+/// and call counters sit behind `Mutex`es and compiled executables are
+/// handed out as `Arc`s. The vendored `xla` wrappers are plain owned
+/// host data (see `rust/vendor/xla/src/lib.rs`), so the bound holds by
+/// construction; a swap to the real FFI-backed xla-rs crate would fail
+/// the [`assert_runtime_send_sync`] compile-time check below, which is
+/// the loud signal that the real bindings need `unsafe impl` auditing
+/// (or per-thread clients) before the threaded executor may run on them.
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// Executable invocation counter (per artifact), for the perf pass.
-    calls: RefCell<HashMap<String, u64>>,
+    calls: Mutex<HashMap<String, u64>>,
 }
+
+/// Compile-time proof that [`Runtime`] can be shared across the
+/// thread-per-rank executor. If the `xla` dependency ever reintroduces
+/// `!Send` raw-pointer wrappers, this stops the build here — at the
+/// declaration that documents the invariant — instead of deep inside
+/// `coordinator::threaded`'s `thread::scope`.
+const fn assert_runtime_send_sync<T: Send + Sync>() {}
+const _: () = assert_runtime_send_sync::<Runtime>();
 
 impl Runtime {
     pub fn new(manifest: Manifest) -> Result<Runtime> {
@@ -39,8 +51,8 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
         })
     }
 
@@ -53,9 +65,16 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) the executable for an artifact file.
-    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(file) {
-            return Ok(e.clone());
+    ///
+    /// The cache lock is *not* held across compilation: two threads
+    /// racing on a cold artifact may both compile it, and the loser's
+    /// executable is dropped when the winner's insert is found. That is
+    /// a benign duplicated compile (warmup runs single-threaded before
+    /// the rank threads start), and it keeps slow XLA compilation from
+    /// serializing every other artifact lookup.
+    pub fn executable(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(Arc::clone(e));
         }
         let path = self.manifest.path(file);
         let proto = xla::HloModuleProto::from_text_file(
@@ -63,13 +82,13 @@ impl Runtime {
         )
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling {}", path.display()))?,
         );
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
-        Ok(exe)
+        let mut cache = self.cache.lock().unwrap();
+        Ok(Arc::clone(cache.entry(file.to_string()).or_insert(exe)))
     }
 
     /// Execute an artifact with literal inputs; returns the decomposed
@@ -95,7 +114,7 @@ impl Runtime {
     /// coordinator keep stage parameters device-resident across steps).
     pub fn call_b(&self, file: &str, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
         let exe = self.executable(file)?;
-        *self.calls.borrow_mut().entry(file.to_string()).or_insert(0) += 1;
+        *self.calls.lock().unwrap().entry(file.to_string()).or_insert(0) += 1;
         let result = exe
             .execute_b::<xla::PjRtBuffer>(args)
             .with_context(|| format!("executing {file}"))?[0][0]
@@ -123,7 +142,8 @@ impl Runtime {
 
     /// Invocation counts per artifact since startup (perf diagnostics).
     pub fn call_counts(&self) -> Vec<(String, u64)> {
-        let mut v: Vec<_> = self.calls.borrow().iter().map(|(k, &n)| (k.clone(), n)).collect();
+        let mut v: Vec<_> =
+            self.calls.lock().unwrap().iter().map(|(k, &n)| (k.clone(), n)).collect();
         v.sort_by(|a, b| b.1.cmp(&a.1));
         v
     }
@@ -134,14 +154,21 @@ impl Runtime {
 // ---------------------------------------------------------------------------
 
 /// Host tensor -> f32 literal with the tensor's shape.
+///
+/// A rank-0 tensor must hold exactly one element; an empty one is a
+/// typed error, not a panic (a truncated artifact or a zero-length
+/// decode can hand us one).
 pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
-    let l = xla::Literal::vec1(t.data());
     if t.shape().is_empty() {
-        // rank-0 scalar
-        return Ok(xla::Literal::scalar(t.data()[0]));
+        let v = t
+            .data()
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("rank-0 tensor has no elements"))?;
+        return Ok(xla::Literal::scalar(v));
     }
     let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(l.reshape(&dims)?)
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
 }
 
 /// Flat f32 slice -> rank-1 literal (compression-kernel operands).
@@ -167,7 +194,57 @@ pub fn tensor_from(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
     Tensor::new(shape.to_vec(), data)
 }
 
-/// Literal -> scalar f32 (loss values).
+/// Literal -> scalar f32 (loss values). An empty literal (e.g. a
+/// malformed result tuple) is a typed error, not an index panic.
 pub fn scalar_from(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.to_vec::<f32>()?[0])
+    lit.to_vec::<f32>()?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("expected a scalar literal, got an empty one"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_rank0_scalar_roundtrip() {
+        let t = Tensor::new(vec![], vec![2.5]).unwrap();
+        let l = lit_f32(&t).unwrap();
+        assert!(l.shape_dims().is_empty());
+        assert_eq!(scalar_from(&l).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn lit_f32_empty_tensor_does_not_panic() {
+        // a zero-element tensor converts to a zero-element literal, and
+        // reading it as a scalar is a typed error instead of a panic
+        let t = Tensor::new(vec![0], vec![]).unwrap();
+        let l = lit_f32(&t).unwrap();
+        assert_eq!(l.element_count(), 0);
+        assert!(scalar_from(&l).is_err());
+    }
+
+    #[test]
+    fn scalar_from_empty_literal_is_typed_error() {
+        let empty = xla::Literal::vec1(&[] as &[f32]);
+        let err = scalar_from(&empty).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn lit_f32_shaped_roundtrip() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let l = lit_f32(&t).unwrap();
+        assert_eq!(l.shape_dims(), &[2, 3]);
+        let back = tensor_from(&l, &[2, 3]).unwrap();
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        // mirrors the const assertion above; keeps the invariant visible
+        // in the test listing too
+        assert_runtime_send_sync::<Runtime>();
+    }
 }

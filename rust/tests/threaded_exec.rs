@@ -1,0 +1,195 @@
+//! Threaded-executor integration tests (`exec = threaded`).
+//!
+//! The first half needs nothing but loopback sockets: the worker
+//! harness's schedule run with one OS thread per rank over ports of a
+//! shared stream transport must be bit-identical — per-mailbox delivery
+//! order, byte counts, payload digests — to the single-process `SimNet`
+//! reference, on every schedule (interleaved v=2 ring included) and
+//! under the error-feedback delta protocols. A property test sweeps
+//! shapes and specs; the per-process loopback runner is cross-checked
+//! too, so all three executors agree.
+//!
+//! The second half (artifacts-gated, like `tests/integration.rs`)
+//! asserts the trainer-level guarantee: training with `exec = threaded`
+//! over real UDS sockets produces bit-identical parameters and
+//! identical per-link byte counts to the sequential `SimNet` run.
+
+use mpcomp::compression::Spec;
+use mpcomp::config::{CompressImpl, ExecMode, Schedule, TrainConfig, WireOpts};
+use mpcomp::coordinator::worker::{self, WorkerOpts};
+use mpcomp::coordinator::{run_threaded, Trainer};
+use mpcomp::netsim::Backend;
+use mpcomp::runtime::Runtime;
+use mpcomp::tensor::Tensor;
+use mpcomp::util::prop::run_prop;
+
+fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u64) -> WorkerOpts {
+    WorkerOpts {
+        stages,
+        mb,
+        link_elems,
+        schedule: Schedule::GPipe,
+        spec: Spec::parse(mode).unwrap(),
+        plan: None,
+        seed,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
+        steps: 1,
+    }
+}
+
+#[test]
+fn prop_threaded_matches_sim_mailboxes() {
+    // Shape/spec sweep of the core contract: thread-per-rank execution
+    // over shared uds sockets delivers exactly what the ordered SimNet
+    // replay delivers — feedback mirrors included, whose generation
+    // counters turn any cross-thread reordering into a typed error.
+    run_prop("threaded mailboxes == sim mailboxes", 6, |g| {
+        let stages = g.usize(2, 3);
+        let mb = g.usize(1, 4);
+        let elems = g.usize(8, 200);
+        let mode =
+            *g.choose(&["none", "topk:10", "quant:fw4-bw6", "ef21+topk:10", "aqsgd+topk:30"]);
+        let mut opts = worker_opts(stages, mb, elems, mode, g.usize(0, 1 << 20) as u64);
+        opts.steps = g.usize(1, 2);
+        if g.bool() {
+            opts.schedule = Schedule::OneFOneB;
+        }
+        let reference = worker::run_reference(&opts).map_err(|e| e.to_string())?;
+        let threaded = run_threaded(&opts, Backend::Uds).map_err(|e| e.to_string())?;
+        worker::check(&reference, &[threaded]).map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn threaded_interleaved_ring_matches_reference() {
+    // v=2 ring: two rank threads, each hosting two chunks, sharing the
+    // wrap link concurrently — still bit-identical to the reference.
+    for mode in ["topk:10", "ef21+topk:10"] {
+        let mut opts = worker_opts(2, 4, 256, mode, 11);
+        opts.schedule = Schedule::Interleaved { v: 2 };
+        opts.steps = 2;
+        let reference = worker::run_reference(&opts).unwrap();
+        let threaded = run_threaded(&opts, Backend::Uds).unwrap();
+        worker::check(&reference, &[threaded]).unwrap_or_else(|e| panic!("{mode}: {e}"));
+    }
+}
+
+#[test]
+fn threaded_tcp_matches_sequential_loopback() {
+    // All three executors agree: SimNet reference, sequential loopback
+    // (one thread driving every rank), and thread-per-rank — over TCP.
+    let opts = worker_opts(3, 4, 128, "quant:fw8-bw8", 23);
+    let reference = worker::run_reference(&opts).unwrap();
+    let sequential = worker::run_loopback(&opts, Backend::Tcp).unwrap();
+    let threaded = run_threaded(&opts, Backend::Tcp).unwrap();
+    worker::check(&reference, &[sequential, threaded]).unwrap();
+}
+
+#[test]
+fn threaded_rejects_single_endpoint_backends() {
+    let opts = worker_opts(2, 2, 64, "none", 1);
+    for backend in [Backend::Sim, Backend::Udp] {
+        let err = run_threaded(&opts, backend).unwrap_err().to_string();
+        assert!(err.contains("stream backend"), "{backend:?}: {err}");
+    }
+}
+
+#[test]
+fn trainer_rejects_threaded_on_non_stream_backend() {
+    // Trainer::new validates exec/backend compatibility up front — a
+    // typed error at construction, not a deadlocked epoch later.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.exec = ExecMode::Threaded;
+    for backend in ["sim", "udp"] {
+        cfg.backend = backend.into();
+        let rt = Runtime::from_dir(&cfg.artifacts_dir).expect("loading artifacts");
+        let err = Trainer::new(rt, cfg.clone()).expect_err("threaded over sim must be rejected");
+        assert!(err.to_string().contains("stream backend"), "{backend}: {err:#}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trainer-level (artifacts-gated): threaded == sequential, bit for bit
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let ok = std::path::Path::new(dir).join("manifest.json").exists();
+    if !ok {
+        eprintln!("artifacts not built; skipping integration test");
+    }
+    ok
+}
+
+fn tiny_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::defaults("cnn16");
+    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.results_dir = std::env::temp_dir().join("mpcomp_threadedtest").to_str().unwrap().into();
+    cfg.train_size = 200;
+    cfg.test_size = 100;
+    cfg.epochs = 1;
+    cfg.lr0 = 0.05;
+    cfg.compress_impl = CompressImpl::Native;
+    cfg.sim_op_time = Some(0.020);
+    cfg
+}
+
+fn run_once(cfg: TrainConfig) -> (Vec<Vec<Tensor>>, u64) {
+    let rt = Runtime::from_dir(&cfg.artifacts_dir).expect("loading artifacts");
+    let mut trainer = Trainer::new(rt, cfg).unwrap();
+    let m = trainer.run().unwrap();
+    (trainer.stage_params(), m.wire_bytes)
+}
+
+#[test]
+fn threaded_training_is_bit_identical_to_sequential() {
+    // The tentpole guarantee: one epoch trained with one OS thread per
+    // rank over real UDS sockets yields bit-identical parameters and
+    // identical per-link byte accounting to the sequential SimNet run.
+    // Single ordered writers everywhere (stages, link feedback state,
+    // the loss sum) make this exact, not approximate.
+    if !artifacts_ready() {
+        return;
+    }
+    for mode in ["none", "topk:10"] {
+        let mut base = tiny_cfg();
+        base.spec = Spec::parse(mode).unwrap();
+        let (p_seq, bytes_seq) = run_once(base.clone());
+        let mut thr = base.clone();
+        thr.backend = "uds".into();
+        thr.exec = ExecMode::Threaded;
+        let (p_thr, bytes_thr) = run_once(thr);
+        for (a, b) in p_seq.iter().flatten().zip(p_thr.iter().flatten()) {
+            assert_eq!(a.data(), b.data(), "{mode}: sequential vs threaded diverged");
+        }
+        assert_eq!(bytes_seq, bytes_thr, "{mode}: byte accounting diverged");
+    }
+}
+
+#[test]
+fn threaded_training_1f1b_matches_sequential_uds() {
+    // Same-backend comparison (uds vs uds) on the 1F1B schedule: the
+    // only variable is the executor.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut base = tiny_cfg();
+    base.spec = Spec::parse("quant:fw8-bw8").unwrap();
+    base.schedule = Schedule::OneFOneB;
+    base.backend = "uds".into();
+    let (p_seq, bytes_seq) = run_once(base.clone());
+    let mut thr = base;
+    thr.exec = ExecMode::Threaded;
+    let (p_thr, bytes_thr) = run_once(thr);
+    for (a, b) in p_seq.iter().flatten().zip(p_thr.iter().flatten()) {
+        assert_eq!(a.data(), b.data(), "sequential-uds vs threaded-uds diverged");
+    }
+    assert_eq!(bytes_seq, bytes_thr);
+}

@@ -17,6 +17,17 @@
 //! To run on a real PJRT backend, point the `xla` path dependency in
 //! `rust/Cargo.toml` at the real xla-rs crate; no mpcomp source changes
 //! are needed.
+//!
+//! Thread-safety audit (load-bearing for `coordinator::threaded`): every
+//! type here is plain owned host data — no raw pointers, no interior
+//! mutability — so `PjRtClient`, `PjRtBuffer`, `PjRtLoadedExecutable`,
+//! and `Literal` are all auto-`Send + Sync`, and `runtime::Runtime`'s
+//! compile-time `Send + Sync` assertion holds by construction. The real
+//! xla-rs wrappers hold raw `c_lib` pointers and are `!Send`; swapping
+//! them in trips that assertion at compile time, which is deliberate —
+//! the swap must come with an FFI thread-safety audit (PJRT clients are
+//! thread-safe in C++ terms, but the Rust wrapper needs explicit
+//! `unsafe impl` declarations after review), not a silent green build.
 
 use std::fmt;
 
