@@ -52,6 +52,18 @@ delta = (
     + f32(5.0)
 )
 
+# golden_allreduce_encoding: reduce-scatter, step 1, seg 2, wrapping
+# encode_raw(&[1.5]); envelope n mirrors the inner frame's
+ar_inner = header(0, 1) + f32(1.5)
+allreduce = (
+    header(5, 1)
+    + bytes([0])  # phase = reduce-scatter
+    + u32(1)  # step
+    + u32(2)  # seg
+    + u32(len(ar_inner))
+    + ar_inner
+)
+
 UDP_MAGIC = u32(0x5543504D)  # "MPCU"
 
 def u24(x):
@@ -95,6 +107,7 @@ FRAMES = {
     "sparse": sparse,
     "bitmap": bitmap,
     "delta": delta,
+    "allreduce": allreduce,
     "udp data": udp_data,
     "udp ack": udp_ack,
     "udp nack": udp_nack,

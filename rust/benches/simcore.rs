@@ -1,0 +1,182 @@
+//! Event-core benchmarks: the pre-refactor linear-scan mailbox design,
+//! head-to-head against the keyed per-link [`SimNet`] core that
+//! replaced it, at hybrid-DP scale (512 links = 8 stages x 64
+//! replicas). Run with `cargo bench --bench simcore`.
+//!
+//! The old core kept one `Vec<Message>` per channel and scanned it on
+//! every receive — fine for a 4-rank chain, quadratic for the DP×PP
+//! allreduce rounds `exp scale` drives through 256-512 ranks. It is
+//! replicated here in miniature (same bounded-window send arithmetic,
+//! Vec-scan mailbox) because the real pre-refactor state is gone; the
+//! keyed side is the *actual* `SimNet` (calendar mailbox keyed by
+//! message id, sharded per-link state), so the gate pins the shipping
+//! code, not a model of it.
+//!
+//! The drive mirrors one allreduce phase at `2 * (dp - 1)` ring steps
+//! per link, received in reverse-step order — adversarial for a scan
+//! (every lookup walks past all younger messages) and irrelevant for a
+//! keyed mailbox. CI runs this with `--json BENCH_simcore.json` (full
+//! mode: the gate needs stable medians) and fails the build if the
+//! keyed core stops beating the linear scan on events/sec. Bench names
+//! are stable: `simcore_linear_scan/...`, `simcore_keyed_simnet/...`,
+//! `simcore_hybrid_step/...`.
+
+use std::collections::VecDeque;
+
+use mpcomp::compression::Spec;
+use mpcomp::config::Schedule;
+use mpcomp::coordinator::{pipeline, simexec};
+use mpcomp::netsim::{Dir, SimNet, WireModel};
+use mpcomp::util::bench::{black_box, header, Suite};
+
+/// 8 pipeline stages x 64 data-parallel replicas — the `--full` point
+/// of the `exp scale` sweep.
+const LINKS: usize = 512;
+/// Ring steps of a dp=64 allreduce: `2 * (dp - 1)`.
+const STEPS: usize = 126;
+/// Hop payload bytes (compressed ring segment; the cost under test is
+/// the mailbox, not the ledger arithmetic).
+const BYTES: usize = 4096;
+/// Bounded in-flight window, as the executors configure it.
+const CAPACITY: usize = 4;
+
+/// The pre-refactor core in miniature: bounded-window send arithmetic
+/// identical to the shipping channel, but a flat `Vec` mailbox the
+/// receive path scans (and `remove`-shifts) per lookup.
+struct LinearChannel {
+    free_at: f64,
+    inflight: VecDeque<f64>,
+    mailbox: Vec<(u64, f64)>, // (key, arrival), insertion order
+    model: WireModel,
+}
+
+impl LinearChannel {
+    fn new(model: WireModel) -> LinearChannel {
+        LinearChannel { free_at: 0.0, inflight: VecDeque::new(), mailbox: Vec::new(), model }
+    }
+
+    fn send(&mut self, key: u64, bytes: usize, now: f64) -> f64 {
+        let tx = self.model.tx_time(bytes);
+        while self.inflight.front().is_some_and(|&a| a <= now) {
+            self.inflight.pop_front();
+        }
+        let mut depart = now.max(self.free_at);
+        if self.inflight.len() >= CAPACITY {
+            if let Some(oldest) = self.inflight.pop_front() {
+                depart = depart.max(oldest);
+            }
+        }
+        self.free_at = depart + tx;
+        let arrival = depart + tx + self.model.latency_s;
+        self.inflight.push_back(arrival);
+        self.mailbox.push((key, arrival));
+        arrival
+    }
+
+    fn recv(&mut self, key: u64) -> Option<f64> {
+        let at = self.mailbox.iter().position(|&(k, _)| k == key)?;
+        Some(self.mailbox.remove(at).1)
+    }
+}
+
+/// One allreduce phase through the linear-scan miniature: every link
+/// ships `STEPS` keyed hops, then each link's hops are received in
+/// reverse-step order (worst case for the scan).
+fn drive_linear(links: &mut [LinearChannel]) -> u64 {
+    for step in 0..STEPS {
+        for ch in links.iter_mut() {
+            black_box(ch.send(step as u64, BYTES, 0.0));
+        }
+    }
+    let mut events = 0u64;
+    for ch in links.iter_mut() {
+        for step in (0..STEPS).rev() {
+            black_box(ch.recv(step as u64).expect("hop delivered"));
+            events += 1;
+        }
+    }
+    events
+}
+
+/// The same phase through the real keyed `SimNet` core.
+fn drive_keyed(net: &mut SimNet) -> u64 {
+    for step in 0..STEPS {
+        for link in 0..LINKS {
+            black_box(net.send_to(link, Dir::Fwd, step as u64, BYTES, BYTES, 0.0));
+        }
+    }
+    let mut events = 0u64;
+    for link in 0..LINKS {
+        for step in (0..STEPS).rev() {
+            black_box(net.try_recv(link, Dir::Fwd, step as u64).expect("hop delivered"));
+            events += 1;
+        }
+    }
+    net.reset();
+    events
+}
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+    let label = format!("{LINKS}x{STEPS}");
+    // one send + one recv per hop
+    let events = (LINKS * STEPS * 2) as f64;
+    let model = WireModel::wan();
+
+    let mut linear: Vec<LinearChannel> = (0..LINKS).map(|_| LinearChannel::new(model)).collect();
+    suite
+        .bench(&format!("simcore_linear_scan/{label}"), || {
+            black_box(drive_linear(&mut linear));
+            for ch in linear.iter_mut() {
+                ch.free_at = 0.0;
+                ch.inflight.clear();
+            }
+        })
+        .report_throughput(events, "event");
+
+    let mut net = SimNet::with_capacity(LINKS, model, CAPACITY);
+    suite
+        .bench(&format!("simcore_keyed_simnet/{label}"), || {
+            black_box(drive_keyed(&mut net));
+        })
+        .report_throughput(events, "event");
+
+    // the full hybrid step end to end: the 256-rank `exp scale` cell
+    // (8-stage 1f1b pipeline + 256 concurrent gradient rings) through
+    // `simulate_hybrid` — pipeline events included
+    let ops = pipeline::ops_for(Schedule::OneFOneB, 8, 16).expect("1f1b ops");
+    let nb = 7;
+    let elems = 16_384usize;
+    let raw = mpcomp::compression::wire::raw_wire_bytes(elems);
+    let spec = Spec::parse("ef21+topk:10").expect("spec parses");
+    let (fb, bb) = simexec::spec_wire_bytes(&spec, elems);
+    let hybrid = simexec::HybridSpec {
+        pp: simexec::SimSpec {
+            n_stages: 8,
+            v: 1,
+            n_mb: 16,
+            fwd_op_s: 0.020,
+            bwd_op_s: 0.040,
+            recompute_s: 0.0,
+            fwd_bytes: vec![fb; nb],
+            bwd_bytes: vec![bb; nb],
+            raw_bytes: vec![raw; nb],
+            model,
+            capacity: CAPACITY,
+            faults: None,
+        },
+        dp: 32,
+        grad_elems: 1 << 18,
+        grad_spec: spec,
+    };
+    let hybrid_events =
+        (ops.len() + hybrid.ranks() * 2 * (hybrid.dp - 1) * 2) as f64;
+    suite
+        .bench("simcore_hybrid_step/8x32", || {
+            black_box(simexec::simulate_hybrid(&ops, &hybrid));
+        })
+        .report_throughput(hybrid_events, "event");
+
+    suite.finish();
+}

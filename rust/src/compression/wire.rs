@@ -11,6 +11,7 @@
 //! tag 2 SPARSE  body: k u32, k * (idx u32, val f32)       -- index list
 //! tag 3 BITMAP  body: k u32, ceil(n/8) bitmap, k * f32    -- dense mask
 //! tag 4 DELTA   error-feedback protocol frame, see below
+//! tag 5 ALLREDUCE  ring-allreduce envelope, see below
 //! ```
 //!
 //! `encode_sparse` picks SPARSE vs BITMAP, whichever is smaller — the
@@ -44,6 +45,24 @@
 //! density — the reason measured EF21 traffic lands *below* the plain
 //! TopK baseline despite the protocol header (pinned by
 //! `worker::tests` and the CI `loopback` byte check).
+//!
+//! **Allreduce frames** (tag 5) wrap the data-parallel gradient
+//! ring-allreduce (`coordinator::allreduce`): reduce-scatter and
+//! all-gather hops reuse the existing codecs for the segment payload,
+//! the envelope carries the phase/step/segment coordinates so a
+//! receiver can detect reordered or misrouted hops before touching any
+//! feedback state.
+//!
+//! ```text
+//! tag 5 ALLREDUCE  body: phase u8       0 = reduce-scatter, 1 = all-gather
+//!                        step u32       ring step within the phase
+//!                        seg u32        segment (chunk) index
+//!                        inner u32      length of the inner frame
+//!                  then: the inner frame (any tag 0-4 codec)
+//! ```
+//!
+//! The header's `n` is the *inner* frame's element count, so byte
+//! accounting can read segment sizes without parsing the body.
 
 use anyhow::{bail, Result};
 
@@ -54,6 +73,14 @@ const TAG_QUANT: u8 = 1;
 const TAG_SPARSE: u8 = 2;
 const TAG_BITMAP: u8 = 3;
 const TAG_DELTA: u8 = 4;
+const TAG_ALLREDUCE: u8 = 5;
+
+/// Allreduce envelope phase: reduce-scatter (receiver *adds* the
+/// decoded segment into its accumulator).
+pub const AR_REDUCE_SCATTER: u8 = 0;
+/// Allreduce envelope phase: all-gather (receiver *replaces* its
+/// segment with the decoded values).
+pub const AR_ALL_GATHER: u8 = 1;
 
 /// Delta-frame feedback tag: EF21 update.
 pub const FB_EF21: u8 = 1;
@@ -439,6 +466,88 @@ pub fn decode_delta(bytes: &[u8]) -> Result<DeltaFrame> {
 }
 
 // ---------------------------------------------------------------------------
+// allreduce envelopes (DP gradient ring-allreduce)
+// ---------------------------------------------------------------------------
+
+/// Decoded coordinates of an allreduce envelope (tag 5): which phase,
+/// ring step, and gradient segment the wrapped frame belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllreduceMeta {
+    /// [`AR_REDUCE_SCATTER`] or [`AR_ALL_GATHER`].
+    pub phase: u8,
+    /// Ring step within the phase (0..dp-1).
+    pub step: u32,
+    /// Segment (chunk) index the payload covers.
+    pub seg: u32,
+}
+
+/// Is this wire message an allreduce envelope?
+pub fn is_allreduce_frame(bytes: &[u8]) -> bool {
+    bytes.first() == Some(&TAG_ALLREDUCE)
+}
+
+/// Wrap an already-encoded segment frame (any tag 0-4 codec) in an
+/// allreduce envelope. The envelope's `n` mirrors the inner frame's so
+/// byte accounting never needs to parse the body.
+pub fn encode_allreduce(phase: u8, step: u32, seg: u32, inner: &[u8]) -> Vec<u8> {
+    assert!(phase == AR_REDUCE_SCATTER || phase == AR_ALL_GATHER);
+    assert!(inner.len() >= 5, "inner frame must carry the common header");
+    let n = u32::from_le_bytes([inner[1], inner[2], inner[3], inner[4]]) as usize;
+    let mut out = Vec::with_capacity(18 + inner.len());
+    header(TAG_ALLREDUCE, n, &mut out);
+    out.push(phase);
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&seg.to_le_bytes());
+    out.extend_from_slice(&(inner.len() as u32).to_le_bytes());
+    out.extend_from_slice(inner);
+    out
+}
+
+/// Unwrap an allreduce envelope into its coordinates and the inner
+/// frame. Truncation, unknown phases, and inner-length mismatches are
+/// errors — a corrupt hop never reaches the segment decoder.
+pub fn decode_allreduce(bytes: &[u8]) -> Result<(AllreduceMeta, &[u8])> {
+    if bytes.is_empty() || bytes[0] != TAG_ALLREDUCE {
+        bail!("wire: not an allreduce frame");
+    }
+    let n = read_u32(bytes, 1)? as usize;
+    let mut at = 5usize;
+    if at >= bytes.len() {
+        bail!("wire: truncated allreduce header");
+    }
+    let phase = bytes[at];
+    at += 1;
+    if phase != AR_REDUCE_SCATTER && phase != AR_ALL_GATHER {
+        bail!("wire: unknown allreduce phase {phase}");
+    }
+    let step = read_u32(bytes, at)?;
+    at += 4;
+    let seg = read_u32(bytes, at)?;
+    at += 4;
+    let inner_len = read_u32(bytes, at)? as usize;
+    at += 4;
+    if at + inner_len != bytes.len() {
+        bail!(
+            "wire: allreduce inner length {inner_len} != body {}",
+            bytes.len().saturating_sub(at)
+        );
+    }
+    let inner = &bytes[at..];
+    if inner.len() < 5 || read_u32(inner, 1)? as usize != n {
+        bail!("wire: allreduce inner header disagrees with envelope n {n}");
+    }
+    Ok((AllreduceMeta { phase, step, seg }, inner))
+}
+
+/// Bytes an allreduce envelope adds on top of its inner frame.
+pub const ALLREDUCE_OVERHEAD: usize = 18;
+
+/// Total bytes of an envelope wrapping an `inner_len`-byte frame.
+pub fn allreduce_wire_bytes(inner_len: usize) -> usize {
+    ALLREDUCE_OVERHEAD + inner_len
+}
+
+// ---------------------------------------------------------------------------
 // decode
 // ---------------------------------------------------------------------------
 
@@ -535,6 +644,9 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<f32>> {
         // bootstrap buffer); state reconstruction needs the receiver
         // mirror — see `coordinator::feedback::FeedbackState::apply_frame`
         TAG_DELTA => Ok(decode_delta(bytes)?.values),
+        // allreduce envelopes decode to the inner frame's dense values;
+        // the add-vs-replace semantics live in `coordinator::allreduce`
+        TAG_ALLREDUCE => decode(decode_allreduce(bytes)?.1),
         t => bail!("wire: unknown tag {t}"),
     }
 }
@@ -890,6 +1002,97 @@ mod tests {
         assert!(decode_delta(&bad).is_err());
         // a non-delta frame is refused
         assert!(decode_delta(&encode_raw(&[1.0])).is_err());
+    }
+
+    // ---- allreduce envelopes (tag 5) -----------------------------------
+
+    #[test]
+    fn golden_allreduce_encoding() {
+        let got = encode_allreduce(AR_REDUCE_SCATTER, 1, 2, &encode_raw(&[1.5]));
+        let want = [
+            5u8, // TAG_ALLREDUCE
+            1, 0, 0, 0, // n = 1 (inner's element count)
+            0, // phase = reduce-scatter
+            1, 0, 0, 0, // step = 1
+            2, 0, 0, 0, // seg = 2
+            9, 0, 0, 0, // inner_len = 9
+            0, // inner: TAG_RAW
+            1, 0, 0, 0, // inner: n = 1
+            0x00, 0x00, 0xc0, 0x3f, // 1.5f32 LE
+        ];
+        assert_eq!(got, want);
+        assert_eq!(got.len(), allreduce_wire_bytes(9));
+        let (meta, inner) = decode_allreduce(&got).unwrap();
+        assert_eq!(meta, AllreduceMeta { phase: AR_REDUCE_SCATTER, step: 1, seg: 2 });
+        assert_eq!(decode(inner).unwrap(), vec![1.5]);
+        // the generic decoder sees straight through the envelope
+        assert_eq!(decode(&got).unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn prop_allreduce_roundtrip_every_inner_codec() {
+        run_prop("allreduce envelope roundtrip", 30, |g| {
+            let data = g.vec_normal(4, 2000);
+            let inner = match g.usize(0, 3) {
+                0 => encode_raw(&data),
+                1 => encode_quant(&data, *g.choose(&[4u8, 8])),
+                2 => {
+                    let (dense, _) = ops::topk(&data, 0.1);
+                    encode_sparse(&dense, ops::budget(data.len(), 0.1))
+                }
+                _ => {
+                    let (dense, _) = ops::topk(&data, 0.1);
+                    let k = dense.iter().filter(|&&x| x != 0.0).count();
+                    encode_delta(FB_EF21, 4, 9, 17, &dense, k)
+                }
+            };
+            let phase = *g.choose(&[AR_REDUCE_SCATTER, AR_ALL_GATHER]);
+            let step = g.usize(0, 7) as u32;
+            let seg = g.usize(0, 7) as u32;
+            let env = encode_allreduce(phase, step, seg, &inner);
+            if env.len() != allreduce_wire_bytes(inner.len()) {
+                return Err("sizing formula".into());
+            }
+            let (meta, got) = decode_allreduce(&env).map_err(|e| e.to_string())?;
+            if (meta.phase, meta.step, meta.seg) != (phase, step, seg) {
+                return Err("meta roundtrip".into());
+            }
+            if got != &inner[..] {
+                return Err("inner bytes changed".into());
+            }
+            let a = decode(&env).map_err(|e| e.to_string())?;
+            let b = decode(&inner).map_err(|e| e.to_string())?;
+            for (x, y) in a.iter().zip(&b) {
+                if x.to_bits() != y.to_bits() {
+                    return Err("decode through envelope differs".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_allreduce_rejects_corrupt() {
+        let ok = encode_allreduce(AR_ALL_GATHER, 0, 3, &encode_raw(&[1.0, 2.0]));
+        assert!(is_allreduce_frame(&ok) && !is_allreduce_frame(&encode_raw(&[1.0])));
+        // truncations at every envelope boundary
+        for cut in [1usize, 5, 6, 10, 14, 17, ok.len() - 1] {
+            assert!(decode_allreduce(&ok[..cut]).is_err(), "cut at {cut}");
+        }
+        // unknown phase
+        let mut bad = ok.clone();
+        bad[5] = 7;
+        assert!(decode_allreduce(&bad).is_err());
+        // inner length overstating the body
+        let mut bad = ok.clone();
+        bad[14..18].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decode_allreduce(&bad).is_err());
+        // envelope n disagreeing with the inner header
+        let mut bad = ok.clone();
+        bad[1..5].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_allreduce(&bad).is_err());
+        // a non-envelope frame is refused
+        assert!(decode_allreduce(&encode_raw(&[1.0])).is_err());
     }
 
     #[test]

@@ -151,6 +151,12 @@ pub struct TrainConfig {
     pub compress_impl: CompressImpl,
     pub optimizer: Optimizer,
     pub schedule: Schedule,
+    /// Data-parallel replicas of the whole pipeline (hybrid DP×PP).
+    /// Each optimizer step shards the batch across replicas and
+    /// averages gradients through a compressed ring-allreduce; 1 (the
+    /// default) is plain pipeline parallelism, bit-identical to the
+    /// pre-DP trainer.
+    pub dp: usize,
     pub epochs: usize,
     /// Examples per optimizer step (= microbatch x num_microbatches).
     pub batch_size: usize,
@@ -225,6 +231,7 @@ impl TrainConfig {
         "compress_impl",
         "optimizer",
         "schedule",
+        "dp",
         "epochs",
         "batch_size",
         "lr",
@@ -262,6 +269,7 @@ impl TrainConfig {
             compress_impl: CompressImpl::Kernel,
             optimizer: if model.starts_with("lm") { Optimizer::AdamW } else { Optimizer::Sgd },
             schedule: Schedule::GPipe,
+            dp: 1,
             epochs: 8,
             batch_size: 100,
             lr0: 0.01,
@@ -322,6 +330,10 @@ impl TrainConfig {
             if self.optimizer == Optimizer::Sgd { "sgd" } else { "adamw" },
         )?)?;
         self.schedule = Schedule::parse(&doc.str_or(s, "schedule", &self.schedule.name())?)?;
+        self.dp = doc.usize_or(s, "dp", self.dp)?;
+        if self.dp == 0 {
+            bail!("dp wants >= 1 data-parallel replica");
+        }
         self.epochs = doc.usize_or(s, "epochs", self.epochs)?;
         self.batch_size = doc.usize_or(s, "batch_size", self.batch_size)?;
         self.lr0 = doc.f64_or(s, "lr", self.lr0)?;
@@ -365,6 +377,13 @@ impl TrainConfig {
             "compress_impl" => self.compress_impl = CompressImpl::parse(value)?,
             "optimizer" => self.optimizer = Optimizer::parse(value)?,
             "schedule" => self.schedule = Schedule::parse(value)?,
+            "dp" => {
+                let dp: usize = value.parse()?;
+                if dp == 0 {
+                    bail!("dp wants >= 1 data-parallel replica");
+                }
+                self.dp = dp;
+            }
             "epochs" => self.epochs = value.parse()?,
             "batch_size" => self.batch_size = value.parse()?,
             "lr" => self.lr0 = value.parse()?,
@@ -558,6 +577,23 @@ mod tests {
         }
         let err = c.set("bogus", "1").unwrap_err().to_string();
         assert!(err.contains("valid keys:") && err.contains("sim_drop_p"), "{err}");
+    }
+
+    #[test]
+    fn dp_knob_parses_and_rejects_zero() {
+        let mut c = TrainConfig::defaults("cnn16");
+        assert_eq!(c.dp, 1, "plain pipeline by default");
+        c.set("dp", "4").unwrap();
+        assert_eq!(c.dp, 4);
+        assert!(c.set("dp", "0").is_err());
+        assert_eq!(c.dp, 4, "rejected value left untouched");
+        assert!(c.set("dp", "x").is_err());
+        let doc = toml::Doc::parse("[run]\ndp = 2\n").unwrap();
+        let mut c = TrainConfig::defaults("cnn16");
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.dp, 2);
+        let doc = toml::Doc::parse("[run]\ndp = 0\n").unwrap();
+        assert!(TrainConfig::defaults("cnn16").apply_doc(&doc).is_err());
     }
 
     #[test]

@@ -179,6 +179,7 @@ pub struct RunSpec {
 /// [`TrainConfig::KEYS`] (after the `wire.*`/`fault.*` renames).
 pub const RUN_KEYS: &[&str] = &[
     "stages",
+    "dp.replicas",
     "mb",
     "link_elems",
     "fwd_op_s",
@@ -206,6 +207,7 @@ pub const RUN_KEYS: &[&str] = &[
 /// field that stores it; other keys pass through unchanged.
 fn train_key(key: &str) -> &str {
     match key {
+        "dp.replicas" => "dp",
         "wire.profile" => "wire",
         "wire.backend" => "backend",
         "wire.capacity" => "sim_queue_cap",
@@ -433,6 +435,7 @@ impl RunSpec {
             ("compression", t.spec.canon()),
             ("plan", t.plan.name()),
             ("schedule", t.schedule.name()),
+            ("dp.replicas", t.dp.to_string()),
             ("exec", t.exec.name().to_string()),
             ("epochs", t.epochs.to_string()),
             ("seed", t.seed.to_string()),
@@ -570,6 +573,19 @@ mod tests {
         assert!((spec.serve.deadline_s - 0.010).abs() < 1e-12);
         assert_eq!(spec.serve.requests, 128);
         assert_eq!((spec.stages, spec.mb), (4, 16));
+    }
+
+    #[test]
+    fn dp_replicas_key_writes_through() {
+        let mut spec = RunSpec::new("cnn16", Surface::Worker);
+        assert_eq!(spec.train.dp, 1);
+        spec.set("dp.replicas", "2").unwrap();
+        assert_eq!(spec.train.dp, 2);
+        assert!(spec.set("dp.replicas", "0").is_err());
+        // the typed flag form routes through the same key
+        let spec = parse("worker --dp.replicas=4", Surface::Worker).unwrap();
+        assert_eq!(spec.train.dp, 4);
+        assert!(spec.describe().contains("dp.replicas = 4"), "{}", spec.describe());
     }
 
     #[test]

@@ -1,0 +1,591 @@
+//! Compressed ring-allreduce for hybrid data×pipeline parallelism.
+//!
+//! `dp` replicas of the pipeline exchange gradients every optimizer
+//! step over a ring: `dp - 1` *reduce-scatter* hops (each replica adds
+//! the incoming segment into its accumulator) followed by `dp - 1`
+//! *all-gather* hops (each replica adopts the reduced segment), so
+//! every replica ends holding the same mean gradient while each hop
+//! carries only `1/dp` of the vector.
+//!
+//! Gradients tolerate milder compression than activations (the source
+//! paper's central finding), so every hop is compressed per the
+//! channel's [`Spec`] under the *gradient* conventions the trainer's
+//! backward channels already use: quant specs take their `bw_bits`,
+//! AQ-SGD falls back to plain TopK, and EF21 runs the full two-sided
+//! delta protocol of [`super::feedback`] with per-`(channel, segment)`
+//! sender states and receiver mirrors that persist across optimizer
+//! steps — the step-`t+1` gradient ships as a delta against the
+//! step-`t` buffer.
+//!
+//! **Loss-consistent broadcast.** Reduce-scatter hops compress partial
+//! sums (re-encoded at every hop — the values genuinely change as
+//! addends join). All-gather hops do not: the segment owner encodes its
+//! reduced segment once with the spec's *stateless* codec, applies its
+//! own encode→decode locally, and every later hop relays the identical
+//! inner frame verbatim. Every replica therefore decodes the same
+//! bytes, and the final mean is **bit-identical on all `dp` replicas**
+//! — the invariant `rust/tests/allreduce.rs` pins across schedules,
+//! feedback modes, and transports.
+//!
+//! On the wire each hop is a tag-5 envelope
+//! ([`wire::encode_allreduce`]) carrying the phase, ring step, and
+//! segment index, so a truncated, reordered, or misrouted hop surfaces
+//! as a typed [`AllreduceError`] *before* any accumulator or mirror is
+//! touched.
+
+use std::fmt;
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::compression::{ops, wire, Feedback, Method, Spec};
+use crate::coordinator::feedback::{applies_to_bwd, FeedbackError, FeedbackState};
+use crate::tensor::Tensor;
+
+/// Typed failure of one allreduce hop. Every variant leaves the
+/// receiving ring's accumulator and feedback mirrors untouched, so a
+/// faulty wire (drop/reorder/truncation) can be retried or surfaced
+/// without state skew.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AllreduceError {
+    /// The frame failed envelope or payload decoding (truncation,
+    /// unknown tags, corrupt indices).
+    Codec {
+        /// Decoder error text.
+        detail: String,
+    },
+    /// The envelope's coordinates disagree with this ring position —
+    /// a reordered or misdelivered hop.
+    Misrouted {
+        /// Coordinates this ring expected for the step.
+        expect: wire::AllreduceMeta,
+        /// Coordinates the envelope carried.
+        got: wire::AllreduceMeta,
+    },
+    /// The decoded payload length disagrees with the segment.
+    SegmentSize {
+        /// Segment length this ring owns.
+        expected: usize,
+        /// Elements the payload decoded to.
+        got: usize,
+    },
+    /// The EF21 delta protocol refused the frame (generation skew,
+    /// digest mismatch, …); see [`FeedbackError`].
+    Feedback(FeedbackError),
+}
+
+impl fmt::Display for AllreduceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllreduceError::Codec { detail } => write!(f, "allreduce codec: {detail}"),
+            AllreduceError::Misrouted { expect, got } => write!(
+                f,
+                "allreduce misrouted: expected phase {}/step {}/seg {}, got phase {}/step {}/seg {}",
+                expect.phase, expect.step, expect.seg, got.phase, got.step, got.seg
+            ),
+            AllreduceError::SegmentSize { expected, got } => {
+                write!(f, "allreduce segment size: expected {expected}, got {got}")
+            }
+            AllreduceError::Feedback(e) => write!(f, "allreduce feedback: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AllreduceError {}
+
+impl From<FeedbackError> for AllreduceError {
+    fn from(e: FeedbackError) -> Self {
+        AllreduceError::Feedback(e)
+    }
+}
+
+/// The feedback mode active on an allreduce (gradient) channel: AQ-SGD
+/// is activations-only, exactly like the trainer's backward channels.
+pub fn gradient_feedback(fb: Feedback) -> Feedback {
+    if applies_to_bwd(fb) {
+        fb
+    } else {
+        Feedback::None
+    }
+}
+
+/// One replica's half of the ring: its accumulator, its position, and
+/// the persistent per-segment protocol state for the channel it sends
+/// on (to replica `(r + 1) % dp`) and the one it receives from
+/// (`(r - 1) % dp`). Create once, then `load`/hops/`finish` per
+/// optimizer step — EF21 mirrors persist across steps by design.
+#[derive(Clone, Debug)]
+pub struct ReplicaRing {
+    dp: usize,
+    replica: usize,
+    elems: usize,
+    spec: Spec,
+    /// Sender feedback state per segment (outgoing channel).
+    send_fb: Vec<FeedbackState>,
+    /// Receiver mirrors per segment (incoming channel).
+    recv_fb: Vec<FeedbackState>,
+    /// The working vector: local gradient in, mean gradient out.
+    acc: Vec<f32>,
+    /// Inner frame received on the previous all-gather hop, relayed
+    /// verbatim on the next one (loss-consistent broadcast).
+    relay: Option<Vec<u8>>,
+    loaded: bool,
+}
+
+impl ReplicaRing {
+    /// A ring member for `replica` of `dp` over `elems`-element
+    /// gradients, every hop compressed per `spec`.
+    pub fn new(dp: usize, replica: usize, elems: usize, spec: Spec) -> Result<ReplicaRing> {
+        if dp == 0 {
+            bail!("allreduce: dp must be >= 1");
+        }
+        if replica >= dp {
+            bail!("allreduce: replica {replica} out of range for dp {dp}");
+        }
+        if elems < dp {
+            bail!("allreduce: {elems} elements cannot split into {dp} segments");
+        }
+        if let Method::TopK { shared_idx: true, .. } = spec.method {
+            bail!("allreduce does not model shared-index masks (got '{}')", spec.label());
+        }
+        Ok(ReplicaRing {
+            dp,
+            replica,
+            elems,
+            spec,
+            send_fb: (0..dp).map(|_| FeedbackState::new()).collect(),
+            recv_fb: (0..dp).map(|_| FeedbackState::new()).collect(),
+            acc: Vec::new(),
+            relay: None,
+            loaded: false,
+        })
+    }
+
+    /// Ring hops per allreduce: `dp - 1` reduce-scatter + `dp - 1`
+    /// all-gather.
+    pub fn num_steps(&self) -> usize {
+        2 * (self.dp - 1)
+    }
+
+    /// This member's replica index.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Element range of segment `seg` (balanced split).
+    pub fn seg_range(&self, seg: usize) -> Range<usize> {
+        seg * self.elems / self.dp..(seg + 1) * self.elems / self.dp
+    }
+
+    /// Length of segment `seg`.
+    pub fn seg_len(&self, seg: usize) -> usize {
+        self.seg_range(seg).len()
+    }
+
+    /// Segment this replica sends at global `step` (0-based over both
+    /// phases): reduce-scatter step `s` ships `(r - s) mod dp`,
+    /// all-gather step `s` ships `(r + 1 - s) mod dp`.
+    pub fn send_seg(&self, step: usize) -> usize {
+        let (dp, r) = (self.dp, self.replica);
+        if step < dp - 1 {
+            (r + dp - step % dp) % dp
+        } else {
+            let s = step - (dp - 1);
+            (r + 1 + dp - s % dp) % dp
+        }
+    }
+
+    /// Segment this replica receives at global `step`: reduce-scatter
+    /// step `s` lands `(r - s - 1) mod dp` (added), all-gather step `s`
+    /// lands `(r - s) mod dp` (adopted).
+    pub fn recv_seg(&self, step: usize) -> usize {
+        let (dp, r) = (self.dp, self.replica);
+        if step < dp - 1 {
+            (r + dp - (step + 1) % dp) % dp
+        } else {
+            let s = step - (dp - 1);
+            (r + dp - s % dp) % dp
+        }
+    }
+
+    /// Envelope coordinates expected on the frame arriving at `step`.
+    fn expect_meta(&self, step: usize) -> wire::AllreduceMeta {
+        let dp = self.dp;
+        if step < dp - 1 {
+            wire::AllreduceMeta {
+                phase: wire::AR_REDUCE_SCATTER,
+                step: step as u32,
+                seg: self.recv_seg(step) as u32,
+            }
+        } else {
+            wire::AllreduceMeta {
+                phase: wire::AR_ALL_GATHER,
+                step: (step - (dp - 1)) as u32,
+                seg: self.recv_seg(step) as u32,
+            }
+        }
+    }
+
+    /// Begin one allreduce over this replica's local gradient.
+    pub fn load(&mut self, grad: &[f32]) -> Result<()> {
+        if grad.len() != self.elems {
+            bail!("allreduce: gradient has {} elements, ring built for {}", grad.len(), self.elems);
+        }
+        self.acc = grad.to_vec();
+        self.relay = None;
+        self.loaded = true;
+        Ok(())
+    }
+
+    /// Compress a reduce-scatter segment under the gradient
+    /// conventions, advancing the per-segment sender state.
+    fn encode_reduce(&mut self, seg: usize) -> Result<Vec<u8>> {
+        let range = self.seg_range(seg);
+        let x = &self.acc[range];
+        match self.spec.method {
+            Method::None => Ok(wire::encode_raw(x)),
+            Method::Quant { bw_bits, .. } => Ok(wire::encode_quant(x, bw_bits)),
+            Method::TopK { frac, shared_idx: _, feedback } => {
+                let state = &mut self.send_fb[seg];
+                match gradient_feedback(feedback) {
+                    Feedback::None => {
+                        let (dense, _) = ops::topk(x, frac);
+                        let k = dense.iter().filter(|&&v| v != 0.0).count();
+                        Ok(wire::encode_sparse(&dense, k))
+                    }
+                    Feedback::Ef => {
+                        let buf = state.global_mut(x.len()).data().to_vec();
+                        let (c, e) = ops::ef_combine(x, &buf, frac);
+                        let k = c.iter().filter(|&&v| v != 0.0).count();
+                        state.set_global(Tensor::from_vec(e));
+                        Ok(wire::encode_sparse(&c, k))
+                    }
+                    Feedback::EfMixed => {
+                        let buf = state.global_mut(x.len()).data().to_vec();
+                        let (c, e) = ops::ef_mixed(x, &buf, frac);
+                        let k = c.iter().filter(|&&v| v != 0.0).count();
+                        state.set_global(Tensor::from_vec(e));
+                        Ok(wire::encode_sparse(&c, k))
+                    }
+                    fb => Ok(state.sender_encode(fb, seg as u64, x, frac)?.0),
+                }
+            }
+        }
+    }
+
+    /// The *stateless* encoding of a reduced segment for broadcast:
+    /// one encode per segment, relayed verbatim, so every replica
+    /// decodes identical bytes (delta protocols are pairwise and do
+    /// not relay).
+    fn encode_broadcast(&self, seg: usize) -> Vec<u8> {
+        let range = self.seg_range(seg);
+        let x = &self.acc[range];
+        match self.spec.method {
+            Method::None => wire::encode_raw(x),
+            Method::Quant { bw_bits, .. } => wire::encode_quant(x, bw_bits),
+            Method::TopK { frac, .. } => {
+                let (dense, _) = ops::topk(x, frac);
+                let k = dense.iter().filter(|&&v| v != 0.0).count();
+                wire::encode_sparse(&dense, k)
+            }
+        }
+    }
+
+    /// Produce the tag-5 envelope this replica sends at `step`. On the
+    /// first all-gather hop the owner also adopts its own
+    /// encode→decode, so its copy matches what everyone else will
+    /// decode (the bit-identity invariant).
+    pub fn make_frame(&mut self, step: usize) -> Result<Vec<u8>> {
+        if !self.loaded {
+            bail!("allreduce: make_frame before load");
+        }
+        if step >= self.num_steps() {
+            bail!("allreduce: step {step} out of range ({} hops)", self.num_steps());
+        }
+        let dp = self.dp;
+        let seg = self.send_seg(step);
+        if step < dp - 1 {
+            let inner = self.encode_reduce(seg)?;
+            Ok(wire::encode_allreduce(wire::AR_REDUCE_SCATTER, step as u32, seg as u32, &inner))
+        } else {
+            let s = step - (dp - 1);
+            let inner = if s == 0 {
+                let inner = self.encode_broadcast(seg);
+                // loss-consistent self-application: adopt the decoded
+                // copy so this replica's segment matches the broadcast
+                let vals = wire::decode(&inner)?;
+                let range = self.seg_range(seg);
+                self.acc[range].copy_from_slice(&vals);
+                inner
+            } else {
+                match self.relay.take() {
+                    Some(inner) => inner,
+                    None => bail!("allreduce: all-gather step {s} has no frame to relay"),
+                }
+            };
+            Ok(wire::encode_allreduce(wire::AR_ALL_GATHER, s as u32, seg as u32, &inner))
+        }
+    }
+
+    /// Apply the frame arriving at `step`: verify the envelope, decode
+    /// the payload (EF21 frames advance the receiver mirror — or refuse
+    /// with the mirror untouched), then add (reduce-scatter) or adopt
+    /// (all-gather) the segment.
+    pub fn apply_frame(&mut self, step: usize, bytes: &[u8]) -> Result<(), AllreduceError> {
+        if !self.loaded || step >= self.num_steps() {
+            return Err(AllreduceError::Codec {
+                detail: format!("apply_frame at step {step} without an active allreduce"),
+            });
+        }
+        let (meta, inner) = wire::decode_allreduce(bytes)
+            .map_err(|e| AllreduceError::Codec { detail: e.to_string() })?;
+        let expect = self.expect_meta(step);
+        if meta != expect {
+            return Err(AllreduceError::Misrouted { expect, got: meta });
+        }
+        let seg = meta.seg as usize;
+        let range = self.seg_range(seg);
+        let values = if wire::is_delta_frame(inner) {
+            let fb = match self.spec.method {
+                Method::TopK { feedback, .. } => gradient_feedback(feedback),
+                _ => Feedback::None,
+            };
+            let df = wire::decode_delta(inner)
+                .map_err(|e| AllreduceError::Codec { detail: e.to_string() })?;
+            self.recv_fb[seg].apply_frame(fb, &df, range.len())?
+        } else {
+            wire::decode(inner).map_err(|e| AllreduceError::Codec { detail: e.to_string() })?
+        };
+        if values.len() != range.len() {
+            return Err(AllreduceError::SegmentSize { expected: range.len(), got: values.len() });
+        }
+        if meta.phase == wire::AR_REDUCE_SCATTER {
+            for (a, v) in self.acc[range].iter_mut().zip(&values) {
+                *a += v;
+            }
+        } else {
+            self.acc[range].copy_from_slice(&values);
+            self.relay = Some(inner.to_vec());
+        }
+        Ok(())
+    }
+
+    /// Finish the allreduce: divide by `dp` and hand back the mean
+    /// gradient. The ring (and its feedback state) stays usable for the
+    /// next optimizer step.
+    pub fn finish(&mut self) -> Result<Vec<f32>> {
+        if !self.loaded {
+            bail!("allreduce: finish before load");
+        }
+        self.loaded = false;
+        self.relay = None;
+        let inv = 1.0 / self.dp as f32;
+        let mut out = std::mem::take(&mut self.acc);
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+        Ok(out)
+    }
+
+    /// Bytes of persistent feedback state this ring member holds.
+    pub fn memory_bytes(&self) -> usize {
+        self.send_fb.iter().chain(&self.recv_fb).map(|s| s.memory_bytes()).sum()
+    }
+}
+
+/// Drive `dp` ring members through one full allreduce entirely
+/// in-memory: the **sequential reference** every transported path
+/// (SimNet replay, threaded executor, real sockets) is pinned
+/// bit-identical to. Returns each replica's mean gradient.
+pub fn run_in_memory(rings: &mut [ReplicaRing], grads: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    let dp = rings.len();
+    if dp == 0 || grads.len() != dp {
+        bail!("allreduce: {} gradients for {dp} ring members", grads.len());
+    }
+    for (ring, g) in rings.iter_mut().zip(grads) {
+        ring.load(g)?;
+    }
+    for step in 0..2 * (dp.saturating_sub(1)) {
+        let frames: Vec<Vec<u8>> =
+            rings.iter_mut().map(|r| r.make_frame(step)).collect::<Result<_>>()?;
+        for r in 0..dp {
+            let from = (r + dp - 1) % dp;
+            rings[r].apply_frame(step, &frames[from])?;
+        }
+    }
+    rings.iter_mut().map(|r| r.finish()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn rings(dp: usize, elems: usize, spec: &str) -> Vec<ReplicaRing> {
+        let spec = Spec::parse(spec).unwrap();
+        (0..dp).map(|r| ReplicaRing::new(dp, r, elems, spec).unwrap()).collect()
+    }
+
+    fn grads(dp: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..dp)
+            .map(|r| {
+                let mut rng = Rng::with_stream(seed, r as u64);
+                let mut v = vec![0.0f32; elems];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uncompressed_ring_computes_the_exact_mean() {
+        for dp in [2usize, 3, 4, 8] {
+            let elems = 64;
+            let g = grads(dp, elems, 7);
+            let mut rs = rings(dp, elems, "none");
+            let out = run_in_memory(&mut rs, &g).unwrap();
+            // reference mean with the ring's own addition order:
+            // segment seg accumulates starting at its owner-to-be
+            for i in 0..elems {
+                let seg = (0..dp).find(|&s| (s * elems / dp..(s + 1) * elems / dp).contains(&i));
+                let seg = seg.unwrap();
+                // ring addition order for segment seg: started by
+                // replica (seg - 1... ) — just check against f64-ish
+                // tolerance and cross-replica equality below
+                let want: f32 = (0..dp).map(|r| g[r][i]).sum::<f32>() / dp as f32;
+                assert!(
+                    (out[0][i] - want).abs() < 1e-4,
+                    "dp={dp} i={i} seg={seg}: {} vs {want}",
+                    out[0][i]
+                );
+            }
+            for r in 1..dp {
+                assert_eq!(out[0], out[r], "dp={dp}: replica {r} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn every_spec_yields_identical_vectors_on_all_replicas() {
+        for spec in
+            ["none", "quant:fw8-bw8", "topk:30", "ef+topk:30", "efmixed+topk:30", "ef21+topk:30", "aqsgd+topk:30"]
+        {
+            for dp in [2usize, 4] {
+                let g = grads(dp, 96, 11);
+                let mut rs = rings(dp, 96, spec);
+                let out = run_in_memory(&mut rs, &g).unwrap();
+                for r in 1..dp {
+                    let same = out[0]
+                        .iter()
+                        .zip(&out[r])
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "{spec} dp={dp}: replica {r} not bit-identical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ef21_state_persists_and_stays_consistent_across_steps() {
+        let dp = 4;
+        let mut rs = rings(dp, 128, "ef21+topk:10");
+        let mut last = Vec::new();
+        for step in 0..5u64 {
+            let g = grads(dp, 128, 100 + step);
+            let out = run_in_memory(&mut rs, &g).unwrap();
+            for r in 1..dp {
+                assert_eq!(out[0], out[r], "step {step}: replica {r} diverged");
+            }
+            assert!(rs[0].memory_bytes() > 0, "EF21 holds persistent buffers");
+            last = out.into_iter().next().unwrap();
+        }
+        assert!(!last.is_empty());
+    }
+
+    #[test]
+    fn segment_schedule_is_a_permutation() {
+        for dp in [2usize, 3, 5, 8] {
+            let ring = ReplicaRing::new(dp, 1 % dp, 64, Spec::none()).unwrap();
+            // reduce-scatter: every segment sent exactly once
+            let mut sent: Vec<usize> = (0..dp - 1).map(|s| ring.send_seg(s)).collect();
+            sent.sort_unstable();
+            sent.dedup();
+            assert_eq!(sent.len(), dp - 1, "dp={dp}");
+            // recv at step s is what the upstream replica sends
+            for step in 0..2 * (dp - 1) {
+                for r in 0..dp {
+                    let me = ReplicaRing::new(dp, r, 64, Spec::none()).unwrap();
+                    let up = ReplicaRing::new(dp, (r + dp - 1) % dp, 64, Spec::none()).unwrap();
+                    assert_eq!(me.recv_seg(step), up.send_seg(step), "dp={dp} step={step} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn misrouted_and_corrupt_frames_are_typed_and_leave_state_alone() {
+        let dp = 2;
+        let g = grads(dp, 64, 3);
+        let mut rs = rings(dp, 64, "ef21+topk:30");
+        rs[0].load(&g[0]).unwrap();
+        rs[1].load(&g[1]).unwrap();
+        let frame = rs[1].make_frame(0).unwrap();
+        let acc_before = rs[0].acc.clone();
+        // truncated envelope
+        let err = rs[0].apply_frame(0, &frame[..frame.len() - 3]).unwrap_err();
+        assert!(matches!(err, AllreduceError::Codec { .. }), "{err}");
+        assert_eq!(rs[0].acc, acc_before);
+        // wrong step coordinates -> misrouted
+        let (meta, inner) = wire::decode_allreduce(&frame).unwrap();
+        let wrong = wire::encode_allreduce(meta.phase, meta.step + 7, meta.seg, inner);
+        let err = rs[0].apply_frame(0, &wrong).unwrap_err();
+        assert!(matches!(err, AllreduceError::Misrouted { .. }), "{err}");
+        assert_eq!(rs[0].acc, acc_before);
+        // a replayed (duplicate) EF21 frame skews the generation:
+        // typed Feedback error, mirror untouched
+        rs[0].apply_frame(0, &frame).unwrap();
+        let acc_mid = rs[0].acc.clone();
+        let err = rs[0].apply_frame(0, &frame).unwrap_err();
+        assert!(matches!(err, AllreduceError::Feedback(FeedbackError::GenerationSkew { .. })), "{err}");
+        assert_eq!(rs[0].acc, acc_mid);
+    }
+
+    #[test]
+    fn prop_ring_matches_naive_mean_for_none_and_is_deterministic() {
+        run_prop("allreduce ring vs naive mean", 30, |g| {
+            let dp = *g.choose(&[2usize, 3, 4, 8]);
+            let elems = g.usize(dp.max(8), 300);
+            let seed = g.usize(0, 1 << 20) as u64;
+            let gr = grads(dp, elems, seed);
+            let mut rs = rings(dp, elems, "none");
+            let out = run_in_memory(&mut rs, &gr).map_err(|e| e.to_string())?;
+            let mut rs2 = rings(dp, elems, "none");
+            let out2 = run_in_memory(&mut rs2, &gr).map_err(|e| e.to_string())?;
+            for r in 0..dp {
+                if out[r] != out2[r] {
+                    return Err(format!("dp={dp}: replay diverged at replica {r}"));
+                }
+            }
+            for i in 0..elems {
+                let want: f32 = (0..dp).map(|r| gr[r][i]).sum::<f32>() / dp as f32;
+                if (out[0][i] - want).abs() > 1e-3 {
+                    return Err(format!("i={i}: {} vs {want}", out[0][i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constructor_rejects_bad_shapes() {
+        assert!(ReplicaRing::new(0, 0, 64, Spec::none()).is_err());
+        assert!(ReplicaRing::new(2, 2, 64, Spec::none()).is_err());
+        assert!(ReplicaRing::new(8, 0, 4, Spec::none()).is_err());
+        assert!(ReplicaRing::new(2, 0, 64, Spec::parse("topk:10:shared").unwrap()).is_err());
+        // dp=1 is the degenerate ring: zero hops, exact passthrough
+        let mut r = ReplicaRing::new(1, 0, 8, Spec::none()).unwrap();
+        let out = run_in_memory(std::slice::from_mut(&mut r), &[vec![2.0; 8]]).unwrap();
+        assert_eq!(out[0], vec![2.0; 8]);
+    }
+}

@@ -2,6 +2,10 @@
 //!
 //! * [`pipeline`] — microbatch schedules (GPipe, 1F1B, interleaved
 //!   1F1B with virtual stages) + validation and wire topology
+//! * [`allreduce`] — compressed ring-allreduce over `dp` data-parallel
+//!   replicas of the pipeline (hybrid DP×PP): reduce-scatter +
+//!   all-gather hops in tag-5 wire envelopes, gradient-convention
+//!   compression, persistent EF21 segment mirrors
 //! * [`simexec`] — schedule execution over the transport (measured
 //!   makespan; replaces the analytic estimate)
 //! * [`stage`] — per-stage executor (fwd/bwd/update over AOT artifacts)
@@ -32,6 +36,7 @@
 
 #![warn(missing_docs)]
 
+pub mod allreduce;
 pub mod feedback;
 pub mod link;
 pub mod pipeline;
@@ -42,9 +47,10 @@ pub mod threaded;
 pub mod trainer;
 pub mod worker;
 
+pub use allreduce::{AllreduceError, ReplicaRing};
 pub use link::CompressedLink;
 pub use serve::{ServeOpts, ServeReport};
-pub use simexec::{simulate, SimReport, SimSpec};
+pub use simexec::{simulate, simulate_hybrid, HybridSpec, SimReport, SimSpec};
 pub use stage::{StageInput, StageRunner};
 pub use threaded::run_threaded;
 pub use trainer::Trainer;

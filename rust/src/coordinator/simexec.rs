@@ -133,6 +133,100 @@ pub fn simulate_real(
     Ok(report)
 }
 
+/// Hybrid DP×PP: `dp` data-parallel replicas of the pipeline described
+/// by `pp`, each followed by a per-stage compressed ring-allreduce of
+/// its gradient shard (the source paper's gradient-tolerance finding
+/// only pays off once this traffic dominates — see `exp scale`).
+#[derive(Clone, Debug)]
+pub struct HybridSpec {
+    /// The per-replica pipeline run.
+    pub pp: SimSpec,
+    /// Data-parallel replica count; 1 degenerates to the plain pipeline
+    /// (bit-identical [`simulate`] report, pinned by test).
+    pub dp: usize,
+    /// Gradient elements allreduced per pipeline rank per step.
+    pub grad_elems: usize,
+    /// Compression on the allreduce (gradient) channels.
+    pub grad_spec: crate::compression::Spec,
+}
+
+impl HybridSpec {
+    /// Total simulated ranks: pipeline stages × data-parallel replicas.
+    pub fn ranks(&self) -> usize {
+        self.pp.n_stages * self.dp
+    }
+}
+
+/// Wire bytes of one ring-allreduce hop carrying a `seg_elems`-element
+/// segment under `spec`: the gradient-direction codec size wrapped in
+/// the tag-5 envelope.
+pub fn allreduce_hop_bytes(spec: &crate::compression::Spec, seg_elems: usize) -> usize {
+    crate::compression::wire::allreduce_wire_bytes(spec_wire_bytes(spec, seg_elems).1)
+}
+
+/// Segment a replica ships at global ring `step` (reduce-scatter then
+/// all-gather) — mirrors `coordinator::allreduce::ReplicaRing::send_seg`.
+fn ar_send_seg(dp: usize, r: usize, step: usize) -> usize {
+    if step < dp - 1 {
+        (r + dp - step % dp) % dp
+    } else {
+        let s = step - (dp - 1);
+        (r + 1 + dp - s % dp) % dp
+    }
+}
+
+/// Simulate the hybrid DP×PP step: the pipeline phase once (replicas
+/// are identical), then all `n_stages * dp` allreduce rings
+/// concurrently through one event-core [`SimNet`] — link `s*dp + r`
+/// carries stage `s`'s hop from replica `r` to `r+1`, and a replica's
+/// next hop is gated on the previous hop's arrival, exactly like the
+/// live rings in `coordinator::allreduce`. This is the path `exp
+/// scale` drives to 256–512 ranks, so it leans on the keyed-mailbox
+/// event core rather than a per-message linear scan.
+pub fn simulate_hybrid(ops: &[Op], spec: &HybridSpec) -> SimReport {
+    let pp = simulate(ops, &spec.pp);
+    if spec.dp <= 1 {
+        return pp;
+    }
+    let (dp, stages, elems) = (spec.dp, spec.pp.n_stages, spec.grad_elems);
+    let links = stages * dp;
+    let mut net = SimNet::with_capacity(links, spec.pp.model, spec.pp.capacity);
+    if let Some(fm) = &spec.pp.faults {
+        net.set_faults(fm.clone());
+    }
+    // every replica's pipeline finishes at the same (simulated) time
+    for rank in 0..links {
+        net.advance(rank, pp.makespan_s);
+    }
+    let seg_len = |seg: usize| (seg + 1) * elems / dp - seg * elems / dp;
+    for step in 0..2 * (dp - 1) {
+        for link in 0..links {
+            let n = seg_len(ar_send_seg(dp, link % dp, step));
+            let hop = allreduce_hop_bytes(&spec.grad_spec, n);
+            let raw = crate::compression::wire::allreduce_wire_bytes(
+                crate::compression::wire::raw_wire_bytes(n),
+            );
+            net.send(link, Dir::Fwd, step as u64, Payload::Size(hop), raw, net.clock(link))
+                .expect("SimNet delivers every allreduce hop");
+        }
+        for link in 0..links {
+            let (s, r) = (link / dp, link % dp);
+            let dst = s * dp + (r + 1) % dp;
+            let arrival =
+                net.recv(link, Dir::Fwd, step as u64).expect("allreduce hop delivered").arrival;
+            net.advance(dst, arrival);
+        }
+    }
+    SimReport {
+        makespan_s: net.makespan(),
+        busy_s: pp.busy_s * dp as f64 + net.busy_time(),
+        wire_sum_s: pp.wire_sum_s * dp as f64 + net.ledger().total_sim_time(),
+        bytes: pp.bytes * dp as u64 + net.ledger().total_bytes(),
+        raw_bytes: pp.raw_bytes * dp as u64 + net.ledger().total_uncompressed_bytes(),
+        wire_elapsed_s: pp.wire_elapsed_s * dp as f64,
+    }
+}
+
 /// Execute the schedule through any [`Transport`], gating each op on
 /// the arrival of its input message. Messages are keyed by
 /// `(boundary, mb)` so boundaries sharing a physical ring link (the
@@ -491,6 +585,95 @@ mod tests {
         let (f, b) = spec_wire_bytes(&Spec::parse("topk:10").unwrap(), n);
         let k = ops::budget(n, 0.1);
         assert_eq!((f, b), (wire::sparse_wire_bytes(n, k), wire::sparse_wire_bytes(n, k)));
+    }
+
+    fn hybrid(dp: usize, grad_spec: &str) -> HybridSpec {
+        HybridSpec {
+            pp: exact_spec(4, 1, 8, 32, 4),
+            dp,
+            grad_elems: 4096,
+            grad_spec: crate::compression::Spec::parse(grad_spec).unwrap(),
+        }
+    }
+
+    #[test]
+    fn hybrid_dp1_is_bit_identical_to_plain_pp() {
+        let ops = one_f_one_b(4, 8);
+        let spec = hybrid(1, "none");
+        let pp = simulate(&ops, &spec.pp);
+        let hy = simulate_hybrid(&ops, &spec);
+        assert_eq!(hy.makespan_s.to_bits(), pp.makespan_s.to_bits());
+        assert_eq!(hy.busy_s.to_bits(), pp.busy_s.to_bits());
+        assert_eq!((hy.bytes, hy.raw_bytes), (pp.bytes, pp.raw_bytes));
+    }
+
+    #[test]
+    fn hybrid_ring_charges_allreduce_traffic_after_the_pipeline() {
+        let ops = one_f_one_b(4, 8);
+        let spec = hybrid(4, "none");
+        let pp = simulate(&ops, &spec.pp);
+        let hy = simulate_hybrid(&ops, &spec);
+        // dp pipelines' traffic plus a non-empty gradient exchange
+        assert!(hy.bytes > pp.bytes * 4, "{} !> {}", hy.bytes, pp.bytes * 4);
+        assert!(hy.makespan_s > pp.makespan_s);
+        assert!(hy.busy_s > pp.busy_s * 4.0);
+        // every ring step moves ~one full vector (dp segments of 1/dp
+        // each): stages * 2(dp-1) steps bound the exchange
+        let ar_bytes = hy.bytes - pp.bytes * 4;
+        let vector = crate::compression::wire::raw_wire_bytes(spec.grad_elems) as u64;
+        let bound = 4 * 2 * (4 - 1) * (vector + 4 * 64);
+        assert!(ar_bytes <= bound, "{ar_bytes} !<= {bound}");
+    }
+
+    #[test]
+    fn compressed_allreduce_beats_raw_gradients_at_low_bandwidth() {
+        let ops = one_f_one_b(4, 8);
+        let raw = simulate_hybrid(&ops, &hybrid(8, "none"));
+        let ef21 = simulate_hybrid(&ops, &hybrid(8, "ef21+topk:10"));
+        let quant = simulate_hybrid(&ops, &hybrid(8, "quant:fw8-bw6"));
+        assert!(ef21.bytes < raw.bytes);
+        assert!(quant.bytes < raw.bytes);
+        assert!(ef21.makespan_s < raw.makespan_s, "{} !< {}", ef21.makespan_s, raw.makespan_s);
+        // the raw ledger is compression-invariant
+        assert_eq!(ef21.raw_bytes, raw.raw_bytes);
+        assert_eq!(quant.raw_bytes, raw.raw_bytes);
+    }
+
+    #[test]
+    fn smoke_512_ranks_through_the_event_core() {
+        // 8 pipeline stages x 64 replicas = 512 simulated ranks; the
+        // keyed-mailbox event core carries 2*(dp-1) ring steps over
+        // 512 links without a linear-scan blowup.
+        let ops = gpipe(8, 8);
+        let spec = HybridSpec {
+            pp: exact_spec(8, 1, 8, 32, 4),
+            dp: 64,
+            grad_elems: 16_384,
+            grad_spec: crate::compression::Spec::parse("ef21+topk:10").unwrap(),
+        };
+        assert_eq!(spec.ranks(), 512);
+        let r = simulate_hybrid(&ops, &spec);
+        assert!(r.makespan_s.is_finite() && r.makespan_s > 0.0);
+        let pp = simulate(&ops, &spec.pp);
+        assert!(r.bytes > pp.bytes * 64);
+        assert!(r.makespan_s > pp.makespan_s);
+    }
+
+    #[test]
+    fn allreduce_hop_bytes_wraps_the_gradient_codec() {
+        use crate::compression::{wire, Spec};
+        let n = 2048;
+        assert_eq!(
+            allreduce_hop_bytes(&Spec::none(), n),
+            wire::allreduce_wire_bytes(wire::raw_wire_bytes(n))
+        );
+        // gradient direction: quant picks bw bits
+        assert_eq!(
+            allreduce_hop_bytes(&Spec::parse("quant:fw4-bw8").unwrap(), n),
+            wire::allreduce_wire_bytes(wire::quant_wire_bytes(n, 8))
+        );
+        assert!(allreduce_hop_bytes(&Spec::parse("ef21+topk:10").unwrap(), n)
+            < allreduce_hop_bytes(&Spec::none(), n));
     }
 
     #[test]

@@ -198,6 +198,55 @@ impl StageRunner {
         self.accum_count
     }
 
+    /// Total elements across this stage's parameter gradients (the
+    /// length of the flat vector [`StageRunner::take_grads`] drains).
+    pub fn grad_elems(&self) -> usize {
+        self.grad_accum.iter().map(|g| g.data().len()).sum()
+    }
+
+    /// Drain the accumulated gradients as one flat vector plus the
+    /// microbatch count they sum over, zeroing the accumulator (the
+    /// optimizer and stash stay untouched). The hybrid-DP trainer calls
+    /// this after each replica's pass, ring-allreduces the flat
+    /// vectors, and hands the mean back via [`StageRunner::set_grads`]
+    /// before the single optimizer update.
+    pub fn take_grads(&mut self) -> (Vec<f32>, usize) {
+        let mut flat = Vec::with_capacity(self.grad_elems());
+        for g in &mut self.grad_accum {
+            flat.extend_from_slice(g.data());
+            *g = Tensor::zeros(g.shape().to_vec());
+        }
+        let count = self.accum_count;
+        self.accum_count = 0;
+        (flat, count)
+    }
+
+    /// Load a flat gradient vector (the layout [`StageRunner::take_grads`]
+    /// produces) into the accumulator with the given microbatch count,
+    /// so the next [`StageRunner::update`] scales by `1/count` exactly
+    /// as locally-accumulated gradients would.
+    pub fn set_grads(&mut self, flat: &[f32], count: usize) -> Result<()> {
+        let want = self.grad_elems();
+        if flat.len() != want {
+            bail!(
+                "stage {}: flat gradient has {} elements, stage wants {want}",
+                self.index,
+                flat.len()
+            );
+        }
+        if count == 0 {
+            bail!("stage {}: set_grads with a zero microbatch count", self.index);
+        }
+        let mut at = 0;
+        for g in &mut self.grad_accum {
+            let n = g.data().len();
+            g.data_mut().copy_from_slice(&flat[at..at + n]);
+            at += n;
+        }
+        self.accum_count = count;
+        Ok(())
+    }
+
     /// Apply the optimizer update with mean-of-microbatch gradients.
     pub fn update(&mut self, rt: &Runtime, lr: f32) -> Result<()> {
         if self.accum_count == 0 {

@@ -511,6 +511,7 @@ mod tests {
                 ..WireOpts::default()
             },
             steps: 2,
+            dp: 1,
         }
     }
 
@@ -546,6 +547,35 @@ mod tests {
                 // the --check cross-coverage clause is exercised too
                 assert_eq!(threaded.received(), reference.received());
             }
+        }
+    }
+
+    /// Hybrid-DP over the threaded executor: each rank thread drives its
+    /// replica's ring hops on its own port, the per-hop mailboxes keep
+    /// exactly one consumer thread (the same rank that consumes them in
+    /// training), and the merged summary stays bit-identical to the
+    /// SimNet reference. This is the test the TSan lane leans on for the
+    /// allreduce mailbox paths.
+    #[test]
+    fn threaded_dp_allreduce_matches_reference() {
+        for mode in ["topk:10", "ef21+topk:10"] {
+            let mut o = opts(2, 4, mode, Schedule::GPipe);
+            o.dp = 2;
+            let reference = worker::run_reference(&o).unwrap();
+            let threaded = run_threaded(&o, Backend::Uds)
+                .unwrap_or_else(|e| panic!("dp=2 {mode}: {e}"));
+            worker::check(&reference, std::slice::from_ref(&threaded))
+                .unwrap_or_else(|e| panic!("dp=2 {mode}: {e}"));
+            assert_eq!(threaded.received(), reference.received());
+            // the allreduce frames genuinely crossed the threaded wire
+            let ar_frames: usize = threaded
+                .boxes
+                .iter()
+                .flat_map(|b| &b.recv)
+                .filter(|r| r.0 & (1 << 63) != 0)
+                .count();
+            // 2 replicas x 2 ring steps x 2 rounds
+            assert_eq!(ar_frames, 8, "{mode}");
         }
     }
 

@@ -25,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::checkpoint;
 use crate::compression::Spec;
 use crate::config::{ExecMode, TrainConfig};
+use crate::coordinator::allreduce::{self, ReplicaRing};
 use crate::coordinator::link::CompressedLink;
 use crate::coordinator::pipeline::{self, Op};
 use crate::coordinator::stage::{StageInput, StageRunner};
@@ -79,6 +80,13 @@ pub struct Trainer {
     /// Bytes of one stashed activation per model stage (out shape x 4).
     act_bytes: Vec<usize>,
     steps_done: usize,
+    /// Hybrid-DP allreduce rings per (model stage, replica), built
+    /// lazily on the first `dp > 1` step; EF21 segment mirrors persist
+    /// across optimizer steps in here.
+    ar_rings: Vec<Vec<ReplicaRing>>,
+    /// The spec the rings were built for (rebuilt when the warmup
+    /// transition or a plan change switches the gradient spec).
+    ar_spec: Option<Spec>,
 }
 
 impl Trainer {
@@ -158,6 +166,13 @@ impl Trainer {
                 "exec=threaded needs a stream backend (tcp or uds), got '{}': the simulator's \
                  virtual clocks and the udp reliability layer are single-endpoint transports",
                 cfg.backend
+            );
+        }
+        if cfg.dp > 1 && cfg.exec == ExecMode::Threaded {
+            bail!(
+                "dp = {} needs exec=sequential in the trainer (the threaded worker harness \
+                 covers allreduce parity; see `mpcomp worker --dp.replicas`)",
+                cfg.dp
             );
         }
 
@@ -264,6 +279,8 @@ impl Trainer {
             act_bytes,
             cfg,
             steps_done: 0,
+            ar_rings: Vec::new(),
+            ar_spec: None,
         })
     }
 
@@ -381,10 +398,30 @@ impl Trainer {
     }
 
     /// One epoch over the training set; returns mean batch loss.
+    ///
+    /// With `dp > 1` each optimizer step consumes `dp` consecutive
+    /// batches — one per data-parallel replica — so an epoch covers the
+    /// same examples as the plain pipeline, in `1/dp` as many steps.
     pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
         let compress = self.compression_active(epoch);
         let lr = self.cfg.lr_at(epoch) as f32;
         let n_batches = self.num_train_batches();
+        let dp = self.cfg.dp;
+        if dp > 1 {
+            let n_steps = n_batches / dp;
+            if n_steps == 0 {
+                bail!(
+                    "dp = {dp} wants at least {dp} batches per epoch, the training set \
+                     yields {n_batches}"
+                );
+            }
+            let mut loss_sum = 0.0f64;
+            for step in 0..n_steps {
+                loss_sum += self.train_step_dp(step, compress, lr)?;
+                self.steps_done += 1;
+            }
+            return Ok(loss_sum / n_steps as f64);
+        }
         let mut loss_sum = 0.0f64;
         for b in 0..n_batches {
             loss_sum += match self.cfg.exec {
@@ -487,6 +524,23 @@ impl Trainer {
     /// ablation's memory-bounded GPipe it genuinely performs no
     /// rematerialization and must not be charged for one.
     fn train_batch(&mut self, _epoch: usize, batch: usize, compress: bool, lr: f32) -> Result<f64> {
+        let loss = self.run_batch_ops(batch, compress)?;
+        for s in &mut self.stages {
+            s.update(&self.rt, lr)?;
+        }
+        // optimizer step = synchronization point across workers
+        self.net.barrier();
+        Ok(loss)
+    }
+
+    /// The schedule-replay body of [`Trainer::train_batch`]: every fwd /
+    /// bwd op of one batch through the compressed links and transport,
+    /// leaving the summed gradients in the stage accumulators and *not*
+    /// applying the optimizer. Returns the mean microbatch loss. The
+    /// hybrid-DP step runs this once per replica before the allreduce;
+    /// the plain path (`dp = 1`) calls it exactly once per update, so
+    /// its call sequence — and the trained bits — are unchanged.
+    fn run_batch_ops(&mut self, batch: usize, compress: bool) -> Result<f64> {
         let ms_count = self.stages.len();
         let n_ranks = self.n_ranks;
         let m_count = self.n_microbatches;
@@ -585,13 +639,74 @@ impl Trainer {
                 }
             }
         }
-        let lr_eff = lr;
-        for s in &mut self.stages {
-            s.update(&self.rt, lr_eff)?;
-        }
-        // optimizer step = synchronization point across workers
-        self.net.barrier();
         Ok(loss_sum / m_count as f64)
+    }
+
+    /// One hybrid-DP optimizer step (`cfg.dp > 1`): run the pipeline
+    /// schedule once per replica over `dp` consecutive batch shards
+    /// (bit-identical to a plain pipeline consuming those batches in
+    /// order), drain each stage's summed gradients, ring-allreduce them
+    /// across replicas under the gradient-channel compression
+    /// conventions, and apply one optimizer update from the replica
+    /// mean. Scaling composes exactly: [`StageRunner::take_grads`]
+    /// hands back sums over `m` microbatches, the ring's finish divides
+    /// by `dp`, and [`StageRunner::update`] divides by `m` — the
+    /// `1/(dp·m)` data-parallel mean.
+    fn train_step_dp(&mut self, step: usize, compress: bool, lr: f32) -> Result<f64> {
+        let dp = self.cfg.dp;
+        let m_count = self.n_microbatches;
+        let spec = if compress { self.cfg.spec } else { Spec::none() };
+        self.ensure_ar_rings(dp, spec)?;
+        let mut loss_sum = 0.0f64;
+        // [stage][replica] flat gradient sums
+        let mut grads: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(dp); self.stages.len()];
+        for r in 0..dp {
+            loss_sum += self.run_batch_ops(step * dp + r, compress)?;
+            for (si, s) in self.stages.iter_mut().enumerate() {
+                let (flat, count) = s.take_grads();
+                if count != m_count {
+                    bail!(
+                        "dp replica {r} stage {si}: {count} microbatches accumulated, \
+                         wanted {m_count}"
+                    );
+                }
+                grads[si].push(flat);
+            }
+        }
+        for (si, per_replica) in grads.iter().enumerate() {
+            let mean = allreduce::run_in_memory(&mut self.ar_rings[si], per_replica)?;
+            // every replica's output is bit-identical (the ring's
+            // loss-consistent broadcast invariant, pinned by its tests);
+            // hand replica 0's to the single stage executor
+            self.stages[si].set_grads(&mean[0], m_count)?;
+        }
+        for s in &mut self.stages {
+            s.update(&self.rt, lr)?;
+        }
+        self.net.barrier();
+        Ok(loss_sum / dp as f64)
+    }
+
+    /// (Re)build the per-(stage, replica) allreduce rings when the dp
+    /// width or the gradient spec changes (e.g. at the warmup
+    /// boundary). Between calls that keep the same spec, EF21 segment
+    /// mirrors persist inside the rings across optimizer steps.
+    fn ensure_ar_rings(&mut self, dp: usize, spec: Spec) -> Result<()> {
+        if self.ar_spec == Some(spec) && self.ar_rings.len() == self.stages.len() {
+            return Ok(());
+        }
+        let mut rings = Vec::with_capacity(self.stages.len());
+        for s in &self.stages {
+            let elems = s.grad_elems();
+            let mut per = Vec::with_capacity(dp);
+            for r in 0..dp {
+                per.push(ReplicaRing::new(dp, r, elems, spec)?);
+            }
+            rings.push(per);
+        }
+        self.ar_rings = rings;
+        self.ar_spec = Some(spec);
+        Ok(())
     }
 
     /// Forward-only pass over one microbatch (eval). `compress` applies

@@ -43,6 +43,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::compression::{ops, wire, Feedback, Method, Spec};
 use crate::config::{Schedule, ServeKnobs, WireOpts};
+use crate::coordinator::allreduce::ReplicaRing;
 use crate::coordinator::feedback::{applies_to_bwd, FeedbackState};
 use crate::coordinator::pipeline;
 use crate::coordinator::serve;
@@ -88,6 +89,13 @@ pub struct WorkerOpts {
     /// Schedule repetitions: microbatch ids repeat across steps, so
     /// AQ-SGD bootstraps once and then ships deltas.
     pub steps: usize,
+    /// Data-parallel replicas (`--dp.replicas`). With `dp > 1` every
+    /// rank doubles as one replica of the whole pipeline (so `dp` must
+    /// equal `stages`) and each schedule round is followed by a
+    /// compressed ring-allreduce of a synthetic per-replica gradient —
+    /// tag-5 frames on the same mailboxes, in a disjoint key space
+    /// (see [`run_allreduce`]). 1 is today's behavior, bit-identical.
+    pub dp: usize,
 }
 
 impl WorkerOpts {
@@ -233,6 +241,162 @@ fn channel_feedback(fb: Feedback, dir: Dir) -> Feedback {
     }
 }
 
+/// The wire hop carrying data-parallel replica `r`'s allreduce sends.
+/// Replica `r` is mapped onto rank `r` (so `dp == stages`): chain hops
+/// ride the forward mailboxes of the existing physical links; the wrap
+/// hop (last replica -> replica 0) rides the ring's wrap link when the
+/// schedule interleaves (`v > 1`), or the backward mailbox of link 0 on
+/// a 2-rank chain. Longer flat chains have no wire for the wrap and are
+/// rejected with a typed error. In every case the rank that *receives*
+/// the hop's frames is the rank hosting the destination replica, so the
+/// one-consumer-per-mailbox discipline the threaded and multi-process
+/// paths rely on is preserved.
+fn allreduce_hop(stages: usize, v: usize, r: usize) -> Result<(usize, Dir)> {
+    if r < stages - 1 {
+        return Ok((r, Dir::Fwd));
+    }
+    if v > 1 {
+        return Ok((stages - 1, Dir::Fwd));
+    }
+    if stages == 2 {
+        return Ok((0, Dir::Bwd));
+    }
+    bail!(
+        "dp={stages} allreduce on a {stages}-rank flat chain has no wire for the wrap hop \
+         (replica {r} -> 0): use an interleaved schedule (ring topology) or 2 stages"
+    )
+}
+
+/// Build the per-replica allreduce rings this endpoint drives (`None`
+/// for replicas other processes own). Empty when `dp <= 1`. Validates
+/// the replica->rank mapping and the hop topology up front, before any
+/// schedule traffic.
+fn build_allreduce_rings(
+    opts: &WorkerOpts,
+    mine: &dyn Fn(usize) -> bool,
+) -> Result<Vec<Option<ReplicaRing>>> {
+    if opts.dp <= 1 {
+        return Ok(Vec::new());
+    }
+    let dp = opts.dp;
+    if dp != opts.stages {
+        bail!(
+            "--dp.replicas={dp} wants one replica per rank, got {} stages: the worker \
+             harness carries replica r's ring hop on rank r's wire",
+            opts.stages
+        );
+    }
+    let v = opts.chunks();
+    for r in 0..dp {
+        allreduce_hop(opts.stages, v, r)?;
+    }
+    (0..dp)
+        .map(|r| {
+            if mine(r) {
+                ReplicaRing::new(dp, r, opts.link_elems, opts.spec).map(Some)
+            } else {
+                Ok(None)
+            }
+        })
+        .collect()
+}
+
+/// One compressed ring-allreduce round of a hybrid-DP run (`dp > 1`):
+/// every replica loads a fresh synthetic gradient (PCG32 stream keyed
+/// by `(seed, replica, round)` — disjoint from the schedule-tensor
+/// streams), then walks the `2*(dp-1)` reduce-scatter + all-gather
+/// steps, shipping [`ReplicaRing`] tag-5 frames over the hop mailboxes
+/// in a high-bit transport key space that cannot collide with schedule
+/// keys. Rings persist across rounds, so EF21 segment generations
+/// genuinely advance. Frames and delivery order land in the same
+/// [`MailboxLog`]s as schedule traffic, which is what puts the
+/// allreduce path under the [`check`] sim/real parity contract. In
+/// single-process runs the finished means are asserted bit-identical
+/// across replicas (the ring's loss-consistent broadcast contract).
+fn run_allreduce_round(
+    opts: &WorkerOpts,
+    net: &mut dyn Transport,
+    mine: &dyn Fn(usize) -> bool,
+    rings: &mut [Option<ReplicaRing>],
+    round: usize,
+    boxes: &mut [MailboxLog],
+    sent_frames: &mut [HashMap<u64, Vec<u8>>],
+) -> Result<()> {
+    let dp = opts.dp;
+    let v = opts.chunks();
+    for (r, ring) in rings.iter_mut().enumerate() {
+        let Some(ring) = ring else { continue };
+        let tag = (1u64 << 62) | ((r as u64) << 32) | round as u64;
+        let mut g = vec![0.0f32; opts.link_elems];
+        Rng::with_stream(opts.seed, tag).fill_normal(&mut g, 0.0, 1.0);
+        ring.load(&g)?;
+    }
+    let num_steps = 2 * (dp - 1);
+    for step in 0..num_steps {
+        let key = (1u64 << 63) | (round * num_steps + step) as u64;
+        // ring discipline: every local replica sends its hop frame
+        // before any blocks on its upstream recv — deadlock-free on
+        // real sockets, and the all-send-then-all-deliver order gives
+        // the SimNet reference run_in_memory's barrier semantics
+        for r in 0..dp {
+            if !mine(r) {
+                continue;
+            }
+            let ring = rings[r].as_mut().expect("mine(r) built a ring");
+            let buf = ring.make_frame(step)?;
+            let (link, dir) = allreduce_hop(opts.stages, v, r)?;
+            let mbx = link * 2 + dir.index();
+            if !net.wants_payload() {
+                sent_frames[mbx].insert(key, buf.clone());
+            }
+            let seg = ring.seg_len(ring.send_seg(step));
+            let raw = wire::allreduce_wire_bytes(wire::raw_wire_bytes(seg));
+            net.send(link, dir, key, Payload::Bytes(&buf), raw, 0.0)
+                .with_context(|| format!("allreduce send replica {r} step {step}"))?;
+            boxes[mbx].sent_msgs += 1;
+            boxes[mbx].sent_bytes += buf.len() as u64;
+        }
+        for r in 0..dp {
+            if !mine(r) {
+                continue;
+            }
+            let upstream = (r + dp - 1) % dp;
+            let (link, dir) = allreduce_hop(opts.stages, v, upstream)?;
+            let mbx = link * 2 + dir.index();
+            let frame = net
+                .recv(link, dir, key)
+                .with_context(|| format!("allreduce recv replica {r} step {step}"))?;
+            let local = sent_frames[mbx].get(&key);
+            let buf: &[u8] = match (&frame.payload, local) {
+                (Some(p), _) => p,
+                (None, Some(l)) => l,
+                (None, None) => bail!("sim reference: allreduce recv before send"),
+            };
+            let ring = rings[r].as_mut().expect("mine(r) built a ring");
+            ring.apply_frame(step, buf)
+                .with_context(|| format!("allreduce apply replica {r} step {step}"))?;
+            boxes[mbx].recv.push((key, frame.bytes, fnv1a(buf)));
+        }
+    }
+    let mut means: Vec<(usize, Vec<f32>)> = Vec::new();
+    for (r, ring) in rings.iter_mut().enumerate() {
+        let Some(ring) = ring else { continue };
+        means.push((r, ring.finish()?));
+    }
+    if means.len() == dp {
+        let (r0, first) = &means[0];
+        debug_assert_eq!(*r0, 0);
+        for (r, m) in &means[1..] {
+            let same = m.len() == first.len()
+                && m.iter().zip(first).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                bail!("allreduce round {round}: replica {r} mean diverged from replica 0");
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Walk the training schedule (repeated `steps` times): the ops come
 /// from [`pipeline::ops_for`] and the microbatch count from `opts.mb`.
 fn run_stages(
@@ -305,6 +469,9 @@ pub(crate) fn run_ops(
         let mbx = link * 2 + dir.index();
         (link, chunk, key, mbx, mbx * v + chunk)
     };
+    // hybrid-DP: per-replica allreduce rings, persistent across rounds
+    // (empty when dp == 1 — nothing about the plain run changes)
+    let mut rings = build_allreduce_rings(opts, mine)?;
     for step in 0..opts.steps.max(1) {
         for op in ops {
             let (rank, mb) = (op.rank(), op.mb());
@@ -355,6 +522,9 @@ pub(crate) fn run_ops(
                 boxes[mbx].sent_msgs += 1;
                 boxes[mbx].sent_bytes += buf.len() as u64;
             }
+        }
+        if !rings.is_empty() {
+            run_allreduce_round(opts, net, mine, &mut rings, step, &mut boxes, &mut sent_frames)?;
         }
     }
     Ok(boxes)
@@ -754,6 +924,7 @@ mod tests {
                 ..WireOpts::default()
             },
             steps: 1,
+            dp: 1,
         }
     }
 
@@ -1018,6 +1189,102 @@ mod tests {
         let mut short = a.clone();
         short.boxes[1].recv.pop(); // lose a message
         assert!(check(&a, &[short]).is_err());
+    }
+
+    /// dp > 1 appends one allreduce round per schedule round: every hop
+    /// mailbox logs exactly one extra frame per ring step, keyed in the
+    /// high-bit space, and the run stays deterministic.
+    #[test]
+    fn dp_reference_runs_the_allreduce_phase_deterministically() {
+        for mode in ["none", "topk:10", "quant:fw8-bw6", "ef21+topk:10"] {
+            let mut o = opts(2, 2, mode);
+            o.dp = 2;
+            o.steps = 3;
+            let a = run_reference(&o).unwrap_or_else(|e| panic!("{mode}: {e}"));
+            let b = run_reference(&o).unwrap();
+            assert_eq!(a.boxes, b.boxes, "{mode}: dp run not deterministic");
+            check(&a, std::slice::from_ref(&b)).unwrap();
+            // 2 replicas x 2 ring steps per round: the fwd chain hop and
+            // the bwd wrap hop each carry (2 schedule mb + 2 ar frames)
+            // x 3 rounds
+            for mbx in &a.boxes {
+                assert_eq!(
+                    mbx.recv.len(),
+                    12,
+                    "{mode}: link {} {} saw {} frames",
+                    mbx.link,
+                    mbx.dir,
+                    mbx.recv.len()
+                );
+                let ar: Vec<u64> =
+                    mbx.recv.iter().map(|r| r.0).filter(|k| k & (1 << 63) != 0).collect();
+                assert_eq!(ar.len(), 6, "{mode}: one ar frame per round per ring step");
+                let mut uniq = ar.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                assert_eq!(uniq.len(), ar.len(), "{mode}: ar keys must be unique");
+            }
+        }
+    }
+
+    /// dp = 1 is byte-identical to a run built before the field existed:
+    /// the allreduce phase must not touch anything.
+    #[test]
+    fn dp1_worker_is_bit_identical_to_plain() {
+        let mut o = opts(3, 4, "ef21+topk:10");
+        o.steps = 2;
+        let plain = run_reference(&o).unwrap();
+        let mut dp1 = o.clone();
+        dp1.dp = 1;
+        let b = run_reference(&dp1).unwrap();
+        assert_eq!(plain.boxes, b.boxes);
+    }
+
+    #[test]
+    fn dp_parity_sim_vs_uds_loopback() {
+        // the allreduce mailbox half of the --reference/--check contract
+        for mode in ["topk:10", "ef21+topk:10"] {
+            let mut o = opts(2, 2, mode);
+            o.dp = 2;
+            o.steps = 2;
+            o.link_elems = 256;
+            let reference = run_reference(&o).unwrap();
+            let loopback = run_loopback(&o, Backend::Uds).unwrap();
+            check(&reference, std::slice::from_ref(&loopback))
+                .unwrap_or_else(|e| panic!("{mode}: {e}"));
+        }
+    }
+
+    #[test]
+    fn dp_interleaved_ring_carries_the_wrap_hop() {
+        let mut o = opts(2, 4, "topk:10");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        o.dp = 2;
+        let a = run_reference(&o).unwrap();
+        let b = run_reference(&o).unwrap();
+        assert_eq!(a.boxes, b.boxes);
+        // with v > 1 the wrap hop rides the ring's wrap link fwd mailbox
+        // instead of link 0 bwd: wrap fwd = 4 schedule + 2 ar frames
+        assert_eq!(a.boxes[2].recv.len(), 6, "wrap link fwd");
+        assert_eq!(a.boxes[3].recv.len(), 4, "wrap link bwd stays schedule-only");
+    }
+
+    #[test]
+    fn dp_misconfigurations_are_typed_errors() {
+        // dp must equal stages
+        let mut o = opts(3, 4, "none");
+        o.dp = 2;
+        assert!(run_reference(&o).is_err());
+        // a flat chain deeper than 2 has no wire for the wrap hop
+        let mut o = opts(3, 6, "none");
+        o.dp = 3;
+        let err = run_reference(&o).unwrap_err().to_string();
+        assert!(err.contains("wrap hop"), "{err}");
+        // ... but the interleaved ring topology carries it
+        let mut o = opts(3, 6, "none");
+        o.schedule = Schedule::Interleaved { v: 2 };
+        o.dp = 3;
+        run_reference(&o).unwrap();
     }
 
     #[test]

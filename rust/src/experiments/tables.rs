@@ -509,6 +509,162 @@ pub fn plan_ablation(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
+/// One row of the `exp scale` hybrid DP×PP sweep.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    /// Wire profile name.
+    pub wire: String,
+    /// Pipeline stages per replica.
+    pub stages: usize,
+    /// Data-parallel replicas of the pipeline.
+    pub dp: usize,
+    /// Total simulated ranks (`stages * dp`).
+    pub ranks: usize,
+    /// Allreduce-ring compression mode label (also on the pipeline).
+    pub mode: String,
+    /// Hybrid simulated makespan (pipeline phase + gradient rings).
+    pub makespan_s: f64,
+    /// Traffic of one optimizer step (all replicas + ring hops), MB.
+    pub sent_mb: f64,
+    /// Ring share of the step's shipped bytes, in `[0, 1]`.
+    pub ring_frac: f64,
+}
+
+/// The `exp scale` sweep: DP×PP shapes climbing to 256 simulated ranks
+/// (512 with `--full`) x ring compression x wire profile, every cell
+/// through `simulate_hybrid` on the keyed-mailbox event core (the
+/// workload `benches/simcore.rs` gates). The pipeline phase runs 1F1B
+/// on the ablation's shape; each stage ring-allreduces a
+/// `16 x link_elems` gradient shard — LM-stage-sized — so the ring
+/// dominates the step's traffic once `dp` grows, which is exactly the
+/// regime where the paper's gradient-compression tolerance pays.
+pub fn scale_table(p: &SchedParams, full: bool) -> Result<Vec<ScaleRow>> {
+    let modes = ["none", "quant:fw8-bw6", "topk:10", "ef21+topk:10"];
+    let wires = [("wan", WireModel::wan()), ("datacenter", WireModel::datacenter())];
+    let mut shapes = vec![(4usize, 8usize), (8, 8), (8, 32)];
+    if full {
+        shapes.push((8, 64));
+    }
+    let grad_elems = 16 * p.link_elems;
+    let mut rows = Vec::new();
+    for &(wname, model) in &wires {
+        for mode in modes {
+            let spec = Spec::parse(mode)?;
+            let (fb, bb) = simexec::spec_wire_bytes(&spec, p.link_elems);
+            for &(stages, dp) in &shapes {
+                let ops = pipeline::ops_for(Schedule::OneFOneB, stages, p.mb)?;
+                let boundaries = pipeline::num_boundaries(stages, 1);
+                let pp = simexec::SimSpec {
+                    n_stages: stages,
+                    v: 1,
+                    n_mb: p.mb,
+                    fwd_op_s: p.fwd_op_s,
+                    bwd_op_s: p.bwd_op_s,
+                    recompute_s: 0.0,
+                    fwd_bytes: vec![fb; boundaries],
+                    bwd_bytes: vec![bb; boundaries],
+                    raw_bytes: vec![wire::raw_wire_bytes(p.link_elems); boundaries],
+                    model,
+                    capacity: p.wire.capacity,
+                    faults: p.fault.model(),
+                };
+                let pp_only = simexec::simulate(&ops, &pp);
+                let hybrid = simexec::HybridSpec { pp, dp, grad_elems, grad_spec: spec };
+                let sim = simexec::simulate_hybrid(&ops, &hybrid);
+                let ring_bytes = sim.bytes - pp_only.bytes * dp as u64;
+                rows.push(ScaleRow {
+                    wire: wname.to_string(),
+                    stages,
+                    dp,
+                    ranks: hybrid.ranks(),
+                    mode: spec.label(),
+                    makespan_s: sim.makespan_s,
+                    sent_mb: sim.bytes as f64 / 1e6,
+                    ring_frac: ring_bytes as f64 / sim.bytes.max(1) as f64,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn scale_row<'a>(
+    rows: &'a [ScaleRow],
+    wire: &str,
+    mode: &str,
+    stages: usize,
+    dp: usize,
+) -> &'a ScaleRow {
+    rows.iter()
+        .find(|r| r.wire == wire && r.mode == mode && r.stages == stages && r.dp == dp)
+        .expect("scale table row")
+}
+
+/// `exp scale`: print the hybrid DP×PP sweep and the ring spec the
+/// planner's allreduce channel family picks for the WAN shape.
+pub fn scale_ablation(opts: &ExpOpts) -> Result<()> {
+    let p = &opts.sched;
+    let rows = scale_table(p, opts.full)?;
+    let top_ranks = rows.iter().map(|r| r.ranks).max().unwrap_or(0);
+    println!(
+        "\nHybrid DP x PP scale sweep: 1f1b stages x replicas up to {top_ranks} ranks, \
+         mb={}, {} grad elems/stage ring-allreduced per step",
+        p.mb,
+        16 * p.link_elems
+    );
+    println!("{}", "-".repeat(92));
+    println!(
+        "{:<11} {:<18} {:>6} {:>4} {:>6} {:>11} {:>11} {:>8}",
+        "wire", "ring mode", "stages", "dp", "ranks", "makespan", "sent", "ring%"
+    );
+    println!("{}", "-".repeat(92));
+    for r in &rows {
+        println!(
+            "{:<11} {:<18} {:>6} {:>4} {:>6} {:>9.3} s {:>8.2} MB {:>7.1}%",
+            r.wire,
+            r.mode,
+            r.stages,
+            r.dp,
+            r.ranks,
+            r.makespan_s,
+            r.sent_mb,
+            100.0 * r.ring_frac
+        );
+    }
+    println!("{}", "-".repeat(92));
+    let raw = scale_row(&rows, "wan", "no compression", 8, 32);
+    let ef = scale_row(&rows, "wan", "EF21 + Top 10%", 8, 32);
+    println!(
+        "at 256 ranks the raw ring is {:.1}% of step traffic; EF21+Top10% rings cut the \
+         WAN step {:.2}x ({:.3} s -> {:.3} s)",
+        100.0 * raw.ring_frac,
+        raw.makespan_s / ef.makespan_s,
+        raw.makespan_s,
+        ef.makespan_s
+    );
+    let dc_raw = scale_row(&rows, "datacenter", "no compression", 8, 32);
+    let dc_ef = scale_row(&rows, "datacenter", "EF21 + Top 10%", 8, 32);
+    println!(
+        "datacenter wire: {:.3} s -> {:.3} s ({:+.1}%) — ring compression is a WAN story",
+        dc_raw.makespan_s,
+        dc_ef.makespan_s,
+        100.0 * (dc_ef.makespan_s / dc_raw.makespan_s - 1.0)
+    );
+
+    // the planner's allreduce channel family on the acceptance shape
+    let inputs = planner::AllreduceInputs {
+        pp: plan_inputs(p, Schedule::Interleaved { v: 2 }, WireModel::wan()),
+        dp: 8,
+        grad_elems: 16 * p.link_elems,
+    };
+    let report = planner::search_allreduce(&inputs)?;
+    report.print(&format!(
+        "Allreduce plan (wan): {} stages x dp 8, interleaved:2 pipeline underneath",
+        p.stages
+    ));
+    Ok(())
+}
+
 /// One row of the serving table: an artifact spec served either over
 /// uncompressed links or with its training-time specs on the wire.
 #[derive(Clone, Debug)]
@@ -897,6 +1053,40 @@ mod tests {
         let o = sched_row(&rows, "datacenter", "no compression", "1f1b");
         assert!(g.makespan_s <= o.makespan_s + 1e-9);
     }
+
+    /// `exp scale` acceptance: the quick sweep reaches 256 simulated
+    /// ranks, ring traffic dominates the step at dp=32, every
+    /// compressed ring strictly beats the raw ring on the WAN wire,
+    /// and `--full` adds the 512-rank point.
+    #[test]
+    fn scale_table_reaches_256_ranks_and_ring_compression_pays_on_wan() {
+        let rows = scale_table(&SchedParams::default(), false).unwrap();
+        assert_eq!(rows.len(), 2 * 4 * 3);
+        assert_eq!(rows.iter().map(|r| r.ranks).max().unwrap(), 256);
+        let raw = scale_row(&rows, "wan", "no compression", 8, 32);
+        for mode in ["fw8-bw6", "Top 10%", "EF21 + Top 10%"] {
+            let c = scale_row(&rows, "wan", mode, 8, 32);
+            assert!(
+                c.makespan_s < raw.makespan_s,
+                "{mode}: {} !< raw {}",
+                c.makespan_s,
+                raw.makespan_s
+            );
+            assert!(c.sent_mb < raw.sent_mb, "{mode} shipped more than raw");
+        }
+        // the ring's share of step traffic grows with dp at fixed
+        // stage count — the scale-out motivation for the ring family
+        let small = scale_row(&rows, "wan", "no compression", 8, 8);
+        assert!(raw.ring_frac > small.ring_frac);
+        assert!(raw.ring_frac > 0.5, "ring must dominate at 256 ranks: {}", raw.ring_frac);
+        for r in &rows {
+            assert_eq!(r.ranks, r.stages * r.dp);
+            assert!(r.makespan_s > 0.0 && r.sent_mb > 0.0);
+            assert!((0.0..1.0).contains(&r.ring_frac));
+        }
+        let full = scale_table(&SchedParams::default(), true).unwrap();
+        assert_eq!(full.iter().map(|r| r.ranks).max().unwrap(), 512);
+    }
 }
 
 /// Dispatch by experiment name (CLI entry).
@@ -912,6 +1102,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "schedule" => schedule_ablation(opts),
         "plan" => plan_ablation(opts),
         "serve" => serve_ablation(opts),
+        "scale" => scale_ablation(opts),
         "aqsgd-mem" => aqsgd_memory(opts),
         "all" => {
             for t in ["table1", "table2", "table3", "table4", "table5", "comm"] {
@@ -921,7 +1112,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         }
         _ => anyhow::bail!(
             "unknown experiment '{name}' (try table1..table5, comm, impl, schedule, plan, \
-             serve, aqsgd-mem, all)"
+             serve, scale, aqsgd-mem, all)"
         ),
     }
     .context(format!("experiment {name}"))

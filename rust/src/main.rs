@@ -13,7 +13,7 @@
 //! mpcomp train --model cnn16 --compression topk:10 [--key=value ...]
 //! mpcomp train --config configs/table2_top10.toml [--print-config]
 //! mpcomp eval --model cnn16 --checkpoint results/x.ckpt [--compression topk:10]
-//! mpcomp exp table1..table5|comm|impl|schedule|plan|serve|aqsgd-mem|all
+//! mpcomp exp table1..table5|comm|impl|schedule|plan|serve|scale|aqsgd-mem|all
 //!            [--full] [--seeds N] [--curves] [--impl kernel|native]
 //!            [--stages N] [--mb N] [--link-elems N] [--backend sim|tcp|uds|udp]
 //!            [--fault.drop-p=P] [--fault.jitter-s=S] [...]
@@ -29,6 +29,7 @@
 //!               [--serve]                       # forward-only serving schedule
 //!               [--mb N] [--link-elems N] [--compression M] [--plan plan.json]
 //!               [--schedule gpipe|1f1b|interleaved:v] [--seed N] [--steps N]
+//!               [--dp.replicas N]                # hybrid-DP allreduce phase
 //!               [--out summary.json]
 //! mpcomp worker --exec=threaded [--backend uds|tcp] ... --out thr.json
 //!                                                # one process, one thread per rank
@@ -181,7 +182,7 @@ fn eval(args: &Args) -> Result<()> {
 
 fn exp(args: &Args) -> Result<()> {
     let Some(name) = args.positional.get(1) else {
-        bail!("exp wants a name: table1..table5, comm, impl, schedule, plan, serve, aqsgd-mem, all");
+        bail!("exp wants a name: table1..table5, comm, impl, schedule, plan, serve, scale, aqsgd-mem, all");
     };
     let run = RunSpec::from_args(args, Surface::Exp)?;
     if print_config(args, &run) {
@@ -363,6 +364,7 @@ fn worker_cmd(args: &Args) -> Result<()> {
         seed: run.train.seed,
         wire: run.wire_opts()?,
         steps: run.steps,
+        dp: run.train.dp,
     };
     let serve_mode = args.has("serve");
     let knobs = run.serve.clone();

@@ -75,6 +75,26 @@ pub fn bwd_lattice() -> Vec<Candidate> {
     ]
 }
 
+/// Allreduce-channel candidates (the hybrid-DP gradient ring). Ring
+/// hops carry *partial sums*: a reduce-scatter hop's compression error
+/// is itself summed and re-compressed `dp - 1` times before the segment
+/// settles, so the damage compounds across hops instead of crossing one
+/// boundary once. Every operator therefore scores strictly riskier than
+/// even the [`bwd_lattice`], and — like there — sub-6-bit quantization
+/// never appears (Table 1's gradient floor).
+pub fn allreduce_lattice() -> Vec<Candidate> {
+    vec![
+        cand("none", 0),
+        cand("quant:fw8-bw8", 18),
+        cand("quant:fw8-bw6", 34),
+        cand("topk:30", 46),
+        cand("ef21+topk:10", 62),
+        cand("topk:10", 68),
+        cand("ef21+topk:5", 80),
+        cand("topk:5", 88),
+    ]
+}
+
 /// Wire bytes of one `spec` message on an `n`-element channel in
 /// direction `dir` (codec-exact, via `simexec::spec_wire_bytes`).
 pub fn dir_bytes(spec: &Spec, n: usize, dir: Dir) -> usize {
@@ -85,13 +105,9 @@ pub fn dir_bytes(spec: &Spec, n: usize, dir: Dir) -> usize {
     }
 }
 
-/// Prune a lattice to its non-dominated frontier for an `n`-element
-/// channel, sorted by ascending risk. The dominance rule is monotone:
-/// on the returned frontier, risk strictly ascends while bytes strictly
-/// descend — the property the first-fit search relies on.
-pub fn frontier(lattice: &[Candidate], n: usize, dir: Dir) -> Vec<Candidate> {
-    let sized: Vec<(Candidate, usize)> =
-        lattice.iter().map(|c| (*c, dir_bytes(&c.spec, n, dir))).collect();
+/// The dominance prune shared by every channel family: keep the
+/// non-dominated `(candidate, bytes)` pairs, sorted by ascending risk.
+fn prune(sized: Vec<(Candidate, usize)>) -> Vec<Candidate> {
     let mut keep: Vec<(Candidate, usize)> = sized
         .iter()
         .filter(|(c, by)| {
@@ -103,6 +119,29 @@ pub fn frontier(lattice: &[Candidate], n: usize, dir: Dir) -> Vec<Candidate> {
         .collect();
     keep.sort_by_key(|(c, _)| c.risk);
     keep.into_iter().map(|(c, _)| c).collect()
+}
+
+/// Prune a lattice to its non-dominated frontier for an `n`-element
+/// channel, sorted by ascending risk. The dominance rule is monotone:
+/// on the returned frontier, risk strictly ascends while bytes strictly
+/// descend — the property the first-fit search relies on.
+pub fn frontier(lattice: &[Candidate], n: usize, dir: Dir) -> Vec<Candidate> {
+    prune(lattice.iter().map(|c| (*c, dir_bytes(&c.spec, n, dir))).collect())
+}
+
+/// Prune the [`allreduce_lattice`] to its frontier for a ring over
+/// `grad_elems` elements split into `dp` segments. Candidates are sized
+/// by their tag-5 hop bytes on the largest ring segment
+/// ([`simexec::allreduce_hop_bytes`]) — the message the wire actually
+/// carries — then the same dominance rule as [`frontier`] applies.
+pub fn allreduce_frontier(grad_elems: usize, dp: usize) -> Vec<Candidate> {
+    let seg = ((grad_elems + dp - 1) / dp).max(1);
+    prune(
+        allreduce_lattice()
+            .iter()
+            .map(|c| (*c, simexec::allreduce_hop_bytes(&c.spec, seg)))
+            .collect(),
+    )
 }
 
 /// Everything the planner needs to know about one run's shape and wire.
@@ -304,6 +343,47 @@ mod tests {
             if let Some(&fr) = f.get(&name) {
                 if !c.spec.is_none() {
                     assert!(c.risk > fr, "{name}: bwd risk {} !> fwd {fr}", c.risk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_lattice_scores_same_operator_riskier_than_bwd() {
+        // ring hops compound compression error across dp-1 partial-sum
+        // re-encodes, so the allreduce family must sit strictly above
+        // the backward lattice for every shared operator
+        let b: std::collections::HashMap<String, u32> =
+            bwd_lattice().iter().map(|c| (c.spec.canon(), c.risk)).collect();
+        let lattice = allreduce_lattice();
+        assert_eq!(lattice.len(), bwd_lattice().len(), "families cover the same operators");
+        for c in &lattice {
+            let name = c.spec.canon();
+            let br = *b.get(&name).unwrap_or_else(|| panic!("{name}: not in bwd lattice"));
+            if c.spec.is_none() {
+                assert_eq!(c.risk, 0, "uncompressed is never risky");
+            } else {
+                assert!(c.risk > br, "{name}: allreduce risk {} !> bwd {br}", c.risk);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_frontier_is_strictly_monotone() {
+        use crate::coordinator::simexec::allreduce_hop_bytes;
+        for dp in [2usize, 4, 8] {
+            for n in [16_384usize, 262_144] {
+                let f = allreduce_frontier(n, dp);
+                let seg = (n + dp - 1) / dp;
+                assert!(f.len() >= 3, "dp={dp} n={n}: frontier collapsed to {}", f.len());
+                assert!(f[0].spec.is_none(), "mildest entry must be uncompressed");
+                for w in f.windows(2) {
+                    let (a, b) = (&w[0], &w[1]);
+                    assert!(a.risk < b.risk, "dp={dp} n={n}: risk not ascending");
+                    assert!(
+                        allreduce_hop_bytes(&a.spec, seg) > allreduce_hop_bytes(&b.spec, seg),
+                        "dp={dp} n={n}: hop bytes not strictly descending"
+                    );
                 }
             }
         }

@@ -19,6 +19,12 @@
 //!   runs under the serving objective as [`search_latency`]
 //!   (`mpcomp plan --objective latency`): candidates scored by p99
 //!   request latency through the serve executor, forward channels only.
+//!   The hybrid-DP gradient ring is its own first-class channel family:
+//!   [`search_allreduce`] walks the [`allreduce_lattice`] (strictly
+//!   riskier than the backward lattice — ring hops compound compression
+//!   error across partial-sum re-encodes) on top of the emitted
+//!   pipeline plan, every candidate scored through the hybrid simulator
+//!   (`exp scale`).
 //! * [`plan`] — the [`Plan`] artifact itself: JSON files, the FNV-1a
 //!   negotiation digest the rendezvous handshake exchanges, and typed
 //!   [`PlanError`] validation.
@@ -34,9 +40,12 @@ pub mod cost;
 pub mod plan;
 pub mod search;
 
-pub use cost::{bwd_lattice, frontier, fwd_lattice, Candidate, PlannerInputs};
+pub use cost::{
+    allreduce_frontier, allreduce_lattice, bwd_lattice, frontier, fwd_lattice, Candidate,
+    PlannerInputs,
+};
 pub use plan::{BoundaryPlan, Plan, PlanError, PlanMode};
 pub use search::{
-    search, search_latency, BaselineRow, ChannelChoice, LatencyReport, LatencyRow, Objective,
-    PlanReport,
+    search, search_allreduce, search_latency, AllreduceInputs, AllreduceReport, BaselineRow,
+    ChannelChoice, LatencyReport, LatencyRow, Objective, PlanReport,
 };

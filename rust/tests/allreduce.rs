@@ -1,0 +1,405 @@
+//! Hybrid-DP compressed ring-allreduce battery.
+//!
+//! Pins the PR's acceptance contracts end to end:
+//!
+//! * **Bit-parity vs the sequential reference** — rings driven hop by
+//!   hop over real UDS sockets produce means bit-identical to
+//!   [`allreduce::run_in_memory`], across dp ∈ {2, 4, 8} and every
+//!   feedback mode, with EF21 state persisting across optimizer steps.
+//! * **Schedule coverage** — the worker harness's allreduce phase keeps
+//!   its `--reference`/`--check` mailbox parity over GPipe, 1F1B, and
+//!   interleaved v=2, dp up to 8.
+//! * **Fault injection** — truncated, misrouted, wrong-segment, and
+//!   duplicated tag-5 frames surface as typed [`AllreduceError`]s and
+//!   leave accumulators and EF21 mirrors untouched (the run recovers to
+//!   the bit-exact clean result); `SimNet` fault models shift arrival
+//!   times only; real UDP loopback at 5% datagram loss stays
+//!   bit-identical to the clean reference.
+//! * **dp = 1 is free** — the hybrid simulator degenerates to the plain
+//!   pipeline report and a dp=1 worker run carries zero allreduce
+//!   frames.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mpcomp::compression::{wire, Spec};
+use mpcomp::config::{Schedule, WireOpts};
+use mpcomp::coordinator::allreduce::{self, AllreduceError, ReplicaRing};
+use mpcomp::coordinator::worker::{self, WorkerOpts};
+use mpcomp::coordinator::{pipeline, simexec};
+use mpcomp::netsim::{
+    Backend, Dir, FaultModel, Payload, RealTransport, SimNet, Transport, WireModel,
+};
+use mpcomp::util::rng::Rng;
+
+/// `UdpFaults::from_env` knobs are process-global; serialize the tests
+/// that set them (same discipline as `tests/lossy_wire.rs`).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+struct EnvFaults;
+
+impl EnvFaults {
+    fn set(drop_p: f64, seed: u64) -> EnvFaults {
+        std::env::set_var("MPCOMP_UDP_DROP_P", drop_p.to_string());
+        std::env::set_var("MPCOMP_UDP_FAULT_SEED", seed.to_string());
+        EnvFaults
+    }
+}
+
+impl Drop for EnvFaults {
+    fn drop(&mut self) {
+        std::env::remove_var("MPCOMP_UDP_DROP_P");
+        std::env::remove_var("MPCOMP_UDP_FAULT_SEED");
+    }
+}
+
+fn rings(dp: usize, elems: usize, mode: &str) -> Vec<ReplicaRing> {
+    let spec = Spec::parse(mode).unwrap();
+    (0..dp).map(|r| ReplicaRing::new(dp, r, elems, spec).unwrap()).collect()
+}
+
+/// One synthetic per-replica gradient per round, keyed exactly like the
+/// worker's per-replica PCG32 streams: disjoint `(seed, replica, round)`.
+fn round_grads(dp: usize, elems: usize, seed: u64, round: u64) -> Vec<Vec<f32>> {
+    (0..dp)
+        .map(|r| {
+            let mut g = vec![0.0f32; elems];
+            Rng::with_stream(seed, (r as u64) << 32 | round).fill_normal(&mut g, 0.0, 1.0);
+            g
+        })
+        .collect()
+}
+
+fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Drive `dp` ring members through one allreduce over a transport:
+/// replica `r`'s hop rides link `r` forward, every member sends its
+/// step frame before any blocks on its upstream recv (the worker's
+/// deadlock-free ring discipline).
+fn run_transported(
+    rings: &mut [ReplicaRing],
+    grads: &[Vec<f32>],
+    net: &mut dyn Transport,
+    round: usize,
+) -> Vec<Vec<f32>> {
+    let dp = rings.len();
+    for (ring, g) in rings.iter_mut().zip(grads) {
+        ring.load(g).unwrap();
+    }
+    let num_steps = 2 * (dp - 1);
+    for step in 0..num_steps {
+        let key = (round * num_steps + step) as u64;
+        for r in 0..dp {
+            let buf = rings[r].make_frame(step).unwrap();
+            net.send(r, Dir::Fwd, key, Payload::Bytes(&buf), buf.len(), 0.0).unwrap();
+        }
+        for r in 0..dp {
+            let upstream = (r + dp - 1) % dp;
+            let f = net.recv(upstream, Dir::Fwd, key).unwrap();
+            let buf = f.payload.expect("real transports carry payloads");
+            rings[r].apply_frame(step, &buf).unwrap();
+        }
+    }
+    rings.iter_mut().map(|r| r.finish().unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// transported rings == the sequential in-memory reference, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uds_transported_ring_is_bit_identical_to_the_sequential_reference() {
+    for dp in [2usize, 4, 8] {
+        for mode in
+            ["none", "quant:fw8-bw8", "topk:30", "ef+topk:30", "ef21+topk:10", "aqsgd+topk:30"]
+        {
+            let elems = 96;
+            let mut net = RealTransport::loopback(
+                dp,
+                Backend::Uds,
+                WireModel::datacenter(),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+            let mut wired = rings(dp, elems, mode);
+            let mut reference = rings(dp, elems, mode);
+            // two optimizer steps: EF21 segment mirrors and AQ-SGD
+            // buffers must persist (and stay in lockstep) across rounds
+            for round in 0..2usize {
+                let grads = round_grads(dp, elems, 7, round as u64);
+                let wire_out = run_transported(&mut wired, &grads, &mut net, round);
+                let ref_out = allreduce::run_in_memory(&mut reference, &grads).unwrap();
+                for r in 0..dp {
+                    assert!(
+                        bit_eq(&wire_out[r], &ref_out[r]),
+                        "{mode} dp={dp} round={round}: replica {r} diverged from reference"
+                    );
+                }
+                for r in 1..dp {
+                    assert!(
+                        bit_eq(&wire_out[0], &wire_out[r]),
+                        "{mode} dp={dp} round={round}: replica {r} not bit-identical"
+                    );
+                }
+            }
+            net.shutdown().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker harness: mailbox parity across schedules, dp, feedback modes
+// ---------------------------------------------------------------------------
+
+fn worker_opts(stages: usize, schedule: Schedule, mode: &str) -> WorkerOpts {
+    WorkerOpts {
+        stages,
+        // interleaved schedules want mb divisible by the rank count
+        mb: stages.max(4),
+        link_elems: 64,
+        schedule,
+        spec: Spec::parse(mode).unwrap(),
+        plan: None,
+        seed: 23,
+        wire: WireOpts {
+            profile: "datacenter".into(),
+            recv_timeout_s: 10.0,
+            ..WireOpts::default()
+        },
+        steps: 2,
+        dp: stages,
+    }
+}
+
+#[test]
+fn worker_allreduce_parity_across_dp_schedules_and_feedback() {
+    // dp == stages in the worker harness; flat chains carry the wrap
+    // hop only at 2 ranks, deeper rings need the interleaved topology
+    let shapes = [
+        (2usize, Schedule::GPipe),
+        (2, Schedule::OneFOneB),
+        (2, Schedule::Interleaved { v: 2 }),
+        (4, Schedule::Interleaved { v: 2 }),
+        (8, Schedule::Interleaved { v: 2 }),
+    ];
+    for &(dp, schedule) in &shapes {
+        for mode in ["none", "quant:fw8-bw6", "topk:10", "ef21+topk:10"] {
+            let opts = worker_opts(dp, schedule, mode);
+            let reference = worker::run_reference(&opts)
+                .unwrap_or_else(|e| panic!("dp={dp} {schedule:?} {mode}: {e}"));
+            // every hop mailbox logged high-bit allreduce keys: the
+            // phase genuinely ran, 2*(dp-1) steps x 2 rounds of them
+            let ar_frames: usize = reference
+                .boxes
+                .iter()
+                .flat_map(|b| &b.recv)
+                .filter(|(k, _, _)| k & (1 << 63) != 0)
+                .count();
+            assert_eq!(
+                ar_frames,
+                dp * 2 * (dp - 1) * opts.steps,
+                "dp={dp} {schedule:?} {mode}: allreduce frame count"
+            );
+            let loopback = worker::run_loopback(&opts, Backend::Uds)
+                .unwrap_or_else(|e| panic!("dp={dp} {schedule:?} {mode}: {e}"));
+            worker::check(&reference, std::slice::from_ref(&loopback))
+                .unwrap_or_else(|e| panic!("dp={dp} {schedule:?} {mode}: {e}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// typed faults leave state untouched; the run recovers bit-exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulty_frames_are_typed_and_the_run_recovers_bit_exactly() {
+    let (dp, elems, mode) = (4usize, 128, "ef21+topk:10");
+    let mut clean = rings(dp, elems, mode);
+    let mut faulted = rings(dp, elems, mode);
+    for round in 0..2u64 {
+        let grads = round_grads(dp, elems, 31, round);
+        let want = allreduce::run_in_memory(&mut clean, &grads).unwrap();
+
+        // same round on the faulted rings, but replica 0 sees a fault
+        // cocktail before every real frame
+        for (ring, g) in faulted.iter_mut().zip(&grads) {
+            ring.load(g).unwrap();
+        }
+        for step in 0..2 * (dp - 1) {
+            let frames: Vec<Vec<u8>> =
+                faulted.iter_mut().map(|r| r.make_frame(step).unwrap()).collect();
+            for r in 0..dp {
+                let from = (r + dp - 1) % dp;
+                let frame = &frames[from];
+                if r == 0 {
+                    let mirrors_before = faulted[0].memory_bytes();
+                    // truncation -> typed codec error
+                    let err = faulted[0].apply_frame(step, &frame[..frame.len() - 3]).unwrap_err();
+                    assert!(matches!(err, AllreduceError::Codec { .. }), "step {step}: {err}");
+                    // reordered hop (wrong step coordinates) -> misrouted
+                    let (meta, inner) = wire::decode_allreduce(frame).unwrap();
+                    let wrong = wire::encode_allreduce(meta.phase, meta.step + 5, meta.seg, inner);
+                    let err = faulted[0].apply_frame(step, &wrong).unwrap_err();
+                    assert!(matches!(err, AllreduceError::Misrouted { .. }), "step {step}: {err}");
+                    // right envelope, undersized payload -> segment size
+                    let stub = wire::encode_allreduce(
+                        meta.phase,
+                        meta.step,
+                        meta.seg,
+                        &wire::encode_raw(&[0.0; 3]),
+                    );
+                    let err = faulted[0].apply_frame(step, &stub).unwrap_err();
+                    assert!(
+                        matches!(err, AllreduceError::SegmentSize { expected: _, got: 3 }),
+                        "step {step}: {err}"
+                    );
+                    assert_eq!(
+                        faulted[0].memory_bytes(),
+                        mirrors_before,
+                        "step {step}: rejected frames must not grow feedback mirrors"
+                    );
+                }
+                faulted[r].apply_frame(step, frame).unwrap();
+                if r == 0 && step < dp - 1 {
+                    // duplicated delivery (UDP dup) of a reduce-scatter
+                    // delta frame: the EF21 generation counter refuses
+                    // the re-apply, so the partial sum is never doubled
+                    let err = faulted[0].apply_frame(step, frame).unwrap_err();
+                    assert!(
+                        matches!(err, AllreduceError::Feedback(_)),
+                        "step {step}: duplicate delta frame must be refused, got {err}"
+                    );
+                }
+            }
+        }
+        let got: Vec<Vec<f32>> = faulted.iter_mut().map(|r| r.finish().unwrap()).collect();
+        for r in 0..dp {
+            assert!(
+                bit_eq(&got[r], &want[r]),
+                "round {round}: replica {r} diverged after surviving the fault cocktail"
+            );
+        }
+    }
+}
+
+#[test]
+fn simnet_faults_shift_allreduce_timing_but_never_the_result() {
+    let (dp, elems, mode) = (4usize, 96, "topk:30");
+    let grads = round_grads(dp, elems, 57, 0);
+
+    let drive = |net: &mut SimNet| -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rs = rings(dp, elems, mode);
+        for (ring, g) in rs.iter_mut().zip(&grads) {
+            ring.load(g).unwrap();
+        }
+        let mut arrivals = Vec::new();
+        for step in 0..2 * (dp - 1) {
+            let frames: Vec<Vec<u8>> = rs.iter_mut().map(|r| r.make_frame(step).unwrap()).collect();
+            for (r, frame) in frames.iter().enumerate() {
+                net.send_to(r, Dir::Fwd, step as u64, frame.len(), frame.len(), 0.0);
+            }
+            for r in 0..dp {
+                let from = (r + dp - 1) % dp;
+                let m = net.try_recv(from, Dir::Fwd, step as u64).expect("hop delivered");
+                arrivals.push(m.arrival);
+                // the simulator keeps tensors in-process: the protocol
+                // replays the sender-side frame, faults price time only
+                rs[r].apply_frame(step, &frames[from]).unwrap();
+            }
+        }
+        (rs.iter_mut().map(|r| r.finish().unwrap()).collect(), arrivals)
+    };
+
+    let mut clean_net = SimNet::new(dp, WireModel::wan());
+    let (clean_out, clean_arrivals) = drive(&mut clean_net);
+    let mut lossy_net = SimNet::new(dp, WireModel::wan()).with_faults(FaultModel {
+        drop_p: 0.05,
+        dup_p: 0.05,
+        reorder_window: 2,
+        seed: 41,
+        ..FaultModel::default()
+    });
+    let (lossy_out, lossy_arrivals) = drive(&mut lossy_net);
+
+    for r in 0..dp {
+        assert!(bit_eq(&clean_out[r], &lossy_out[r]), "replica {r}: faults changed the math");
+    }
+    let mut slipped = 0;
+    for (c, l) in clean_arrivals.iter().zip(&lossy_arrivals) {
+        assert!(l >= c, "faults can only delay arrivals ({l} < {c})");
+        if l > c {
+            slipped += 1;
+        }
+    }
+    assert!(slipped > 0, "5% loss + reorder must delay at least one hop");
+}
+
+#[test]
+fn udp_loopback_allreduce_parity_under_five_percent_loss() {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _env = EnvFaults::set(0.05, 0x5eed);
+    let mut opts = worker_opts(2, Schedule::GPipe, "ef21+topk:10");
+    opts.link_elems = 256;
+    opts.steps = 3;
+    let reference = worker::run_reference(&opts).unwrap();
+    let real = worker::run_loopback(&opts, Backend::Udp).unwrap();
+    worker::check(&reference, std::slice::from_ref(&real)).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// dp = 1 degenerates to the plain pipeline, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dp1_hybrid_simulation_is_the_plain_pipeline_report() {
+    let stages = 4;
+    let nb = pipeline::num_boundaries(stages, 1);
+    let elems = 16_384;
+    let spec = Spec::parse("topk:10").unwrap();
+    let (fb, bb) = simexec::spec_wire_bytes(&spec, elems);
+    let pp = simexec::SimSpec {
+        n_stages: stages,
+        v: 1,
+        n_mb: 8,
+        fwd_op_s: 0.020,
+        bwd_op_s: 0.040,
+        recompute_s: 0.0,
+        fwd_bytes: vec![fb; nb],
+        bwd_bytes: vec![bb; nb],
+        raw_bytes: vec![wire::raw_wire_bytes(elems); nb],
+        model: WireModel::wan(),
+        capacity: 4,
+        faults: None,
+    };
+    let ops = pipeline::ops_for(Schedule::OneFOneB, stages, 8).unwrap();
+    let plain = simexec::simulate(&ops, &pp);
+    let hybrid = simexec::simulate_hybrid(
+        &ops,
+        &simexec::HybridSpec { pp, dp: 1, grad_elems: 1 << 20, grad_spec: spec },
+    );
+    assert_eq!(plain.makespan_s.to_bits(), hybrid.makespan_s.to_bits());
+    assert_eq!(plain.bytes, hybrid.bytes);
+    assert_eq!(plain.raw_bytes, hybrid.raw_bytes);
+    assert_eq!(plain.busy_s.to_bits(), hybrid.busy_s.to_bits());
+}
+
+#[test]
+fn dp1_worker_run_ships_zero_allreduce_frames() {
+    let mut opts = worker_opts(2, Schedule::GPipe, "ef21+topk:10");
+    opts.dp = 1;
+    let reference = worker::run_reference(&opts).unwrap();
+    let loopback = worker::run_loopback(&opts, Backend::Uds).unwrap();
+    worker::check(&reference, std::slice::from_ref(&loopback)).unwrap();
+    for summary in [&reference, &loopback] {
+        let ar = summary
+            .boxes
+            .iter()
+            .flat_map(|b| &b.recv)
+            .filter(|(k, _, _)| k & (1 << 63) != 0)
+            .count();
+        assert_eq!(ar, 0, "dp=1 must not touch the allreduce key space");
+    }
+}

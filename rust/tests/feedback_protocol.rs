@@ -31,6 +31,7 @@ fn worker_opts(mode: &str, link_elems: usize, steps: usize) -> WorkerOpts {
             ..WireOpts::default()
         },
         steps,
+        dp: 1,
     }
 }
 

@@ -39,6 +39,7 @@ fn worker_opts_with(plan: Plan) -> WorkerOpts {
             ..WireOpts::default()
         },
         steps: 2,
+        dp: 1,
     }
 }
 

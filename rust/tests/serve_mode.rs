@@ -28,6 +28,7 @@ fn serve_worker_opts(mode: &str) -> WorkerOpts {
             ..WireOpts::default()
         },
         steps: 1,
+        dp: 1,
     }
 }
 

@@ -38,6 +38,7 @@ fn worker_opts(stages: usize, mb: usize, link_elems: usize, mode: &str, seed: u6
             ..WireOpts::default()
         },
         steps: 1,
+        dp: 1,
     }
 }
 
