@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Validate `--trace` output against the Chrome trace-event contract.
+
+Checks each file argument: the object form (`traceEvents` array) with
+`ph:"M"` thread-name metadata and `ph:"X"` complete events, timestamps
+in microseconds with non-negative durations, pids restricted to the two
+clock domains (0 = transport clock, 1 = wall clock), and the embedded
+top-level `telemetry` snapshot (version 1) that feeds
+`mpcomp plan --from-telemetry`. A bare snapshot file (written via
+`telemetry.snapshot=...`, no `traceEvents`) is validated against the
+snapshot schema alone. Run from the repo root (CI `loopback` job, after
+the traced UDS lane).
+"""
+import json
+import sys
+
+SNAPSHOT_VERSION = 1
+DIRS = {"fwd", "bwd"}
+CLOCKS = {"virtual", "wall"}
+
+
+def fail(path, msg):
+    print(f"check_trace: {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_snapshot(path, snap):
+    if not isinstance(snap, dict):
+        fail(path, "telemetry snapshot is not an object")
+    if snap.get("version") != SNAPSHOT_VERSION:
+        fail(path, f"snapshot version {snap.get('version')!r} != {SNAPSHOT_VERSION}")
+    if snap.get("clock") not in CLOCKS:
+        fail(path, f"snapshot clock {snap.get('clock')!r} not in {sorted(CLOCKS)}")
+    links = snap.get("links")
+    if not isinstance(links, list):
+        fail(path, "snapshot links is not an array")
+    for i, row in enumerate(links):
+        for key in ("link", "dir", "channel", "frames", "wire_bytes", "raw_bytes",
+                    "retransmits", "wire_time_s", "queue_wait_s"):
+            if key not in row:
+                fail(path, f"links[{i}] missing {key!r}")
+        if row["dir"] not in DIRS:
+            fail(path, f"links[{i}] dir {row['dir']!r} not in {sorted(DIRS)}")
+        # a row exists only because some hook touched it; recv-wait-only
+        # rows carry zero frames but must still show activity
+        if (row["frames"] == 0 and row["retransmits"] == 0
+                and row["queue_wait_s"] == 0):
+            fail(path, f"links[{i}] records no activity at all")
+        if row["wire_bytes"] > row["raw_bytes"]:
+            fail(path, f"links[{i}] compressed bytes exceed raw bytes")
+    if links and not any(row["frames"] > 0 for row in links):
+        fail(path, "no link row counts a sent frame")
+    if not isinstance(snap.get("measured"), dict):
+        fail(path, "snapshot measured is not an object")
+    return len(links)
+
+
+def check_trace(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+
+    if "traceEvents" not in doc:
+        # bare snapshot (telemetry.snapshot=...), not a trace
+        n_links = check_snapshot(path, doc)
+        print(f"check_trace: {path}: OK (bare snapshot, {n_links} link rows)")
+        return
+
+    if doc.get("displayTimeUnit") != "ms":
+        fail(path, f"displayTimeUnit {doc.get('displayTimeUnit')!r} != 'ms'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents is empty")
+
+    tracks = set()
+    n_meta = n_complete = 0
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph == "M":
+            n_meta += 1
+            if e.get("name") != "thread_name":
+                fail(path, f"traceEvents[{i}] metadata name {e.get('name')!r}")
+            if not isinstance(e.get("args", {}).get("name"), str):
+                fail(path, f"traceEvents[{i}] thread_name args.name missing")
+        elif ph == "X":
+            n_complete += 1
+            for key in ("name", "cat", "ts", "dur"):
+                if key not in e:
+                    fail(path, f"traceEvents[{i}] missing {key!r}")
+            if e["dur"] < 0:
+                fail(path, f"traceEvents[{i}] negative dur {e['dur']}")
+        else:
+            fail(path, f"traceEvents[{i}] unexpected ph {ph!r}")
+        if e.get("pid") not in (0, 1):
+            fail(path, f"traceEvents[{i}] pid {e.get('pid')!r} outside the two clock domains")
+        if not isinstance(e.get("tid"), int):
+            fail(path, f"traceEvents[{i}] tid {e.get('tid')!r} is not an integer")
+        tracks.add((e["pid"], e["tid"]))
+    if n_complete == 0:
+        fail(path, "no ph:'X' span events")
+    named = {(e["pid"], e["tid"]) for e in events if e.get("ph") == "M"}
+    if tracks - named:
+        fail(path, f"tracks without thread_name metadata: {sorted(tracks - named)}")
+
+    n_links = check_snapshot(path, doc.get("telemetry"))
+    print(
+        f"check_trace: {path}: OK ({n_complete} spans, {n_meta} tracks, "
+        f"{n_links} link rows, clock={doc['telemetry']['clock']})"
+    )
+
+
+def main():
+    if len(sys.argv) < 2:
+        print("usage: check_trace.py TRACE.json [...]", file=sys.stderr)
+        sys.exit(2)
+    for path in sys.argv[1:]:
+        check_trace(path)
+
+
+if __name__ == "__main__":
+    main()

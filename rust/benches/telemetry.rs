@@ -1,0 +1,73 @@
+//! Telemetry overhead gate: the always-compiled L7 hooks must stay
+//! invisible when disabled and cheap when enabled. Run with
+//! `cargo bench --bench telemetry`.
+//!
+//! Three stable names, gated in CI from `BENCH_telemetry.json`:
+//!
+//! * `telemetry_off/reference_2x4` — the end-to-end reference worker
+//!   step (codec + SimNet + feedback) with the telemetry gate closed.
+//!   This is the denominator: the real hot path, disabled hooks
+//!   included, exactly as a non-traced run ships.
+//! * `telemetry_on/reference_2x4` — the same step with counters and
+//!   spans recording, plus the per-step drain (`reset`), i.e. the full
+//!   traced lifecycle. CI fails if its median exceeds the disabled
+//!   median by more than 10%.
+//! * `telemetry_hooks_disabled/256` — 256 closed-gate
+//!   `on_send` + `span_at` pairs, a ~3x over-count of the ~80 hook
+//!   sites one reference step actually crosses. CI fails if this
+//!   exceeds 2% of the disabled step median: the compiled-in hooks
+//!   must cost a rounding error, not a tax.
+
+use mpcomp::compression::Spec;
+use mpcomp::config::{Schedule, WireOpts};
+use mpcomp::coordinator::worker::{self, WorkerOpts};
+use mpcomp::netsim::Dir;
+use mpcomp::telemetry;
+use mpcomp::util::bench::{black_box, header, Suite};
+
+fn opts() -> WorkerOpts {
+    WorkerOpts {
+        stages: 2,
+        mb: 4,
+        link_elems: 4096,
+        schedule: Schedule::GPipe,
+        spec: Spec::parse("topk:10").expect("spec parses"),
+        plan: None,
+        seed: 11,
+        wire: WireOpts::default(),
+        steps: 2,
+        dp: 1,
+    }
+}
+
+fn main() {
+    let mut suite = Suite::from_env_args();
+    header();
+    let o = opts();
+
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    suite.bench("telemetry_off/reference_2x4", || {
+        black_box(worker::run_reference(&o).expect("reference run"));
+    });
+
+    // closed-gate hook cost in isolation: what every untraced run pays
+    suite.bench("telemetry_hooks_disabled/256", || {
+        for i in 0..256u64 {
+            telemetry::on_send(0, Dir::Fwd, 100, 400, 0.001, 0.01, 0.0);
+            telemetry::span_at(0, "fwd", "op", 0.0, 1.0, i);
+        }
+    });
+
+    telemetry::set_enabled(true);
+    telemetry::set_spans(true);
+    telemetry::set_virtual_clock(true);
+    suite.bench("telemetry_on/reference_2x4", || {
+        black_box(worker::run_reference(&o).expect("reference run"));
+        telemetry::reset(); // the per-step drain is part of the traced lifecycle
+    });
+    telemetry::set_enabled(false);
+    telemetry::reset();
+
+    suite.finish();
+}

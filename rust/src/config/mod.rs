@@ -4,7 +4,7 @@
 pub mod opts;
 pub mod toml;
 
-pub use opts::{FaultOpts, RunSpec, ServeKnobs, Surface, WireOpts};
+pub use opts::{FaultOpts, RunSpec, ServeKnobs, Surface, TelemetryOpts, WireOpts};
 
 use anyhow::{bail, Result};
 

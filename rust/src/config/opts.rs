@@ -127,6 +127,43 @@ impl Default for ServeKnobs {
     }
 }
 
+/// Tracing/telemetry knobs (L7), shared by every run mode. The layer is
+/// always compiled in but records nothing until `enabled` flips on —
+/// either through these keys or implicitly by the `--trace` flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryOpts {
+    /// Master gate: counters, histograms and spans all record only
+    /// while this is on.
+    pub enabled: bool,
+    /// Record individual span events (timelines) in addition to the
+    /// aggregate counters. Off leaves only the per-link histograms.
+    pub spans: bool,
+    /// Write the aggregate [`TelemetrySnapshot`] JSON here at the end
+    /// of the run (empty = don't write one).
+    ///
+    /// [`TelemetrySnapshot`]: crate::telemetry::TelemetrySnapshot
+    pub snapshot: String,
+}
+
+impl Default for TelemetryOpts {
+    fn default() -> Self {
+        TelemetryOpts { enabled: false, spans: true, snapshot: String::new() }
+    }
+}
+
+impl TelemetryOpts {
+    /// Push these knobs into the global telemetry layer. `force_on`
+    /// (the `--trace` flag) enables recording even when the
+    /// `telemetry.enabled` key was left at its default.
+    pub fn install(&self, force_on: bool) {
+        crate::telemetry::set_enabled(self.enabled || force_on);
+        crate::telemetry::set_spans(self.spans);
+        if !self.snapshot.is_empty() {
+            crate::telemetry::set_snapshot_path(Some(self.snapshot.clone()));
+        }
+    }
+}
+
 /// Which subcommand a [`RunSpec`] is being built for. Sets the
 /// per-surface shape defaults (worker's tiny 2x4 loopback default vs.
 /// the paper's 4x16 shape) and which control flags the driver owns.
@@ -173,6 +210,8 @@ pub struct RunSpec {
     pub steps: usize,
     /// Serving-mode admission knobs.
     pub serve: ServeKnobs,
+    /// Tracing/telemetry knobs.
+    pub telemetry: TelemetryOpts,
 }
 
 /// Keys owned by [`RunSpec`] itself; everything else delegates to
@@ -201,6 +240,9 @@ pub const RUN_KEYS: &[&str] = &[
     "serve.requests",
     "serve.max_batch",
     "serve.deadline_s",
+    "telemetry.enabled",
+    "telemetry.spans",
+    "telemetry.snapshot",
 ];
 
 /// Map a namespaced `wire.*`/`fault.*` key onto the [`TrainConfig`]
@@ -279,6 +321,7 @@ impl RunSpec {
             recompute: true,
             steps: 1,
             serve: ServeKnobs::default(),
+            telemetry: TelemetryOpts::default(),
         }
     }
 
@@ -299,6 +342,9 @@ impl RunSpec {
             "serve.requests" => self.serve.requests = parsed(&key, value)?,
             "serve.max_batch" => self.serve.max_batch = parsed(&key, value)?,
             "serve.deadline_s" => self.serve.deadline_s = parsed(&key, value)?,
+            "telemetry.enabled" => self.telemetry.enabled = parse_bool(&key, value)?,
+            "telemetry.spans" => self.telemetry.spans = parse_bool(&key, value)?,
+            "telemetry.snapshot" => self.telemetry.snapshot = value.into(),
             // eager validation for the namespaced wire keys (the plain
             // TrainConfig spellings stay lazily validated for TOML
             // compatibility)
@@ -350,7 +396,7 @@ impl RunSpec {
                 // control flags owned by the subcommand drivers
                 "config" | "set" | "out" | "rank" | "rendezvous" | "reference" | "check"
                 | "compare-bytes" | "full" | "curves" | "seeds" | "checkpoint" | "objective"
-                | "print-config" | "serve" => {}
+                | "print-config" | "serve" | "trace" | "from-telemetry" => {}
                 "plan" if matches!(surface, Surface::Worker | Surface::Serve) => {}
                 // deprecated spellings -> typed keys (warn once each)
                 "drop-p" => {
@@ -464,6 +510,9 @@ impl RunSpec {
             ("serve.requests", self.serve.requests.to_string()),
             ("serve.max_batch", self.serve.max_batch.to_string()),
             ("serve.deadline_s", self.serve.deadline_s.to_string()),
+            ("telemetry.enabled", self.telemetry.enabled.to_string()),
+            ("telemetry.spans", self.telemetry.spans.to_string()),
+            ("telemetry.snapshot", self.telemetry.snapshot.clone()),
         ];
         let mut s = String::new();
         for (k, v) in rows {
@@ -610,6 +659,24 @@ mod tests {
         assert!(d.contains("wire.backend = sim"), "{d}");
         assert!(d.contains("serve.rate = 200"), "{d}");
         assert!(d.contains("stages = 4"), "{d}");
+        assert!(d.contains("telemetry.enabled = false"), "{d}");
+        assert!(d.contains("telemetry.spans = true"), "{d}");
+    }
+
+    #[test]
+    fn telemetry_keys_parse() {
+        let mut spec = RunSpec::new("cnn16", Surface::Train);
+        assert_eq!(spec.telemetry, TelemetryOpts::default());
+        spec.set("telemetry.enabled", "true").unwrap();
+        spec.set("telemetry.spans", "false").unwrap();
+        spec.set("telemetry.snapshot", "out/telemetry.json").unwrap();
+        assert!(spec.telemetry.enabled);
+        assert!(!spec.telemetry.spans);
+        assert_eq!(spec.telemetry.snapshot, "out/telemetry.json");
+        assert!(spec.set("telemetry.enabled", "maybe").is_err());
+        // the typed flag form routes through the same keys
+        let spec = parse("train --telemetry.enabled=1", Surface::Train).unwrap();
+        assert!(spec.telemetry.enabled);
     }
 
     #[test]

@@ -156,8 +156,15 @@ impl CompressedLink {
             .recv(self.wire_link, dir, mb_key)
             .with_context(|| format!("link {}: receiving message {mb_key}", self.index))?;
         if let Some(p) = &msg.payload {
+            let dec_t = crate::telemetry::timer();
             let data = wire::decode(p)
                 .with_context(|| format!("link {}: decoding message {mb_key}", self.index))?;
+            dec_t.stop(
+                crate::telemetry::span::codec_track(self.wire_link),
+                "decode",
+                "codec",
+                mb_key,
+            );
             let out = Tensor::new(t.shape().to_vec(), data)?;
             return Ok((out, msg.arrival));
         }
@@ -178,11 +185,18 @@ impl CompressedLink {
         sent_at: f64,
     ) -> Result<(Tensor, f64)> {
         debug_assert_eq!(t.len(), self.n, "link {} tensor size", self.index);
+        // attribute this boundary's transport counters to its channel
+        crate::telemetry::set_channel_hint(self.index as u32);
         let raw = wire::raw_wire_bytes(self.n);
         let want = net.wants_payload();
+        // one wall-clock codec span per message: operator + wire encode
+        // (the delta protocol's branch records its own)
+        let track = crate::telemetry::span::codec_track(self.wire_link);
+        let enc_t = crate::telemetry::timer();
         match spec.method {
             Method::None => {
                 let payload = want.then(|| wire::encode_raw(t.data()));
+                enc_t.stop(track, "encode", "codec", mb_key);
                 self.ship(net, dir, mb_key, raw, raw, sent_at, t.clone(), payload)
             }
             Method::Quant { fw_bits, bw_bits } => {
@@ -191,6 +205,7 @@ impl CompressedLink {
                 let bytes = wire::quant_wire_bytes(self.n, bits);
                 // encode_quant(x) decodes to exactly ops::quantize(x) == out
                 let payload = want.then(|| wire::encode_quant(t.data(), bits));
+                enc_t.stop(track, "encode", "codec", mb_key);
                 self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload)
             }
             Method::TopK { frac, shared_idx, feedback } => {
@@ -207,6 +222,7 @@ impl CompressedLink {
                     let k = out.count_nonzero();
                     let bytes = wire::sparse_wire_bytes(self.n, k);
                     let payload = want.then(|| wire::encode_sparse(out.data(), k));
+                    enc_t.stop(track, "encode", "codec", mb_key);
                     return self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload);
                 }
                 // two-sided delta protocol: only the compressed delta
@@ -231,6 +247,7 @@ impl CompressedLink {
                 let bytes = wire::sparse_wire_bytes(self.n, k_on_wire);
                 // the message IS the tensor: decode(encode) == out exactly
                 let payload = want.then(|| wire::encode_sparse(out.data(), k_on_wire));
+                enc_t.stop(track, "encode", "codec", mb_key);
                 self.ship(net, dir, mb_key, bytes, raw, sent_at, out, payload)
             }
         }
@@ -255,6 +272,8 @@ impl CompressedLink {
         sent_at: f64,
     ) -> Result<(Tensor, f64)> {
         debug_assert!(fb != Feedback::AqSgd || dir == Dir::Fwd, "AQ-SGD is activations-only");
+        let track = crate::telemetry::span::codec_track(self.wire_link);
+        let enc_t = crate::telemetry::timer();
         let frame = match imp {
             // the native path IS the shared state machine
             CompressImpl::Native => {
@@ -301,6 +320,7 @@ impl CompressedLink {
                 }
             }
         };
+        enc_t.stop(track, "encode", "codec", mb_key);
         let (index, wire_link, n) = (self.index, self.wire_link, self.n);
         let raw = wire::raw_wire_bytes(n);
         net.send(wire_link, dir, mb_key, Payload::Bytes(&frame), raw, sent_at)?;
@@ -310,15 +330,19 @@ impl CompressedLink {
         // real backends deliver the socket bytes; the simulator charged
         // the same frame and the local copy stands in for the wire image
         let bytes = msg.payload.as_deref().unwrap_or(&frame);
+        let dec_t = crate::telemetry::timer();
         let df = wire::decode_delta(bytes)
             .with_context(|| format!("link {index}: decoding delta frame {mb_key}"))?;
+        dec_t.stop(track, "decode", "codec", mb_key);
         let mirror = match dir {
             Dir::Fwd => &mut self.fwd_mirror,
             Dir::Bwd => &mut self.bwd_mirror,
         };
+        let apply_t = crate::telemetry::timer();
         let recon = mirror
             .apply_frame(fb, &df, n)
             .with_context(|| format!("link {index} {dir}: applying delta frame {mb_key}"))?;
+        apply_t.stop(track, "apply", "codec", mb_key);
         Ok((Tensor::new(t.shape().to_vec(), recon)?, msg.arrival))
     }
 

@@ -154,6 +154,7 @@ pub fn serve_transport(
             let boundary = ms - 1;
             let link = boundary % s_count;
             let key = (boundary * m_count + mb) as u64;
+            crate::telemetry::set_channel_hint(boundary as u32);
             net.send(
                 link,
                 Dir::Fwd,
@@ -167,6 +168,7 @@ pub fn serve_transport(
         let start = net.clock(rank).max(ready);
         let end = start + spec.fwd_op_s;
         net.advance(rank, end);
+        crate::telemetry::span_at(rank as u32, "fwd", "op", start, end, mb as u64);
         fwd_end[ms][mb] = end;
     }
     let makespan = net.makespan();
@@ -250,13 +252,11 @@ pub fn request_latencies(
 
 /// Upper order-statistic quantile of an ascending-sorted slice:
 /// `quantile(s, 0.99)` is the smallest element with at least 99% of the
-/// distribution at or below it. NaN on an empty slice.
+/// distribution at or below it. NaN on an empty slice. Delegates to the
+/// shared telemetry quantile so serve and the histogram layer can never
+/// disagree on tail semantics.
 pub fn quantile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    crate::telemetry::hist::quantile_sorted(sorted, q)
 }
 
 /// Everything one `mpcomp serve` run needs (built from the typed
@@ -383,8 +383,11 @@ impl ServeOpts {
     /// always measured on the simulator).
     pub fn run(&self) -> Result<(ServeReport, RunMetrics)> {
         let t0 = std::time::Instant::now();
+        crate::telemetry::set_virtual_clock(self.wire.backend == Backend::Sim);
         let arrival_s = arrivals::poisson(self.seed, self.knobs.rate_rps, self.knobs.requests);
+        let adm_t = crate::telemetry::timer();
         let batches = admit(&arrival_s, self.knobs.max_batch, self.knobs.deadline_s);
+        adm_t.stop(0, "admit", "serve", arrival_s.len() as u64);
         let plan = self.effective_plan()?;
         let v = self.schedule.chunks();
         let spec = self.sim_spec(&plan, batches.len())?;
@@ -395,15 +398,21 @@ impl ServeOpts {
                 .context("serve: transport failed")?,
         };
         // the saturation ceiling: identical batches, all available at
-        // t = 0, through the modelled wire
+        // t = 0, through the modelled wire — a scratch run whose sends
+        // must stay out of the main run's telemetry
         let sat_batches: Vec<Microbatch> =
             batches.iter().map(|b| Microbatch { dispatch_s: 0.0, ..*b }).collect();
+        let was_on = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(false);
         let sat = serve_sim(&ops, &sat_batches, &spec);
+        crate::telemetry::set_enabled(was_on);
 
-        let mut latencies = request_latencies(&arrival_s, &batches, &run.completion_s);
-        latencies.sort_by(f64::total_cmp);
-        let p50 = quantile(&latencies, 0.50);
-        let p99 = quantile(&latencies, 0.99);
+        let mut lat_hist = crate::telemetry::Hist::exact();
+        for l in request_latencies(&arrival_s, &batches, &run.completion_s) {
+            lat_hist.record(l);
+        }
+        let p50 = lat_hist.quantile(0.50);
+        let p99 = lat_hist.quantile(0.99);
         let n = arrival_s.len();
         let last = run.completion_s.iter().copied().fold(0.0f64, f64::max);
         let span = last - arrival_s.first().copied().unwrap_or(0.0);
@@ -758,5 +767,27 @@ mod tests {
         assert!((lat[0] - 0.1).abs() < 1e-12);
         assert!((lat[1] - 0.099).abs() < 1e-12);
         assert!((lat[2] - 0.2).abs() < 1e-12);
+    }
+
+    /// The serve report's tail latencies now come off the shared
+    /// telemetry histogram in exact mode; pin it bit-equal to the old
+    /// sort-then-quantile path on realistic latency data.
+    #[test]
+    fn exact_hist_quantiles_match_sorted_path() {
+        let arr = arrivals::poisson(11, 400.0, 64);
+        let batches = admit(&arr, 4, 0.02);
+        let completion: Vec<f64> =
+            batches.iter().enumerate().map(|(i, b)| b.dispatch_s + 0.003 * (i + 1) as f64).collect();
+        let lat = request_latencies(&arr, &batches, &completion);
+
+        let mut sorted = lat.clone();
+        sorted.sort_by(f64::total_cmp);
+        let mut hist = crate::telemetry::Hist::exact();
+        for &l in &lat {
+            hist.record(l);
+        }
+        for q in [0.0, 0.25, 0.50, 0.90, 0.99, 1.0] {
+            assert_eq!(hist.quantile(q).to_bits(), quantile(&sorted, q).to_bits(), "q={q}");
+        }
     }
 }

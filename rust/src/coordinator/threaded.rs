@@ -90,6 +90,7 @@ pub fn run_threaded(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary
             backend.name()
         );
     }
+    crate::telemetry::set_virtual_clock(false);
     let plan = opts.effective_plan()?;
     let links = opts.wire_links();
     let model = opts.wire.model()?;
@@ -108,9 +109,12 @@ pub fn run_threaded(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary
         for (rank, mut port) in ports.into_iter().enumerate() {
             let (plan, ops) = (&plan, &ops[..]);
             handles.push(scope.spawn(move || {
-                let boxes = worker::run_ops(opts, plan, &mut port, &|r| r == rank, ops, opts.mb)
-                    .with_context(|| format!("rank {rank} thread"))?;
-                Ok((boxes, port))
+                let res = worker::run_ops(opts, plan, &mut port, &|r| r == rank, ops, opts.mb)
+                    .with_context(|| format!("rank {rank} thread"));
+                // per-thread telemetry buffers die with the thread: fold
+                // them into the global store before this rank joins
+                crate::telemetry::drain_thread();
+                res.map(|boxes| (boxes, port))
             }));
         }
         for h in handles {
@@ -249,6 +253,7 @@ fn run_rank(mut ctx: RankCtx<'_>, port: &mut ThreadedPort) -> Result<f64> {
                     .with_context(|| format!("rank {}: no fwd channel s{}", ctx.rank, ms - 1))?;
                 let (prev, sent_at) =
                     rx.recv(mb, ctx.recv_timeout, &format!("activation s{}", ms - 1))?;
+                crate::telemetry::set_channel_hint((ms - 1) as u32);
                 let spec = trainer::channel_spec_in(ctx.plan, ms - 1, Dir::Fwd, ctx.compress);
                 let mut link = ctx.link_cells[ms - 1]
                     .lock()
@@ -273,6 +278,7 @@ fn run_rank(mut ctx: RankCtx<'_>, port: &mut ThreadedPort) -> Result<f64> {
             let end = start + ctx.sim_op_time.unwrap_or_else(|| stage.last_op_wall_s());
             drop(stage);
             port.advance(ctx.rank, end);
+            crate::telemetry::span_at(ctx.rank as u32, "fwd", "op", start, end, mb as u64);
             if ms == ctx.ms_count - 1 {
                 logits[mb] = Some((y, end));
             } else {
@@ -302,6 +308,7 @@ fn run_rank(mut ctx: RankCtx<'_>, port: &mut ThreadedPort) -> Result<f64> {
                     .with_context(|| format!("rank {}: no bwd channel s{ms}", ctx.rank))?;
                 let (g, sent_at) =
                     rx.recv(mb, ctx.recv_timeout, &format!("gradient s{}", ms + 1))?;
+                crate::telemetry::set_channel_hint(ms as u32);
                 let spec = trainer::channel_spec_in(ctx.plan, ms, Dir::Bwd, ctx.compress);
                 let mut link = ctx.link_cells[ms]
                     .lock()
@@ -325,6 +332,7 @@ fn run_rank(mut ctx: RankCtx<'_>, port: &mut ThreadedPort) -> Result<f64> {
             let end = start + ctx.sim_op_time.unwrap_or_else(|| stage.last_op_wall_s());
             drop(stage);
             port.advance(ctx.rank, end);
+            crate::telemetry::span_at(ctx.rank as u32, "bwd", "op", start, end, mb as u64);
             if let Some(gx) = gx {
                 if ms > 0 {
                     ctx.bwd_tx[ms - 1]
@@ -444,9 +452,10 @@ pub(crate) fn train_batch(
                     bwd_rx: mem::take(&mut bwd_rx[rank]),
                 };
                 handles.push(scope.spawn(move || {
-                    let loss = run_rank(ctx, &mut port)
-                        .with_context(|| format!("rank {rank} thread"))?;
-                    Ok((loss, port))
+                    let res = run_rank(ctx, &mut port)
+                        .with_context(|| format!("rank {rank} thread"));
+                    crate::telemetry::drain_thread();
+                    res.map(|loss| (loss, port))
                 }));
             }
             for h in handles {
@@ -577,6 +586,38 @@ mod tests {
             // 2 replicas x 2 ring steps x 2 rounds
             assert_eq!(ar_frames, 8, "{mode}");
         }
+    }
+
+    /// Rank threads buffer spans thread-locally and fold them into the
+    /// global store right before joining; after `run_threaded` returns,
+    /// every rank's op spans must be visible from the coordinating
+    /// thread. Runs under TSan in CI (the `threaded::` filter) so the
+    /// drain handoff itself is race-checked. Assertions are lower
+    /// bounds: other lib tests sharing this process may record while
+    /// the gate is open.
+    #[test]
+    fn threaded_rank_spans_survive_the_join() {
+        let _g = crate::telemetry::test_guard();
+        crate::telemetry::reset();
+        crate::telemetry::set_enabled(true);
+        crate::telemetry::set_spans(true);
+        let o = opts(2, 4, "topk:10", Schedule::GPipe);
+        let res = run_threaded(&o, Backend::Uds);
+        let spans = crate::telemetry::take_spans();
+        let snap = crate::telemetry::snapshot();
+        crate::telemetry::set_enabled(false);
+        crate::telemetry::reset();
+        res.unwrap();
+        // 2 ranks x 4 mb x 2 steps of fwd and bwd ops, recorded on the
+        // rank threads and drained at join
+        for (rank, name) in [(0u32, "fwd"), (0, "bwd"), (1, "fwd"), (1, "bwd")] {
+            let n = spans.iter().filter(|s| s.track == rank && s.name == name).count();
+            assert!(n >= 8, "rank {rank} {name}: {n} spans < 8");
+        }
+        // the uds wire's counters drained with them (per-channel rows)
+        assert!(!snap.links.is_empty(), "no wire counters survived the join");
+        let frames: u64 = snap.links.iter().map(|r| r.frames).sum();
+        assert!(frames >= 16, "frames {frames} < 16");
     }
 
     #[test]

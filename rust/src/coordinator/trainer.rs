@@ -227,6 +227,9 @@ impl Trainer {
                 Duration::from_secs_f64(cfg.recv_timeout_s),
             )?),
         };
+        // declare the run's span clock domain (the scratch eval SimNet
+        // must not flip it, which is why constructors don't set this)
+        crate::telemetry::set_virtual_clock(backend == Backend::Sim);
 
         // datasets
         let data = match model.task.as_str() {
@@ -394,6 +397,7 @@ impl Trainer {
             m.datagrams_fresh = fresh;
             m.datagrams_retransmit = retx;
         }
+        m.fill_links(self.net.ledger());
         Ok(m)
     }
 
@@ -580,6 +584,7 @@ impl Trainer {
                         // boundaries sharing a ring link may compress
                         // their activations differently
                         let spec = self.channel_spec(ms - 1, Dir::Fwd, compress);
+                        crate::telemetry::set_channel_hint((ms - 1) as u32);
                         let link = &mut self.links[ms - 1];
                         let (compressed, arrival) = link.forward(
                             &self.rt,
@@ -597,6 +602,7 @@ impl Trainer {
                     let start = self.net.clock(rank).max(ready);
                     let end = start + self.op_time(ms);
                     self.net.advance(rank, end);
+                    crate::telemetry::span_at(rank as u32, "fwd", "op", start, end, mb as u64);
                     fwd_end[ms][mb] = end;
                     acts[ms][mb] = Some(y);
                 }
@@ -617,6 +623,7 @@ impl Trainer {
                             .with_context(|| format!("missing grad s{} mb{mb}", ms + 1))?;
                         let sent_at = bwd_end[ms + 1][mb];
                         let spec = self.channel_spec(ms, Dir::Bwd, compress);
+                        crate::telemetry::set_channel_hint(ms as u32);
                         let link = &mut self.links[ms];
                         link.backward(
                             &self.rt,
@@ -635,6 +642,7 @@ impl Trainer {
                     let start = self.net.clock(rank).max(ready);
                     let end = start + self.op_time(ms);
                     self.net.advance(rank, end);
+                    crate::telemetry::span_at(rank as u32, "bwd", "op", start, end, mb as u64);
                     bwd_end[ms][mb] = end;
                 }
             }
@@ -712,6 +720,16 @@ impl Trainer {
     /// Forward-only pass over one microbatch (eval). `compress` applies
     /// each boundary's *plain* operator (no feedback state mutation).
     fn eval_forward(&mut self, input: StageInput, compress: bool) -> Result<Tensor> {
+        // eval timing is not part of the run: keep the scratch
+        // simulator's sends out of the telemetry counters and spans
+        let was_on = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(false);
+        let out = self.eval_forward_inner(input, compress);
+        crate::telemetry::set_enabled(was_on);
+        out
+    }
+
+    fn eval_forward_inner(&mut self, input: StageInput, compress: bool) -> Result<Tensor> {
         let imp = self.cfg.compress_impl;
         let mut x = input;
         // evals always use a scratch simulator: their timing is not part

@@ -324,6 +324,8 @@ fn run_allreduce_round(
 ) -> Result<()> {
     let dp = opts.dp;
     let v = opts.chunks();
+    // attribute ring traffic to its own counter channel, not a boundary
+    crate::telemetry::set_channel_hint(crate::telemetry::CHANNEL_ALLREDUCE);
     for (r, ring) in rings.iter_mut().enumerate() {
         let Some(ring) = ring else { continue };
         let tag = (1u64 << 62) | ((r as u64) << 32) | round as u64;
@@ -363,6 +365,7 @@ fn run_allreduce_round(
             let upstream = (r + dp - 1) % dp;
             let (link, dir) = allreduce_hop(opts.stages, v, upstream)?;
             let mbx = link * 2 + dir.index();
+            let t0 = crate::telemetry::spans_on().then(|| net.clock(r));
             let frame = net
                 .recv(link, dir, key)
                 .with_context(|| format!("allreduce recv replica {r} step {step}"))?;
@@ -375,6 +378,9 @@ fn run_allreduce_round(
             let ring = rings[r].as_mut().expect("mine(r) built a ring");
             ring.apply_frame(step, buf)
                 .with_context(|| format!("allreduce apply replica {r} step {step}"))?;
+            if let Some(t0) = t0 {
+                crate::telemetry::span_at(r as u32, "hop", "allreduce", t0, net.clock(r), key);
+            }
             boxes[mbx].recv.push((key, frame.bytes, fnv1a(buf)));
         }
     }
@@ -479,9 +485,11 @@ pub(crate) fn run_ops(
             if !mine(rank) {
                 continue;
             }
+            let op_t0 = crate::telemetry::spans_on().then(|| net.clock(rank));
             // receive this op's input frame (if its boundary has a wire)
             if let Some(boundary) = pipeline::input_boundary(op, stages, v) {
                 let (link, chunk, key, mbx, slot) = channel(boundary, dir, step, mb);
+                crate::telemetry::set_channel_hint(boundary as u32);
                 let frame = net
                     .recv(link, dir, key)
                     .with_context(|| format!("rank recv link {link} {dir} chunk {chunk} mb {mb}"))?;
@@ -512,6 +520,7 @@ pub(crate) fn run_ops(
             if let Some(boundary) = pipeline::output_boundary(op, stages, v) {
                 let (link, chunk, key, mbx, slot) = channel(boundary, dir, step, mb);
                 let spec = plan.spec_for(boundary, dir);
+                crate::telemetry::set_channel_hint(boundary as u32);
                 let buf = encode_message(opts, spec, &mut senders[slot], link, dir, chunk, mb)?;
                 if !net.wants_payload() {
                     sent_frames[mbx].insert(key, buf.clone());
@@ -521,6 +530,10 @@ pub(crate) fn run_ops(
                     .with_context(|| format!("rank send link {link} {dir} chunk {chunk} mb {mb}"))?;
                 boxes[mbx].sent_msgs += 1;
                 boxes[mbx].sent_bytes += buf.len() as u64;
+            }
+            if let Some(t0) = op_t0 {
+                let name = if op.is_fwd() { "fwd" } else { "bwd" };
+                crate::telemetry::span_at(rank as u32, name, "op", t0, net.clock(rank), mb as u64);
             }
         }
         if !rings.is_empty() {
@@ -532,6 +545,7 @@ pub(crate) fn run_ops(
 
 /// Single-process reference: the whole schedule over `SimNet`.
 pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
+    crate::telemetry::set_virtual_clock(true);
     let plan = opts.effective_plan()?;
     let mut net = SimNet::new(opts.wire_links(), opts.wire.model()?);
     let boxes = run_stages(opts, &plan, &mut net, &|_| true)?;
@@ -542,6 +556,7 @@ pub fn run_reference(opts: &WorkerOpts) -> Result<WorkerSummary> {
 /// every link in this process) — the in-test analogue of the
 /// multi-process path.
 pub fn run_loopback(opts: &WorkerOpts, backend: Backend) -> Result<WorkerSummary> {
+    crate::telemetry::set_virtual_clock(false);
     let plan = opts.effective_plan()?;
     let links = opts.wire_links();
     let model = opts.wire.model()?;
@@ -582,6 +597,7 @@ pub fn run_rank(
     if rank >= opts.stages {
         bail!("rank {rank} out of range for {} stages", opts.stages);
     }
+    crate::telemetry::set_virtual_clock(false);
     let plan = opts.effective_plan()?;
     let model = opts.wire.model()?;
     let mut rv = Rendezvous::parse(backend, opts.stages, rendezvous_addr)?;
@@ -629,6 +645,7 @@ fn serve_schedule(opts: &WorkerOpts, knobs: &ServeKnobs) -> (Vec<pipeline::Op>, 
 /// Serve-mode analogue of [`run_reference`]: the whole forward-only
 /// admission schedule replayed over `SimNet` in one process.
 pub fn run_serve_reference(opts: &WorkerOpts, knobs: &ServeKnobs) -> Result<WorkerSummary> {
+    crate::telemetry::set_virtual_clock(true);
     let plan = opts.effective_plan()?;
     let (ops, nb) = serve_schedule(opts, knobs);
     let mut net = SimNet::new(opts.wire_links(), opts.wire.model()?);
@@ -643,6 +660,7 @@ pub fn run_serve_loopback(
     knobs: &ServeKnobs,
     backend: Backend,
 ) -> Result<WorkerSummary> {
+    crate::telemetry::set_virtual_clock(false);
     let plan = opts.effective_plan()?;
     let (ops, nb) = serve_schedule(opts, knobs);
     let links = opts.wire_links();
@@ -684,6 +702,7 @@ pub fn run_serve_rank(
     if rank >= opts.stages {
         bail!("rank {rank} out of range for {} stages", opts.stages);
     }
+    crate::telemetry::set_virtual_clock(false);
     let plan = opts.effective_plan()?;
     let (ops, nb) = serve_schedule(opts, knobs);
     let model = opts.wire.model()?;

@@ -22,6 +22,10 @@
 //!   handshake negotiates its digest across ranks.
 //! * [`experiments`] regenerates every table and figure of the paper,
 //!   plus the `exp schedule` transmission ablation and `exp plan`.
+//! * [`telemetry`] is the runtime-gated tracing/metrics layer (L7):
+//!   spans + per-link counters on every hot path, Chrome trace export
+//!   (`--trace`), and the measured-regime snapshot that
+//!   `plan --from-telemetry` replans against.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! reproduction results.
@@ -37,6 +41,7 @@ pub mod metrics;
 pub mod netsim;
 pub mod planner;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

@@ -59,6 +59,8 @@ const VALUE_FLAGS: &[&str] = &[
     "recv-timeout", "steps", "compare-bytes", "virtual-stages", "plan", "exec",
     // serve admission knobs + planner objective
     "rate", "requests", "max-batch", "deadline-ms", "objective",
+    // telemetry: trace export + measured-regime replanning input
+    "trace", "from-telemetry",
     // deprecated wire fault spellings (use --fault.drop-p=… instead)
     "drop-p", "dup-p", "reorder-window", "jitter-ms", "stragglers",
     "straggler-factor", "fault-seed",
@@ -98,6 +100,32 @@ fn print_config(args: &Args, run: &RunSpec) -> bool {
     false
 }
 
+/// Arm the telemetry layer per the run's `telemetry.*` keys; `--trace`
+/// implies recording even when `telemetry.enabled` was left off.
+fn telemetry_start(args: &Args, run: &RunSpec) {
+    run.telemetry.install(args.has("trace"));
+}
+
+/// End-of-run telemetry epilogue: export the Chrome trace (`--trace
+/// out.json`) and/or the bare aggregate snapshot (`telemetry.snapshot`).
+fn telemetry_finish(args: &Args) -> Result<()> {
+    if !mpcomp::telemetry::enabled() {
+        return Ok(());
+    }
+    let snap = mpcomp::telemetry::snapshot();
+    let spans = mpcomp::telemetry::take_spans();
+    if let Some(path) = args.get("trace") {
+        mpcomp::telemetry::chrome::export(path, &snap, &spans)?;
+        println!("trace written to {path} ({} spans)", spans.len());
+    }
+    if let Some(path) = mpcomp::telemetry::take_snapshot_path() {
+        std::fs::write(&path, snap.to_json().to_string())
+            .with_context(|| format!("writing telemetry snapshot {path}"))?;
+        println!("telemetry snapshot written to {path}");
+    }
+    Ok(())
+}
+
 fn info(args: &Args) -> Result<()> {
     let rt = Runtime::from_dir(artifacts_dir(args))?;
     let m = rt.manifest();
@@ -130,6 +158,7 @@ fn train(args: &Args) -> Result<()> {
     if print_config(args, &run) {
         return Ok(());
     }
+    telemetry_start(args, &run);
     let cfg = run.train;
     let rt = Runtime::from_dir(&cfg.artifacts_dir)?;
     let results_dir = cfg.results_dir.clone();
@@ -154,7 +183,7 @@ fn train(args: &Args) -> Result<()> {
     );
     append_jsonl(&results_dir, "train", &m)?;
     m.write_csv(&results_dir, "train")?;
-    Ok(())
+    telemetry_finish(args)
 }
 
 fn eval(args: &Args) -> Result<()> {
@@ -188,6 +217,7 @@ fn exp(args: &Args) -> Result<()> {
     if print_config(args, &run) {
         return Ok(());
     }
+    telemetry_start(args, &run);
     let opts = ExpOpts {
         full: args.has("full"),
         seeds: args.usize("seeds")?,
@@ -208,7 +238,8 @@ fn exp(args: &Args) -> Result<()> {
         },
         serve: run.serve.clone(),
     };
-    tables::run(name, &opts)
+    tables::run(name, &opts)?;
+    telemetry_finish(args)
 }
 
 /// `mpcomp plan`: run the overlap-aware planner search on a synthetic
@@ -223,6 +254,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
     if print_config(args, &run) {
         return Ok(());
     }
+    telemetry_start(args, &run);
     // the planner's legacy default shape is the paper's 1f1b pipeline;
     // the typed schedule key keeps TrainConfig's gpipe default, so only
     // an explicit schedule flag overrides 1f1b here
@@ -233,7 +265,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
     };
     let v = schedule.chunks();
     let wire = run.wire_opts()?;
-    let inputs = PlannerInputs {
+    let mut inputs = PlannerInputs {
         n_ranks: run.stages,
         schedule,
         n_mb: run.mb,
@@ -246,6 +278,13 @@ fn plan_cmd(args: &Args) -> Result<()> {
         capacity: wire.capacity,
         faults: run.fault_opts().model(),
     };
+    // --from-telemetry snapshot.json: replan against the regime a
+    // traced run actually measured instead of the named wire profile
+    if let Some(path) = args.get("from-telemetry") {
+        let measured = mpcomp::telemetry::snapshot::Measured::load(path)?;
+        let applied = planner::apply_measured(&mut inputs, &measured)?;
+        println!("replanning from {path}: measured {} override the model", applied.join(", "));
+    }
     match Objective::parse(args.get("objective").unwrap_or("makespan"))? {
         Objective::Makespan => {
             let report = planner::search(&inputs)?;
@@ -278,7 +317,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
             }
         }
     }
-    Ok(())
+    telemetry_finish(args)
 }
 
 /// `mpcomp serve`: pipelined batched inference over the compressed
@@ -291,6 +330,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if print_config(args, &run) {
         return Ok(());
     }
+    telemetry_start(args, &run);
     let opts = ServeOpts {
         stages: run.stages,
         schedule: run.train.schedule,
@@ -308,7 +348,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let (report, m) = opts.run()?;
     report.print();
     append_jsonl(&run.train.results_dir, "serve", &m)?;
-    Ok(())
+    telemetry_finish(args)
 }
 
 /// `mpcomp worker`: one pipeline stage per OS process on a synthetic
@@ -352,6 +392,7 @@ fn worker_cmd(args: &Args) -> Result<()> {
     if print_config(args, &run) {
         return Ok(());
     }
+    telemetry_start(args, &run);
     let opts = WorkerOpts {
         stages: run.stages,
         mb: run.mb,
@@ -422,5 +463,5 @@ fn worker_cmd(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         summary.save(out)?;
     }
-    Ok(())
+    telemetry_finish(args)
 }

@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::netsim::NetSim;
 use crate::util::json::Json;
 
 /// One evaluation point on a learning curve.
@@ -70,6 +71,39 @@ pub struct RunMetrics {
     /// Mean per-link wire occupancy over the serve makespan: modelled
     /// serialization time of each link's bytes divided by the makespan.
     pub wire_busy_frac: f64,
+    /// Per-`(link, direction)` wire breakdown of the run totals; empty
+    /// until [`RunMetrics::fill_links`] copies the transport ledger in.
+    pub links: Vec<LinkBreakdown>,
+}
+
+/// Wire accounting for one `(link, direction)` lane, one JSONL row in
+/// the summary's `links` array. The top-level `wire_*` totals are the
+/// sums of these rows.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkBreakdown {
+    pub link: usize,
+    /// `true` for the forward lane, `false` for backward.
+    pub fwd: bool,
+    pub messages: u64,
+    /// Compressed bytes that crossed this lane.
+    pub bytes: u64,
+    /// Uncompressed-equivalent bytes for the same messages.
+    pub raw_bytes: u64,
+    /// Summed modelled per-message transfer time on this lane.
+    pub sim_time_s: f64,
+}
+
+impl LinkBreakdown {
+    fn to_json(self) -> Json {
+        let mut o = Json::object();
+        o.set("link", Json::Num(self.link as f64))
+            .set("dir", Json::Str(if self.fwd { "fwd".into() } else { "bwd".into() }))
+            .set("messages", Json::Num(self.messages as f64))
+            .set("bytes", Json::Num(self.bytes as f64))
+            .set("raw_bytes", Json::Num(self.raw_bytes as f64))
+            .set("sim_time_s", Json::Num(self.sim_time_s));
+        o
+    }
 }
 
 impl RunMetrics {
@@ -95,6 +129,29 @@ impl RunMetrics {
             serve_throughput_rps: 0.0,
             serve_saturation_rps: 0.0,
             wire_busy_frac: 0.0,
+            links: Vec::new(),
+        }
+    }
+
+    /// Copy the transport ledger's per-`(link, direction)` rows into
+    /// the summary. Lanes that never carried a message are skipped so
+    /// unused directions (e.g. bwd in a serve run) don't pad the JSONL.
+    pub fn fill_links(&mut self, net: &NetSim) {
+        self.links.clear();
+        for (fwd, lanes) in [(true, &net.fwd), (false, &net.bwd)] {
+            for (link, s) in lanes.iter().enumerate() {
+                if s.messages == 0 {
+                    continue;
+                }
+                self.links.push(LinkBreakdown {
+                    link,
+                    fwd,
+                    messages: s.messages,
+                    bytes: s.payload_bytes,
+                    raw_bytes: s.uncompressed_bytes,
+                    sim_time_s: s.sim_time_s,
+                });
+            }
         }
     }
 
@@ -172,6 +229,7 @@ impl RunMetrics {
             .set("serve_throughput_rps", Json::Num(self.serve_throughput_rps))
             .set("serve_saturation_rps", Json::Num(self.serve_saturation_rps))
             .set("wire_busy_frac", Json::Num(self.wire_busy_frac))
+            .set("links", Json::Arr(self.links.iter().map(|l| l.to_json()).collect()))
             .set(
                 "train_loss",
                 Json::from_f64s(&self.points.iter().map(|p| p.train_loss).collect::<Vec<_>>()),
@@ -284,5 +342,40 @@ mod tests {
         let r = RunMetrics::new("x", 0, "accuracy");
         assert!(r.best_eval_on().is_nan());
         assert!(r.final_eval_on().is_nan());
+    }
+
+    #[test]
+    fn fill_links_mirrors_ledger_and_keeps_old_fields_byte_identical() {
+        let before = run().to_json().to_string();
+
+        let mut net = NetSim::new(2, crate::netsim::WireModel::datacenter());
+        net.transfer(0, crate::netsim::Dir::Fwd, 100, 400);
+        net.transfer(0, crate::netsim::Dir::Fwd, 100, 400);
+        net.transfer(1, crate::netsim::Dir::Bwd, 50, 200);
+        let mut r = run();
+        r.fill_links(&net);
+
+        // rows: the two active lanes, quiet lanes skipped
+        assert_eq!(r.links.len(), 2);
+        assert_eq!((r.links[0].link, r.links[0].fwd, r.links[0].messages), (0, true, 2));
+        assert_eq!(r.links[0].bytes, 200);
+        assert_eq!(r.links[0].raw_bytes, 800);
+        assert_eq!((r.links[1].link, r.links[1].fwd, r.links[1].bytes), (1, false, 50));
+
+        // adding the links array must not perturb any pre-existing key
+        let after = r.to_json().to_string();
+        let parsed = Json::parse(&after).unwrap();
+        assert_eq!(parsed.get("links").unwrap().arr().unwrap().len(), 2);
+        let old = Json::parse(&before).unwrap();
+        if let (Json::Obj(old), Json::Obj(new)) = (&old, &parsed) {
+            for (k, v) in old {
+                if k == "links" {
+                    continue; // the one field this run was meant to change
+                }
+                assert_eq!(new[k].to_string(), v.to_string(), "field {k} changed");
+            }
+        } else {
+            panic!("summaries must be objects");
+        }
     }
 }

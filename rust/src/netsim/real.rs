@@ -963,9 +963,51 @@ fn send_frame(
     }
     sock.flush()?;
     drop(guard);
-    *busy_s += t.elapsed().as_secs_f64();
+    let wire_s = t.elapsed().as_secs_f64();
+    *busy_s += wire_s;
     ledger.transfer(link, dir, len, raw_bytes);
-    Ok(shared.stamp())
+    let stamp = shared.stamp();
+    if crate::telemetry::enabled() {
+        crate::telemetry::on_send(link, dir, len, raw_bytes, wire_s, 0.0, 0.0);
+        crate::telemetry::span_at(
+            crate::telemetry::span::wire_track(link, dir),
+            "send",
+            "wire",
+            (stamp - wire_s).max(0.0),
+            stamp,
+            key,
+        );
+    }
+    Ok(stamp)
+}
+
+/// Keyed receive with telemetry: records the blocked wait as queue time
+/// and a `recv` wire span on the transport's monotonic clock. Shared by
+/// [`RealTransport`], [`ThreadedPort`], and [`UdpTransport`] (per-thread
+/// span buffers make this safe from any rank thread).
+pub(super) fn recv_traced(
+    shared: &Shared,
+    link: usize,
+    dir: Dir,
+    key: u64,
+    timeout: Duration,
+) -> Result<Frame, TransportError> {
+    if !crate::telemetry::enabled() {
+        return shared.recv_keyed(link, dir, key, timeout);
+    }
+    let t0 = shared.now();
+    let out = shared.recv_keyed(link, dir, key, timeout);
+    let t1 = shared.now();
+    crate::telemetry::on_recv_wait(link, dir, (t1 - t0).max(0.0));
+    crate::telemetry::span_at(
+        crate::telemetry::span::wire_track(link, dir),
+        "recv",
+        "wire",
+        t0,
+        t1,
+        key,
+    );
+    out
 }
 
 impl Transport for RealTransport {
@@ -1003,7 +1045,7 @@ impl Transport for RealTransport {
         if link >= self.num_links() {
             return Err(TransportError::NoSuchLink { link });
         }
-        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
+        recv_traced(&self.shared, link, dir, key, self.recv_timeout)
     }
 
     fn clock(&self, _stage: usize) -> f64 {
@@ -1126,7 +1168,7 @@ impl Transport for ThreadedPort {
         if link >= self.num_links() {
             return Err(TransportError::NoSuchLink { link });
         }
-        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
+        recv_traced(&self.shared, link, dir, key, self.recv_timeout)
     }
 
     fn clock(&self, _stage: usize) -> f64 {

@@ -455,6 +455,20 @@ impl SimNet {
         let arrival = ch.send(tx, lat, now);
         ch.deliver(Message { key, bytes, arrival });
         self.ledger.transfer(link, dir, bytes, raw_bytes);
+        if crate::telemetry::enabled() {
+            // queue wait = whatever of the arrival the channel's bounded
+            // window added beyond this message's own tx + latency
+            let queue_s = (arrival - now - tx - lat).max(0.0);
+            crate::telemetry::on_send(link, dir, bytes, raw_bytes, tx, lat, queue_s);
+            crate::telemetry::span_at(
+                crate::telemetry::span::wire_track(link, dir),
+                "send",
+                "wire",
+                now,
+                arrival,
+                key,
+            );
+        }
         arrival
     }
 

@@ -45,7 +45,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::real::{hello_bytes, parse_hello, slot_index, Rendezvous, Shared, HELLO_LEN};
+use super::real::{
+    hello_bytes, parse_hello, recv_traced, slot_index, Rendezvous, Shared, HELLO_LEN,
+};
 use super::transport::{Backend, Frame, Payload, Transport, TransportError};
 use super::{Dir, NetSim, WireModel};
 use crate::util::rng::Rng;
@@ -484,6 +486,7 @@ fn handle_datagram(lane: &Lane, shared: &Shared, b: &[u8]) {
                 p.last_sent = now;
                 p.attempts += 1;
                 st.out.retransmits += 1;
+                crate::telemetry::on_retransmit(lane.link, lane.send_dir);
             }
         }
         T_HELLO => {
@@ -554,6 +557,7 @@ fn tick(lane: &Lane, _shared: &Shared) {
         p.last_sent = now;
         p.attempts += 1;
         st.out.retransmits += 1;
+        crate::telemetry::on_retransmit(lane.link, lane.send_dir);
     }
 }
 
@@ -575,6 +579,8 @@ fn lane_loop(lane: Arc<Lane>, shared: Arc<Shared>, stop: Arc<AtomicBool>, backlo
             break;
         }
     }
+    // retransmit counters recorded on this reader thread must outlive it
+    crate::telemetry::drain_thread();
 }
 
 // ---------------------------------------------------------------------------
@@ -984,16 +990,29 @@ impl Transport for UdpTransport {
                 st.out.fresh += 1;
             }
         }
-        self.busy_s += t.elapsed().as_secs_f64();
+        let wire_s = t.elapsed().as_secs_f64();
+        self.busy_s += wire_s;
         self.ledger.transfer(link, dir, bytes.len(), raw_bytes);
-        Ok(self.shared.stamp())
+        let stamp = self.shared.stamp();
+        if crate::telemetry::enabled() {
+            crate::telemetry::on_send(link, dir, bytes.len(), raw_bytes, wire_s, 0.0, 0.0);
+            crate::telemetry::span_at(
+                crate::telemetry::span::wire_track(link, dir),
+                "send",
+                "wire",
+                (stamp - wire_s).max(0.0),
+                stamp,
+                key,
+            );
+        }
+        Ok(stamp)
     }
 
     fn recv(&mut self, link: usize, dir: Dir, key: u64) -> Result<Frame, TransportError> {
         if link >= self.num_links {
             return Err(TransportError::NoSuchLink { link });
         }
-        self.shared.recv_keyed(link, dir, key, self.recv_timeout)
+        recv_traced(&self.shared, link, dir, key, self.recv_timeout)
     }
 
     fn clock(&self, _stage: usize) -> f64 {

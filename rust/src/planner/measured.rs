@@ -1,0 +1,154 @@
+//! Telemetry-driven replanning (L7 → L5): substitute *measured* regime
+//! values from a previous run's [`TelemetrySnapshot`] for the modelled
+//! op times and wire model the planner would otherwise search against.
+//!
+//! This closes the first half of the observe → replan loop: a run
+//! traced with `--trace run.json` (or `telemetry.snapshot=snap.json`)
+//! records what the wire and the ops actually cost, and
+//! `mpcomp plan --from-telemetry snap.json` re-searches the spec
+//! lattice against those numbers instead of the named wire profile.
+//! When the deployed regime has drifted from the profile (a "wan" link
+//! behind a "datacenter" model, slower ops than the default 20/40 ms),
+//! the telemetry-informed plan strictly dominates the modelled one —
+//! pinned by the diverged-regime test below.
+//!
+//! [`TelemetrySnapshot`]: crate::telemetry::TelemetrySnapshot
+
+use anyhow::{bail, Result};
+
+use crate::compression::Spec;
+use crate::coordinator::simexec;
+use crate::telemetry::snapshot::Measured;
+
+use super::cost::PlannerInputs;
+use super::plan::Plan;
+
+/// Overlay the measured regime onto `inputs`, field by field. Values
+/// the snapshot did not record (`None`) leave the modelled input
+/// untouched, so a counters-only run still improves the wire model
+/// while keeping the configured op costs. Returns the list of fields
+/// that were overridden (for the CLI to echo), or an error when the
+/// snapshot measured nothing at all.
+pub fn apply_measured(inputs: &mut PlannerInputs, m: &Measured) -> Result<Vec<&'static str>> {
+    let mut applied = Vec::new();
+    // op spans time one chunk op, and the planner's fields are
+    // per-chunk too — no /v rescale on either side
+    if let Some(s) = m.fwd_op_s {
+        inputs.fwd_op_s = s;
+        applied.push("fwd_op_s");
+    }
+    if let Some(s) = m.bwd_op_s {
+        inputs.bwd_op_s = s;
+        applied.push("bwd_op_s");
+    }
+    if let Some(b) = m.bandwidth_bytes_per_s {
+        if b > 0.0 && b.is_finite() {
+            inputs.model.bandwidth_bytes_per_s = b;
+            applied.push("bandwidth_bytes_per_s");
+        }
+    }
+    if let Some(l) = m.latency_s {
+        if l >= 0.0 && l.is_finite() {
+            inputs.model.latency_s = l;
+            applied.push("latency_s");
+        }
+    }
+    if applied.is_empty() {
+        bail!(
+            "telemetry snapshot measured nothing usable (no op spans, no wire \
+             counters); re-run the source run with telemetry enabled"
+        );
+    }
+    Ok(applied)
+}
+
+/// Score an existing plan on `inputs`' regime through the event-driven
+/// simulator — the apples-to-apples comparison the diverged-regime test
+/// (and anyone A/B-ing a modelled plan against a replanned one) needs.
+pub fn replay_makespan(inputs: &PlannerInputs, plan: &Plan) -> Result<f64> {
+    let fwd: Vec<Spec> = plan.boundaries.iter().map(|b| b.fwd).collect();
+    let bwd: Vec<Spec> = plan.boundaries.iter().map(|b| b.bwd).collect();
+    let spec = inputs.sim_spec(&fwd, &bwd);
+    Ok(simexec::simulate(&inputs.ops()?, &spec).makespan_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Schedule;
+    use crate::coordinator::pipeline;
+    use crate::netsim::WireModel;
+
+    fn inputs(model: WireModel) -> PlannerInputs {
+        let (stages, v) = (4, 1);
+        PlannerInputs {
+            n_ranks: stages,
+            schedule: Schedule::OneFOneB,
+            n_mb: 8,
+            fwd_op_s: 0.020,
+            bwd_op_s: 0.040,
+            recompute_s: 0.0,
+            elems: vec![16_384; pipeline::num_boundaries(stages, v)],
+            model,
+            capacity: crate::netsim::DEFAULT_QUEUE_CAPACITY,
+            faults: None,
+        }
+    }
+
+    #[test]
+    fn overlay_is_field_by_field() {
+        let mut i = inputs(WireModel::datacenter());
+        let applied = apply_measured(
+            &mut i,
+            &Measured {
+                fwd_op_s: None,
+                bwd_op_s: Some(0.055),
+                bandwidth_bytes_per_s: Some(12.5e6),
+                latency_s: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(applied, vec!["bwd_op_s", "bandwidth_bytes_per_s"]);
+        assert_eq!(i.fwd_op_s, 0.020, "unmeasured field keeps the model");
+        assert_eq!(i.bwd_op_s, 0.055);
+        assert_eq!(i.model.bandwidth_bytes_per_s, 12.5e6);
+        assert_eq!(i.model.latency_s, WireModel::datacenter().latency_s);
+
+        let empty = Measured::default();
+        assert!(apply_measured(&mut i, &empty).is_err());
+    }
+
+    /// The pinned diverged-regime fixture: the operator *thinks* the
+    /// links are datacenter-class, but the measured run saw WAN-class
+    /// bandwidth/latency. Replanning from telemetry must produce a plan
+    /// whose makespan on the true (WAN) wire beats the plan the stale
+    /// model picks — this is the payoff the replanning loop exists for.
+    #[test]
+    fn telemetry_informed_plan_beats_stale_model_on_diverged_wire() {
+        // searched against the stale model
+        let stale = inputs(WireModel::datacenter());
+        let modelled = crate::planner::search(&stale).unwrap();
+
+        // searched against what telemetry measured (the true regime)
+        let mut informed = inputs(WireModel::datacenter());
+        let wan = WireModel::wan();
+        let measured = Measured {
+            fwd_op_s: Some(stale.fwd_op_s),
+            bwd_op_s: Some(stale.bwd_op_s),
+            bandwidth_bytes_per_s: Some(wan.bandwidth_bytes_per_s),
+            latency_s: Some(wan.latency_s),
+        };
+        apply_measured(&mut informed, &measured).unwrap();
+        assert_eq!(informed.model.bandwidth_bytes_per_s, wan.bandwidth_bytes_per_s);
+        let replanned = crate::planner::search(&informed).unwrap();
+
+        // score both plans on the true wire through the same simulator
+        let truth = inputs(wan);
+        let stale_score = replay_makespan(&truth, &modelled.plan).unwrap();
+        let informed_score = replay_makespan(&truth, &replanned.plan).unwrap();
+        assert!(
+            informed_score < stale_score,
+            "telemetry-informed plan {informed_score}s !< modelled plan {stale_score}s"
+        );
+    }
+}

@@ -37,6 +37,7 @@
 #![warn(missing_docs)]
 
 pub mod cost;
+pub mod measured;
 pub mod plan;
 pub mod search;
 
@@ -44,6 +45,7 @@ pub use cost::{
     allreduce_frontier, allreduce_lattice, bwd_lattice, frontier, fwd_lattice, Candidate,
     PlannerInputs,
 };
+pub use measured::{apply_measured, replay_makespan};
 pub use plan::{BoundaryPlan, Plan, PlanError, PlanMode};
 pub use search::{
     search, search_allreduce, search_latency, AllreduceInputs, AllreduceReport, BaselineRow,

@@ -1,0 +1,143 @@
+//! Chrome trace-event export (`--trace out.json`).
+//!
+//! Emits the JSON object form of the trace-event format — a
+//! `traceEvents` array of `ph:"X"` complete events plus `ph:"M"`
+//! thread-name metadata — loadable in `chrome://tracing` and Perfetto.
+//! One track (tid) per rank/replica thread; wire and codec activity sit
+//! on their own track ranges (see [`super::span`]). The two clock
+//! domains are split across pids: pid 0 carries transport-clock spans
+//! (virtual seconds under SimNet), pid 1 carries wall-clock codec
+//! timers — so timestamps only ever compare within a pid.
+//!
+//! The full [`TelemetrySnapshot`] rides along under the top-level
+//! `"telemetry"` key (trace viewers ignore unknown keys), so one
+//! artifact serves both the trace viewer and
+//! `mpcomp plan --from-telemetry`.
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use super::snapshot::TelemetrySnapshot;
+use super::span::{track_label, SpanEvent};
+use crate::util::json::Json;
+
+/// Build the trace-file JSON for a set of drained spans + the snapshot.
+pub fn trace_json(snapshot: &TelemetrySnapshot, spans: &[SpanEvent]) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+
+    // one thread_name metadata event per (pid, tid) in use
+    let tracks: BTreeSet<(u8, u32)> =
+        spans.iter().map(|s| (u8::from(s.wall), s.track)).collect();
+    for (pid, tid) in tracks {
+        let mut args = Json::object();
+        args.set("name", Json::Str(track_label(tid)));
+        let mut m = Json::object();
+        m.set("name", Json::Str("thread_name".to_string()));
+        m.set("ph", Json::Str("M".to_string()));
+        m.set("pid", Json::Num(pid as f64));
+        m.set("tid", Json::Num(tid as f64));
+        m.set("args", args);
+        events.push(m);
+    }
+
+    for s in spans {
+        let mut args = Json::object();
+        args.set("key", Json::Num(s.key as f64));
+        let mut e = Json::object();
+        e.set("name", Json::Str(s.name.to_string()));
+        e.set("cat", Json::Str(s.cat.to_string()));
+        e.set("ph", Json::Str("X".to_string()));
+        e.set("ts", Json::Num(s.t0_s * 1e6));
+        e.set("dur", Json::Num(((s.t1_s - s.t0_s) * 1e6).max(0.0)));
+        e.set("pid", Json::Num(u8::from(s.wall) as f64));
+        e.set("tid", Json::Num(s.track as f64));
+        e.set("args", args);
+        events.push(e);
+    }
+
+    let mut o = Json::object();
+    o.set("displayTimeUnit", Json::Str("ms".to_string()));
+    o.set("clock", Json::Str(snapshot.clock.clone()));
+    o.set("traceEvents", Json::Arr(events));
+    o.set("telemetry", snapshot.to_json());
+    o
+}
+
+/// Write the trace file (see [`trace_json`]).
+pub fn export(path: &str, snapshot: &TelemetrySnapshot, spans: &[SpanEvent]) -> Result<()> {
+    let json = trace_json(snapshot, spans).to_string();
+    std::fs::write(path, json).with_context(|| format!("writing trace file {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::snapshot::{Measured, SNAPSHOT_VERSION};
+
+    fn tiny_snapshot() -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            version: SNAPSHOT_VERSION,
+            clock: "virtual".to_string(),
+            spans_dropped: 0,
+            links: Vec::new(),
+            spans: Vec::new(),
+            measured: Measured::default(),
+        }
+    }
+
+    /// Golden fragment, pinned like docs/check_wire_golden.py pins the
+    /// wire encodings: the exact serialization of one metadata event and
+    /// one complete event. Any drift here breaks every trace consumer.
+    #[test]
+    fn golden_trace_fragment() {
+        let spans = [SpanEvent {
+            track: 0,
+            name: "fwd",
+            cat: "op",
+            t0_s: 1.0,
+            t1_s: 1.5,
+            key: 7,
+            wall: false,
+        }];
+        let j = trace_json(&tiny_snapshot(), &spans);
+        let events = j.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(
+            events[0].to_string(),
+            r#"{"args":{"name":"rank 0"},"name":"thread_name","ph":"M","pid":0,"tid":0}"#
+        );
+        assert_eq!(
+            events[1].to_string(),
+            r#"{"args":{"key":7},"cat":"op","dur":500000,"name":"fwd","ph":"X","pid":0,"tid":0,"ts":1000000}"#
+        );
+        assert_eq!(j.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+        // the snapshot rides along for plan --from-telemetry
+        assert_eq!(j.get("telemetry").unwrap().get("version").unwrap().usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn wall_spans_land_on_their_own_pid() {
+        let spans = [
+            SpanEvent { track: 0, name: "fwd", cat: "op", t0_s: 0.0, t1_s: 1.0, key: 0, wall: false },
+            SpanEvent { track: 2001, name: "encode", cat: "codec", t0_s: 0.0, t1_s: 0.5, key: 0, wall: true },
+        ];
+        let j = trace_json(&tiny_snapshot(), &spans);
+        let events = j.get("traceEvents").unwrap().arr().unwrap();
+        // 2 metadata + 2 spans
+        assert_eq!(events.len(), 4);
+        let pids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().str().unwrap() == "X")
+            .map(|e| e.get("pid").unwrap().num().unwrap())
+            .collect();
+        assert_eq!(pids, vec![0.0, 1.0]);
+        let meta_names: Vec<String> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().str().unwrap() == "M")
+            .map(|e| e.get("args").unwrap().get("name").unwrap().str().unwrap().to_string())
+            .collect();
+        assert_eq!(meta_names, vec!["rank 0".to_string(), "codec link 1".to_string()]);
+    }
+}

@@ -1,0 +1,296 @@
+//! The shared histogram + quantile substrate of the telemetry layer.
+//!
+//! One percentile implementation for the whole crate: serve-mode
+//! p50/p99, telemetry snapshot distributions, and any future consumer
+//! all call [`quantile_sorted`] (the upper order statistic the serve
+//! layer pinned first). A [`Hist`] combines three views of a stream of
+//! samples: exact count/sum/min/max, power-of-two log buckets (compact,
+//! mergeable, deterministic), and — when built with [`Hist::exact`] —
+//! the raw samples, so quantiles stay *exact* where accuracy is pinned
+//! (serve latency) and fall back to bucket upper bounds where footprint
+//! matters (per-link wire histograms over millions of messages).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Upper order statistic: the smallest sample with at least a `q`
+/// fraction of the data at or below it. `sorted` must be ascending
+/// (ties arbitrary); returns NaN on an empty slice. This is the one
+/// quantile definition in the crate — `coordinator::serve` re-exports
+/// it and the serve tests pin its semantics.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Log-bucket index of a positive value: its binary exponent, so bucket
+/// `b` covers `[2^b, 2^(b+1))`. Zero and negative values get the
+/// sentinel bucket. Pure bit manipulation — no float math, so bucketing
+/// is bit-deterministic across platforms.
+pub fn bucket_of(v: f64) -> i16 {
+    if !(v > 0.0) {
+        return ZERO_BUCKET;
+    }
+    (((v.to_bits() >> 52) & 0x7ff) as i16) - 1023
+}
+
+/// Bucket assigned to zero, negative, and NaN samples.
+pub const ZERO_BUCKET: i16 = i16::MIN;
+
+/// A mergeable histogram (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: BTreeMap<i16, u64>,
+    samples: Option<Vec<f64>>,
+}
+
+impl Hist {
+    /// A bucket-only histogram (O(#distinct exponents) memory).
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// A histogram that additionally retains every sample, making
+    /// [`Hist::quantile`] exact. Use only for bounded streams (serve
+    /// requests), not per-message wire counters.
+    pub fn exact() -> Hist {
+        Hist { samples: Some(Vec::new()), ..Hist::default() }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+        self.count += 1;
+        self.sum += v;
+        *self.buckets.entry(bucket_of(v)).or_insert(0) += 1;
+        if let Some(s) = &mut self.samples {
+            s.push(v);
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean sample, NaN when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Smallest sample, NaN when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample, NaN when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// The `q`-quantile. Exact (via [`quantile_sorted`] over the
+    /// retained samples) for [`Hist::exact`] histograms — bit-identical
+    /// to sorting the stream yourself — otherwise the upper edge of the
+    /// bucket holding the order statistic, clamped to the observed max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if let Some(s) = &self.samples {
+            let mut sorted = s.clone();
+            sorted.sort_by(f64::total_cmp);
+            return quantile_sorted(&sorted, q);
+        }
+        // rank of the upper order statistic among `count` samples
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (&b, &c) in &self.buckets {
+            seen += c;
+            if seen > rank {
+                if b == ZERO_BUCKET {
+                    return self.min.min(0.0);
+                }
+                // upper edge of [2^b, 2^(b+1))
+                return f64::powi(2.0, (b + 1) as i32).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one. Exactness is kept only if
+    /// both sides retain samples.
+    pub fn merge(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        for (&b, &c) in &other.buckets {
+            *self.buckets.entry(b).or_insert(0) += c;
+        }
+        match (&mut self.samples, &other.samples) {
+            (Some(mine), Some(theirs)) => mine.extend_from_slice(theirs),
+            (s, _) => *s = None,
+        }
+    }
+
+    /// JSON form: `{"count":..,"sum":..,"min":..,"max":..,
+    /// "buckets":[[exp,count],..]}` (buckets ascending by exponent;
+    /// retained samples are never serialized).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("count", Json::Num(self.count as f64));
+        o.set("sum", Json::Num(self.sum));
+        if self.count > 0 {
+            o.set("min", Json::Num(self.min));
+            o.set("max", Json::Num(self.max));
+        }
+        o.set(
+            "buckets",
+            Json::Arr(
+                self.buckets
+                    .iter()
+                    .map(|(&b, &c)| {
+                        Json::Arr(vec![Json::Num(b as f64), Json::Num(c as f64)])
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_sorted_is_an_upper_order_statistic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 3.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 4.0);
+        assert_eq!(quantile_sorted(&[7.5], 0.99), 7.5);
+        assert!(quantile_sorted(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn bucket_is_the_binary_exponent() {
+        assert_eq!(bucket_of(1.0), 0);
+        assert_eq!(bucket_of(1.5), 0);
+        assert_eq!(bucket_of(2.0), 1);
+        assert_eq!(bucket_of(1024.0), 10);
+        assert_eq!(bucket_of(0.5), -1);
+        assert_eq!(bucket_of(0.0), ZERO_BUCKET);
+        assert_eq!(bucket_of(-3.0), ZERO_BUCKET);
+    }
+
+    #[test]
+    fn exact_hist_matches_sorted_quantile_bitwise() {
+        let mut h = Hist::exact();
+        let mut xs: Vec<f64> = (0..37).map(|i| ((i * 7919) % 101) as f64 * 0.013).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(f64::total_cmp);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile(q).to_bits(), quantile_sorted(&xs, q).to_bits(), "q={q}");
+        }
+        assert_eq!(h.count(), 37);
+        assert_eq!(h.min().to_bits(), xs[0].to_bits());
+        assert_eq!(h.max().to_bits(), xs[36].to_bits());
+    }
+
+    #[test]
+    fn bucket_quantile_bounds_the_exact_one() {
+        let mut bucketed = Hist::new();
+        let mut exact = Hist::exact();
+        for i in 1..=1000 {
+            let v = i as f64 * 0.37;
+            bucketed.record(v);
+            exact.record(v);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let e = exact.quantile(q);
+            let b = bucketed.quantile(q);
+            // upper edge: never below the true quantile, at most 2x over
+            assert!(b >= e, "q={q}: bucket {b} < exact {e}");
+            assert!(b <= 2.0 * e, "q={q}: bucket {b} > 2x exact {e}");
+        }
+    }
+
+    #[test]
+    fn merge_accumulates_and_keeps_exactness() {
+        let mut a = Hist::exact();
+        let mut b = Hist::exact();
+        for v in [1.0, 5.0, 9.0] {
+            a.record(v);
+        }
+        for v in [2.0, 4.0] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.quantile(0.5), 4.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 9.0);
+        // merging a bucket-only hist drops exactness but keeps counts
+        let mut c = Hist::new();
+        c.record(100.0);
+        a.merge(&c);
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut h = Hist::new();
+        h.record(3.0);
+        h.record(5.0);
+        assert_eq!(
+            h.to_json().to_string(),
+            r#"{"buckets":[[1,1],[2,1]],"count":2,"max":5,"min":3,"sum":8}"#
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! L7 — structured tracing and telemetry.
+//!
+//! A cheap, always-compiled, runtime-gated observability layer threaded
+//! through every hot path: pipeline ops, codec encode/decode, feedback
+//! apply, allreduce hops, transport send/recv, and serve admission.
+//! Three products come out of one recording pass:
+//!
+//! * **Spans** ([`span::SpanEvent`]) — begin/end intervals per track,
+//!   exported as Chrome trace-event JSON (`--trace out.json`, viewable
+//!   in `chrome://tracing` / Perfetto) by [`chrome`].
+//! * **Per-`(link, dir, channel)` counters** — frames, bytes on wire,
+//!   raw bytes, retransmits, queue wait, wire time, plus log-bucketed
+//!   [`hist::Hist`]s of message sizes and wire times.
+//! * A versioned [`snapshot::TelemetrySnapshot`] rolling both up, with
+//!   *measured* op times / bandwidth / latency — the input
+//!   `mpcomp plan --from-telemetry` replans against.
+//!
+//! **Record path contract:** the global gate is one relaxed atomic
+//! load; when disabled every hook returns before any clock read,
+//! allocation, or lock (asserted by `tests/telemetry.rs`). When enabled,
+//! records go to **per-thread buffers** (a `thread_local` — no locks,
+//! no contention on the hot path) and are folded into the global store
+//! by [`drain_thread`], called at rank-thread join points (the threaded
+//! executor, UDP reader shutdown) and before any snapshot/export.
+//!
+//! **Clock domains:** SimNet runs record transport-clock spans in
+//! *virtual* seconds; real transports record their monotonic epoch.
+//! Codec timers ([`timer`]) always use the telemetry layer's own
+//! wall-clock epoch (`wall = true` spans). Snapshots aggregate only
+//! transport-clock spans, which is what makes a SimNet snapshot
+//! bit-deterministic for a fixed seed.
+
+pub mod chrome;
+pub mod hist;
+pub mod snapshot;
+pub mod span;
+
+pub use hist::Hist;
+pub use snapshot::TelemetrySnapshot;
+pub use span::SpanEvent;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::netsim::Dir;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SPANS: AtomicBool = AtomicBool::new(true);
+static VIRTUAL_CLOCK: AtomicBool = AtomicBool::new(true);
+static CLOCK_READS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL: Mutex<Store> = Mutex::new(Store::new());
+static SNAPSHOT_PATH: Mutex<Option<String>> = Mutex::new(None);
+
+/// Per-thread span buffers are capped; overflow bumps a visible
+/// `spans_dropped` counter in the snapshot instead of silently growing.
+const MAX_THREAD_SPANS: usize = 1 << 20;
+
+thread_local! {
+    static LOCAL: RefCell<Store> = const { RefCell::new(Store::new()) };
+    static CHANNEL: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Is the telemetry layer recording? One relaxed load — the only cost
+/// every hot path pays when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on/off (counters and spans).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Are spans being recorded? (`telemetry.spans` can disable span
+/// buffers while keeping counters.)
+#[inline]
+pub fn spans_on() -> bool {
+    enabled() && SPANS.load(Ordering::Relaxed)
+}
+
+/// Enable/disable span recording (counters are unaffected).
+pub fn set_spans(on: bool) {
+    SPANS.store(on, Ordering::Relaxed);
+}
+
+/// Declare the run's transport clock domain: `true` for SimNet virtual
+/// clocks, `false` for real transports' monotonic time. Set by the
+/// coordinator entry points, not by transport constructors (scratch
+/// simulators must not flip a real run's domain).
+pub fn set_virtual_clock(v: bool) {
+    VIRTUAL_CLOCK.store(v, Ordering::Relaxed);
+}
+
+/// The declared transport clock domain (see [`set_virtual_clock`]).
+pub fn clock_is_virtual() -> bool {
+    VIRTUAL_CLOCK.load(Ordering::Relaxed)
+}
+
+/// Monotonic wall-clock reads performed by the telemetry layer since
+/// process start. The disabled-mode zero-syscall assertion watches this
+/// stay flat.
+pub fn clock_reads() -> u64 {
+    CLOCK_READS.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Seconds since the telemetry wall-clock epoch (counted, see
+/// [`clock_reads`]).
+pub fn now_s() -> f64 {
+    CLOCK_READS.fetch_add(1, Ordering::Relaxed);
+    epoch().elapsed().as_secs_f64()
+}
+
+/// Channel hint for data-parallel allreduce traffic — keeps ring hops
+/// out of the boundary-numbered rows in the snapshot.
+pub const CHANNEL_ALLREDUCE: u32 = u32::MAX;
+
+/// Hint the boundary/channel id for subsequent sends on this thread,
+/// so transports — which only see `(link, dir, key)` — can attribute
+/// counters per channel. A plain thread-local cell: cheap enough to set
+/// per message.
+#[inline]
+pub fn set_channel_hint(channel: u32) {
+    if enabled() {
+        CHANNEL.with(|c| c.set(channel));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counters
+// ---------------------------------------------------------------------------
+
+/// Identity of one counter row: physical link, direction, and the
+/// channel (boundary) hinted by the coordinator layer.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub(crate) struct CounterKey {
+    pub link: u32,
+    pub dir: u8,
+    pub channel: u32,
+}
+
+/// Accumulated wire counters for one [`CounterKey`].
+#[derive(Clone, Debug)]
+pub(crate) struct LinkCounters {
+    pub frames: u64,
+    pub wire_bytes: u64,
+    pub raw_bytes: u64,
+    pub retransmits: u64,
+    pub wire_time_s: f64,
+    pub queue_wait_s: f64,
+    pub lat_min_s: f64,
+    pub bytes_hist: Hist,
+    pub wire_s_hist: Hist,
+}
+
+impl Default for LinkCounters {
+    fn default() -> Self {
+        LinkCounters {
+            frames: 0,
+            wire_bytes: 0,
+            raw_bytes: 0,
+            retransmits: 0,
+            wire_time_s: 0.0,
+            queue_wait_s: 0.0,
+            lat_min_s: f64::INFINITY,
+            bytes_hist: Hist::new(),
+            wire_s_hist: Hist::new(),
+        }
+    }
+}
+
+impl LinkCounters {
+    fn merge(&mut self, other: &LinkCounters) {
+        self.frames += other.frames;
+        self.wire_bytes += other.wire_bytes;
+        self.raw_bytes += other.raw_bytes;
+        self.retransmits += other.retransmits;
+        self.wire_time_s += other.wire_time_s;
+        self.queue_wait_s += other.queue_wait_s;
+        self.lat_min_s = self.lat_min_s.min(other.lat_min_s);
+        self.bytes_hist.merge(&other.bytes_hist);
+        self.wire_s_hist.merge(&other.wire_s_hist);
+    }
+}
+
+/// Everything one thread (or the drained global) has recorded.
+#[derive(Debug)]
+pub(crate) struct Store {
+    pub spans: Vec<SpanEvent>,
+    pub dropped: u64,
+    pub counters: BTreeMap<CounterKey, LinkCounters>,
+}
+
+impl Store {
+    const fn new() -> Store {
+        Store { spans: Vec::new(), dropped: 0, counters: BTreeMap::new() }
+    }
+
+    fn absorb(&mut self, mut other: Store) {
+        self.spans.append(&mut other.spans);
+        self.dropped += other.dropped;
+        for (k, c) in &other.counters {
+            self.counters.entry(*k).or_default().merge(c);
+        }
+    }
+}
+
+impl Default for Store {
+    fn default() -> Store {
+        Store::new()
+    }
+}
+
+/// Record one message sent on a wire: payload and raw bytes plus the
+/// transmission time (`tx_s`: serialization on SimNet, measured
+/// write+flush on real transports), one-way latency (SimNet only; pass
+/// 0 where unknown) and queue wait ahead of the transmission.
+pub fn on_send(link: usize, dir: Dir, bytes: usize, raw_bytes: usize, tx_s: f64, lat_s: f64, queue_s: f64) {
+    if !enabled() {
+        return;
+    }
+    let channel = CHANNEL.with(|c| c.get());
+    LOCAL.with(|l| {
+        let mut st = l.borrow_mut();
+        let c = st
+            .counters
+            .entry(CounterKey { link: link as u32, dir: dir.index() as u8, channel })
+            .or_default();
+        c.frames += 1;
+        c.wire_bytes += bytes as u64;
+        c.raw_bytes += raw_bytes as u64;
+        c.wire_time_s += tx_s;
+        c.queue_wait_s += queue_s;
+        if lat_s < c.lat_min_s {
+            c.lat_min_s = lat_s;
+        }
+        c.bytes_hist.record(bytes as f64);
+        c.wire_s_hist.record(tx_s);
+    });
+}
+
+/// Record time a receiver spent blocked waiting for a keyed message.
+pub fn on_recv_wait(link: usize, dir: Dir, wait_s: f64) {
+    if !enabled() {
+        return;
+    }
+    let channel = CHANNEL.with(|c| c.get());
+    LOCAL.with(|l| {
+        let mut st = l.borrow_mut();
+        let c = st
+            .counters
+            .entry(CounterKey { link: link as u32, dir: dir.index() as u8, channel })
+            .or_default();
+        c.queue_wait_s += wait_s;
+    });
+}
+
+/// Record one retransmitted datagram on a lossy wire.
+pub fn on_retransmit(link: usize, dir: Dir) {
+    if !enabled() {
+        return;
+    }
+    LOCAL.with(|l| {
+        let mut st = l.borrow_mut();
+        let c = st
+            .counters
+            .entry(CounterKey { link: link as u32, dir: dir.index() as u8, channel: 0 })
+            .or_default();
+        c.retransmits += 1;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+fn push_span(e: SpanEvent) {
+    LOCAL.with(|l| {
+        let mut st = l.borrow_mut();
+        if st.spans.len() >= MAX_THREAD_SPANS {
+            st.dropped += 1;
+        } else {
+            st.spans.push(e);
+        }
+    });
+}
+
+/// Record a transport-clock span with explicit endpoints (virtual
+/// seconds under SimNet, the transport's monotonic epoch otherwise).
+pub fn span_at(track: u32, name: &'static str, cat: &'static str, t0_s: f64, t1_s: f64, key: u64) {
+    if !spans_on() {
+        return;
+    }
+    push_span(SpanEvent { track, name, cat, t0_s, t1_s, key, wall: false });
+}
+
+/// A wall-clock span in flight; see [`timer`].
+pub struct Timer {
+    t0: f64,
+}
+
+/// Start a wall-clock span (codec work and other regions with no
+/// transport clock). Reads no clock when spans are off.
+pub fn timer() -> Timer {
+    if spans_on() {
+        Timer { t0: now_s() }
+    } else {
+        Timer { t0: f64::NAN }
+    }
+}
+
+impl Timer {
+    /// Close the span and record it (no-op if started disabled).
+    pub fn stop(self, track: u32, name: &'static str, cat: &'static str, key: u64) {
+        if self.t0.is_nan() {
+            return;
+        }
+        let t1 = now_s();
+        push_span(SpanEvent { track, name, cat, t0_s: self.t0, t1_s: t1, key, wall: true });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drain / snapshot / reset
+// ---------------------------------------------------------------------------
+
+/// Fold this thread's buffers into the global store. Called at every
+/// rank-thread join point and implicitly before [`snapshot`] /
+/// [`take_spans`] (for the calling thread).
+pub fn drain_thread() {
+    let local = LOCAL.with(|l| std::mem::take(&mut *l.borrow_mut()));
+    if local.spans.is_empty() && local.counters.is_empty() && local.dropped == 0 {
+        return;
+    }
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    g.absorb(local);
+}
+
+/// All drained spans, sorted deterministically (track, then time, then
+/// name) — the Chrome trace export order.
+pub fn take_spans() -> Vec<SpanEvent> {
+    drain_thread();
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut spans = g.spans.clone();
+    spans.sort_by(|a, b| {
+        a.track
+            .cmp(&b.track)
+            .then(a.t0_s.total_cmp(&b.t0_s))
+            .then(a.t1_s.total_cmp(&b.t1_s))
+            .then(a.name.cmp(b.name))
+            .then(a.key.cmp(&b.key))
+    });
+    spans
+}
+
+/// Roll the drained counters and transport-clock spans up into a
+/// versioned snapshot (drains the calling thread first).
+pub fn snapshot() -> TelemetrySnapshot {
+    drain_thread();
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    snapshot::build(&g, clock_is_virtual())
+}
+
+/// Clear the global store and the *calling thread's* buffers (other
+/// threads' locals drain into the fresh store at their next join).
+/// Between-run hygiene for tests and multi-run commands.
+pub fn reset() {
+    LOCAL.with(|l| *l.borrow_mut() = Store::new());
+    CHANNEL.with(|c| c.set(0));
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Store::new();
+}
+
+/// Where `telemetry.snapshot` asked the run to write the bare snapshot
+/// JSON (picked up by the CLI epilogue).
+pub fn set_snapshot_path(p: Option<String>) {
+    *SNAPSHOT_PATH.lock().unwrap_or_else(|e| e.into_inner()) = p;
+}
+
+/// Take (and clear) the configured snapshot path.
+pub fn take_snapshot_path() -> Option<String> {
+    SNAPSHOT_PATH.lock().unwrap_or_else(|e| e.into_inner()).take()
+}
+
+/// Serialize access to the global telemetry state for tests that
+/// enable/reset it (tests in one binary run concurrently).
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}

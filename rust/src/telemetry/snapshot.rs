@@ -1,0 +1,306 @@
+//! The versioned `TelemetrySnapshot` artifact: per-`(link, dir,
+//! channel)` counter rows plus transport-clock span statistics, rolled
+//! up with *measured* regime values (op times, bandwidth, latency) —
+//! the input `mpcomp plan --from-telemetry` replans against.
+//!
+//! Only transport-clock spans enter the roll-up: under SimNet those are
+//! virtual seconds, so for a fixed seed the snapshot JSON is
+//! bit-identical across runs (pinned by `tests/telemetry.rs`).
+//! Wall-clock codec timers appear in the Chrome trace but never here.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::hist::Hist;
+use super::Store;
+use crate::util::json::Json;
+
+/// Snapshot schema version (bump on any shape change).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// One counter row of the snapshot.
+#[derive(Clone, Debug)]
+pub struct LinkRow {
+    /// Physical wire link.
+    pub link: u32,
+    /// Direction name (`fwd` / `bwd`).
+    pub dir: String,
+    /// Channel (boundary) id hinted by the coordinator; 0 when unknown.
+    pub channel: u32,
+    /// Messages sent.
+    pub frames: u64,
+    /// Bytes that crossed the wire.
+    pub wire_bytes: u64,
+    /// Uncompressed-equivalent bytes.
+    pub raw_bytes: u64,
+    /// Retransmitted datagrams (lossy transports).
+    pub retransmits: u64,
+    /// Summed per-message transmission time.
+    pub wire_time_s: f64,
+    /// Summed queue/blocking wait.
+    pub queue_wait_s: f64,
+    /// Smallest observed one-way latency, when the transport knows it.
+    pub lat_min_s: Option<f64>,
+    /// Log-bucketed message-size distribution.
+    pub bytes_hist: Hist,
+    /// Log-bucketed per-message transmission-time distribution.
+    pub wire_s_hist: Hist,
+}
+
+/// Aggregated statistics of one span label.
+#[derive(Clone, Debug)]
+pub struct SpanStat {
+    /// Span name.
+    pub name: String,
+    /// Span category.
+    pub cat: String,
+    /// Spans recorded.
+    pub count: u64,
+    /// Summed duration, seconds.
+    pub total_s: f64,
+}
+
+/// The measured regime the planner can substitute for its model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Measured {
+    /// Mean forward op time (from `fwd`/`op` spans), when recorded.
+    pub fwd_op_s: Option<f64>,
+    /// Mean backward op time (from `bwd`/`op` spans), when recorded.
+    pub bwd_op_s: Option<f64>,
+    /// Wire bytes divided by summed transmission time.
+    pub bandwidth_bytes_per_s: Option<f64>,
+    /// Smallest observed one-way latency across all links.
+    pub latency_s: Option<f64>,
+}
+
+impl Measured {
+    /// Parse the `measured` object of a snapshot.
+    pub fn from_json(j: &Json) -> Result<Measured> {
+        let f = |k: &str| -> Result<Option<f64>> { j.opt(k).map(|v| v.num()).transpose() };
+        Ok(Measured {
+            fwd_op_s: f("fwd_op_s")?,
+            bwd_op_s: f("bwd_op_s")?,
+            bandwidth_bytes_per_s: f("bandwidth_bytes_per_s")?,
+            latency_s: f("latency_s")?,
+        })
+    }
+
+    /// Load the measured regime from a snapshot file — either a bare
+    /// `TelemetrySnapshot` JSON or a Chrome trace file embedding one
+    /// under its top-level `"telemetry"` key. Rejects unknown versions.
+    pub fn load(path: &str) -> Result<Measured> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading telemetry snapshot {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let snap = j.opt("telemetry").unwrap_or(&j);
+        let version = snap.get("version").and_then(|v| v.num()).map(|v| v as u32)?;
+        if version != SNAPSHOT_VERSION {
+            bail!("telemetry snapshot {path} has version {version}, this build reads {SNAPSHOT_VERSION}");
+        }
+        Measured::from_json(snap.get("measured")?)
+    }
+
+    fn to_json(self) -> Json {
+        let mut o = Json::object();
+        if let Some(v) = self.fwd_op_s {
+            o.set("fwd_op_s", Json::Num(v));
+        }
+        if let Some(v) = self.bwd_op_s {
+            o.set("bwd_op_s", Json::Num(v));
+        }
+        if let Some(v) = self.bandwidth_bytes_per_s {
+            o.set("bandwidth_bytes_per_s", Json::Num(v));
+        }
+        if let Some(v) = self.latency_s {
+            o.set("latency_s", Json::Num(v));
+        }
+        o
+    }
+}
+
+/// The versioned roll-up of one run's telemetry (see module docs).
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    /// Schema version ([`SNAPSHOT_VERSION`]).
+    pub version: u32,
+    /// Transport clock domain: `"virtual"` (SimNet) or `"wall"`.
+    pub clock: String,
+    /// Spans discarded by the per-thread buffer cap (0 in sane runs).
+    pub spans_dropped: u64,
+    /// Counter rows, ordered by `(link, dir, channel)`.
+    pub links: Vec<LinkRow>,
+    /// Transport-clock span statistics, ordered by `(cat, name)`.
+    pub spans: Vec<SpanStat>,
+    /// The measured regime (planner input).
+    pub measured: Measured,
+}
+
+impl TelemetrySnapshot {
+    /// Serialize (deterministic: object keys sort, rows are pre-sorted).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("version", Json::Num(self.version as f64));
+        o.set("clock", Json::Str(self.clock.clone()));
+        o.set("spans_dropped", Json::Num(self.spans_dropped as f64));
+        o.set("measured", self.measured.to_json());
+        let links = self
+            .links
+            .iter()
+            .map(|r| {
+                let mut l = Json::object();
+                l.set("link", Json::Num(r.link as f64));
+                l.set("dir", Json::Str(r.dir.clone()));
+                l.set("channel", Json::Num(r.channel as f64));
+                l.set("frames", Json::Num(r.frames as f64));
+                l.set("wire_bytes", Json::Num(r.wire_bytes as f64));
+                l.set("raw_bytes", Json::Num(r.raw_bytes as f64));
+                l.set("retransmits", Json::Num(r.retransmits as f64));
+                l.set("wire_time_s", Json::Num(r.wire_time_s));
+                l.set("queue_wait_s", Json::Num(r.queue_wait_s));
+                if let Some(lat) = r.lat_min_s {
+                    l.set("lat_min_s", Json::Num(lat));
+                }
+                l.set("bytes_hist", r.bytes_hist.to_json());
+                l.set("wire_s_hist", r.wire_s_hist.to_json());
+                l
+            })
+            .collect();
+        o.set("links", Json::Arr(links));
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut e = Json::object();
+                e.set("name", Json::Str(s.name.clone()));
+                e.set("cat", Json::Str(s.cat.clone()));
+                e.set("count", Json::Num(s.count as f64));
+                e.set("total_s", Json::Num(s.total_s));
+                if s.count > 0 {
+                    e.set("mean_s", Json::Num(s.total_s / s.count as f64));
+                }
+                e
+            })
+            .collect();
+        o.set("spans", Json::Arr(spans));
+        o
+    }
+}
+
+/// Roll a drained store up into a snapshot.
+pub(crate) fn build(store: &Store, virtual_clock: bool) -> TelemetrySnapshot {
+    let links: Vec<LinkRow> = store
+        .counters
+        .iter()
+        .map(|(k, c)| LinkRow {
+            link: k.link,
+            dir: if k.dir == 0 { "fwd" } else { "bwd" }.to_string(),
+            channel: k.channel,
+            frames: c.frames,
+            wire_bytes: c.wire_bytes,
+            raw_bytes: c.raw_bytes,
+            retransmits: c.retransmits,
+            wire_time_s: c.wire_time_s,
+            queue_wait_s: c.queue_wait_s,
+            lat_min_s: c.lat_min_s.is_finite().then_some(c.lat_min_s),
+            bytes_hist: c.bytes_hist.clone(),
+            wire_s_hist: c.wire_s_hist.clone(),
+        })
+        .collect();
+
+    // transport-clock spans only (wall-clock codec timers would make a
+    // SimNet snapshot non-deterministic)
+    let mut stats: BTreeMap<(String, String), (u64, f64)> = BTreeMap::new();
+    for s in &store.spans {
+        if s.wall {
+            continue;
+        }
+        let e = stats.entry((s.cat.to_string(), s.name.to_string())).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += (s.t1_s - s.t0_s).max(0.0);
+    }
+    let spans: Vec<SpanStat> = stats
+        .into_iter()
+        .map(|((cat, name), (count, total_s))| SpanStat { name, cat, count, total_s })
+        .collect();
+
+    let op_mean = |want: &str| -> Option<f64> {
+        spans
+            .iter()
+            .find(|s| s.cat == "op" && s.name == want && s.count > 0)
+            .map(|s| s.total_s / s.count as f64)
+    };
+    let wire_bytes: u64 = links.iter().map(|r| r.wire_bytes).sum();
+    let wire_time_s: f64 = links.iter().map(|r| r.wire_time_s).sum();
+    let lat = links.iter().filter_map(|r| r.lat_min_s).fold(f64::INFINITY, f64::min);
+    let measured = Measured {
+        fwd_op_s: op_mean("fwd"),
+        bwd_op_s: op_mean("bwd"),
+        bandwidth_bytes_per_s: (wire_time_s > 0.0 && wire_bytes > 0)
+            .then(|| wire_bytes as f64 / wire_time_s),
+        latency_s: lat.is_finite().then_some(lat),
+    };
+
+    TelemetrySnapshot {
+        version: SNAPSHOT_VERSION,
+        clock: if virtual_clock { "virtual" } else { "wall" }.to_string(),
+        spans_dropped: store.dropped,
+        links,
+        spans,
+        measured,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_round_trips_through_json() {
+        let m = Measured {
+            fwd_op_s: Some(0.02),
+            bwd_op_s: None,
+            bandwidth_bytes_per_s: Some(12.5e6),
+            latency_s: Some(0.01),
+        };
+        let j = m.to_json();
+        let back = Measured::from_json(&j).unwrap();
+        assert_eq!(back.fwd_op_s, Some(0.02));
+        assert_eq!(back.bwd_op_s, None);
+        assert_eq!(back.bandwidth_bytes_per_s, Some(12.5e6));
+        assert_eq!(back.latency_s, Some(0.01));
+    }
+
+    #[test]
+    fn load_accepts_bare_and_trace_embedded_snapshots() {
+        let dir = std::env::temp_dir();
+        let bare = dir.join(format!("mpcomp-snap-{}.json", std::process::id()));
+        std::fs::write(
+            &bare,
+            r#"{"version":1,"measured":{"bandwidth_bytes_per_s":1000000}}"#,
+        )
+        .unwrap();
+        let m = Measured::load(bare.to_str().unwrap()).unwrap();
+        assert_eq!(m.bandwidth_bytes_per_s, Some(1e6));
+
+        let trace = dir.join(format!("mpcomp-trace-{}.json", std::process::id()));
+        std::fs::write(
+            &trace,
+            r#"{"traceEvents":[],"telemetry":{"version":1,"measured":{"latency_s":0.01}}}"#,
+        )
+        .unwrap();
+        let m = Measured::load(trace.to_str().unwrap()).unwrap();
+        assert_eq!(m.latency_s, Some(0.01));
+
+        let bad = dir.join(format!("mpcomp-snapv9-{}.json", std::process::id()));
+        std::fs::write(&bad, r#"{"version":9,"measured":{}}"#).unwrap();
+        assert!(Measured::load(bad.to_str().unwrap()).is_err());
+        for p in [bare, trace, bad] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    // build() itself is covered by `tests/telemetry.rs`, which owns the
+    // global store in its own process: driving it from a lib unit test
+    // would race with the serve/trainer tests sharing this binary.
+}

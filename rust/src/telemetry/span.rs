@@ -1,0 +1,77 @@
+//! Span events: what one timed region of a hot path looked like.
+//!
+//! A span is a closed `[t0, t1]` interval on a *track* (one track per
+//! rank/replica thread; wire and codec activity get their own track
+//! ranges so the Chrome trace groups them). Names and categories are
+//! `&'static str` so recording never allocates for labels. Two clock
+//! domains coexist (see `telemetry` module docs): transport-clock spans
+//! (`wall = false` — virtual seconds under SimNet, the transport's
+//! monotonic epoch on real backends) and wall-clock spans (`wall =
+//! true` — the telemetry layer's own monotonic epoch, used by codec
+//! timers that have no transport clock to read).
+
+/// One recorded span. `Copy` so the record path is a plain push.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Track id: `0..n_ranks` for rank/replica threads, or one of the
+    /// [`TRACK_WIRE`] / [`TRACK_CODEC`] ranges.
+    pub track: u32,
+    /// Short stable name (`"fwd"`, `"send"`, `"ar_hop"`, ...).
+    pub name: &'static str,
+    /// Category (`"op"`, `"wire"`, `"codec"`, `"allreduce"`, `"serve"`).
+    pub cat: &'static str,
+    /// Span start, seconds in the span's clock domain.
+    pub t0_s: f64,
+    /// Span end, seconds in the span's clock domain.
+    pub t1_s: f64,
+    /// Correlation key (message key, microbatch, request id, ...).
+    pub key: u64,
+    /// Clock domain: `false` = transport clock, `true` = telemetry's
+    /// wall-clock epoch.
+    pub wall: bool,
+}
+
+/// First track id of the per-`(link, dir)` wire tracks:
+/// `TRACK_WIRE + link * 2 + dir.index()`.
+pub const TRACK_WIRE: u32 = 1000;
+
+/// First track id of the per-link codec tracks: `TRACK_CODEC + link`.
+pub const TRACK_CODEC: u32 = 2000;
+
+/// Wire track id for `(link, dir)`.
+pub fn wire_track(link: usize, dir: crate::netsim::Dir) -> u32 {
+    TRACK_WIRE + (link as u32) * 2 + dir.index() as u32
+}
+
+/// Codec track id for a link.
+pub fn codec_track(link: usize) -> u32 {
+    TRACK_CODEC + link as u32
+}
+
+/// Human-readable track label (the Chrome trace thread name).
+pub fn track_label(track: u32) -> String {
+    if track >= TRACK_CODEC {
+        format!("codec link {}", track - TRACK_CODEC)
+    } else if track >= TRACK_WIRE {
+        let t = track - TRACK_WIRE;
+        format!("wire link {} {}", t / 2, if t % 2 == 0 { "fwd" } else { "bwd" })
+    } else {
+        format!("rank {track}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Dir;
+
+    #[test]
+    fn track_ids_and_labels_round_trip() {
+        assert_eq!(track_label(0), "rank 0");
+        assert_eq!(track_label(3), "rank 3");
+        assert_eq!(wire_track(0, Dir::Fwd), TRACK_WIRE);
+        assert_eq!(wire_track(2, Dir::Bwd), TRACK_WIRE + 5);
+        assert_eq!(track_label(wire_track(2, Dir::Bwd)), "wire link 2 bwd");
+        assert_eq!(track_label(codec_track(1)), "codec link 1");
+    }
+}

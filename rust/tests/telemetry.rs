@@ -1,0 +1,264 @@
+//! Telemetry-layer integration tests: these own the crate's global
+//! telemetry store (gate, per-thread buffers, global drain target), so
+//! they live in their own test binary — every test serializes on
+//! `telemetry::test_guard()` and leaves the layer disabled and reset.
+//!
+//! Covered here: the disabled-mode cost contract (zero allocations,
+//! zero clock reads on the record path), SimNet snapshot determinism
+//! (same seed ⇒ bit-identical JSON), the measured-regime roll-up, and
+//! the full observe → export → replan loop through a Chrome trace file.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use mpcomp::compression::Spec;
+use mpcomp::config::{Schedule, WireOpts};
+use mpcomp::coordinator::{worker, WorkerOpts};
+use mpcomp::netsim::Dir;
+use mpcomp::planner;
+use mpcomp::telemetry;
+
+// ---------------------------------------------------------------------------
+// counting allocator: per-thread allocation counter over the system
+// allocator, so the zero-allocation assertion ignores other threads
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+fn bump() {
+    // try_with: TLS may be unavailable during thread teardown, and the
+    // allocator must never panic (or allocate) on its own account
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        bump();
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        bump();
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn worker_opts(seed: u64) -> WorkerOpts {
+    WorkerOpts {
+        stages: 2,
+        mb: 4,
+        link_elems: 256,
+        schedule: Schedule::GPipe,
+        spec: Spec::parse("topk:10").unwrap(),
+        plan: None,
+        seed,
+        wire: WireOpts::default(),
+        steps: 2,
+        dp: 1,
+    }
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("mpcomp-telemetry-{}-{name}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// disabled-mode cost contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_mode_allocates_nothing_and_reads_no_clock() {
+    let _g = telemetry::test_guard();
+    telemetry::reset();
+    telemetry::set_enabled(false);
+
+    // warm the hooks once so lazy statics can't be charged to the loop
+    telemetry::set_channel_hint(1);
+    telemetry::on_send(0, Dir::Fwd, 8, 8, 0.0, 0.0, 0.0);
+    telemetry::timer().stop(0, "warm", "codec", 0);
+
+    let clocks_before = telemetry::clock_reads();
+    let allocs_before = thread_allocs();
+    for i in 0..10_000u64 {
+        telemetry::set_channel_hint(i as u32);
+        telemetry::on_send(0, Dir::Fwd, 100, 400, 0.001, 0.01, 0.0);
+        telemetry::on_recv_wait(0, Dir::Bwd, 0.002);
+        telemetry::on_retransmit(0, Dir::Fwd);
+        telemetry::span_at(0, "fwd", "op", 0.0, 1.0, i);
+        telemetry::timer().stop(0, "encode", "codec", i);
+    }
+    assert_eq!(thread_allocs() - allocs_before, 0, "disabled record path allocated");
+    assert_eq!(
+        telemetry::clock_reads(),
+        clocks_before,
+        "disabled record path read the clock"
+    );
+
+    // and nothing was recorded
+    let snap = telemetry::snapshot();
+    assert!(snap.links.is_empty());
+    assert!(telemetry::take_spans().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// SimNet snapshot determinism
+// ---------------------------------------------------------------------------
+
+/// One traced SimNet reference run; returns the snapshot JSON string.
+fn traced_reference_snapshot(seed: u64) -> String {
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    telemetry::set_spans(true);
+    telemetry::set_virtual_clock(true);
+    worker::run_reference(&worker_opts(seed)).unwrap();
+    let json = telemetry::snapshot().to_json().to_string();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    json
+}
+
+#[test]
+fn simnet_snapshot_is_bit_deterministic_per_seed() {
+    let _g = telemetry::test_guard();
+    let a = traced_reference_snapshot(3);
+    let b = traced_reference_snapshot(3);
+    assert_eq!(a, b, "same seed must produce a bit-identical snapshot");
+    // (a different seed changes payload *values*, not frame sizes, so
+    // it is NOT asserted to differ — the snapshot only sees bytes/time)
+
+    // sanity on what the deterministic snapshot contains
+    let j = mpcomp::util::json::Json::parse(&a).unwrap();
+    assert_eq!(j.get("version").unwrap().num().unwrap(), 1.0);
+    assert_eq!(j.get("clock").unwrap().str().unwrap(), "virtual");
+    assert!(!j.get("links").unwrap().arr().unwrap().is_empty());
+    let m = j.get("measured").unwrap();
+    assert!(m.get("bandwidth_bytes_per_s").unwrap().num().unwrap() > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// measured-regime roll-up (drives the public hooks end to end)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshot_derives_the_measured_regime_from_hooks() {
+    let _g = telemetry::test_guard();
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    telemetry::set_spans(true);
+    telemetry::set_virtual_clock(true);
+    // two sends at 1 MB/s with 10 ms latency, one 0.02 s fwd op span
+    telemetry::set_channel_hint(3);
+    telemetry::on_send(0, Dir::Fwd, 1000, 4000, 0.001, 0.010, 0.0);
+    telemetry::on_send(0, Dir::Fwd, 3000, 4000, 0.003, 0.010, 0.5);
+    telemetry::span_at(0, "fwd", "op", 1.0, 1.02, 7);
+    let snap = telemetry::snapshot();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+
+    assert_eq!(snap.clock, "virtual");
+    assert_eq!(snap.links.len(), 1);
+    let r = &snap.links[0];
+    assert_eq!((r.link, r.dir.as_str(), r.channel), (0, "fwd", 3));
+    assert_eq!(r.frames, 2);
+    assert_eq!(r.wire_bytes, 4000);
+    assert_eq!(r.raw_bytes, 8000);
+    assert!((r.queue_wait_s - 0.5).abs() < 1e-12);
+    assert_eq!(r.lat_min_s, Some(0.010));
+    let m = snap.measured;
+    assert!((m.bandwidth_bytes_per_s.unwrap() - 1e6).abs() < 1e-6);
+    assert_eq!(m.latency_s, Some(0.010));
+    assert!((m.fwd_op_s.unwrap() - 0.02).abs() < 1e-12);
+    assert_eq!(m.bwd_op_s, None);
+}
+
+#[test]
+fn spans_off_keeps_counters() {
+    let _g = telemetry::test_guard();
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    telemetry::set_spans(false);
+    telemetry::on_send(1, Dir::Bwd, 64, 256, 0.001, 0.0, 0.0);
+    telemetry::span_at(0, "fwd", "op", 0.0, 1.0, 0);
+    telemetry::timer().stop(0, "encode", "codec", 0);
+    let snap = telemetry::snapshot();
+    let spans = telemetry::take_spans();
+    telemetry::set_enabled(false);
+    telemetry::set_spans(true);
+    telemetry::reset();
+    assert_eq!(snap.links.len(), 1, "telemetry.spans=false must not drop counters");
+    assert!(spans.is_empty(), "spans recorded while telemetry.spans=false");
+}
+
+// ---------------------------------------------------------------------------
+// the full loop: trace a run, export Chrome JSON, replan from the file
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_round_trips_into_replanning() {
+    let _g = telemetry::test_guard();
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    telemetry::set_spans(true);
+    telemetry::set_virtual_clock(true);
+    worker::run_reference(&worker_opts(5)).unwrap();
+    let snap = telemetry::snapshot();
+    let spans = telemetry::take_spans();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+
+    let path = tmp("trace.json");
+    telemetry::chrome::export(&path, &snap, &spans).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = mpcomp::util::json::Json::parse(&text).unwrap();
+    assert_eq!(j.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+    let events = j.get("traceEvents").unwrap().arr().unwrap();
+    assert!(!events.is_empty(), "trace has no events");
+    // thread-name metadata + complete events, Chrome's minimum shape
+    assert!(events.iter().any(|e| e.get("ph").unwrap().str().unwrap() == "M"));
+    assert!(events.iter().any(|e| e.get("ph").unwrap().str().unwrap() == "X"));
+
+    // the embedded snapshot is a valid replanning input
+    let measured = telemetry::snapshot::Measured::load(&path).unwrap();
+    assert!(measured.bandwidth_bytes_per_s.unwrap() > 0.0);
+    let mut inputs = planner::PlannerInputs {
+        n_ranks: 2,
+        schedule: Schedule::OneFOneB,
+        n_mb: 4,
+        fwd_op_s: 0.020,
+        bwd_op_s: 0.040,
+        recompute_s: 0.0,
+        elems: vec![256; 1],
+        model: mpcomp::netsim::WireModel::datacenter(),
+        capacity: mpcomp::netsim::DEFAULT_QUEUE_CAPACITY,
+        faults: None,
+    };
+    let applied = planner::apply_measured(&mut inputs, &measured).unwrap();
+    assert!(applied.contains(&"bandwidth_bytes_per_s"));
+    planner::search(&inputs).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
